@@ -1,0 +1,56 @@
+//! Congestion study (paper §1: "each CXL switch can cause congestion
+//! when multiple hosts use the switch at the same time"): scale the
+//! number of hosts sharing one switch and watch the congestion delay
+//! per host grow super-linearly.
+//!
+//!     cargo run --release --offline --example multihost_congestion
+
+use cxlmemsim::coordinator::SimConfig;
+use cxlmemsim::multihost;
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::markdown_table;
+use cxlmemsim::util::cli::Args;
+use cxlmemsim::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let mut cfg = SimConfig::default();
+    cfg.scale = args.f64("scale", 0.005);
+    cfg.cache_scale = args.u64("cache-scale", 32);
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = AnalyzerBackend::parse(&b).expect("--backend pjrt|native");
+    }
+    let topo = Topology::resolve(&args.str("topo", "wide"))?;
+    let wl_name = args.str("workload", "stream");
+
+    println!(
+        "congestion study: `{}` on `{}` (every host behind the same switch)\n",
+        wl_name, topo.name
+    );
+    let mut rows = Vec::new();
+    for hosts in [1usize, 2, 4, 6, 8] {
+        let workloads: Vec<_> = (0..hosts)
+            .map(|i| workload::by_name(&wl_name, cfg.scale, cfg.seed + i as u64).unwrap())
+            .collect();
+        let rep = multihost::run_shared(&topo, &cfg, workloads)?;
+        let per_epoch_cong = rep.cong_delay_ns / rep.epochs.max(1) as f64;
+        let per_epoch_bw = rep.bwd_delay_ns / rep.epochs.max(1) as f64;
+        rows.push(vec![
+            hosts.to_string(),
+            rep.epochs.to_string(),
+            format!("{:.3}", per_epoch_cong / 1e3),
+            format!("{:.3}", per_epoch_bw / 1e3),
+            format!("{:.3}x", rep.mean_slowdown()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Hosts", "Epochs", "Cong/epoch (µs)", "BW/epoch (µs)", "Mean slowdown"],
+            &rows
+        )
+    );
+    println!("\nexpected shape: congestion/epoch grows super-linearly with hosts;");
+    println!("the paper's Figure-1 discussion predicts exactly this switch-sharing penalty.");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Policy research demo (paper §1: "comparison of software and
+//! hardware memory prefetching and migration ... cache-line and page
+//! memory management"): compare placement policies and the hotness
+//! migration policy on a skewed workload.
+//!
+//!     cargo run --release --offline --example policy_compare
+
+use cxlmemsim::alloctrack::PolicyKind;
+use cxlmemsim::policy::HotnessMigration;
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::markdown_table;
+use cxlmemsim::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let base = {
+        let mut cfg = SimConfig::default();
+        cfg.scale = args.f64("scale", 0.01);
+        cfg.cache_scale = args.u64("cache-scale", 16);
+        if let Some(b) = args.opt_str("backend") {
+            cfg.backend = AnalyzerBackend::parse(&b).expect("--backend pjrt|native");
+        }
+        cfg
+    };
+    let topo = Topology::resolve(&args.str("topo", "fig2"))?;
+    let wl = args.str("workload", "zipfian");
+
+    let policies: Vec<(&str, PolicyKind)> = vec![
+        ("local-only", PolicyKind::LocalOnly),
+        ("cxl-only", PolicyKind::CxlOnly),
+        ("localfirst-1MB", PolicyKind::LocalFirst { local_cap_bytes: 1 << 20 }),
+        ("interleave-4K", PolicyKind::Interleave { page_bytes: 4096 }),
+        ("interleave-2M", PolicyKind::Interleave { page_bytes: 2 << 20 }),
+        ("sizeclass-2MB", PolicyKind::SizeClass { threshold_bytes: 2 << 20 }),
+        ("leastloaded", PolicyKind::LeastLoaded),
+    ];
+
+    println!("placement policies on `{}` running {}:\n", topo.name, wl);
+    let mut rows = Vec::new();
+    for (name, policy) in policies {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        let mut sim = Coordinator::new(topo.clone(), cfg)?;
+        let rep = sim.run_workload(&wl)?;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", rep.simulated_ns / 1e6),
+            format!("{:.3}x", rep.sim_slowdown()),
+            format!("{:.3}", rep.lat_delay_ns / 1e6),
+            format!("{:.3}", rep.cong_delay_ns / 1e6),
+            format!("{:.3}", rep.bwd_delay_ns / 1e6),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Policy", "Sim(ms)", "Slowdown", "Lat(ms)", "Cong(ms)", "BW(ms)"],
+            &rows
+        )
+    );
+
+    // migration: cxl-only placement + hotness promotion to local DRAM
+    println!("\nhotness migration on cxl-only placement:");
+    let mut rows = Vec::new();
+    for (label, patience) in [("off", None), ("patience=2", Some(2)), ("patience=8", Some(8))] {
+        let mut cfg = base.clone();
+        cfg.policy = PolicyKind::CxlOnly;
+        let mut sim = Coordinator::new(topo.clone(), cfg)?;
+        if let Some(p) = patience {
+            sim.set_epoch_policy(Box::new(HotnessMigration::new(p, u64::MAX)));
+        }
+        let rep = sim.run_workload(&wl)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.3}", rep.simulated_ns / 1e6),
+            format!("{:.3}x", rep.sim_slowdown()),
+        ]);
+    }
+    println!("{}", markdown_table(&["Migration", "Sim(ms)", "Slowdown"], &rows));
+
+    // hardware vs software prefetch (paper §1's promised comparison)
+    println!("\nhardware vs software prefetch on a streaming workload:");
+    let mut rows = Vec::new();
+    for (label, pf) in [("none", None), ("hw-nextline", Some("nextline")), ("hw-stride", Some("stride"))] {
+        let mut cfg = base.clone();
+        cfg.policy = PolicyKind::CxlOnly;
+        cfg.prefetcher = pf.map(|s| s.to_string());
+        let mut sim = Coordinator::new(topo.clone(), cfg)?;
+        let rep = sim.run_workload("stream")?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{}", rep.total_misses),
+            format!("{}", rep.prefetches),
+            format!("{:.3}x", rep.sim_slowdown()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(&["Prefetch", "Demand misses", "Prefetch fills", "Slowdown"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Quickstart: simulate one workload on the paper's Figure-1 topology
+//! and print the per-pool / per-delay-class breakdown.
+//!
+//!     cargo run --release --offline --example quickstart
+//!
+//! Flags: --workload W --topo T --scale F --backend pjrt|native
+
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let topo = Topology::resolve(&args.str("topo", "fig1"))?;
+    println!("{}", topo.describe());
+
+    let mut cfg = SimConfig::default();
+    cfg.scale = args.f64("scale", 0.05);
+    cfg.cache_scale = args.u64("cache-scale", 8);
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = AnalyzerBackend::parse(&b).expect("--backend pjrt|native");
+    }
+
+    let wl = args.str("workload", "mcf_like");
+    let mut sim = Coordinator::new(topo, cfg)?;
+    let report = sim.run_workload(&wl)?;
+    print!("{}", report.summary());
+
+    println!("\ndelay breakdown:");
+    println!("  latency    {:>10.3} ms  (paper: #ops x (pool latency - local latency))", report.lat_delay_ns / 1e6);
+    println!("  congestion {:>10.3} ms  (events within a switch STT window)", report.cong_delay_ns / 1e6);
+    println!("  bandwidth  {:>10.3} ms  (observed bandwidth above switch capacity)", report.bwd_delay_ns / 1e6);
+    Ok(())
+}

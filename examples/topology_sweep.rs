@@ -1,0 +1,59 @@
+//! Procurement study (paper §1 / §5: "allows data-center operators to
+//! evaluate potential topologies before procurement"): sweep the
+//! builtin topologies with three representative workloads and rank
+//! them by simulated slowdown.
+//!
+//!     cargo run --release --offline --example topology_sweep
+
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::markdown_table;
+use cxlmemsim::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let mut cfg = SimConfig::default();
+    cfg.scale = args.f64("scale", 0.01);
+    cfg.cache_scale = args.u64("cache-scale", 16);
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = AnalyzerBackend::parse(&b).expect("--backend pjrt|native");
+    }
+
+    let workloads = ["stream", "mcf_like", "zipfian"];
+    let topos = ["direct", "fig1", "fig2", "deep", "wide", "pooled"];
+
+    let mut rows = Vec::new();
+    let mut ranking: Vec<(String, f64)> = Vec::new();
+    for topo_name in topos {
+        let topo = Topology::resolve(topo_name)?;
+        let mut slowdowns = Vec::new();
+        for wl in workloads {
+            let mut sim = Coordinator::new(topo.clone(), cfg.clone())?;
+            let rep = sim.run_workload(wl)?;
+            slowdowns.push(rep.sim_slowdown());
+            rows.push(vec![
+                topo_name.to_string(),
+                wl.to_string(),
+                format!("{:.3}", rep.native_ns / 1e6),
+                format!("{:.3}", rep.simulated_ns / 1e6),
+                format!("{:.3}x", rep.sim_slowdown()),
+                format!("{:.1}%", rep.cong_delay_ns / rep.delay_ns.max(1e-9) * 100.0),
+                format!("{:.1}%", rep.bwd_delay_ns / rep.delay_ns.max(1e-9) * 100.0),
+            ]);
+        }
+        let geo = (slowdowns.iter().map(|s| s.ln()).sum::<f64>() / slowdowns.len() as f64).exp();
+        ranking.push((topo_name.to_string(), geo));
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Topology", "Workload", "Native(ms)", "Sim(ms)", "Slowdown", "Cong%", "BW%"],
+            &rows
+        )
+    );
+    ranking.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    println!("\nprocurement ranking (geomean slowdown, lower is better):");
+    for (i, (name, geo)) in ranking.iter().enumerate() {
+        println!("  {}. {name:8} {geo:.3}x", i + 1);
+    }
+    Ok(())
+}

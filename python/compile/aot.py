@@ -1,0 +1,153 @@
+"""AOT compile path: lower the timing analyzer to HLO *text* artifacts.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits:
+  artifacts/timing_p{P}s{S}b{B}.hlo.txt          per-epoch analyzer
+  artifacts/timing_batch{E}_p{P}s{S}b{B}.hlo.txt  batched replay variant
+  artifacts/manifest.json                         shapes + input order
+  artifacts/golden.json                           cross-language test vectors
+
+HLO text (NOT jax.export / .serialize()): the published ``xla`` crate
+links xla_extension 0.5.1, which rejects jax>=0.5's 64-bit-instruction-id
+protos; the HLO text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_single(pools, switches, nbins) -> str:
+    fn = lambda *a: model.timing_analyzer(*a, interpret=True)
+    return to_hlo_text(jax.jit(fn).lower(*model.example_args(pools, switches, nbins)))
+
+
+def lower_batch(batch, pools, switches, nbins) -> str:
+    fn = lambda *a: model.timing_analyzer_batch(*a, interpret=True)
+    return to_hlo_text(
+        jax.jit(fn).lower(*model.example_args_batch(batch, pools, switches, nbins))
+    )
+
+
+def golden_inputs(pools, switches, nbins, seed=0x5EED):
+    """Deterministic pseudo-random inputs for the golden vectors."""
+    rng = np.random.default_rng(seed)
+    reads = rng.poisson(3.0, size=(pools, nbins)).astype(np.float32)
+    writes = rng.poisson(1.5, size=(pools, nbins)).astype(np.float32)
+    # pools 0..2 are CXL, pool 3 local (zero extra), rest padding.
+    extra_rd = np.zeros(pools, np.float32)
+    extra_wr = np.zeros(pools, np.float32)
+    extra_rd[:3] = [85.0, 95.0, 170.0]
+    extra_wr[:3] = [90.0, 100.0, 180.0]
+    reads[4:] = 0
+    writes[4:] = 0
+    desc = np.zeros((switches, pools), np.float32)
+    desc[0, :3] = 1.0          # root complex sees all CXL pools
+    desc[1, :2] = 1.0          # switch 1: pools 0,1
+    desc[2, 2] = 1.0           # switch 2: pool 2
+    stt = np.zeros(switches, np.float32)
+    stt[:3] = [2.0, 25.0, 25.0]
+    bw = np.zeros(switches, np.float32)
+    bw[:3] = [64.0, 32.0, 32.0]  # bytes/ns
+    bin_width = np.float32(3906.25)  # 1 ms epoch / 256 bins
+    bytes_per_ev = np.float32(64.0)
+    return dict(
+        reads=reads, writes=writes, extra_read_lat=extra_rd,
+        extra_write_lat=extra_wr, desc_mask=desc, stt=stt, bw=bw,
+        bin_width=bin_width, bytes_per_ev=bytes_per_ev,
+    )
+
+
+def write_golden(path, pools, switches, nbins):
+    gin = golden_inputs(pools, switches, nbins)
+    out = ref.timing_analyzer_ref(**gin)
+    blob = {
+        "shapes": {"pools": pools, "switches": switches, "nbins": nbins},
+        "inputs": {k: np.asarray(v).ravel().tolist() for k, v in gin.items()},
+        "outputs": {
+            "total": float(out["total"]),
+            "lat": out["lat"].ravel().tolist(),
+            "cong": out["cong"].ravel().tolist(),
+            "bwd": out["bwd"].ravel().tolist(),
+            "cong_backlog": out["cong_backlog"].ravel().tolist(),
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--pools", type=int, default=model.NUM_POOLS)
+    ap.add_argument("--switches", type=int, default=model.NUM_SWITCHES)
+    ap.add_argument("--nbins", type=int, default=model.NUM_BINS)
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    p, s, b, e = args.pools, args.switches, args.nbins, args.batch
+
+    single_name = f"timing_p{p}s{s}b{b}.hlo.txt"
+    batch_name = f"timing_batch{e}_p{p}s{s}b{b}.hlo.txt"
+
+    text = lower_single(p, s, b)
+    with open(os.path.join(args.out, single_name), "w") as f:
+        f.write(text)
+    print(f"wrote {single_name}: {len(text)} chars")
+
+    btext = lower_batch(e, p, s, b)
+    with open(os.path.join(args.out, batch_name), "w") as f:
+        f.write(btext)
+    print(f"wrote {batch_name}: {len(btext)} chars")
+
+    manifest = {
+        "pools": p,
+        "switches": s,
+        "nbins": b,
+        "batch": e,
+        "single": single_name,
+        "batch_module": batch_name,
+        "input_order": [
+            "reads[P,B]", "writes[P,B]", "extra_read_lat[P]",
+            "extra_write_lat[P]", "desc_mask[S,P]", "stt[S]", "bw[S]",
+            "bin_width[]", "bytes_per_ev[]",
+        ],
+        "output_order_single": ["total[]", "lat[P]", "cong[S]", "bwd[S]",
+                                "cong_backlog[S,B]"],
+        "output_order_batch": ["total[E]", "lat[E,P]", "cong[E,S]", "bwd[E,S]"],
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+    write_golden(os.path.join(args.out, "golden.json"), p, s, b)
+    print("wrote golden.json")
+
+
+if __name__ == "__main__":
+    main()

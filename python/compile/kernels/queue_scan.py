@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernel: per-row queueing scan.
+
+This is the timing analyzer's hot spot. Each row models one CXL switch
+(or the root complex) over one epoch that has been discretized into B
+time bins. ``demand[r, b]`` is the service time (or bytes) of the work
+arriving at switch ``r`` during bin ``b``; ``capacity[r, b]`` is how much
+service the switch can perform during that bin.  The scan carries the
+unserved *backlog* forward:
+
+    q_b = max(0, q_{b-1} + demand_b - capacity_b)
+
+and returns both the full backlog profile (used by migration policies and
+the bandwidth pass) and the per-row backlog integral ``sum_b q_b`` (which
+layer 2 converts into waiting time via Little's law).
+
+Rows are independent, so the Pallas grid is one program per row and each
+program walks its [1, B] block sequentially with a ``fori_loop``.  On a
+real TPU the block (B=256 f32 = 1 KiB) trivially fits VMEM; on this CPU
+testbed the kernel must run with ``interpret=True`` because the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _queue_scan_kernel(demand_ref, cap_ref, backlog_ref, qsum_ref):
+    """One grid program == one switch row.
+
+    demand_ref, cap_ref, backlog_ref: [1, B] blocks in VMEM.
+    qsum_ref: [1, 1] per-row backlog integral.
+    """
+    nbins = demand_ref.shape[1]
+
+    def body(b, carry):
+        q, total = carry
+        d = demand_ref[0, b]
+        c = cap_ref[0, b]
+        q = jnp.maximum(q + d - c, 0.0)
+        backlog_ref[0, b] = q
+        return (q, total + q)
+
+    _, total = jax.lax.fori_loop(0, nbins, body, (jnp.float32(0.0), jnp.float32(0.0)))
+    qsum_ref[0, 0] = total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def queue_scan(demand: jax.Array, capacity: jax.Array, *, interpret: bool = True):
+    """Run the queueing scan over every row.
+
+    Args:
+      demand:   f32[R, B] work arriving per row per bin.
+      capacity: f32[R, B] service available per row per bin.
+      interpret: lower the Pallas kernel in interpret mode (required for
+        CPU PJRT; compile-only on real TPUs may set False).
+
+    Returns:
+      (backlog, qsum): f32[R, B] backlog after each bin and f32[R] the
+      per-row backlog integral  sum_b backlog[r, b].
+    """
+    if demand.shape != capacity.shape:
+        raise ValueError(f"shape mismatch {demand.shape} vs {capacity.shape}")
+    rows, nbins = demand.shape
+    backlog, qsum = pl.pallas_call(
+        _queue_scan_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, nbins), lambda r: (r, 0)),
+            pl.BlockSpec((1, nbins), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nbins), lambda r: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, nbins), jnp.float32),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(demand.astype(jnp.float32), capacity.astype(jnp.float32))
+    return backlog, qsum[:, 0]

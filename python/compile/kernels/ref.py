@@ -1,0 +1,116 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the full model.
+
+These are the ground truth the pytest suite checks against, and the
+source of the golden vectors (`artifacts/golden.json`) the rust side uses
+for cross-language differential testing.  Everything here is deliberately
+written in the most obvious way (lax.scan / plain loops), with zero
+Pallas and zero cleverness.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def queue_scan_ref(demand, capacity):
+    """Oracle for kernels.queue_scan: a plain lax.scan per row.
+
+    Returns (backlog f32[R, B], qsum f32[R]).
+    """
+    demand = jnp.asarray(demand, jnp.float32)
+    capacity = jnp.asarray(capacity, jnp.float32)
+
+    def row(carry, dc):
+        d, c = dc
+        q = jnp.maximum(carry + d - c, 0.0)
+        return q, q
+
+    def one_row(d_row, c_row):
+        _, qs = jax.lax.scan(row, jnp.float32(0.0), (d_row, c_row))
+        return qs
+
+    backlog = jax.vmap(one_row)(demand, capacity)
+    return backlog, backlog.sum(axis=1)
+
+
+def queue_scan_np(demand, capacity):
+    """Second, numpy-only oracle (no jax at all) for triangulation."""
+    demand = np.asarray(demand, np.float64)
+    capacity = np.asarray(capacity, np.float64)
+    rows, nbins = demand.shape
+    backlog = np.zeros((rows, nbins), np.float64)
+    for r in range(rows):
+        q = 0.0
+        for b in range(nbins):
+            q = max(0.0, q + demand[r, b] - capacity[r, b])
+            backlog[r, b] = q
+    return backlog, backlog.sum(axis=1)
+
+
+def timing_analyzer_ref(
+    reads,
+    writes,
+    extra_read_lat,
+    extra_write_lat,
+    desc_mask,
+    stt,
+    bw,
+    bin_width,
+    bytes_per_ev,
+):
+    """Oracle for model.timing_analyzer (see model.py for the math).
+
+    All arrays are numpy/jnp convertible; returns a dict of numpy arrays.
+    """
+    reads = jnp.asarray(reads, jnp.float32)
+    writes = jnp.asarray(writes, jnp.float32)
+    extra_read_lat = jnp.asarray(extra_read_lat, jnp.float32)
+    extra_write_lat = jnp.asarray(extra_write_lat, jnp.float32)
+    desc_mask = jnp.asarray(desc_mask, jnp.float32)
+    stt = jnp.asarray(stt, jnp.float32)
+    bw = jnp.asarray(bw, jnp.float32)
+    bin_width = jnp.float32(bin_width)
+    bytes_per_ev = jnp.float32(bytes_per_ev)
+
+    # 1. latency delay per pool.
+    lat = reads.sum(axis=1) * extra_read_lat + writes.sum(axis=1) * extra_write_lat
+
+    # 2. per-switch event stream.
+    ev = desc_mask @ (reads + writes)  # [S, B]
+
+    # 3. congestion: serialize events through each switch at one per STT.
+    # delay = drain time of end-of-epoch backlog + transient waiting
+    # capped at one epoch (see model.py / DESIGN.md §5).
+    nbins = reads.shape[1]
+    epoch_len = bin_width * nbins
+    safe_stt = jnp.where(stt > 0, stt, 1.0)
+    d_cong = ev * stt[:, None]
+    cap = jnp.broadcast_to(bin_width, d_cong.shape)
+    cong_backlog, cong_qsum = queue_scan_ref(d_cong, cap)
+    cong_wait = jnp.minimum(cong_qsum * (bin_width / safe_stt), epoch_len)
+    cong = jnp.where(stt > 0, cong_backlog[:, -1] + cong_wait, 0.0)
+
+    # 4. bandwidth applies to the congestion-shifted (served) stream.
+    prev = jnp.concatenate(
+        [jnp.zeros((cong_backlog.shape[0], 1), jnp.float32), cong_backlog[:, :-1]],
+        axis=1,
+    )
+    served_work = d_cong + prev - cong_backlog  # ns actually transiting per bin
+    served_events = jnp.where(stt[:, None] > 0, served_work / safe_stt[:, None], ev)
+    d_bw = served_events * bytes_per_ev
+    cap_bw = jnp.broadcast_to(bw[:, None] * bin_width, d_bw.shape)
+    bw_backlog, bw_qsum = queue_scan_ref(d_bw, cap_bw)
+    safe_bw = jnp.where(bw > 0, bw, 1.0)
+    bw_wait = jnp.minimum(bw_qsum * (bin_width / bytes_per_ev), epoch_len)
+    bwd = jnp.where(bw > 0, bw_backlog[:, -1] / safe_bw + bw_wait, 0.0)
+
+    total = lat.sum() + cong.sum() + bwd.sum()
+    return {
+        "total": np.asarray(total),
+        "lat": np.asarray(lat),
+        "cong": np.asarray(cong),
+        "bwd": np.asarray(bwd),
+        "cong_backlog": np.asarray(cong_backlog),
+    }

@@ -1,0 +1,205 @@
+"""Layer-2: the CXLMemSim timing analyzer as a JAX computation graph.
+
+This is the paper's §3 "Timing Analyzer" re-expressed as a dense tensor
+program so it AOT-lowers to a single HLO module that the rust coordinator
+executes per epoch through PJRT (python is never on the simulation path).
+
+Inputs (fixed AOT shapes; rust zero-pads unused pools/switches):
+
+  reads, writes     f32[P, B]   LLC-miss events per pool per time bin
+  extra_read_lat    f32[P]      pool path read latency - local DRAM (ns)
+  extra_write_lat   f32[P]      pool path write latency - local DRAM (ns)
+  desc_mask         f32[S, P]   1.0 iff pool p routes through switch s
+  stt               f32[S]      serial transmission time per event (ns)
+  bw                f32[S]      switch bandwidth (bytes/ns)
+  bin_width         f32[]       epoch_length / B (ns)
+  bytes_per_ev      f32[]       cacheline size per event (bytes)
+
+Outputs (5-tuple):
+
+  total             f32[]       total delay to inject this epoch (ns)
+  lat               f32[P]      latency delay per pool
+  cong              f32[S]      congestion delay per switch
+  bwd               f32[S]      bandwidth delay per switch
+  cong_backlog      f32[S, B]   congestion backlog profile (policy input)
+
+Timing model (DESIGN.md §5):
+
+  * latency delay: count x (path latency - local latency), the paper's
+    rule verbatim.
+  * congestion: events traversing switch s during bin b demand
+    ev*STT ns of serial service against bin_width ns of capacity; the
+    queue_scan Pallas kernel carries the backlog.  Little's law converts
+    the backlog integral into waiting time: at the end of bin b there are
+    backlog/STT queued events, each waiting one bin (bin_width ns), so
+    cong[s] = qsum[s] * bin_width / stt[s].
+  * bandwidth: applied to the *served* (congestion-shifted) stream, per
+    the paper's "after the latency and congestion delays are added";
+    demand is bytes, capacity bw*bin_width, wait = qsum*bin_width/bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.queue_scan import queue_scan
+
+# Default AOT shapes. Keep in sync with rust/src/runtime/shapes.rs and
+# artifacts/manifest.json (written by aot.py).
+NUM_POOLS = 8
+NUM_SWITCHES = 8
+NUM_BINS = 256
+BATCH = 16
+
+
+def timing_analyzer(
+    reads,
+    writes,
+    extra_read_lat,
+    extra_write_lat,
+    desc_mask,
+    stt,
+    bw,
+    bin_width,
+    bytes_per_ev,
+    *,
+    interpret: bool = True,
+):
+    """One epoch of the CXLMemSim timing analyzer. Shapes per module doc."""
+    reads = reads.astype(jnp.float32)
+    writes = writes.astype(jnp.float32)
+
+    # --- 1. latency delay (paper: count x latency difference) -----------
+    lat = reads.sum(axis=1) * extra_read_lat + writes.sum(axis=1) * extra_write_lat
+
+    # --- 2. route events through the topology: MXU-shaped matmul --------
+    ev = desc_mask @ (reads + writes)  # [S, B]
+
+    # --- 3. congestion scan (Pallas kernel) -----------------------------
+    # Delay = drain time of the work still queued at epoch end (the
+    # throughput effect: a saturated switch stretches the epoch by
+    # exactly its unserved serial work) + the transient waiting of
+    # drained bursts (Little's law), capped at one epoch length so the
+    # open-loop model stays physical past saturation (DESIGN.md §5).
+    nbins = reads.shape[1]
+    epoch_len = bin_width * nbins
+    safe_stt = jnp.where(stt > 0, stt, 1.0)
+    d_cong = ev * stt[:, None]
+    cap = jnp.broadcast_to(bin_width, d_cong.shape)
+    cong_backlog, cong_qsum = queue_scan(d_cong, cap, interpret=interpret)
+    cong_wait = jnp.minimum(cong_qsum * (bin_width / safe_stt), epoch_len)
+    cong = jnp.where(stt > 0, cong_backlog[:, -1] + cong_wait, 0.0)
+
+    # --- 4. bandwidth scan on the served stream (Pallas kernel) ---------
+    prev = jnp.concatenate(
+        [jnp.zeros((cong_backlog.shape[0], 1), jnp.float32), cong_backlog[:, :-1]],
+        axis=1,
+    )
+    served_work = d_cong + prev - cong_backlog
+    served_events = jnp.where(stt[:, None] > 0, served_work / safe_stt[:, None], ev)
+    d_bw = served_events * bytes_per_ev
+    cap_bw = jnp.broadcast_to(bw[:, None] * bin_width, d_bw.shape)
+    bw_backlog, bw_qsum = queue_scan(d_bw, cap_bw, interpret=interpret)
+    safe_bw = jnp.where(bw > 0, bw, 1.0)
+    bw_wait = jnp.minimum(bw_qsum * (bin_width / bytes_per_ev), epoch_len)
+    bwd = jnp.where(bw > 0, bw_backlog[:, -1] / safe_bw + bw_wait, 0.0)
+
+    total = lat.sum() + cong.sum() + bwd.sum()
+    return total, lat, cong, bwd, cong_backlog
+
+
+def timing_analyzer_batch(
+    reads,
+    writes,
+    extra_read_lat,
+    extra_write_lat,
+    desc_mask,
+    stt,
+    bw,
+    bin_width,
+    bytes_per_ev,
+    *,
+    interpret: bool = True,
+):
+    """Batched variant for offline replay: reads/writes are f32[E, P, B].
+
+    Topology tensors are shared across the batch.  Implemented by folding
+    the batch into the queue_scan row dimension (rows stay independent),
+    not vmap, so a single Pallas grid covers all E*S rows.
+    """
+    e = reads.shape[0]
+    reads = reads.astype(jnp.float32)
+    writes = writes.astype(jnp.float32)
+
+    lat = (
+        reads.sum(axis=2) * extra_read_lat[None, :]
+        + writes.sum(axis=2) * extra_write_lat[None, :]
+    )  # [E, P]
+
+    ev = jnp.einsum("sp,epb->esb", desc_mask, reads + writes)  # [E, S, B]
+
+    s, b = ev.shape[1], ev.shape[2]
+    epoch_len = bin_width * b
+    safe_stt = jnp.where(stt > 0, stt, 1.0)
+    d_cong = (ev * stt[None, :, None]).reshape(e * s, b)
+    cap = jnp.broadcast_to(bin_width, d_cong.shape)
+    cong_backlog, cong_qsum = queue_scan(d_cong, cap, interpret=interpret)
+    cong_qsum = cong_qsum.reshape(e, s)
+    cong_end = cong_backlog[:, -1].reshape(e, s)
+    cong_wait = jnp.minimum(cong_qsum * (bin_width / safe_stt[None, :]), epoch_len)
+    cong = jnp.where(stt[None, :] > 0, cong_end + cong_wait, 0.0)
+
+    prev = jnp.concatenate(
+        [jnp.zeros((e * s, 1), jnp.float32), cong_backlog[:, :-1]], axis=1
+    )
+    served_work = d_cong + prev - cong_backlog
+    stt_rows = jnp.tile(stt, e)[:, None]
+    served_events = jnp.where(
+        stt_rows > 0, served_work / jnp.where(stt_rows > 0, stt_rows, 1.0),
+        ev.reshape(e * s, b),
+    )
+    d_bw = served_events * bytes_per_ev
+    cap_bw = jnp.broadcast_to(jnp.tile(bw, e)[:, None] * bin_width, d_bw.shape)
+    bw_backlog, bw_qsum = queue_scan(d_bw, cap_bw, interpret=interpret)
+    bw_qsum = bw_qsum.reshape(e, s)
+    bw_end = bw_backlog[:, -1].reshape(e, s)
+    safe_bw = jnp.where(bw > 0, bw, 1.0)
+    bw_wait = jnp.minimum(bw_qsum * (bin_width / bytes_per_ev), epoch_len)
+    bwd = jnp.where(bw[None, :] > 0, bw_end / safe_bw[None, :] + bw_wait, 0.0)
+
+    total = lat.sum(axis=1) + cong.sum(axis=1) + bwd.sum(axis=1)  # [E]
+    return total, lat, cong, bwd
+
+
+def example_args(pools: int = NUM_POOLS, switches: int = NUM_SWITCHES,
+                 nbins: int = NUM_BINS):
+    """ShapeDtypeStructs for AOT lowering of timing_analyzer."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((pools, nbins), f32),      # reads
+        jax.ShapeDtypeStruct((pools, nbins), f32),      # writes
+        jax.ShapeDtypeStruct((pools,), f32),            # extra_read_lat
+        jax.ShapeDtypeStruct((pools,), f32),            # extra_write_lat
+        jax.ShapeDtypeStruct((switches, pools), f32),   # desc_mask
+        jax.ShapeDtypeStruct((switches,), f32),         # stt
+        jax.ShapeDtypeStruct((switches,), f32),         # bw
+        jax.ShapeDtypeStruct((), f32),                  # bin_width
+        jax.ShapeDtypeStruct((), f32),                  # bytes_per_ev
+    )
+
+
+def example_args_batch(batch: int = BATCH, pools: int = NUM_POOLS,
+                       switches: int = NUM_SWITCHES, nbins: int = NUM_BINS):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((batch, pools, nbins), f32),
+        jax.ShapeDtypeStruct((batch, pools, nbins), f32),
+        jax.ShapeDtypeStruct((pools,), f32),
+        jax.ShapeDtypeStruct((pools,), f32),
+        jax.ShapeDtypeStruct((switches, pools), f32),
+        jax.ShapeDtypeStruct((switches,), f32),
+        jax.ShapeDtypeStruct((switches,), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )

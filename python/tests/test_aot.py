@@ -1,0 +1,81 @@
+"""AOT path tests: the HLO text artifacts must lower, parse as HLO, and
+carry the expected entry signature; golden vectors must be reproducible."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+from compile.kernels.ref import timing_analyzer_ref
+
+
+def test_lower_single_produces_hlo_text():
+    text = aot.lower_single(4, 4, 32)
+    assert text.startswith("HloModule")
+    assert "f32[4,32]" in text
+    # pallas (interpret) must lower to plain HLO: no Mosaic custom-calls
+    assert "mosaic" not in text.lower()
+
+
+def test_lowering_preserves_structure():
+    """§Perf L2 contract: the topology contraction stays a single dot
+    (MXU-shaped) and the queueing scans lower to while loops — no
+    unrolled 256x code blow-up."""
+    text = aot.lower_single(model.NUM_POOLS, model.NUM_SWITCHES, model.NUM_BINS)
+    assert "dot(" in text, "desc_mask contraction must lower to a dot"
+    assert "while(" in text or "while." in text, "scan must lower to a while loop"
+    # unrolling 256 bins would emit hundreds of dynamic-update-slices
+    assert text.count("dynamic-update-slice") < 64
+
+
+def test_lower_batch_produces_hlo_text():
+    text = aot.lower_batch(2, 4, 4, 32)
+    assert text.startswith("HloModule")
+    assert "f32[2,4,32]" in text
+
+
+def test_entry_layout_matches_manifest_contract():
+    text = aot.lower_single(model.NUM_POOLS, model.NUM_SWITCHES, model.NUM_BINS)
+    header = text.splitlines()[0]
+    # 9 inputs: reads, writes, extra_rd, extra_wr, desc_mask, stt, bw, 2 scalars
+    assert header.count("f32[") >= 9
+    assert f"f32[{model.NUM_POOLS},{model.NUM_BINS}]" in header
+    assert f"f32[{model.NUM_SWITCHES},{model.NUM_POOLS}]" in header
+
+
+def test_golden_inputs_are_deterministic():
+    a = aot.golden_inputs(8, 8, 64)
+    b = aot.golden_inputs(8, 8, 64)
+    for k in a:
+        assert_allclose(np.asarray(a[k]), np.asarray(b[k]), err_msg=k)
+
+
+def test_write_golden_roundtrip(tmp_path):
+    path = tmp_path / "golden.json"
+    out = aot.write_golden(str(path), 8, 8, 64)
+    blob = json.loads(path.read_text())
+    assert blob["shapes"] == {"pools": 8, "switches": 8, "nbins": 64}
+    assert_allclose(blob["outputs"]["total"], float(out["total"]), rtol=1e-6)
+    assert len(blob["outputs"]["lat"]) == 8
+    assert len(blob["outputs"]["cong_backlog"]) == 8 * 64
+    # outputs recompute identically from the stored inputs
+    gin = aot.golden_inputs(8, 8, 64)
+    re = timing_analyzer_ref(**gin)
+    assert_allclose(float(re["total"]), blob["outputs"]["total"], rtol=1e-6)
+
+
+def test_shipped_artifacts_match_source(tmp_path):
+    """If artifacts/ exists, its manifest must match model.py constants."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    m = json.load(open(manifest_path))
+    assert m["pools"] == model.NUM_POOLS
+    assert m["switches"] == model.NUM_SWITCHES
+    assert m["nbins"] == model.NUM_BINS
+    assert os.path.exists(os.path.join(art, m["single"]))
+    assert os.path.exists(os.path.join(art, m["batch_module"]))

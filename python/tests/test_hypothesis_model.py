@@ -1,0 +1,100 @@
+"""Hypothesis sweeps over the full timing analyzer: shapes, dtypes,
+value regimes, and model-level metamorphic properties."""
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import timing_analyzer_ref
+
+
+def mk(seed, pools, switches, nbins, rate):
+    rng = np.random.default_rng(seed)
+    return dict(
+        reads=rng.poisson(rate, (pools, nbins)).astype(np.float32),
+        writes=rng.poisson(rate / 2, (pools, nbins)).astype(np.float32),
+        extra_read_lat=rng.uniform(0, 300, pools).astype(np.float32),
+        extra_write_lat=rng.uniform(0, 300, pools).astype(np.float32),
+        desc_mask=(rng.uniform(0, 1, (switches, pools)) < 0.4).astype(np.float32),
+        stt=rng.uniform(0, 40, switches).astype(np.float32),
+        bw=rng.uniform(1, 64, switches).astype(np.float32),
+        bin_width=np.float32(rng.uniform(100, 10_000)),
+        bytes_per_ev=np.float32(64.0),
+    )
+
+
+def run_model(gin):
+    out = model.timing_analyzer(*[np.asarray(v) for v in gin.values()])
+    return [np.asarray(x) for x in out]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    pools=st.integers(1, 8),
+    switches=st.integers(1, 8),
+    nbins=st.sampled_from([4, 32, 256]),
+    rate=st.floats(0.1, 50.0),
+)
+def test_model_matches_ref_across_shapes(seed, pools, switches, nbins, rate):
+    gin = mk(seed, pools, switches, nbins, rate)
+    total, lat, cong, bwd, backlog = run_model(gin)
+    exp = timing_analyzer_ref(**gin)
+    scale = max(float(exp["total"]), 1.0)
+    assert_allclose(total, exp["total"], rtol=1e-4, atol=scale * 1e-5)
+    assert_allclose(lat, exp["lat"], rtol=1e-4, atol=1e-1)
+    assert_allclose(cong, exp["cong"], rtol=1e-3, atol=scale * 1e-4)
+    assert_allclose(bwd, exp["bwd"], rtol=1e-3, atol=scale * 1e-4)
+    assert_allclose(backlog, exp["cong_backlog"], rtol=1e-3, atol=1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_outputs_are_finite_and_nonnegative(seed):
+    gin = mk(seed, 8, 8, 64, 20.0)
+    total, lat, cong, bwd, backlog = run_model(gin)
+    for name, arr in [("total", total), ("lat", lat), ("cong", cong),
+                      ("bwd", bwd), ("backlog", backlog)]:
+        assert np.isfinite(arr).all(), name
+        assert (arr >= 0).all(), name
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.floats(1.1, 4.0))
+def test_delay_monotone_under_traffic_scaling(seed, k):
+    gin = mk(seed, 6, 4, 32, 10.0)
+    base = run_model(gin)[0]
+    gin2 = dict(gin)
+    gin2["reads"] = gin["reads"] * np.float32(k)
+    gin2["writes"] = gin["writes"] * np.float32(k)
+    more = run_model(gin2)[0]
+    assert more >= base * 0.999, f"scaling traffic by {k} reduced delay"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_permuting_pools_permutes_latency(seed):
+    """Metamorphic: relabeling pools permutes lat[] identically."""
+    gin = mk(seed, 6, 4, 32, 5.0)
+    rng = np.random.default_rng(seed ^ 1)
+    perm = rng.permutation(6)
+    gin2 = dict(gin)
+    gin2["reads"] = gin["reads"][perm]
+    gin2["writes"] = gin["writes"][perm]
+    gin2["extra_read_lat"] = gin["extra_read_lat"][perm]
+    gin2["extra_write_lat"] = gin["extra_write_lat"][perm]
+    gin2["desc_mask"] = gin["desc_mask"][:, perm]
+    lat1 = run_model(gin)[1]
+    lat2 = run_model(gin2)[1]
+    assert_allclose(lat2, lat1[perm], rtol=1e-5, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_infinite_bandwidth_means_no_bw_delay(seed):
+    gin = mk(seed, 4, 4, 32, 20.0)
+    gin["bw"] = np.full(4, 1e9, np.float32)
+    bwd = run_model(gin)[3]
+    assert_allclose(bwd, 0.0, atol=1e-3)

@@ -1,0 +1,134 @@
+"""L1 correctness: Pallas queue_scan vs the pure-jnp and numpy oracles.
+
+This is the core correctness signal for the kernel, including a
+hypothesis sweep over shapes and value regimes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels.queue_scan import queue_scan
+from compile.kernels.ref import queue_scan_np, queue_scan_ref
+
+
+def _run_all(demand, capacity):
+    backlog_k, qsum_k = queue_scan(demand, capacity)
+    backlog_r, qsum_r = queue_scan_ref(demand, capacity)
+    backlog_n, qsum_n = queue_scan_np(demand, capacity)
+    return (
+        np.asarray(backlog_k), np.asarray(qsum_k),
+        np.asarray(backlog_r), np.asarray(qsum_r),
+        backlog_n, qsum_n,
+    )
+
+
+def test_zero_demand_is_zero_backlog():
+    d = np.zeros((4, 32), np.float32)
+    c = np.ones((4, 32), np.float32)
+    bk, qk, *_ = _run_all(d, c)
+    assert_allclose(bk, 0.0)
+    assert_allclose(qk, 0.0)
+
+
+def test_demand_below_capacity_never_queues():
+    rng = np.random.default_rng(1)
+    c = rng.uniform(1.0, 2.0, (3, 64)).astype(np.float32)
+    d = c * 0.9
+    bk, qk, *_ = _run_all(d, c)
+    assert_allclose(bk, 0.0)
+    assert_allclose(qk, 0.0)
+
+
+def test_constant_overload_grows_linearly():
+    # demand 2, capacity 1 -> backlog 1, 2, 3, ... per bin.
+    nbins = 16
+    d = np.full((1, nbins), 2.0, np.float32)
+    c = np.ones((1, nbins), np.float32)
+    bk, qk, br, qr, bn, qn = _run_all(d, c)
+    expect = np.arange(1, nbins + 1, dtype=np.float32)[None, :]
+    assert_allclose(bk, expect, rtol=1e-6)
+    assert_allclose(qk, expect.sum(axis=1), rtol=1e-6)
+    assert_allclose(br, expect, rtol=1e-6)
+    assert_allclose(bn, expect, rtol=1e-6)
+
+
+def test_burst_drains():
+    # one big burst then idle: backlog decays by capacity per bin.
+    d = np.zeros((1, 10), np.float32)
+    d[0, 0] = 5.0
+    c = np.ones((1, 10), np.float32)
+    bk, qk, *_ = _run_all(d, c)
+    assert_allclose(bk[0, :5], [4.0, 3.0, 2.0, 1.0, 0.0], rtol=1e-6)
+    assert_allclose(bk[0, 5:], 0.0)
+
+
+def test_rows_are_independent():
+    rng = np.random.default_rng(2)
+    d = rng.uniform(0, 4, (6, 40)).astype(np.float32)
+    c = rng.uniform(0.5, 3, (6, 40)).astype(np.float32)
+    bk_full, _, *_ = _run_all(d, c)
+    for r in range(6):
+        bk_row, _ = queue_scan(d[r : r + 1], c[r : r + 1])
+        assert_allclose(np.asarray(bk_row)[0], bk_full[r], rtol=1e-6)
+
+
+def test_kernel_matches_ref_random():
+    rng = np.random.default_rng(3)
+    d = rng.exponential(2.0, (8, 256)).astype(np.float32)
+    c = rng.uniform(0.5, 4.0, (8, 256)).astype(np.float32)
+    bk, qk, br, qr, bn, qn = _run_all(d, c)
+    assert_allclose(bk, br, rtol=1e-5, atol=1e-4)
+    assert_allclose(qk, qr, rtol=1e-5, atol=1e-3)
+    assert_allclose(bk, bn, rtol=1e-4, atol=1e-2)
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        queue_scan(np.zeros((2, 8), np.float32), np.zeros((2, 9), np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 12),
+    nbins=st.sampled_from([1, 2, 7, 32, 256]),
+    scale=st.floats(0.1, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_kernel_vs_ref(rows, nbins, scale, seed):
+    rng = np.random.default_rng(seed)
+    d = (rng.exponential(1.0, (rows, nbins)) * scale).astype(np.float32)
+    c = (rng.uniform(0.2, 2.0, (rows, nbins)) * scale).astype(np.float32)
+    bk, qk = queue_scan(d, c)
+    bn, qn = queue_scan_np(d, c)
+    assert_allclose(np.asarray(bk), bn, rtol=1e-4, atol=scale * 1e-3)
+    assert_allclose(np.asarray(qk), qn, rtol=1e-4, atol=scale * nbins * 1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nbins=st.sampled_from([8, 64, 256]))
+def test_hypothesis_backlog_invariants(seed, nbins):
+    """Invariants: backlog >= 0; backlog lipschitz wrt demand ordering."""
+    rng = np.random.default_rng(seed)
+    d = rng.exponential(2.0, (4, nbins)).astype(np.float32)
+    c = rng.uniform(0.5, 2.0, (4, nbins)).astype(np.float32)
+    bk, qk = queue_scan(d, c)
+    bk = np.asarray(bk)
+    assert (bk >= 0).all()
+    # adding demand can never reduce backlog anywhere (monotonicity)
+    bk2, _ = queue_scan(d + 0.5, c)
+    assert (np.asarray(bk2) - bk >= -1e-4).all()
+    # adding capacity can never increase backlog
+    bk3, _ = queue_scan(d, c + 0.5)
+    assert (np.asarray(bk3) - bk <= 1e-4).all()
+
+
+def test_float64_inputs_are_accepted():
+    d = np.ones((2, 4), np.float64)
+    c = np.ones((2, 4), np.float64) * 2
+    bk, qk = queue_scan(d, c)
+    assert np.asarray(bk).dtype == np.float32
+    assert_allclose(np.asarray(bk), 0.0)

@@ -1,0 +1,156 @@
+"""L2 correctness: timing_analyzer (Pallas path) vs the pure-jnp oracle,
+plus semantic tests of the timing model itself."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.aot import golden_inputs
+from compile.kernels.ref import timing_analyzer_ref
+
+P, S, B = 4, 3, 64
+
+
+def mk_inputs(seed=0, pools=P, switches=S, nbins=B, rate=2.0):
+    rng = np.random.default_rng(seed)
+    gin = dict(
+        reads=rng.poisson(rate, (pools, nbins)).astype(np.float32),
+        writes=rng.poisson(rate / 2, (pools, nbins)).astype(np.float32),
+        extra_read_lat=rng.uniform(50, 200, pools).astype(np.float32),
+        extra_write_lat=rng.uniform(50, 200, pools).astype(np.float32),
+        desc_mask=(rng.uniform(0, 1, (switches, pools)) < 0.5).astype(np.float32),
+        stt=rng.uniform(1, 30, switches).astype(np.float32),
+        bw=rng.uniform(8, 64, switches).astype(np.float32),
+        bin_width=np.float32(1000.0),
+        bytes_per_ev=np.float32(64.0),
+    )
+    return gin
+
+
+def run_model(gin):
+    total, lat, cong, bwd, backlog = model.timing_analyzer(
+        *[np.asarray(v) for v in gin.values()]
+    )
+    return dict(
+        total=np.asarray(total), lat=np.asarray(lat), cong=np.asarray(cong),
+        bwd=np.asarray(bwd), cong_backlog=np.asarray(backlog),
+    )
+
+
+def test_model_matches_ref():
+    gin = mk_inputs(7)
+    got = run_model(gin)
+    exp = timing_analyzer_ref(**gin)
+    for k in ("total", "lat", "cong", "bwd", "cong_backlog"):
+        assert_allclose(got[k], exp[k], rtol=1e-5, atol=1e-2, err_msg=k)
+
+
+def test_golden_matches_ref():
+    """The golden vectors rust consumes are self-consistent with the model."""
+    gin = golden_inputs(model.NUM_POOLS, model.NUM_SWITCHES, model.NUM_BINS)
+    got = run_model(gin)
+    exp = timing_analyzer_ref(**gin)
+    assert_allclose(got["total"], exp["total"], rtol=1e-5)
+    assert_allclose(got["lat"], exp["lat"], rtol=1e-5)
+
+
+def test_zero_traffic_zero_delay():
+    gin = mk_inputs(1)
+    gin["reads"][:] = 0
+    gin["writes"][:] = 0
+    got = run_model(gin)
+    assert got["total"] == 0.0
+    assert_allclose(got["lat"], 0.0)
+    assert_allclose(got["cong"], 0.0)
+    assert_allclose(got["bwd"], 0.0)
+
+
+def test_latency_delay_is_count_times_extra():
+    """Paper rule: latency delay = #ops x (pool latency - local latency)."""
+    gin = mk_inputs(2)
+    gin["desc_mask"][:] = 0  # no switches -> only latency delay
+    got = run_model(gin)
+    expect = (
+        gin["reads"].sum(1) * gin["extra_read_lat"]
+        + gin["writes"].sum(1) * gin["extra_write_lat"]
+    )
+    assert_allclose(got["lat"], expect, rtol=1e-5)
+    assert_allclose(got["total"], expect.sum(), rtol=1e-5)
+
+
+def test_local_pool_contributes_nothing():
+    gin = mk_inputs(3)
+    gin["extra_read_lat"][0] = 0.0
+    gin["extra_write_lat"][0] = 0.0
+    gin["desc_mask"][:, 0] = 0.0
+    base = run_model(gin)
+    gin2 = {k: np.copy(v) if hasattr(v, "copy") else v for k, v in gin.items()}
+    gin2["reads"][0] += 1000  # hammer the local pool
+    got = run_model(gin2)
+    assert_allclose(got["total"], base["total"], rtol=1e-5)
+
+
+def test_congestion_monotone_in_stt():
+    gin = mk_inputs(4, rate=8.0)
+    gin["bw"][:] = 1e9  # disable bandwidth effects
+    lo = run_model(gin)
+    gin["stt"] = gin["stt"] * 4
+    hi = run_model(gin)
+    assert hi["cong"].sum() >= lo["cong"].sum() - 1e-3
+
+
+def test_bandwidth_monotone_in_bw():
+    gin = mk_inputs(5, rate=20.0)
+    gin["stt"][:] = 0.01  # negligible congestion
+    lo_bw = dict(gin)
+    lo_bw["bw"] = gin["bw"] * 0.1
+    slow = run_model(lo_bw)
+    fast = run_model(gin)
+    assert slow["bwd"].sum() >= fast["bwd"].sum() - 1e-3
+
+
+def test_padding_rows_are_inert():
+    """Zero desc_mask rows + zero stt/bw must contribute exactly nothing."""
+    gin = mk_inputs(6, switches=S)
+    gin["desc_mask"][-1, :] = 0
+    gin["stt"][-1] = 0.0
+    gin["bw"][-1] = 0.0
+    got = run_model(gin)
+    assert got["cong"][-1] == 0.0
+    assert got["bwd"][-1] == 0.0
+    assert np.isfinite(got["total"])
+
+
+def test_batch_matches_singles():
+    e = 3
+    gins = [mk_inputs(seed) for seed in range(e)]
+    shared = gins[0]
+    reads = np.stack([g["reads"] for g in gins])
+    writes = np.stack([g["writes"] for g in gins])
+    total, lat, cong, bwd = [
+        np.asarray(x)
+        for x in model.timing_analyzer_batch(
+            reads, writes, shared["extra_read_lat"], shared["extra_write_lat"],
+            shared["desc_mask"], shared["stt"], shared["bw"],
+            shared["bin_width"], shared["bytes_per_ev"],
+        )
+    ]
+    for i in range(e):
+        single = model.timing_analyzer(
+            reads[i], writes[i], shared["extra_read_lat"],
+            shared["extra_write_lat"], shared["desc_mask"], shared["stt"],
+            shared["bw"], shared["bin_width"], shared["bytes_per_ev"],
+        )
+        assert_allclose(total[i], np.asarray(single[0]), rtol=1e-4, atol=1e-2)
+        assert_allclose(lat[i], np.asarray(single[1]), rtol=1e-4, atol=1e-2)
+        assert_allclose(cong[i], np.asarray(single[2]), rtol=1e-4, atol=1e-2)
+        assert_allclose(bwd[i], np.asarray(single[3]), rtol=1e-4, atol=1e-2)
+
+
+def test_more_traffic_more_delay():
+    gin = mk_inputs(8, rate=4.0)
+    base = run_model(gin)
+    gin["reads"] = gin["reads"] * 3
+    got = run_model(gin)
+    assert got["total"] >= base["total"]

@@ -1,0 +1,70 @@
+//! Bench A4 — epoch-model accuracy vs the detailed event-driven
+//! simulator: for every Table-1 workload, compare the *simulated
+//! slowdown* both models predict for the same topology/placement. The
+//! epoch model must preserve the detailed model's ranking and stay
+//! within a small factor — that is the accuracy claim an epoch-sampled
+//! tool can make (the paper leaves accuracy to future validation; this
+//! bench is our substitute evidence).
+//!
+//!     cargo bench --offline --bench fig_accuracy
+
+use cxlmemsim::alloctrack::PolicyKind;
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::gem5like::DetailedSim;
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::markdown_table;
+use cxlmemsim::workload;
+
+fn main() {
+    let scale: f64 = std::env::var("CXLMEMSIM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.005);
+    let mut cfg = SimConfig::default();
+    cfg.scale = scale;
+    cfg.cache_scale = 16;
+    cfg.backend = AnalyzerBackend::Native;
+    let topo = builtin::fig2();
+
+    println!("## A4: epoch model vs detailed model (fig2, scale {scale})\n");
+    let mut rows = Vec::new();
+    let mut pairs = Vec::new();
+    for wl_name in TABLE1_WORKLOADS {
+        let mut sim = Coordinator::new(topo.clone(), cfg.clone()).unwrap();
+        let rep = sim.run_workload(wl_name).unwrap();
+        let epoch_slow = rep.sim_slowdown();
+
+        let mut det = DetailedSim::new(topo.clone(), cfg.cache_scale, PolicyKind::CxlOnly);
+        let mut wl = workload::by_name(wl_name, scale, cfg.seed).unwrap();
+        let det_rep = det.run(wl.as_mut());
+        // detailed "native" = same workload, all-local placement
+        let mut det_local = DetailedSim::new(topo.clone(), cfg.cache_scale, PolicyKind::LocalOnly);
+        let mut wl = workload::by_name(wl_name, scale, cfg.seed).unwrap();
+        let det_local_rep = det_local.run(wl.as_mut());
+        let det_slow = det_rep.simulated_ns / det_local_rep.simulated_ns;
+
+        pairs.push((wl_name.to_string(), epoch_slow, det_slow));
+        rows.push(vec![
+            wl_name.to_string(),
+            format!("{epoch_slow:.3}x"),
+            format!("{det_slow:.3}x"),
+            format!("{:.2}", epoch_slow / det_slow),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Benchmark", "Epoch model", "Detailed model", "Ratio"],
+            &rows
+        )
+    );
+    // shape: both agree CXL hurts (slowdown > 1) on miss-heavy loads,
+    // and the mean ratio is within a modest band.
+    let ratios: Vec<f64> = pairs.iter().map(|(_, e, d)| e / d).collect();
+    let geo = (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    println!("\ngeomean epoch/detailed slowdown ratio: {geo:.2} (1.0 = perfect agreement)");
+    assert!(
+        (0.2..5.0).contains(&geo),
+        "epoch model drifted out of band vs detailed: {geo}"
+    );
+}

@@ -1,0 +1,96 @@
+//! Bench A2 — congestion vs hosts sharing a switch (paper §2: "each
+//! CXL switch can cause congestion, when multiple hosts use the switch
+//! at the same time"). Regenerates the hosts → congestion-delay series.
+//!
+//!     cargo bench --offline --bench fig_congestion
+
+use cxlmemsim::coordinator::SimConfig;
+use cxlmemsim::multihost;
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::markdown_table;
+use cxlmemsim::workload;
+
+fn main() {
+    let scale: f64 = std::env::var("CXLMEMSIM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.005);
+    let mut cfg = SimConfig::default();
+    cfg.scale = scale;
+    cfg.cache_scale = 32;
+    cfg.backend = AnalyzerBackend::Native;
+    let topo = builtin::wide(); // four pools behind one switch
+
+    println!("## A2: congestion vs hosts sharing a switch (topology wide, scale {scale})\n");
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for hosts in [1usize, 2, 4, 6, 8] {
+        let workloads: Vec<_> = (0..hosts)
+            .map(|i| workload::by_name("stream", scale, cfg.seed + i as u64).unwrap())
+            .collect();
+        let rep = multihost::run_shared(&topo, &cfg, workloads).unwrap();
+        let cong_per_epoch = rep.cong_delay_ns / rep.epochs.max(1) as f64;
+        let bw_per_epoch = rep.bwd_delay_ns / rep.epochs.max(1) as f64;
+        series.push((hosts, cong_per_epoch));
+        rows.push(vec![
+            hosts.to_string(),
+            rep.epochs.to_string(),
+            format!("{:.3}", cong_per_epoch / 1e3),
+            format!("{:.3}", bw_per_epoch / 1e3),
+            format!("{:.3}x", rep.mean_slowdown()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Hosts", "Epochs", "Cong/epoch (µs)", "BW/epoch (µs)", "Mean slowdown"],
+            &rows
+        )
+    );
+    // shape: congestion/epoch strictly grows with host count and grows
+    // super-linearly from 1 to 8 hosts
+    for w in series.windows(2) {
+        assert!(
+            w[1].1 >= w[0].1,
+            "congestion must not shrink with more hosts: {:?}",
+            series
+        );
+    }
+    let (h0, c0) = series[0];
+    let (h1, c1) = *series.last().unwrap();
+    if c0 > 0.0 {
+        let growth = c1 / c0;
+        let linear = h1 as f64 / h0 as f64;
+        println!("\ncongestion growth 1->{h1} hosts: {growth:.1}x (linear would be {linear:.1}x)");
+        assert!(growth > linear, "switch sharing must be super-linear");
+    }
+
+    // second series: hosts *sharing memory* — coherence invalidations
+    // (paper §1: "performance impact of CXL.mem pool coherency")
+    println!("\n### coherency: hosts sharing one zipfian region\n");
+    let mut rows = Vec::new();
+    let mut inv_series = Vec::new();
+    for hosts in [1usize, 2, 4, 8] {
+        let workloads: Vec<_> = (0..hosts)
+            .map(|i| workload::by_name("shared", scale, cfg.seed + i as u64).unwrap())
+            .collect();
+        let rep = multihost::run_shared(&topo, &cfg, workloads).unwrap();
+        let inv_per_epoch = rep.invalidations as f64 / rep.epochs.max(1) as f64;
+        inv_series.push((hosts, inv_per_epoch));
+        rows.push(vec![
+            hosts.to_string(),
+            rep.invalidations.to_string(),
+            format!("{inv_per_epoch:.1}"),
+            format!("{:.3}x", rep.mean_slowdown()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(&["Sharers", "Invalidations", "Inval/epoch", "Mean slowdown"], &rows)
+    );
+    assert_eq!(inv_series[0].1, 0.0, "a lone host has no peers to invalidate");
+    assert!(
+        inv_series.last().unwrap().1 > inv_series[1].1,
+        "invalidation pressure must grow with sharers"
+    );
+}

@@ -1,0 +1,109 @@
+//! Bench A1 — epoch-length sensitivity: the tool's central design
+//! trade-off (paper §3: the Timer divides execution into epochs).
+//! Shorter epochs track bursts more faithfully but cost more analyzer
+//! invocations; longer epochs amortize but blur congestion. Regenerates
+//! the accuracy-vs-overhead curve.
+//!
+//!     cargo bench --offline --bench fig_epoch_sensitivity
+
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::multihost;
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::markdown_table;
+use cxlmemsim::workload;
+
+fn main() {
+    let scale: f64 = std::env::var("CXLMEMSIM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.01);
+
+    let epochs_ms = [0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0];
+
+    // --- part 1: single host (latency-dominated) -----------------
+    // delay is count-based here, so the model must be *invariant* to
+    // epoch length while analyzer invocations drop linearly.
+    println!("## A1a: epoch length, single host (mcf_like, fig2, scale {scale})\n");
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for &epoch_ms in &epochs_ms {
+        let mut cfg = SimConfig::default();
+        cfg.scale = scale;
+        cfg.cache_scale = 16;
+        cfg.backend = AnalyzerBackend::Native;
+        cfg.epoch_ms = epoch_ms;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        let rep = sim.run_workload("mcf_like").unwrap();
+        results.push((epoch_ms, rep.sim_slowdown(), rep.epochs_run, rep.wall_s));
+        rows.push(vec![
+            format!("{epoch_ms}"),
+            rep.epochs_run.to_string(),
+            format!("{:.4}x", rep.sim_slowdown()),
+            format!("{:.3}", rep.delay_ns / 1e6),
+            format!("{:.4}", rep.wall_s),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Epoch (ms)", "Epochs", "SimSlowdown", "Delay (ms)", "Wall (s)"],
+            &rows
+        )
+    );
+    let ref_slow = results[0].1;
+    let worst = results
+        .iter()
+        .map(|(_, s, _, _)| (s / ref_slow - 1.0).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nlatency-delay drift vs 0.1 ms epochs: {:.2}% (must be ~0: the paper's \
+         count x latency rule is binning-invariant)",
+        worst * 100.0
+    );
+    assert!(worst < 0.05, "latency delay must not depend on epoch length");
+    assert!(
+        results[0].2 > results.last().unwrap().2,
+        "finer epochs must mean more analyzer invocations"
+    );
+
+    // --- part 2: shared switch (congestion-sensitive) -------------
+    // three hosts saturate the switch; congestion *does* depend on how
+    // finely bursts are resolved, so epoch length now matters.
+    println!("\n## A1b: epoch length under contention (3x stream, fig2)\n");
+    let mut rows = Vec::new();
+    let mut cong = Vec::new();
+    for &epoch_ms in &epochs_ms {
+        let mut cfg = SimConfig::default();
+        cfg.scale = scale.min(0.005);
+        cfg.cache_scale = 32;
+        cfg.backend = AnalyzerBackend::Native;
+        cfg.epoch_ms = epoch_ms;
+        let hosts: Vec<_> = (0..3)
+            .map(|i| workload::by_name("stream", cfg.scale, cfg.seed + i).unwrap())
+            .collect();
+        let rep = multihost::run_shared(&builtin::fig2(), &cfg, hosts).unwrap();
+        cong.push(rep.cong_delay_ns);
+        rows.push(vec![
+            format!("{epoch_ms}"),
+            rep.epochs.to_string(),
+            format!("{:.3}", rep.cong_delay_ns / 1e6),
+            format!("{:.3}", rep.bwd_delay_ns / 1e6),
+            format!("{:.3}x", rep.mean_slowdown()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Epoch (ms)", "Epochs", "Cong (ms)", "BW (ms)", "Mean slowdown"],
+            &rows
+        )
+    );
+    println!(
+        "\ncongestion is burst-resolution-sensitive: coarser epochs smear bursts \
+         across wider bins (bin width = epoch/256), shifting the congestion estimate."
+    );
+    assert!(
+        cong.iter().any(|c| *c > 0.0),
+        "contended hosts must show congestion somewhere in the sweep"
+    );
+}

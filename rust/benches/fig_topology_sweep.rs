@@ -1,0 +1,61 @@
+//! Bench A3 — topology sweep (the §1 procurement use-case around
+//! Figure 1): simulated slowdown per topology per workload. The figure
+//! this regenerates is the delay-vs-topology series the paper's
+//! Figure-1 discussion implies: deeper hierarchies / shared switches
+//! cost more; directly-attached pools cost least.
+//!
+//!     cargo bench --offline --bench fig_topology_sweep
+
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::markdown_table;
+
+fn main() {
+    let scale: f64 = std::env::var("CXLMEMSIM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.01);
+    let mut cfg = SimConfig::default();
+    cfg.scale = scale;
+    cfg.cache_scale = 16;
+    cfg.backend = AnalyzerBackend::Native;
+
+    println!("## A3: topology sweep (scale {scale})\n");
+    let workloads = ["stream", "mcf_like", "zipfian"];
+    let topos = ["direct", "fig1", "fig2", "deep", "wide", "pooled"];
+    let mut rows = Vec::new();
+    let mut per_topo: Vec<(String, f64)> = Vec::new();
+    for t in topos {
+        let topo = Topology::resolve(t).unwrap();
+        let mut geo = 0.0;
+        for wl in workloads {
+            let mut sim = Coordinator::new(topo.clone(), cfg.clone()).unwrap();
+            let rep = sim.run_workload(wl).unwrap();
+            geo += rep.sim_slowdown().ln();
+            rows.push(vec![
+                t.to_string(),
+                wl.to_string(),
+                format!("{:.3}x", rep.sim_slowdown()),
+                format!("{:.3}", rep.lat_delay_ns / 1e6),
+                format!("{:.3}", rep.cong_delay_ns / 1e6),
+                format!("{:.3}", rep.bwd_delay_ns / 1e6),
+            ]);
+        }
+        per_topo.push((t.to_string(), (geo / workloads.len() as f64).exp()));
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Topology", "Workload", "Slowdown", "Lat(ms)", "Cong(ms)", "BW(ms)"],
+            &rows
+        )
+    );
+    println!("\ngeomean slowdown per topology:");
+    for (t, g) in &per_topo {
+        println!("  {t:8} {g:.3}x");
+    }
+    // shape assertions: direct < deep (depth costs), direct < pooled
+    let get = |name: &str| per_topo.iter().find(|(t, _)| t == name).unwrap().1;
+    assert!(get("direct") < get("deep"), "depth must cost latency");
+    assert!(get("direct") < get("pooled"), "rack pooling must cost latency");
+}

@@ -1,0 +1,117 @@
+//! Bench P1 — hot-path microbenchmarks for the §Perf pass:
+//!
+//!   * timing-analyzer invocations/s: native mirror vs PJRT single vs
+//!     PJRT batched (the L2/L3 boundary cost);
+//!   * cache-hierarchy accesses/s (the per-access substrate cost);
+//!   * end-to-end coordinator epochs/s and accesses/s.
+//!
+//!     cargo bench --offline --bench hotpath
+
+use cxlmemsim::cache::CacheHierarchy;
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::prelude::*;
+use cxlmemsim::runtime::native::NativeAnalyzer;
+use cxlmemsim::runtime::pjrt::{PjrtAnalyzer, PjrtBatchAnalyzer};
+use cxlmemsim::runtime::shapes;
+use cxlmemsim::runtime::{TimingInputs, TimingModel};
+use cxlmemsim::util::benchutil::{bench, fmt_secs};
+use cxlmemsim::util::rng::Rng;
+
+fn main() {
+    let topo = builtin::fig2();
+    let tensors = TopoTensors::build(&topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES).unwrap();
+    let nbins = shapes::NUM_BINS;
+    let dir = shapes::artifacts_dir();
+    let n = shapes::NUM_POOLS * nbins;
+
+    let mut rng = Rng::new(4);
+    let reads: Vec<f32> = (0..n).map(|_| rng.below(20) as f32).collect();
+    let writes: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+    let inp = || TimingInputs {
+        reads: &reads,
+        writes: &writes,
+        bin_width: 3906.25,
+        bytes_per_ev: 64.0,
+    };
+
+    println!("## P1: hot-path microbenchmarks\n");
+
+    // --- analyzer invocation cost --------------------------------
+    let mut native = NativeAnalyzer::new(&tensors, nbins);
+    let s = bench("native analyze", 50, 500, || {
+        native.analyze(&inp()).unwrap();
+    });
+    println!(
+        "native analyzer:      {:>10}/call  ({:.0} calls/s)",
+        fmt_secs(s.mean_s),
+        1.0 / s.mean_s
+    );
+
+    let mut pjrt = PjrtAnalyzer::new(&tensors, nbins, &dir).unwrap();
+    let s = bench("pjrt analyze", 20, 200, || {
+        pjrt.analyze(&inp()).unwrap();
+    });
+    println!(
+        "pjrt analyzer:        {:>10}/call  ({:.0} calls/s)",
+        fmt_secs(s.mean_s),
+        1.0 / s.mean_s
+    );
+
+    let mut batch = PjrtBatchAnalyzer::new(&tensors, nbins, &dir).unwrap();
+    let e = batch.batch;
+    let breads: Vec<f32> = (0..e * n).map(|_| rng.below(20) as f32).collect();
+    let bwrites: Vec<f32> = (0..e * n).map(|_| rng.below(10) as f32).collect();
+    let s = bench("pjrt batch analyze", 10, 100, || {
+        batch.analyze_batch(&breads, &bwrites, 3906.25, 64.0).unwrap();
+    });
+    println!(
+        "pjrt batch ({e:>2}/call): {:>10}/call  ({:.0} epochs/s effective)",
+        fmt_secs(s.mean_s),
+        e as f64 / s.mean_s
+    );
+
+    // --- cache substrate cost ------------------------------------
+    // worst case: uniform-random over 1 GB, every access an LLC miss
+    let mut cache = CacheHierarchy::scaled(1);
+    let addrs: Vec<u64> = (0..1_000_000u64).map(|_| rng.below(1 << 30) & !63).collect();
+    let s = bench("cache 1M misses", 1, 10, || {
+        for &a in &addrs {
+            cache.access(a, a & 64 != 0);
+        }
+    });
+    println!(
+        "cache (all-miss):     {:>10}/1M acc ({:.1} M accesses/s)",
+        fmt_secs(s.mean_s),
+        1.0 / s.mean_s
+    );
+    // common case: hot working set, L1-resident
+    let mut cache = CacheHierarchy::scaled(1);
+    let hot: Vec<u64> = (0..1_000_000u64).map(|_| rng.below(512) * 64).collect();
+    let s = bench("cache 1M hits", 1, 10, || {
+        for &a in &hot {
+            cache.access(a, a & 64 != 0);
+        }
+    });
+    println!(
+        "cache (L1-hot):       {:>10}/1M acc ({:.1} M accesses/s)",
+        fmt_secs(s.mean_s),
+        1.0 / s.mean_s
+    );
+
+    // --- end-to-end coordinator ----------------------------------
+    for (label, backend) in [("native", AnalyzerBackend::Native), ("pjrt", AnalyzerBackend::Pjrt)] {
+        let mut cfg = SimConfig::default();
+        cfg.scale = 0.01;
+        cfg.cache_scale = 1;
+        cfg.backend = backend;
+        let mut sim = Coordinator::new(topo.clone(), cfg).unwrap();
+        let rep = sim.run_workload("mcf_like").unwrap();
+        println!(
+            "coordinator[{label:6}]: {:>10} wall, {} epochs ({:.0} epochs/s), {:.1} M accesses/s",
+            fmt_secs(rep.wall_s),
+            rep.epochs_run,
+            rep.epochs_run as f64 / rep.wall_s,
+            rep.total_accesses as f64 / rep.wall_s / 1e6
+        );
+    }
+}

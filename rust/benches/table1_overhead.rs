@@ -1,0 +1,87 @@
+//! Bench T1 — regenerates the paper's Table 1 (§4, "Performance
+//! evaluation of CXLMemSim"): wall-clock of each benchmark run native,
+//! under the detailed (gem5-like) baseline, and under CXLMemSim, plus
+//! the slowdown factors the paper reports.
+//!
+//!     cargo bench --offline --bench table1_overhead
+//!
+//! Env: CXLMEMSIM_BENCH_SCALE (default 0.02), CXLMEMSIM_BENCH_BACKEND
+//! (pjrt|native, default pjrt). We do not expect the paper's absolute
+//! numbers (different substrate); the *shape* must hold:
+//! native < CXLMemSim << detailed, with CXLMemSim orders of magnitude
+//! closer to native.
+
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::gem5like::DetailedSim;
+use cxlmemsim::prelude::*;
+use cxlmemsim::util::benchutil::{markdown_table, time_once};
+use cxlmemsim::workload;
+
+fn main() {
+    let scale: f64 = std::env::var("CXLMEMSIM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02);
+    let backend = std::env::var("CXLMEMSIM_BENCH_BACKEND")
+        .ok()
+        .and_then(|v| AnalyzerBackend::parse(&v))
+        .unwrap_or(AnalyzerBackend::Pjrt);
+
+    let mut cfg = SimConfig::default();
+    cfg.scale = scale;
+    cfg.backend = backend;
+    let topo = builtin::fig2();
+
+    println!("## T1: Table 1 overhead (scale {scale}, backend {backend:?}, topology fig2)\n");
+    let mut rows = Vec::new();
+    let mut geo_sim = 0.0;
+    let mut geo_det = 0.0;
+    for wl_name in TABLE1_WORKLOADS {
+        let mut wl = workload::by_name(wl_name, scale, cfg.seed).unwrap();
+        let (_, native) = time_once(|| while wl.next_event().is_some() {});
+
+        let mut det = DetailedSim::new(topo.clone(), cfg.cache_scale, cfg.policy.clone());
+        let mut wl = workload::by_name(wl_name, scale, cfg.seed).unwrap();
+        let det_rep = det.run(wl.as_mut());
+
+        let mut sim = Coordinator::new(topo.clone(), cfg.clone()).unwrap();
+        let rep = sim.run_workload(wl_name).unwrap();
+
+        geo_sim += (rep.wall_s / native).ln();
+        geo_det += (det_rep.wall_s / native).ln();
+        rows.push(vec![
+            wl_name.to_string(),
+            format!("{native:.4}"),
+            format!("{:.3}", det_rep.wall_s),
+            format!("{:.3}", rep.wall_s),
+            format!("{:.1}x", det_rep.wall_s / native),
+            format!("{:.1}x", rep.wall_s / native),
+            format!("{:.3}x", rep.sim_slowdown()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                "Benchmark",
+                "Native (s)",
+                "Detailed (s)",
+                "CXLMemSim (s)",
+                "Det/Nat",
+                "Sim/Nat",
+                "SimSlowdown"
+            ],
+            &rows
+        )
+    );
+    let n = TABLE1_WORKLOADS.len() as f64;
+    let sim_over = (geo_sim / n).exp();
+    let det_over = (geo_det / n).exp();
+    println!("\ngeomean: CXLMemSim {sim_over:.1}x native, detailed {det_over:.1}x native");
+    println!(
+        "CXLMemSim is {:.1}x faster than the detailed baseline \
+         (paper: 41.06x native avg, ~73x faster than gem5)",
+        det_over / sim_over
+    );
+    assert!(sim_over < det_over, "shape violated: CXLMemSim must beat detailed");
+}

@@ -1,0 +1,324 @@
+//! Allocation tracker — the eBPF-consumer substitute.
+//!
+//! The paper's Tracer hooks allocation syscalls with eBPF so CXLMemSim
+//! knows, for every sampled address, which memory pool it lives in.
+//! This module consumes the same (syscall, range, time) stream from the
+//! workload engine, maintains an interval map of live regions, and maps
+//! addresses to pools according to a pluggable *placement policy*
+//! (page- or region-granular, matching the paper's "cache-line vs page
+//! memory management" research agenda).
+
+pub mod policy;
+
+use std::collections::BTreeMap;
+
+use crate::topology::{PoolId, Topology, LOCAL_POOL};
+use crate::trace::AllocEvent;
+pub use policy::{Placement, PlacementPolicy, PolicyKind};
+
+/// A live allocated region and where its bytes were placed.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub start: u64,
+    pub len: u64,
+    pub placement: Placement,
+}
+
+impl Region {
+    #[inline]
+    pub fn end(&self) -> u64 {
+        self.start + self.len
+    }
+
+    /// Pool owning `addr` (caller guarantees addr is inside the region).
+    #[inline]
+    pub fn pool_of(&self, addr: u64) -> PoolId {
+        match &self.placement {
+            Placement::Single(p) => *p,
+            Placement::Interleaved { pools, page_bytes } => {
+                let page = (addr - self.start) / page_bytes;
+                pools[(page % pools.len() as u64) as usize]
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrackerStats {
+    pub allocs: u64,
+    pub frees: u64,
+    pub lookup_misses: u64,
+    pub live_bytes: u64,
+    /// Bytes currently resident per pool (index = PoolId).
+    pub pool_bytes: Vec<u64>,
+}
+
+/// Interval map of live regions + placement policy + per-pool usage.
+pub struct AllocTracker {
+    /// start -> region; regions never overlap.
+    regions: BTreeMap<u64, Region>,
+    policy: Box<dyn PlacementPolicy>,
+    pub stats: TrackerStats,
+    num_pools: usize,
+}
+
+impl AllocTracker {
+    pub fn new(topo: &Topology, policy: Box<dyn PlacementPolicy>) -> AllocTracker {
+        let num_pools = topo.num_pools();
+        AllocTracker {
+            regions: BTreeMap::new(),
+            policy,
+            stats: TrackerStats { pool_bytes: vec![0; num_pools], ..Default::default() },
+            num_pools,
+        }
+    }
+
+    pub fn num_pools(&self) -> usize {
+        self.num_pools
+    }
+
+    /// Apply one allocation event from the trace.
+    pub fn on_alloc_event(&mut self, ev: &AllocEvent) {
+        if ev.kind.is_release() {
+            self.release(ev.addr, ev.len);
+        } else {
+            self.allocate(ev);
+        }
+    }
+
+    fn allocate(&mut self, ev: &AllocEvent) {
+        if ev.len == 0 {
+            return;
+        }
+        // Overlapping re-allocation: drop any overlapped live regions
+        // first (matches kernel mmap MAP_FIXED semantics and keeps the
+        // interval map consistent for malformed traces).
+        self.release(ev.addr, ev.len);
+        let placement = self.policy.place(ev, &self.stats);
+        let region = Region { start: ev.addr, len: ev.len, placement };
+        self.account(&region, true);
+        self.stats.allocs += 1;
+        self.regions.insert(ev.addr, region);
+    }
+
+    fn release(&mut self, addr: u64, len: u64) {
+        let end = if len == 0 { addr + 1 } else { addr + len };
+        // collect candidate starts overlapping [addr, end)
+        let starts: Vec<u64> = self
+            .regions
+            .range(..end)
+            .rev()
+            .take_while(|(_, r)| r.end() > addr)
+            .map(|(s, _)| *s)
+            .collect();
+        for s in starts {
+            if let Some(r) = self.regions.remove(&s) {
+                if r.end() > addr && r.start < end {
+                    self.account(&r, false);
+                    self.stats.frees += 1;
+                    // partial unmap: keep the non-overlapping tail/head
+                    if r.start < addr {
+                        let head = Region {
+                            start: r.start,
+                            len: addr - r.start,
+                            placement: r.placement.clone(),
+                        };
+                        self.account(&head, true);
+                        self.regions.insert(head.start, head);
+                    }
+                    if r.end() > end {
+                        let tail = Region {
+                            start: end,
+                            len: r.end() - end,
+                            placement: r.placement.clone(),
+                        };
+                        self.account(&tail, true);
+                        self.regions.insert(tail.start, tail);
+                    }
+                } else {
+                    self.regions.insert(s, r); // not actually overlapping
+                }
+            }
+        }
+    }
+
+    fn account(&mut self, region: &Region, add: bool) {
+        // distribute bytes across pools per placement
+        match &region.placement {
+            Placement::Single(p) => {
+                if add {
+                    self.stats.pool_bytes[*p] += region.len;
+                    self.stats.live_bytes += region.len;
+                } else {
+                    self.stats.pool_bytes[*p] =
+                        self.stats.pool_bytes[*p].saturating_sub(region.len);
+                    self.stats.live_bytes = self.stats.live_bytes.saturating_sub(region.len);
+                }
+            }
+            Placement::Interleaved { pools, page_bytes } => {
+                let pages = region.len.div_ceil(*page_bytes);
+                for page in 0..pages {
+                    let p = pools[(page % pools.len() as u64) as usize];
+                    let sz = (*page_bytes).min(region.len - page * page_bytes);
+                    if add {
+                        self.stats.pool_bytes[p] += sz;
+                        self.stats.live_bytes += sz;
+                    } else {
+                        self.stats.pool_bytes[p] = self.stats.pool_bytes[p].saturating_sub(sz);
+                        self.stats.live_bytes = self.stats.live_bytes.saturating_sub(sz);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pool owning an address. Unknown addresses (stack, code, ...) are
+    /// local DRAM, like the real tool's default for untracked ranges.
+    #[inline]
+    pub fn pool_of(&mut self, addr: u64) -> PoolId {
+        if let Some((_, r)) = self.regions.range(..=addr).next_back() {
+            if addr < r.end() {
+                return r.pool_of(addr);
+            }
+        }
+        self.stats.lookup_misses += 1;
+        LOCAL_POOL
+    }
+
+    /// Move a whole region (page-set) to another pool — the migration
+    /// hook used by `policy::migration` research experiments.
+    pub fn migrate_region(&mut self, start: u64, to: PoolId) -> bool {
+        if to >= self.num_pools {
+            return false;
+        }
+        // remove + reinsert to fix accounting
+        if let Some(r) = self.regions.remove(&start) {
+            self.account(&r, false);
+            let moved = Region { placement: Placement::Single(to), ..r };
+            self.account(&moved, true);
+            self.regions.insert(start, moved);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn live_regions(&self) -> impl Iterator<Item = &Region> {
+        self.regions.values()
+    }
+
+    pub fn region_count(&self) -> usize {
+        self.regions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builtin;
+    use crate::trace::AllocKind;
+
+    fn ev(kind: AllocKind, addr: u64, len: u64) -> AllocEvent {
+        AllocEvent { kind, addr, len, t_ns: 0.0 }
+    }
+
+    fn tracker(policy: PolicyKind) -> AllocTracker {
+        let topo = builtin::fig2();
+        AllocTracker::new(&topo, policy.build(&topo))
+    }
+
+    #[test]
+    fn alloc_then_lookup() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x2000));
+        let p = t.pool_of(0x1800);
+        assert!(p >= 1, "CxlOnly must place on a CXL pool, got {p}");
+        assert_eq!(t.stats.lookup_misses, 0);
+    }
+
+    #[test]
+    fn unknown_address_is_local() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        assert_eq!(t.pool_of(0xdead_beef), LOCAL_POOL);
+        assert_eq!(t.stats.lookup_misses, 1);
+    }
+
+    #[test]
+    fn free_forgets_region() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Malloc, 0x1000, 0x1000));
+        assert_ne!(t.pool_of(0x1800), LOCAL_POOL);
+        t.on_alloc_event(&ev(AllocKind::Free, 0x1000, 0x1000));
+        assert_eq!(t.pool_of(0x1800), LOCAL_POOL);
+        assert_eq!(t.stats.live_bytes, 0);
+    }
+
+    #[test]
+    fn partial_munmap_keeps_tail() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x10000, 0x4000));
+        t.on_alloc_event(&ev(AllocKind::Munmap, 0x10000, 0x1000));
+        assert_eq!(t.pool_of(0x10800), LOCAL_POOL); // unmapped head
+        assert_ne!(t.pool_of(0x12000), LOCAL_POOL); // live tail
+    }
+
+    #[test]
+    fn partial_munmap_keeps_head() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x10000, 0x4000));
+        t.on_alloc_event(&ev(AllocKind::Munmap, 0x13000, 0x1000));
+        assert_ne!(t.pool_of(0x10800), LOCAL_POOL);
+        assert_eq!(t.pool_of(0x13800), LOCAL_POOL);
+    }
+
+    #[test]
+    fn interleave_stripes_pages() {
+        let topo = builtin::fig2();
+        let mut t = AllocTracker::new(
+            &topo,
+            PolicyKind::Interleave { page_bytes: 4096 }.build(&topo),
+        );
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x0, 4096 * 6));
+        let pools: Vec<PoolId> = (0..6).map(|i| t.pool_of(i * 4096 + 64)).collect();
+        // must hit more than one pool, cyclically
+        assert!(pools.windows(2).any(|w| w[0] != w[1]), "{pools:?}");
+        assert_eq!(pools[0], pools[3]); // 3 CXL pools in fig2 -> period 3
+    }
+
+    #[test]
+    fn accounting_tracks_pool_bytes() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x0, 1 << 20));
+        assert_eq!(t.stats.live_bytes, 1 << 20);
+        let cxl_total: u64 = t.stats.pool_bytes[1..].iter().sum();
+        assert_eq!(cxl_total, 1 << 20);
+        t.on_alloc_event(&ev(AllocKind::Munmap, 0x0, 1 << 20));
+        assert_eq!(t.stats.live_bytes, 0);
+    }
+
+    #[test]
+    fn overlapping_remap_replaces() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x2000));
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x2000)); // MAP_FIXED-style
+        assert_eq!(t.stats.live_bytes, 0x2000);
+        assert_eq!(t.region_count(), 1);
+    }
+
+    #[test]
+    fn migrate_region_moves_bytes() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x1000));
+        let before = t.pool_of(0x1800);
+        assert!(t.migrate_region(0x1000, LOCAL_POOL));
+        assert_eq!(t.pool_of(0x1800), LOCAL_POOL);
+        assert!(before != LOCAL_POOL);
+        assert_eq!(t.stats.pool_bytes[LOCAL_POOL], 0x1000);
+    }
+
+    #[test]
+    fn migrate_unknown_region_fails() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        assert!(!t.migrate_region(0x9999, LOCAL_POOL));
+    }
+}

@@ -1,0 +1,315 @@
+//! Placement policies: which pool serves a new allocation.
+//!
+//! The paper motivates CXLMemSim as a vehicle for exactly this research
+//! ("memory scheduling for complex applications", page vs cache-line
+//! management). These policies are the baseline set; the `policy`
+//! module layers migration/prefetch on top.
+
+use crate::topology::{PoolId, Topology, LOCAL_POOL};
+use crate::trace::{AllocEvent, AllocKind};
+
+use super::TrackerStats;
+
+/// How a region's bytes are spread over pools.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Placement {
+    Single(PoolId),
+    /// Page-granular round-robin striping over `pools`.
+    Interleaved { pools: Vec<PoolId>, page_bytes: u64 },
+}
+
+/// Decides a placement for each allocation event, observing current
+/// per-pool usage.
+pub trait PlacementPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn place(&mut self, ev: &AllocEvent, stats: &TrackerStats) -> Placement;
+}
+
+/// Named policy constructors for CLI/config use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyKind {
+    /// Everything local (the "native" baseline topology usage).
+    LocalOnly,
+    /// Everything on CXL pools, round-robin per allocation.
+    CxlOnly,
+    /// Local until a capacity cap, then spill to CXL (Pond-style).
+    LocalFirst { local_cap_bytes: u64 },
+    /// Page-interleave every allocation across all CXL pools.
+    Interleave { page_bytes: u64 },
+    /// Small allocations local, large ones to CXL (size-class tiering).
+    SizeClass { threshold_bytes: u64 },
+    /// Prefer the pool with the most free capacity (least-loaded).
+    LeastLoaded,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Some(match s {
+            "local" => PolicyKind::LocalOnly,
+            "cxl" => PolicyKind::CxlOnly,
+            "localfirst" => PolicyKind::LocalFirst { local_cap_bytes: 1 << 30 },
+            "interleave" => PolicyKind::Interleave { page_bytes: 4096 },
+            "sizeclass" => PolicyKind::SizeClass { threshold_bytes: 2 << 20 },
+            "leastloaded" => PolicyKind::LeastLoaded,
+            _ => return None,
+        })
+    }
+
+    pub fn build(&self, topo: &Topology) -> Box<dyn PlacementPolicy> {
+        let cxl_pools: Vec<PoolId> = (1..topo.num_pools()).collect();
+        let caps: Vec<u64> = (0..topo.num_pools()).map(|p| topo.pool_capacity(p)).collect();
+        match self {
+            PolicyKind::LocalOnly => Box::new(LocalOnly),
+            PolicyKind::CxlOnly => Box::new(CxlOnly { pools: cxl_pools, next: 0 }),
+            PolicyKind::LocalFirst { local_cap_bytes } => Box::new(LocalFirst {
+                cap: *local_cap_bytes,
+                pools: cxl_pools,
+                next: 0,
+            }),
+            PolicyKind::Interleave { page_bytes } => Box::new(Interleave {
+                pools: cxl_pools,
+                page_bytes: *page_bytes,
+            }),
+            PolicyKind::SizeClass { threshold_bytes } => Box::new(SizeClass {
+                threshold: *threshold_bytes,
+                pools: cxl_pools,
+                next: 0,
+            }),
+            PolicyKind::LeastLoaded => Box::new(LeastLoaded { caps }),
+        }
+    }
+}
+
+struct LocalOnly;
+
+impl PlacementPolicy for LocalOnly {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+    fn place(&mut self, _ev: &AllocEvent, _stats: &TrackerStats) -> Placement {
+        Placement::Single(LOCAL_POOL)
+    }
+}
+
+struct CxlOnly {
+    pools: Vec<PoolId>,
+    next: usize,
+}
+
+impl PlacementPolicy for CxlOnly {
+    fn name(&self) -> &'static str {
+        "cxl"
+    }
+    fn place(&mut self, _ev: &AllocEvent, _stats: &TrackerStats) -> Placement {
+        if self.pools.is_empty() {
+            return Placement::Single(LOCAL_POOL);
+        }
+        let p = self.pools[self.next % self.pools.len()];
+        self.next += 1;
+        Placement::Single(p)
+    }
+}
+
+struct LocalFirst {
+    cap: u64,
+    pools: Vec<PoolId>,
+    next: usize,
+}
+
+impl PlacementPolicy for LocalFirst {
+    fn name(&self) -> &'static str {
+        "localfirst"
+    }
+    fn place(&mut self, ev: &AllocEvent, stats: &TrackerStats) -> Placement {
+        if stats.pool_bytes[LOCAL_POOL] + ev.len <= self.cap || self.pools.is_empty() {
+            Placement::Single(LOCAL_POOL)
+        } else {
+            let p = self.pools[self.next % self.pools.len()];
+            self.next += 1;
+            Placement::Single(p)
+        }
+    }
+}
+
+struct Interleave {
+    pools: Vec<PoolId>,
+    page_bytes: u64,
+}
+
+impl PlacementPolicy for Interleave {
+    fn name(&self) -> &'static str {
+        "interleave"
+    }
+    fn place(&mut self, _ev: &AllocEvent, _stats: &TrackerStats) -> Placement {
+        if self.pools.is_empty() {
+            Placement::Single(LOCAL_POOL)
+        } else {
+            Placement::Interleaved {
+                pools: self.pools.clone(),
+                page_bytes: self.page_bytes,
+            }
+        }
+    }
+}
+
+struct SizeClass {
+    threshold: u64,
+    pools: Vec<PoolId>,
+    next: usize,
+}
+
+impl PlacementPolicy for SizeClass {
+    fn name(&self) -> &'static str {
+        "sizeclass"
+    }
+    fn place(&mut self, ev: &AllocEvent, _stats: &TrackerStats) -> Placement {
+        // glibc-style heuristic: brk/sbrk (heap growth) and small blocks
+        // stay local; big mmap/calloc regions go to CXL.
+        let heapish = matches!(ev.kind, AllocKind::Sbrk | AllocKind::Brk);
+        if (heapish && ev.len < self.threshold) || ev.len < self.threshold || self.pools.is_empty()
+        {
+            Placement::Single(LOCAL_POOL)
+        } else {
+            let p = self.pools[self.next % self.pools.len()];
+            self.next += 1;
+            Placement::Single(p)
+        }
+    }
+}
+
+struct LeastLoaded {
+    caps: Vec<u64>,
+}
+
+impl PlacementPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "leastloaded"
+    }
+    fn place(&mut self, _ev: &AllocEvent, stats: &TrackerStats) -> Placement {
+        // pick the pool with the largest absolute free capacity,
+        // considering local DRAM too.
+        let mut best = LOCAL_POOL;
+        let mut best_free = 0i128;
+        for p in 0..self.caps.len() {
+            let used = *stats.pool_bytes.get(p).unwrap_or(&0) as i128;
+            let free = self.caps[p] as i128 - used;
+            if free > best_free {
+                best_free = free;
+                best = p;
+            }
+        }
+        Placement::Single(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builtin;
+
+    fn ev(len: u64, kind: AllocKind) -> AllocEvent {
+        AllocEvent { kind, addr: 0x1000, len, t_ns: 0.0 }
+    }
+
+    fn stats(pools: usize) -> TrackerStats {
+        TrackerStats { pool_bytes: vec![0; pools], ..Default::default() }
+    }
+
+    #[test]
+    fn parse_known_policies() {
+        for name in ["local", "cxl", "localfirst", "interleave", "sizeclass", "leastloaded"] {
+            assert!(PolicyKind::parse(name).is_some(), "{name}");
+        }
+        assert!(PolicyKind::parse("fancy").is_none());
+    }
+
+    #[test]
+    fn local_only_always_local() {
+        let topo = builtin::fig2();
+        let mut p = PolicyKind::LocalOnly.build(&topo);
+        assert_eq!(
+            p.place(&ev(1 << 30, AllocKind::Mmap), &stats(4)),
+            Placement::Single(LOCAL_POOL)
+        );
+    }
+
+    #[test]
+    fn cxl_only_round_robins() {
+        let topo = builtin::fig2(); // 3 CXL pools
+        let mut p = PolicyKind::CxlOnly.build(&topo);
+        let s = stats(4);
+        let a = p.place(&ev(64, AllocKind::Malloc), &s);
+        let b = p.place(&ev(64, AllocKind::Malloc), &s);
+        let c = p.place(&ev(64, AllocKind::Malloc), &s);
+        let d = p.place(&ev(64, AllocKind::Malloc), &s);
+        assert_ne!(a, b);
+        assert_eq!(a, d); // period 3
+        let _ = c;
+    }
+
+    #[test]
+    fn local_first_spills_at_cap() {
+        let topo = builtin::fig2();
+        let mut p = PolicyKind::LocalFirst { local_cap_bytes: 1000 }.build(&topo);
+        let mut s = stats(4);
+        assert_eq!(
+            p.place(&ev(500, AllocKind::Mmap), &s),
+            Placement::Single(LOCAL_POOL)
+        );
+        s.pool_bytes[LOCAL_POOL] = 900;
+        match p.place(&ev(500, AllocKind::Mmap), &s) {
+            Placement::Single(pool) => assert!(pool >= 1, "must spill to CXL"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn size_class_splits_by_threshold() {
+        let topo = builtin::fig2();
+        let mut p = PolicyKind::SizeClass { threshold_bytes: 1 << 20 }.build(&topo);
+        let s = stats(4);
+        assert_eq!(
+            p.place(&ev(4096, AllocKind::Malloc), &s),
+            Placement::Single(LOCAL_POOL)
+        );
+        match p.place(&ev(16 << 20, AllocKind::Mmap), &s) {
+            Placement::Single(pool) => assert!(pool >= 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_free_capacity() {
+        let topo = builtin::fig2();
+        let mut p = PolicyKind::LeastLoaded.build(&topo);
+        let mut s = stats(topo.num_pools());
+        // empty pools: the 128 GB pool has the most free capacity
+        match p.place(&ev(64, AllocKind::Malloc), &s) {
+            Placement::Single(pool) => assert_eq!(topo.pool_capacity(pool), 128 << 30),
+            other => panic!("unexpected {other:?}"),
+        }
+        // fill the big pool -> local DRAM (96 GB) becomes most free
+        for pool in 0..topo.num_pools() {
+            if topo.pool_capacity(pool) == 128 << 30 {
+                s.pool_bytes[pool] = 128 << 30;
+            }
+        }
+        assert_eq!(
+            p.place(&ev(64, AllocKind::Malloc), &s),
+            Placement::Single(LOCAL_POOL)
+        );
+    }
+
+    #[test]
+    fn interleave_emits_striped_placement() {
+        let topo = builtin::fig2();
+        let mut p = PolicyKind::Interleave { page_bytes: 4096 }.build(&topo);
+        match p.place(&ev(1 << 20, AllocKind::Mmap), &stats(4)) {
+            Placement::Interleaved { pools, page_bytes } => {
+                assert_eq!(pools.len(), 3);
+                assert_eq!(page_bytes, 4096);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Cache hierarchy substrate — the PEBS substitute.
+//!
+//! Intel PEBS delivers (address, rw, timestamp) tuples for sampled
+//! LLC-miss events. Without PEBS, CXLMemSim derives the same stream by
+//! running the workload's virtual address trace through a simulated
+//! inclusive L1/L2/LLC hierarchy (set-associative, LRU, write-allocate,
+//! write-back). Dirty evictions emit a write event against the evicted
+//! line's pool, matching how a real CXL device observes write-backs.
+//!
+//! Geometry defaults to the paper's i9-12900K testbed (30 MB LLC); the
+//! `scaled` constructor shrinks everything for fast tests/benches.
+
+pub mod prefetch;
+pub mod set_assoc;
+
+pub use prefetch::{Prefetcher, PrefetchStats};
+pub use set_assoc::SetAssocCache;
+
+/// Outcome of one access against the full hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AccessOutcome {
+    L1Hit,
+    L2Hit,
+    LlcHit,
+    /// LLC miss: goes to memory. `writeback` carries the dirty victim
+    /// line's address if the LLC eviction was dirty.
+    Miss { writeback: Option<u64> },
+}
+
+/// Latency (ns) the core observes for each hit level; the *memory*
+/// latency is supplied by the topology, not here.
+#[derive(Clone, Copy, Debug)]
+pub struct HitLatencies {
+    pub l1_ns: f64,
+    pub l2_ns: f64,
+    pub llc_ns: f64,
+}
+
+impl Default for HitLatencies {
+    fn default() -> Self {
+        // Golden Cove-ish: 5 cyc L1 / 15 cyc L2 / ~60 cyc LLC @5GHz.
+        HitLatencies { l1_ns: 1.0, l2_ns: 3.0, llc_ns: 12.0 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub llc_hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Three-level inclusive hierarchy.
+#[derive(Clone, Debug)]
+pub struct CacheHierarchy {
+    pub l1: SetAssocCache,
+    pub l2: SetAssocCache,
+    pub llc: SetAssocCache,
+    pub lat: HitLatencies,
+    pub stats: CacheStats,
+    line_bytes: u64,
+}
+
+impl CacheHierarchy {
+    /// The paper's testbed: 48 KB/12-way L1D, 1.25 MB/10-way L2,
+    /// 30 MB/12-way shared LLC, 64 B lines.
+    pub fn i9_12900k() -> CacheHierarchy {
+        CacheHierarchy::new(
+            SetAssocCache::new(48 << 10, 12, 64),
+            SetAssocCache::new(1_310_720, 10, 64),
+            SetAssocCache::new(30 << 20, 12, 64),
+            HitLatencies::default(),
+        )
+    }
+
+    /// Geometry scaled down by `factor` (same associativity); used by
+    /// tests and fast benches so working sets overflow quickly.
+    pub fn scaled(factor: u64) -> CacheHierarchy {
+        let f = factor.max(1);
+        CacheHierarchy::new(
+            SetAssocCache::new((48 << 10) / f, 12, 64),
+            SetAssocCache::new(1_310_720 / f, 10, 64),
+            SetAssocCache::new((30 << 20) / f, 12, 64),
+            HitLatencies::default(),
+        )
+    }
+
+    pub fn new(
+        l1: SetAssocCache,
+        l2: SetAssocCache,
+        llc: SetAssocCache,
+        lat: HitLatencies,
+    ) -> CacheHierarchy {
+        let line = llc.line_bytes();
+        assert_eq!(l1.line_bytes(), line);
+        assert_eq!(l2.line_bytes(), line);
+        CacheHierarchy { l1, l2, llc, lat, stats: CacheStats::default(), line_bytes: line }
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.line_bytes
+    }
+
+    /// Run one access through the hierarchy. Returns the outcome; the
+    /// caller converts `Miss` into a PEBS-style sample.
+    #[inline]
+    pub fn access(&mut self, addr: u64, is_write: bool) -> AccessOutcome {
+        self.stats.accesses += 1;
+        let line = addr / self.line_bytes;
+
+        if self.l1.probe(line, is_write) {
+            self.stats.l1_hits += 1;
+            return AccessOutcome::L1Hit;
+        }
+        if self.l2.probe(line, is_write) {
+            // fill upward; L1 victim may be dirty but stays inside the
+            // hierarchy (absorbed by L2 inclusivity), no memory traffic.
+            self.l1.fill(line, is_write);
+            self.stats.l2_hits += 1;
+            return AccessOutcome::L2Hit;
+        }
+        if self.llc.probe(line, is_write) {
+            self.l2.fill(line, is_write);
+            self.l1.fill(line, is_write);
+            self.stats.llc_hits += 1;
+            return AccessOutcome::LlcHit;
+        }
+
+        // LLC miss: fill all levels; LLC eviction may write back and, by
+        // inclusion, invalidates the line in L1/L2 (dirty state there is
+        // folded into the write-back decision).
+        self.stats.misses += 1;
+        let victim = self.llc.fill(line, is_write);
+        let mut writeback = None;
+        if let Some(v) = victim {
+            let inner_dirty = self.l1.invalidate(v.line) | self.l2.invalidate(v.line);
+            if v.dirty || inner_dirty {
+                self.stats.writebacks += 1;
+                writeback = Some(v.line * self.line_bytes);
+            }
+        }
+        self.l2.fill(line, is_write);
+        self.l1.fill(line, is_write);
+        AccessOutcome::Miss { writeback }
+    }
+
+    /// Hit latency for an outcome (misses get topology latency added by
+    /// the caller).
+    pub fn hit_latency_ns(&self, outcome: AccessOutcome) -> f64 {
+        match outcome {
+            AccessOutcome::L1Hit => self.lat.l1_ns,
+            AccessOutcome::L2Hit => self.lat.l2_ns,
+            AccessOutcome::LlcHit => self.lat.llc_ns,
+            AccessOutcome::Miss { .. } => self.lat.llc_ns, // + memory latency by caller
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Coherence back-invalidation: drop `addr`'s line from every level
+    /// (a peer host wrote the shared line). Returns whether any copy
+    /// was present — i.e. whether an invalidation message was needed.
+    pub fn coherence_invalidate(&mut self, addr: u64) -> bool {
+        let line = addr / self.line_bytes;
+        let present =
+            self.l1.contains(line) || self.l2.contains(line) || self.llc.contains(line);
+        if present {
+            self.l1.invalidate(line);
+            self.l2.invalidate(line);
+            self.llc.invalidate(line);
+        }
+        present
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CacheHierarchy {
+        // 4-set/2-way L1 (512B), 16-set/2-way L2 (2KB), 64-set/4-way LLC (16KB)
+        CacheHierarchy::new(
+            SetAssocCache::new(512, 2, 64),
+            SetAssocCache::new(2048, 2, 64),
+            SetAssocCache::new(16384, 4, 64),
+            HitLatencies::default(),
+        )
+    }
+
+    #[test]
+    fn first_touch_misses_then_hits() {
+        let mut h = tiny();
+        assert!(matches!(h.access(0x1000, false), AccessOutcome::Miss { .. }));
+        assert_eq!(h.access(0x1000, false), AccessOutcome::L1Hit);
+        assert_eq!(h.access(0x1008, false), AccessOutcome::L1Hit); // same line
+        assert_eq!(h.stats.misses, 1);
+        assert_eq!(h.stats.l1_hits, 2);
+    }
+
+    #[test]
+    fn llc_overflow_generates_misses() {
+        let mut h = tiny();
+        // touch 16x the LLC capacity sequentially, twice
+        let lines = 16384 / 64 * 16;
+        for round in 0..2 {
+            for i in 0..lines {
+                h.access(i * 64, false);
+            }
+            let _ = round;
+        }
+        // streaming working set >> LLC: second round must still miss
+        assert!(h.stats.misses as u64 > lines, "misses={}", h.stats.misses);
+    }
+
+    #[test]
+    fn small_working_set_fits_after_warmup() {
+        let mut h = tiny();
+        // 8 lines fit in L1 (512B = 8 lines)
+        for _ in 0..10 {
+            for i in 0..8 {
+                h.access(i * 64, false);
+            }
+        }
+        assert_eq!(h.stats.misses, 8); // only compulsory misses
+    }
+
+    #[test]
+    fn dirty_eviction_emits_writeback() {
+        let mut h = tiny();
+        // write a line, then stream reads over it to force eviction
+        h.access(0x0, true);
+        let mut saw_wb = false;
+        for i in 1..4096u64 {
+            if let AccessOutcome::Miss { writeback: Some(wb) } = h.access(i * 64, false) {
+                if wb == 0 {
+                    saw_wb = true;
+                }
+            }
+        }
+        assert!(saw_wb, "dirty line 0 never written back");
+        assert!(h.stats.writebacks > 0);
+    }
+
+    #[test]
+    fn clean_stream_never_writes_back() {
+        let mut h = tiny();
+        for i in 0..8192u64 {
+            h.access(i * 64, false);
+        }
+        assert_eq!(h.stats.writebacks, 0);
+    }
+
+    #[test]
+    fn latencies_are_ordered() {
+        let h = tiny();
+        assert!(h.hit_latency_ns(AccessOutcome::L1Hit) < h.hit_latency_ns(AccessOutcome::L2Hit));
+        assert!(h.hit_latency_ns(AccessOutcome::L2Hit) < h.hit_latency_ns(AccessOutcome::LlcHit));
+    }
+
+    #[test]
+    fn i9_geometry_sizes() {
+        // sets round down to a power of two, so the realized LLC is in
+        // (15, 30] MB — 24 MB for the 30 MB/12-way nominal geometry.
+        let h = CacheHierarchy::i9_12900k();
+        assert!(h.llc.capacity_bytes() <= 30 << 20);
+        assert!(h.llc.capacity_bytes() > 15 << 20);
+        assert_eq!(h.line_bytes(), 64);
+    }
+
+    #[test]
+    fn miss_rate_sane() {
+        let mut h = tiny();
+        for i in 0..1000u64 {
+            h.access((i % 4) * 64, false);
+        }
+        assert!(h.stats.miss_rate() < 0.01);
+    }
+}

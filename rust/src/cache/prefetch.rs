@@ -1,0 +1,213 @@
+//! Hardware prefetcher models (paper §1: "the system will enable a
+//! comparison of software and hardware memory prefetching").
+//!
+//! Two classic L2-adjacent prefetchers:
+//!
+//! * [`NextLinePrefetcher`] — on a miss, fetch the next N lines;
+//! * [`StridePrefetcher`] — a PC-less stride table keyed by line
+//!   region, detecting constant-stride streams (what Intel's "AMP"
+//!   does for streaming code).
+//!
+//! Prefetches are issued into the hierarchy as non-demand fills: they
+//! do not stall the core, but they *do* transit the CXL link — the
+//! coordinator bins them as prefetch traffic, so a prefetcher can
+//! trade latency delay for bandwidth delay exactly as the paper's
+//! research agenda anticipates.
+
+use super::CacheHierarchy;
+
+/// A prefetch decision: lines to fetch after the current access.
+pub trait Prefetcher: Send {
+    fn name(&self) -> &'static str;
+    /// Observe a demand access (post-cache); return line addresses to
+    /// prefetch (byte addresses, line-aligned).
+    fn observe(&mut self, addr: u64, was_miss: bool) -> Vec<u64>;
+    fn stats(&self) -> PrefetchStats;
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefetchStats {
+    pub issued: u64,
+    pub useful_hint: u64,
+}
+
+/// Fetch the next `degree` sequential lines on every demand miss.
+pub struct NextLinePrefetcher {
+    degree: usize,
+    line_bytes: u64,
+    stats: PrefetchStats,
+}
+
+impl NextLinePrefetcher {
+    pub fn new(degree: usize, line_bytes: u64) -> Self {
+        NextLinePrefetcher { degree: degree.max(1), line_bytes, stats: PrefetchStats::default() }
+    }
+}
+
+impl Prefetcher for NextLinePrefetcher {
+    fn name(&self) -> &'static str {
+        "nextline"
+    }
+
+    fn observe(&mut self, addr: u64, was_miss: bool) -> Vec<u64> {
+        if !was_miss {
+            return Vec::new();
+        }
+        let line = addr / self.line_bytes;
+        self.stats.issued += self.degree as u64;
+        (1..=self.degree as u64)
+            .map(|i| (line + i) * self.line_bytes)
+            .collect()
+    }
+
+    fn stats(&self) -> PrefetchStats {
+        self.stats
+    }
+}
+
+/// Region-based stride detector: tracks the last address and stride per
+/// 4 KB region in a small direct-mapped table; two confirmations arm it.
+pub struct StridePrefetcher {
+    line_bytes: u64,
+    degree: usize,
+    /// (region_tag, last_line, stride, confidence)
+    table: Vec<(u64, u64, i64, u8)>,
+    stats: PrefetchStats,
+}
+
+const STRIDE_TABLE: usize = 256;
+
+impl StridePrefetcher {
+    pub fn new(degree: usize, line_bytes: u64) -> Self {
+        StridePrefetcher {
+            line_bytes,
+            degree: degree.max(1),
+            table: vec![(u64::MAX, 0, 0, 0); STRIDE_TABLE],
+            stats: PrefetchStats::default(),
+        }
+    }
+}
+
+impl Prefetcher for StridePrefetcher {
+    fn name(&self) -> &'static str {
+        "stride"
+    }
+
+    fn observe(&mut self, addr: u64, _was_miss: bool) -> Vec<u64> {
+        let line = addr / self.line_bytes;
+        let region = addr >> 12;
+        let slot = (region as usize) & (STRIDE_TABLE - 1);
+        let (tag, last, stride, conf) = self.table[slot];
+        let mut out = Vec::new();
+        if tag == region {
+            let new_stride = line as i64 - last as i64;
+            if new_stride == stride && new_stride != 0 {
+                let conf = conf.saturating_add(1);
+                self.table[slot] = (region, line, stride, conf);
+                if conf >= 2 {
+                    // armed: prefetch degree lines ahead along the stride
+                    for i in 1..=self.degree as i64 {
+                        let target = line as i64 + new_stride * i;
+                        if target > 0 {
+                            out.push(target as u64 * self.line_bytes);
+                        }
+                    }
+                    self.stats.issued += out.len() as u64;
+                    self.stats.useful_hint += 1;
+                }
+            } else {
+                self.table[slot] = (region, line, new_stride, 1);
+            }
+        } else {
+            self.table[slot] = (region, line, 0, 0);
+        }
+        out
+    }
+
+    fn stats(&self) -> PrefetchStats {
+        self.stats
+    }
+}
+
+/// Issue prefetches into the hierarchy as non-demand fills; returns how
+/// many actually missed (i.e. generated memory/CXL traffic).
+pub fn issue_prefetches(cache: &mut CacheHierarchy, targets: &[u64]) -> Vec<u64> {
+    let mut fetched = Vec::new();
+    for &t in targets {
+        let line = t / cache.line_bytes();
+        // only fetch if not already cached anywhere
+        if !cache.llc.contains(line) && !cache.l2.contains(line) && !cache.l1.contains(line) {
+            cache.llc.fill(line, false);
+            cache.l2.fill(line, false);
+            fetched.push(t);
+        }
+    }
+    fetched
+}
+
+/// Named constructors for CLI / experiments.
+pub fn by_name(name: &str, line_bytes: u64) -> Option<Box<dyn Prefetcher>> {
+    match name {
+        "nextline" => Some(Box::new(NextLinePrefetcher::new(2, line_bytes))),
+        "stride" => Some(Box::new(StridePrefetcher::new(4, line_bytes))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheHierarchy;
+
+    #[test]
+    fn nextline_fires_on_miss_only() {
+        let mut p = NextLinePrefetcher::new(2, 64);
+        assert!(p.observe(0x1000, false).is_empty());
+        let t = p.observe(0x1000, true);
+        assert_eq!(t, vec![0x1040, 0x1080]);
+    }
+
+    #[test]
+    fn stride_detects_constant_stride() {
+        let mut p = StridePrefetcher::new(2, 64);
+        // stride of 2 lines within one region
+        assert!(p.observe(0x0, true).is_empty()); // allocate entry
+        assert!(p.observe(0x80, true).is_empty()); // stride=2 recorded
+        let t = p.observe(0x100, true); // second confirmation arms it
+        assert!(!t.is_empty(), "stride must arm after two confirmations");
+        assert_eq!(t[0], 0x100 + 0x80);
+        let t = p.observe(0x180, true); // stays armed
+        assert_eq!(t[0], 0x180 + 0x80);
+    }
+
+    #[test]
+    fn stride_ignores_random_pattern() {
+        let mut p = StridePrefetcher::new(2, 64);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut issued = 0;
+        for _ in 0..1000 {
+            issued += p.observe(rng.below(1 << 28) & !63, true).len();
+        }
+        assert!(issued < 50, "random traffic should rarely arm the stride table");
+    }
+
+    #[test]
+    fn issue_prefetches_fills_and_dedups() {
+        let mut h = CacheHierarchy::scaled(64);
+        let t = issue_prefetches(&mut h, &[0x1000, 0x1040]);
+        assert_eq!(t.len(), 2);
+        // second issue: already resident, no traffic
+        let t = issue_prefetches(&mut h, &[0x1000, 0x1040]);
+        assert!(t.is_empty());
+        // demand access now hits below L1 (filled to L2/LLC)
+        use crate::cache::AccessOutcome;
+        assert!(matches!(h.access(0x1000, false), AccessOutcome::L2Hit));
+    }
+
+    #[test]
+    fn by_name_registry() {
+        assert!(by_name("nextline", 64).is_some());
+        assert!(by_name("stride", 64).is_some());
+        assert!(by_name("oracle", 64).is_none());
+    }
+}

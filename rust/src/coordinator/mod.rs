@@ -1,0 +1,423 @@
+//! The CXLMemSim coordinator: the paper's §3 system.
+//!
+//! Attaches to a workload (the "unmodified program"), divides its
+//! execution into epochs (the *Timer*), collects the epoch's allocation
+//! + memory events through the tracer substrate (workload engine →
+//! cache hierarchy → allocation tracker), bins them, invokes the
+//! AOT-compiled *Timing Analyzer* through PJRT, and injects the
+//! computed delay into the program's simulated clock.
+//!
+//! Time accounting:
+//!
+//! * **native virtual time** — what the program would take on the host
+//!   with all memory local: per-access CPI + cache hit/miss latency
+//!   (misses cost local-DRAM latency, since that is where the traced
+//!   program's memory actually lives while profiling);
+//! * **simulated time** — native time plus the analyzer's per-epoch
+//!   latency/congestion/bandwidth delays: the tool's *output*;
+//! * **wall time** — what running the tool costs us: Table 1's metric.
+
+pub mod batch;
+pub mod report;
+
+pub use batch::run_batched;
+pub use report::{EpochRecord, SimReport};
+
+use crate::alloctrack::{AllocTracker, PolicyKind};
+use crate::cache::{AccessOutcome, CacheHierarchy};
+use crate::policy::EpochPolicy;
+use crate::runtime::{self, AnalyzerBackend, TimingInputs, TimingModel};
+use crate::topology::{TopoTensors, Topology};
+use crate::trace::binning::EpochBins;
+use crate::trace::WlEvent;
+use crate::workload::{self, Workload};
+
+/// Coordinator configuration (CLI flags map 1:1 onto these fields).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Epoch length in virtual milliseconds (paper: timer period).
+    pub epoch_ms: f64,
+    /// Time bins per epoch (must match the compiled artifact).
+    pub nbins: usize,
+    pub backend: AnalyzerBackend,
+    pub policy: PolicyKind,
+    /// PEBS-style sampling period: every k-th LLC miss is recorded,
+    /// weighted by k.
+    pub sample_period: u32,
+    /// Workload working-set scale in (0, 1]; 1.0 = the paper's sizes.
+    pub scale: f64,
+    pub seed: u64,
+    /// Cache-geometry shrink factor (1 = the paper's i9-12900K).
+    pub cache_scale: u64,
+    pub artifacts_dir: String,
+    /// Stop after this many epochs (None = run to completion).
+    pub max_epochs: Option<u64>,
+    /// Base virtual cost per instruction window between accesses, ns.
+    pub cpi_ns: f64,
+    /// Memory-level parallelism: an OoO core overlaps this many
+    /// outstanding misses, so a miss stalls the core local_lat/mlp ns
+    /// on average (gem5like models the same effect with 16 MSHRs).
+    /// Default 2.0 keeps a lone streaming host below switch saturation
+    /// (ρ≈0.55); congestion then arises from host *sharing*, as in the
+    /// paper's §2 discussion. Raise it to model aggressive OoO cores —
+    /// at ρ>1 the open-loop fluid queue diverges by design (DESIGN.md §5).
+    pub mlp: f64,
+    /// Virtual cost of one allocation syscall, ns.
+    pub alloc_cost_ns: f64,
+    /// Keep every epoch record (memory!) instead of summarizing.
+    pub keep_epoch_records: bool,
+    /// Hardware prefetcher model: "nextline" | "stride" | None.
+    /// Prefetched lines are fetched into L2/LLC (hiding future demand
+    /// latency) and their link traffic is binned as reads — a
+    /// conservative accounting documented in DESIGN.md §5.
+    pub prefetcher: Option<String>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            epoch_ms: 1.0,
+            nbins: runtime::shapes::NUM_BINS,
+            backend: AnalyzerBackend::Native,
+            policy: PolicyKind::CxlOnly,
+            sample_period: 1,
+            scale: 1.0,
+            seed: 0x5107,
+            cache_scale: 1,
+            artifacts_dir: runtime::shapes::artifacts_dir(),
+            max_epochs: None,
+            cpi_ns: 0.3,
+            mlp: 2.0,
+            alloc_cost_ns: 1_000.0,
+            keep_epoch_records: false,
+            prefetcher: None,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn epoch_ns(&self) -> f64 {
+        self.epoch_ms * 1e6
+    }
+}
+
+/// The simulator instance, bound to one topology + config.
+pub struct Coordinator {
+    pub topo: Topology,
+    pub cfg: SimConfig,
+    model: Box<dyn TimingModel>,
+    cache: CacheHierarchy,
+    tracker: AllocTracker,
+    bins: EpochBins,
+    epoch_policy: Option<Box<dyn EpochPolicy>>,
+    prefetcher: Option<Box<dyn crate::cache::Prefetcher>>,
+}
+
+impl Coordinator {
+    pub fn new(topo: Topology, cfg: SimConfig) -> anyhow::Result<Coordinator> {
+        let tensors = TopoTensors::build(
+            &topo,
+            runtime::shapes::NUM_POOLS,
+            runtime::shapes::NUM_SWITCHES,
+        )?;
+        let mut model =
+            runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
+        model.set_export_backlog(false); // re-enabled by set_epoch_policy
+        let cache = CacheHierarchy::scaled(cfg.cache_scale);
+        let tracker = AllocTracker::new(&topo, cfg.policy.build(&topo));
+        let bins = EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns());
+        let prefetcher = match &cfg.prefetcher {
+            Some(name) => Some(
+                crate::cache::prefetch::by_name(name, topo.host.cacheline_bytes)
+                    .ok_or_else(|| anyhow::anyhow!("unknown prefetcher `{name}`"))?,
+            ),
+            None => None,
+        };
+        Ok(Coordinator { topo, cfg, model, cache, tracker, bins, epoch_policy: None, prefetcher })
+    }
+
+    /// Install a per-epoch research policy (migration / prefetch).
+    pub fn set_epoch_policy(&mut self, p: Box<dyn EpochPolicy>) {
+        self.model.set_export_backlog(true); // policies read the profile
+        self.epoch_policy = Some(p);
+    }
+
+    pub fn tracker(&self) -> &AllocTracker {
+        &self.tracker
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.model.backend_name()
+    }
+
+    /// Convenience: construct a named workload and run it.
+    pub fn run_workload(&mut self, name: &str) -> anyhow::Result<SimReport> {
+        let mut wl = workload::by_name(name, self.cfg.scale, self.cfg.seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
+        self.run(wl.as_mut())
+    }
+
+    /// The epoch loop (paper Figure 2).
+    pub fn run(&mut self, wl: &mut dyn Workload) -> anyhow::Result<SimReport> {
+        let wall_start = std::time::Instant::now();
+        let epoch_ns = self.cfg.epoch_ns();
+        let mut report = SimReport::new(
+            wl.name(),
+            &self.topo.name,
+            self.model.backend_name(),
+            self.topo.num_pools(),
+        );
+        self.cache.reset_stats();
+        self.bins.clear();
+
+        let mut epoch_vtime = 0.0f64; // ns into the current epoch
+        let mut sample_ctr = 0u32;
+        let mut done = false;
+
+        while !done {
+            match wl.next_event() {
+                None => done = true,
+                Some(WlEvent::Alloc(mut ev)) => {
+                    ev.t_ns = report.native_ns + epoch_vtime;
+                    self.tracker.on_alloc_event(&ev);
+                    report.alloc_events += 1;
+                    epoch_vtime += self.cfg.alloc_cost_ns;
+                }
+                Some(WlEvent::Access(a)) => {
+                    let outcome = self.cache.access(a.addr, a.is_write);
+                    let mut cost = self.cfg.cpi_ns + self.cache.hit_latency_ns(outcome);
+                    if let AccessOutcome::Miss { writeback } = outcome {
+                        // native run: the miss is served by local DRAM;
+                        // the OoO core overlaps `mlp` misses on average
+                        cost += if a.is_write {
+                            self.topo.host.local_write_latency_ns
+                        } else {
+                            self.topo.host.local_read_latency_ns
+                        } / self.cfg.mlp.max(1.0);
+                        let pool = self.tracker.pool_of(a.addr);
+                        report.record_miss(pool, a.is_write);
+                        sample_ctr += 1;
+                        if sample_ctr >= self.cfg.sample_period {
+                            sample_ctr = 0;
+                            self.bins.record(
+                                pool,
+                                a.is_write,
+                                epoch_vtime,
+                                self.cfg.sample_period as f32,
+                            );
+                        }
+                        if let Some(wb_addr) = writeback {
+                            // dirty eviction: a write transits to the
+                            // victim line's pool (unsampled, weight 1)
+                            let wb_pool = self.tracker.pool_of(wb_addr);
+                            report.record_writeback(wb_pool);
+                            self.bins.record(wb_pool, true, epoch_vtime, 1.0);
+                        }
+                    }
+                    // hardware prefetcher: observe, fill, bin the traffic
+                    if let Some(pf) = &mut self.prefetcher {
+                        let was_miss = matches!(outcome, AccessOutcome::Miss { .. });
+                        let targets = pf.observe(a.addr, was_miss);
+                        if !targets.is_empty() {
+                            let fetched =
+                                crate::cache::prefetch::issue_prefetches(&mut self.cache, &targets);
+                            for t in fetched {
+                                let pool = self.tracker.pool_of(t);
+                                report.prefetches += 1;
+                                self.bins.record(pool, false, epoch_vtime, 1.0);
+                            }
+                        }
+                    }
+                    epoch_vtime += cost;
+                }
+            }
+
+            // epoch boundary: the Timer fires (or the program exited)
+            if epoch_vtime >= epoch_ns || (done && epoch_vtime > 0.0) {
+                let out = self.model.analyze(&TimingInputs {
+                    reads: &self.bins.reads,
+                    writes: &self.bins.writes,
+                    bin_width: self.bins.bin_width_ns() as f32,
+                    bytes_per_ev: self.topo.host.cacheline_bytes as f32,
+                })?;
+                if let Some(policy) = &mut self.epoch_policy {
+                    policy.on_epoch(&mut self.tracker, &self.bins, &out);
+                }
+                report.push_epoch(
+                    epoch_vtime,
+                    &out,
+                    self.bins.total_events,
+                    self.cfg.keep_epoch_records,
+                );
+                self.bins.clear();
+                epoch_vtime = 0.0;
+                if let Some(max) = self.cfg.max_epochs {
+                    if report.epochs_run >= max {
+                        done = true;
+                    }
+                }
+            }
+        }
+
+        report.finish(&self.cache.stats, &self.tracker.stats, wall_start.elapsed());
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builtin;
+
+    fn cfg_fast() -> SimConfig {
+        SimConfig {
+            scale: 0.002,
+            cache_scale: 64,
+            epoch_ms: 0.1,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn run_mmap_read_end_to_end_native_backend() {
+        let mut sim = Coordinator::new(builtin::fig2(), cfg_fast()).unwrap();
+        let rep = sim.run_workload("mmap_read").unwrap();
+        assert!(rep.total_accesses > 0);
+        assert!(rep.total_misses > 0, "streaming read must miss");
+        assert!(rep.epochs_run > 0);
+        assert!(rep.native_ns > 0.0);
+        assert!(
+            rep.simulated_ns > rep.native_ns,
+            "CXL placement must slow the program: sim={} native={}",
+            rep.simulated_ns,
+            rep.native_ns
+        );
+    }
+
+    #[test]
+    fn local_policy_means_no_slowdown() {
+        let mut cfg = cfg_fast();
+        cfg.policy = PolicyKind::LocalOnly;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        let rep = sim.run_workload("mmap_write").unwrap();
+        assert!(rep.total_misses > 0);
+        assert!(
+            (rep.simulated_ns - rep.native_ns).abs() < 1e-3,
+            "local-only placement must add zero delay, got +{}",
+            rep.simulated_ns - rep.native_ns
+        );
+    }
+
+    #[test]
+    fn sample_period_preserves_delay_scale() {
+        let mk = |period: u32| {
+            let mut cfg = cfg_fast();
+            cfg.sample_period = period;
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload("stream").unwrap()
+        };
+        let full = mk(1);
+        let sampled = mk(8);
+        assert!(full.delay_ns > 0.0);
+        let ratio = sampled.delay_ns / full.delay_ns;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "period-8 sampling should roughly preserve total delay, ratio={ratio}"
+        );
+    }
+
+    #[test]
+    fn max_epochs_caps_run() {
+        let mut cfg = cfg_fast();
+        cfg.max_epochs = Some(3);
+        cfg.scale = 0.05;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        let rep = sim.run_workload("uniform").unwrap();
+        assert_eq!(rep.epochs_run, 3);
+    }
+
+    #[test]
+    fn delay_monotone_in_pool_latency() {
+        // deep topology (2 switch hops) must delay more than direct
+        let run = |topo| {
+            let mut sim = Coordinator::new(topo, cfg_fast()).unwrap();
+            sim.run_workload("mmap_write").unwrap()
+        };
+        let direct = run(builtin::direct());
+        let deep = run(builtin::deep());
+        assert!(
+            deep.delay_ns > direct.delay_ns,
+            "deep {} <= direct {}",
+            deep.delay_ns,
+            direct.delay_ns
+        );
+    }
+
+    #[test]
+    fn unknown_workload_errors() {
+        let mut sim = Coordinator::new(builtin::fig2(), cfg_fast()).unwrap();
+        assert!(sim.run_workload("doom").is_err());
+    }
+
+    #[test]
+    fn report_breakdown_sums_to_delay() {
+        let mut sim = Coordinator::new(builtin::fig2(), cfg_fast()).unwrap();
+        let rep = sim.run_workload("zipfian").unwrap();
+        let sum = rep.lat_delay_ns + rep.cong_delay_ns + rep.bwd_delay_ns;
+        assert!(
+            (sum - rep.delay_ns).abs() <= 1e-6 * rep.delay_ns.max(1.0),
+            "breakdown {sum} != total {}",
+            rep.delay_ns
+        );
+    }
+
+    #[test]
+    fn nextline_prefetcher_cuts_stream_misses() {
+        let run = |pf: Option<&str>| {
+            let mut cfg = cfg_fast();
+            cfg.prefetcher = pf.map(|s| s.to_string());
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload("stream").unwrap()
+        };
+        let off = run(None);
+        let on = run(Some("nextline"));
+        assert!(on.prefetches > 0, "prefetcher must issue fetches");
+        assert!(
+            on.total_misses < off.total_misses,
+            "nextline must cut sequential demand misses: {} !< {}",
+            on.total_misses,
+            off.total_misses
+        );
+    }
+
+    #[test]
+    fn stride_prefetcher_works_on_stencil() {
+        let run = |pf: Option<&str>| {
+            let mut cfg = cfg_fast();
+            cfg.prefetcher = pf.map(|s| s.to_string());
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload("wrf_like").unwrap()
+        };
+        let off = run(None);
+        let on = run(Some("stride"));
+        assert!(on.total_misses <= off.total_misses);
+    }
+
+    #[test]
+    fn unknown_prefetcher_is_error() {
+        let mut cfg = cfg_fast();
+        cfg.prefetcher = Some("oracle".into());
+        assert!(Coordinator::new(builtin::fig2(), cfg).is_err());
+    }
+
+    #[test]
+    fn epoch_records_kept_when_asked() {
+        let mut cfg = cfg_fast();
+        cfg.keep_epoch_records = true;
+        cfg.max_epochs = Some(5);
+        cfg.scale = 0.05;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        let rep = sim.run_workload("stream").unwrap();
+        assert_eq!(rep.epochs.len() as u64, rep.epochs_run);
+    }
+}

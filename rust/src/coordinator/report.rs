@@ -1,0 +1,289 @@
+//! Simulation reports: per-epoch records, end-of-run summary, JSON
+//! export. These are the numbers Table 1 and the characterization
+//! benches print.
+
+use crate::alloctrack::TrackerStats;
+use crate::cache::CacheStats;
+use crate::runtime::TimingOutputs;
+use crate::util::json::{self, Json};
+
+/// One epoch's outcome (kept only with `keep_epoch_records`).
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub native_ns: f64,
+    pub delay_ns: f64,
+    pub lat_ns: f64,
+    pub cong_ns: f64,
+    pub bwd_ns: f64,
+    pub events: u64,
+}
+
+/// End-of-run summary of one simulation.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub workload: String,
+    pub topology: String,
+    pub backend: String,
+    /// Virtual native execution time (all-local memory), ns.
+    pub native_ns: f64,
+    /// Simulated execution time on the CXL topology, ns.
+    pub simulated_ns: f64,
+    /// Injected delay total and breakdown, ns.
+    pub delay_ns: f64,
+    pub lat_delay_ns: f64,
+    pub cong_delay_ns: f64,
+    pub bwd_delay_ns: f64,
+    /// Tool wall-clock (Table 1's metric), seconds.
+    pub wall_s: f64,
+    pub epochs_run: u64,
+    pub total_accesses: u64,
+    pub total_misses: u64,
+    pub writebacks: u64,
+    pub alloc_events: u64,
+    /// Hardware-prefetch fills that transited the topology.
+    pub prefetches: u64,
+    /// LLC misses routed to each pool (reads, writes), index = PoolId.
+    pub pool_read_misses: Vec<u64>,
+    pub pool_write_misses: Vec<u64>,
+    pub epochs: Vec<EpochRecord>,
+}
+
+impl SimReport {
+    pub fn new(workload: &str, topology: &str, backend: &str, pools: usize) -> SimReport {
+        SimReport {
+            workload: workload.to_string(),
+            topology: topology.to_string(),
+            backend: backend.to_string(),
+            native_ns: 0.0,
+            simulated_ns: 0.0,
+            delay_ns: 0.0,
+            lat_delay_ns: 0.0,
+            cong_delay_ns: 0.0,
+            bwd_delay_ns: 0.0,
+            wall_s: 0.0,
+            epochs_run: 0,
+            total_accesses: 0,
+            total_misses: 0,
+            writebacks: 0,
+            alloc_events: 0,
+            prefetches: 0,
+            pool_read_misses: vec![0; pools],
+            pool_write_misses: vec![0; pools],
+            epochs: Vec::new(),
+        }
+    }
+
+    pub(crate) fn record_miss(&mut self, pool: usize, is_write: bool) {
+        self.total_misses += 1;
+        if is_write {
+            self.pool_write_misses[pool] += 1;
+        } else {
+            self.pool_read_misses[pool] += 1;
+        }
+    }
+
+    pub(crate) fn record_writeback(&mut self, pool: usize) {
+        self.writebacks += 1;
+        self.pool_write_misses[pool] += 1;
+    }
+
+    pub(crate) fn push_epoch(
+        &mut self,
+        native_ns: f64,
+        out: &TimingOutputs,
+        events: u64,
+        keep: bool,
+    ) {
+        self.epochs_run += 1;
+        self.native_ns += native_ns;
+        self.delay_ns += out.total;
+        self.lat_delay_ns += out.lat_total();
+        self.cong_delay_ns += out.cong_total();
+        self.bwd_delay_ns += out.bwd_total();
+        self.simulated_ns += native_ns + out.total;
+        if keep {
+            self.epochs.push(EpochRecord {
+                native_ns,
+                delay_ns: out.total,
+                lat_ns: out.lat_total(),
+                cong_ns: out.cong_total(),
+                bwd_ns: out.bwd_total(),
+                events,
+            });
+        }
+    }
+
+    pub(crate) fn finish(
+        &mut self,
+        cache: &CacheStats,
+        _tracker: &TrackerStats,
+        wall: std::time::Duration,
+    ) {
+        self.total_accesses = cache.accesses;
+        self.wall_s = wall.as_secs_f64();
+    }
+
+    /// Simulated slowdown of the *program* caused by CXL placement.
+    pub fn sim_slowdown(&self) -> f64 {
+        if self.native_ns == 0.0 {
+            1.0
+        } else {
+            self.simulated_ns / self.native_ns
+        }
+    }
+
+    /// Tool overhead vs a native wall-clock measurement (Table 1).
+    pub fn overhead_vs(&self, native_wall_s: f64) -> f64 {
+        if native_wall_s == 0.0 {
+            f64::INFINITY
+        } else {
+            self.wall_s / native_wall_s
+        }
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.total_accesses == 0 {
+            0.0
+        } else {
+            self.total_misses as f64 / self.total_accesses as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "workload {} on `{}` [{} backend]\n",
+            self.workload, self.topology, self.backend
+        ));
+        s.push_str(&format!(
+            "  native  {:>10.3} ms   simulated {:>10.3} ms   (x{:.3} slowdown)\n",
+            self.native_ns / 1e6,
+            self.simulated_ns / 1e6,
+            self.sim_slowdown()
+        ));
+        s.push_str(&format!(
+            "  delay   {:>10.3} ms = latency {:.3} + congestion {:.3} + bandwidth {:.3}\n",
+            self.delay_ns / 1e6,
+            self.lat_delay_ns / 1e6,
+            self.cong_delay_ns / 1e6,
+            self.bwd_delay_ns / 1e6
+        ));
+        s.push_str(&format!(
+            "  {} epochs, {} accesses, {} LLC misses ({:.3}% miss rate), {} writebacks\n",
+            self.epochs_run,
+            self.total_accesses,
+            self.total_misses,
+            self.miss_rate() * 100.0,
+            self.writebacks
+        ));
+        let per_pool: Vec<String> = (0..self.pool_read_misses.len())
+            .filter(|&p| self.pool_read_misses[p] + self.pool_write_misses[p] > 0)
+            .map(|p| {
+                format!(
+                    "pool{}: {}r/{}w",
+                    p, self.pool_read_misses[p], self.pool_write_misses[p]
+                )
+            })
+            .collect();
+        s.push_str(&format!("  pool traffic: {}\n", per_pool.join("  ")));
+        s.push_str(&format!("  tool wall-clock {:.3} s\n", self.wall_s));
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("workload", json::s(&self.workload)),
+            ("topology", json::s(&self.topology)),
+            ("backend", json::s(&self.backend)),
+            ("native_ms", json::num(self.native_ns / 1e6)),
+            ("simulated_ms", json::num(self.simulated_ns / 1e6)),
+            ("sim_slowdown", json::num(self.sim_slowdown())),
+            ("delay_ms", json::num(self.delay_ns / 1e6)),
+            ("lat_delay_ms", json::num(self.lat_delay_ns / 1e6)),
+            ("cong_delay_ms", json::num(self.cong_delay_ns / 1e6)),
+            ("bwd_delay_ms", json::num(self.bwd_delay_ns / 1e6)),
+            ("wall_s", json::num(self.wall_s)),
+            ("epochs", json::num(self.epochs_run as f64)),
+            ("accesses", json::num(self.total_accesses as f64)),
+            ("llc_misses", json::num(self.total_misses as f64)),
+            ("writebacks", json::num(self.writebacks as f64)),
+            ("alloc_events", json::num(self.alloc_events as f64)),
+            (
+                "pool_read_misses",
+                json::arr_f64(&self.pool_read_misses.iter().map(|x| *x as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "pool_write_misses",
+                json::arr_f64(&self.pool_write_misses.iter().map(|x| *x as f64).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outputs(total: f64) -> TimingOutputs {
+        TimingOutputs {
+            total,
+            lat: vec![total as f32 / 2.0],
+            cong: vec![total as f32 / 4.0],
+            bwd: vec![total as f32 / 4.0],
+            cong_backlog: vec![],
+        }
+    }
+
+    #[test]
+    fn epoch_accumulation() {
+        let mut r = SimReport::new("w", "t", "native", 2);
+        r.push_epoch(1000.0, &outputs(500.0), 10, false);
+        r.push_epoch(1000.0, &outputs(300.0), 5, false);
+        assert_eq!(r.epochs_run, 2);
+        assert!((r.native_ns - 2000.0).abs() < 1e-9);
+        assert!((r.delay_ns - 800.0).abs() < 1e-9);
+        assert!((r.simulated_ns - 2800.0).abs() < 1e-9);
+        assert!((r.sim_slowdown() - 1.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn miss_bookkeeping() {
+        let mut r = SimReport::new("w", "t", "native", 3);
+        r.record_miss(1, false);
+        r.record_miss(1, true);
+        r.record_writeback(2);
+        assert_eq!(r.total_misses, 2);
+        assert_eq!(r.writebacks, 1);
+        assert_eq!(r.pool_read_misses[1], 1);
+        assert_eq!(r.pool_write_misses[1], 1);
+        assert_eq!(r.pool_write_misses[2], 1);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = SimReport::new("w", "t", "pjrt", 2);
+        r.push_epoch(100.0, &outputs(10.0), 3, false);
+        let j = r.to_json().to_string();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("workload").unwrap().as_str(), Some("w"));
+        assert!(v.get("sim_slowdown").unwrap().as_f64().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn summary_contains_key_numbers() {
+        let mut r = SimReport::new("mmap_read", "fig2", "native", 2);
+        r.push_epoch(1e6, &outputs(5e5), 100, false);
+        let s = r.summary();
+        assert!(s.contains("mmap_read"));
+        assert!(s.contains("fig2"));
+        assert!(s.contains("slowdown"));
+    }
+
+    #[test]
+    fn overhead_vs_native() {
+        let mut r = SimReport::new("w", "t", "native", 1);
+        r.wall_s = 4.0;
+        assert!((r.overhead_vs(1.0) - 4.0).abs() < 1e-12);
+        assert!(r.overhead_vs(0.0).is_infinite());
+    }
+}

@@ -1,0 +1,52 @@
+//! # CXLMemSim — a pure-software simulated CXL.mem
+//!
+//! Reproduction of *"CXLMemSim: A pure software simulated CXL.mem for
+//! performance characterization"* (Yang et al., 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: topology management,
+//!   the tracer substrate (workload engine + cache hierarchy + alloc
+//!   tracker), the epoch loop, delay injection, the detailed `gem5like`
+//!   baseline, and the CLI.
+//! * **Layer 2** — the timing analyzer as a JAX graph
+//!   (`python/compile/model.py`), AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **Layer 1** — the per-switch queueing scan as a Pallas kernel
+//!   (`python/compile/kernels/queue_scan.py`).
+//!
+//! Python never runs at simulation time: `runtime` loads the HLO
+//! artifacts through PJRT (`xla` crate) and executes them per epoch.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use cxlmemsim::prelude::*;
+//!
+//! let topo = cxlmemsim::topology::builtin::fig2();
+//! let mut cfg = SimConfig::default();
+//! cfg.scale = 0.01;
+//! let mut sim = Coordinator::new(topo, cfg).unwrap();
+//! let report = sim.run_workload("mmap_read").unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod alloctrack;
+pub mod cache;
+pub mod coordinator;
+pub mod gem5like;
+pub mod metrics;
+pub mod multihost;
+pub mod policy;
+pub mod runtime;
+pub mod topology;
+pub mod trace;
+pub mod util;
+pub mod workload;
+
+/// Most-used types, one import away.
+pub mod prelude {
+    pub use crate::alloctrack::{AllocTracker, PolicyKind};
+    pub use crate::coordinator::{Coordinator, SimConfig, SimReport};
+    pub use crate::runtime::{AnalyzerBackend, TimingInputs, TimingOutputs};
+    pub use crate::topology::{builtin, Topology, TopoTensors};
+    pub use crate::workload::{by_name as workload_by_name, Workload, TABLE1_WORKLOADS};
+}

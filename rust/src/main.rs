@@ -1,0 +1,325 @@
+//! CXLMemSim CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   run        simulate one workload on a topology
+//!   table1     reproduce the paper's Table 1 (native / detailed / CXLMemSim)
+//!   sweep      run workloads across topologies (procurement study)
+//!   multihost  N hosts sharing pools (congestion/coherency study)
+//!   record     capture a workload's event trace to a file
+//!   replay     simulate a recorded trace
+//!   topo       show / dump a topology
+//!   list       list workloads, topologies, policies, backends
+//!
+//! Run `cxlmemsim <cmd> --help-args` for flags; all flags have defaults.
+
+use cxlmemsim::alloctrack::PolicyKind;
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::gem5like::DetailedSim;
+use cxlmemsim::multihost;
+use cxlmemsim::runtime::AnalyzerBackend;
+use cxlmemsim::topology::{builtin, Topology};
+use cxlmemsim::trace::io as trace_io;
+use cxlmemsim::util::benchutil::{markdown_table, time_once};
+use cxlmemsim::util::cli::Args;
+use cxlmemsim::workload::{self, TraceReplay, ALL_WORKLOADS, TABLE1_WORKLOADS};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "table1" => cmd_table1(&args),
+        "sweep" => cmd_sweep(&args),
+        "multihost" => cmd_multihost(&args),
+        "record" => cmd_record(&args),
+        "replay" => cmd_replay(&args),
+        "topo" => cmd_topo(&args),
+        "list" => cmd_list(),
+        "--help" | "-h" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "cxlmemsim — a pure-software simulated CXL.mem\n\
+         usage: cxlmemsim <run|table1|sweep|multihost|record|replay|topo|list> [--flags]\n\
+         common flags: --workload W --topo T --policy P --backend pjrt|native\n\
+                       --epoch-ms F --scale F --seed N --sample-period N\n\
+                       --cache-scale N --max-epochs N --json"
+    );
+}
+
+fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
+    let mut cfg = SimConfig::default();
+    cfg.epoch_ms = args.f64("epoch-ms", cfg.epoch_ms);
+    cfg.scale = args.f64("scale", cfg.scale);
+    cfg.seed = args.u64("seed", cfg.seed);
+    cfg.sample_period = args.u64("sample-period", cfg.sample_period as u64) as u32;
+    cfg.cache_scale = args.u64("cache-scale", cfg.cache_scale);
+    cfg.cpi_ns = args.f64("cpi-ns", cfg.cpi_ns);
+    cfg.mlp = args.f64("mlp", cfg.mlp);
+    if let Some(n) = args.opt_str("max-epochs") {
+        cfg.max_epochs = n.parse().ok();
+    }
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = AnalyzerBackend::parse(&b)
+            .ok_or_else(|| anyhow::anyhow!("bad --backend `{b}` (pjrt|native)"))?;
+    }
+    if let Some(p) = args.opt_str("policy") {
+        cfg.policy = PolicyKind::parse(&p)
+            .ok_or_else(|| anyhow::anyhow!("bad --policy `{p}` (see `cxlmemsim list`)"))?;
+    }
+    if let Some(dir) = args.opt_str("artifacts") {
+        cfg.artifacts_dir = dir;
+    }
+    cfg.prefetcher = args.opt_str("prefetch");
+    cfg.keep_epoch_records = args.bool("epoch-records");
+    Ok(cfg)
+}
+
+fn topo_from(args: &Args) -> anyhow::Result<Topology> {
+    let spec = args.str("topo", "fig2");
+    Ok(Topology::resolve(&spec)?)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_from(args)?;
+    let cfg = config_from(args)?;
+    let wl = args.str("workload", "mmap_read");
+    let mut sim = Coordinator::new(topo, cfg)?;
+    let rep = sim.run_workload(&wl)?;
+    if args.bool("json") {
+        println!("{}", rep.to_json().to_string());
+    } else {
+        print!("{}", rep.summary());
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = config_from(args)?;
+    if args.opt_str("scale").is_none() {
+        cfg.scale = 0.02; // keep the default run minutes-scale
+    }
+    let topo = topo_from(args)?;
+    let detailed = !args.bool("skip-detailed");
+    println!(
+        "Table 1 reproduction: topology `{}`, scale {}, backend {:?}",
+        topo.name, cfg.scale, cfg.backend
+    );
+    let mut rows = Vec::new();
+    for wl_name in TABLE1_WORKLOADS {
+        // native: the workload alone (what the program costs us to run)
+        let mut wl = workload::by_name(wl_name, cfg.scale, cfg.seed).unwrap();
+        let (accesses, native_wall) = time_once(|| {
+            let mut n = 0u64;
+            while wl.next_event().is_some() {
+                n += 1;
+            }
+            n
+        });
+
+        // detailed (gem5-like) baseline
+        let det_wall = if detailed {
+            let mut det = DetailedSim::new(topo.clone(), cfg.cache_scale, cfg.policy.clone());
+            let mut wl = workload::by_name(wl_name, cfg.scale, cfg.seed).unwrap();
+            let rep = det.run(wl.as_mut());
+            Some(rep.wall_s)
+        } else {
+            None
+        };
+
+        // CXLMemSim
+        let mut sim = Coordinator::new(topo.clone(), cfg.clone())?;
+        let rep = sim.run_workload(wl_name)?;
+
+        rows.push(vec![
+            wl_name.to_string(),
+            format!("{:.4}", native_wall),
+            det_wall.map(|w| format!("{w:.4}")).unwrap_or_else(|| "-".into()),
+            format!("{:.4}", rep.wall_s),
+            det_wall
+                .map(|w| format!("{:.1}x", w / native_wall))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}x", rep.wall_s / native_wall),
+            format!("{:.3}x", rep.sim_slowdown()),
+            format!("{}", accesses),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                "Benchmark",
+                "Native (s)",
+                "Detailed (s)",
+                "CXLMemSim (s)",
+                "Detailed/Native",
+                "CXLMemSim/Native",
+                "SimSlowdown",
+                "Events"
+            ],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let wls: Vec<String> = args
+        .str("workloads", "mmap_read,mcf_like,wrf_like")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let topos: Vec<String> = args
+        .str("topos", "direct,fig2,deep,wide,pooled")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for topo_name in &topos {
+        let topo = Topology::resolve(topo_name)?;
+        for wl in &wls {
+            let mut sim = Coordinator::new(topo.clone(), cfg.clone())?;
+            let rep = sim.run_workload(wl)?;
+            rows.push(vec![
+                topo_name.clone(),
+                wl.clone(),
+                format!("{:.3}", rep.native_ns / 1e6),
+                format!("{:.3}", rep.simulated_ns / 1e6),
+                format!("{:.3}x", rep.sim_slowdown()),
+                format!("{:.3}", rep.lat_delay_ns / 1e6),
+                format!("{:.3}", rep.cong_delay_ns / 1e6),
+                format!("{:.3}", rep.bwd_delay_ns / 1e6),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Topology", "Workload", "Native(ms)", "Sim(ms)", "Slowdown", "Lat(ms)", "Cong(ms)", "BW(ms)"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_multihost(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_from(args)?;
+    let cfg = config_from(args)?;
+    let n = args.usize("hosts", 4);
+    let wl_name = args.str("workload", "stream");
+    let workloads: Vec<_> = (0..n)
+        .map(|i| workload::by_name(&wl_name, cfg.scale, cfg.seed + i as u64).unwrap())
+        .collect();
+    let rep = multihost::run_shared(&topo, &cfg, workloads)?;
+    println!(
+        "multihost: {} x {} on `{}`: {} epochs, mean slowdown {:.3}x",
+        n,
+        wl_name,
+        topo.name,
+        rep.epochs,
+        rep.mean_slowdown()
+    );
+    println!(
+        "  shared delay: total {:.3} ms (congestion {:.3} ms, bandwidth {:.3} ms)",
+        rep.total_delay_ns / 1e6,
+        rep.cong_delay_ns / 1e6,
+        rep.bwd_delay_ns / 1e6
+    );
+    if rep.invalidations > 0 {
+        println!(
+            "  coherency: {} back-invalidations, {} messages (use --workload shared)",
+            rep.invalidations, rep.coherence_msgs
+        );
+    }
+    for (i, h) in rep.hosts.iter().enumerate() {
+        println!(
+            "  host{i}: native {:.3} ms -> sim {:.3} ms ({} misses)",
+            h.native_ns / 1e6,
+            h.simulated_ns / 1e6,
+            h.misses
+        );
+    }
+    Ok(())
+}
+
+fn cmd_record(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let wl_name = args.str("workload", "mmap_read");
+    let out = args.str("out", "trace.bin");
+    let mut wl = workload::by_name(&wl_name, cfg.scale, cfg.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{wl_name}`"))?;
+    let mut events = Vec::new();
+    while let Some(ev) = wl.next_event() {
+        events.push(ev);
+    }
+    let mut f = std::fs::File::create(&out)?;
+    if out.ends_with(".jsonl") {
+        trace_io::write_jsonl(&mut f, &events)?;
+    } else {
+        trace_io::write_binary(&mut f, &events)?;
+    }
+    println!("recorded {} events from {wl_name} to {out}", events.len());
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_from(args)?;
+    let cfg = config_from(args)?;
+    let path = args
+        .opt_str("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace <file> required"))?;
+    let events = if path.ends_with(".jsonl") {
+        trace_io::read_jsonl(std::fs::File::open(&path)?).map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        let bytes = std::fs::read(&path)?;
+        trace_io::read_binary(&bytes).map_err(|e| anyhow::anyhow!(e))?
+    };
+    let mut replay = TraceReplay::new(&format!("replay:{path}"), events);
+    let mut sim = Coordinator::new(topo, cfg)?;
+    let rep = sim.run(&mut replay)?;
+    if args.bool("json") {
+        println!("{}", rep.to_json().to_string());
+    } else {
+        print!("{}", rep.summary());
+    }
+    Ok(())
+}
+
+fn cmd_topo(args: &Args) -> anyhow::Result<()> {
+    let topo = topo_from(args)?;
+    if args.bool("dump-toml") {
+        print!("{}", topo.to_toml());
+    } else {
+        print!("{}", topo.describe());
+    }
+    Ok(())
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("workloads:  {}", ALL_WORKLOADS.join(", "));
+    println!("topologies: {} (or a path to a .toml)", builtin::BUILTIN_NAMES.join(", "));
+    println!("policies:   local, cxl, localfirst, interleave, sizeclass, leastloaded");
+    println!("backends:   pjrt (AOT HLO via PJRT), native (pure-rust mirror)");
+    println!("prefetch:   nextline, stride (hardware prefetcher models, --prefetch)");
+    Ok(())
+}

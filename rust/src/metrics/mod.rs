@@ -1,0 +1,192 @@
+//! Metrics: streaming histograms and summary statistics for per-epoch
+//! and per-request quantities (delay distributions, epoch durations,
+//! analyzer call latencies).
+
+/// Log-scaled histogram over [lo, hi) with `buckets` bins, plus exact
+/// running moments. Constant memory, O(1) record.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Histogram {
+        assert!(lo > 0.0 && hi > lo && buckets > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; buckets + 2], // +underflow/overflow
+            n: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(&self, x: f64) -> usize {
+        if x < self.lo {
+            return 0;
+        }
+        if x >= self.hi {
+            return self.counts.len() - 1;
+        }
+        let inner = self.counts.len() - 2;
+        let f = (x / self.lo).ln() / (self.hi / self.lo).ln();
+        1 + ((f * inner as f64) as usize).min(inner - 1)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let b = self.bucket_of(x.max(f64::MIN_POSITIVE));
+        self.counts[b] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.n as f64 - m * m).max(0.0).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (q in [0, 1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > target {
+                let inner = self.counts.len() - 2;
+                if i == 0 {
+                    return self.min();
+                }
+                if i == self.counts.len() - 1 {
+                    return self.max();
+                }
+                // geometric midpoint of the bucket
+                let frac = (i - 1) as f64 / inner as f64;
+                let frac2 = i as f64 / inner as f64;
+                let a = self.lo * (self.hi / self.lo).powf(frac);
+                let b = self.lo * (self.hi / self.lo).powf(frac2);
+                return (a * b).sqrt();
+            }
+        }
+        self.max()
+    }
+
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.3} sd={:.3} min={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}",
+            self.n,
+            self.mean(),
+            self.stddev(),
+            self.min(),
+            self.quantile(0.5),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_exact() {
+        let mut h = Histogram::new(1.0, 1000.0, 32);
+        for x in [10.0, 20.0, 30.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+        assert_eq!(h.min(), 10.0);
+        assert_eq!(h.max(), 30.0);
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bracketed() {
+        let mut h = Histogram::new(1.0, 1e6, 64);
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((400.0..650.0).contains(&p50), "p50={p50}");
+        assert!((800.0..1100.0).contains(&p95), "p95={p95}");
+    }
+
+    #[test]
+    fn under_overflow_buckets() {
+        let mut h = Histogram::new(10.0, 100.0, 4);
+        h.record(1.0); // underflow
+        h.record(1e9); // overflow
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(1.0), 1e9);
+    }
+
+    #[test]
+    fn stddev_of_constant_is_zero() {
+        let mut h = Histogram::new(1.0, 100.0, 8);
+        for _ in 0..50 {
+            h.record(42.0);
+        }
+        assert!(h.stddev() < 1e-9);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let mut h = Histogram::new(1.0, 100.0, 8);
+        h.record(5.0);
+        let s = h.summary("lat");
+        assert!(s.contains("lat:"));
+        assert!(s.contains("n=1"));
+    }
+}

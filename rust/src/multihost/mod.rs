@@ -1,0 +1,336 @@
+//! Multi-host simulation: several programs (one per simulated host)
+//! sharing the same CXL pools and switches — the pool-coherency /
+//! congestion study the paper's §1 promises ("evaluation of the
+//! performance impact of CXL.mem pool coherency on applications that
+//! share memory across multiple servers").
+//!
+//! Each host has its own cache hierarchy and allocation tracker (its
+//! own address space), but all hosts' misses route into the *same*
+//! per-epoch bins, so the shared switches see the union of the traffic
+//! and the congestion/bandwidth scans charge everyone. The computed
+//! epoch delay is attributed to hosts proportionally to their traffic.
+
+use crate::alloctrack::AllocTracker;
+use crate::cache::{AccessOutcome, CacheHierarchy};
+use crate::coordinator::SimConfig;
+use crate::runtime::{self, TimingInputs};
+use crate::topology::{TopoTensors, Topology};
+use crate::trace::binning::EpochBins;
+use crate::trace::WlEvent;
+use crate::workload::Workload;
+
+/// Per-host outcome of a shared run.
+#[derive(Clone, Debug)]
+pub struct HostReport {
+    pub workload: String,
+    pub native_ns: f64,
+    pub simulated_ns: f64,
+    pub delay_ns: f64,
+    pub misses: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct MultiHostReport {
+    pub hosts: Vec<HostReport>,
+    pub epochs: u64,
+    pub total_delay_ns: f64,
+    pub cong_delay_ns: f64,
+    pub bwd_delay_ns: f64,
+    /// CXL.mem coherence: back-invalidations delivered to peer caches
+    /// because a host wrote a shared line (0 unless hosts share ranges).
+    pub invalidations: u64,
+    /// Coherence messages that transited the topology (charged to the
+    /// shared line's pool path as write traffic).
+    pub coherence_msgs: u64,
+    pub wall_s: f64,
+}
+
+impl MultiHostReport {
+    /// Mean per-host simulated slowdown.
+    pub fn mean_slowdown(&self) -> f64 {
+        if self.hosts.is_empty() {
+            return 1.0;
+        }
+        self.hosts
+            .iter()
+            .map(|h| if h.native_ns > 0.0 { h.simulated_ns / h.native_ns } else { 1.0 })
+            .sum::<f64>()
+            / self.hosts.len() as f64
+    }
+}
+
+struct Host {
+    wl: Box<dyn Workload>,
+    cache: CacheHierarchy,
+    tracker: AllocTracker,
+    native_ns: f64,
+    epoch_vtime: f64,
+    epoch_misses: f64,
+    misses: u64,
+    delay_ns: f64,
+    done: bool,
+}
+
+/// Run `workloads` concurrently over one topology; round-robin event
+/// interleaving approximates concurrent execution at epoch granularity.
+pub fn run_shared(
+    topo: &Topology,
+    cfg: &SimConfig,
+    workloads: Vec<Box<dyn Workload>>,
+) -> anyhow::Result<MultiHostReport> {
+    let wall = std::time::Instant::now();
+    let tensors = TopoTensors::build(
+        topo,
+        runtime::shapes::NUM_POOLS,
+        runtime::shapes::NUM_SWITCHES,
+    )?;
+    let mut model = runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
+    let mut bins = EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns());
+
+    let mut hosts: Vec<Host> = workloads
+        .into_iter()
+        .map(|wl| Host {
+            wl,
+            cache: CacheHierarchy::scaled(cfg.cache_scale),
+            tracker: AllocTracker::new(topo, cfg.policy.build(topo)),
+            native_ns: 0.0,
+            epoch_vtime: 0.0,
+            epoch_misses: 0.0,
+            misses: 0,
+            delay_ns: 0.0,
+            done: false,
+        })
+        .collect();
+
+    let epoch_ns = cfg.epoch_ns();
+    let mut epochs = 0u64;
+    let mut total_delay = 0.0;
+    let mut cong_total = 0.0;
+    let mut bwd_total = 0.0;
+    let mut invalidations = 0u64;
+    let mut coherence_msgs = 0u64;
+    let shared_base = crate::workload::patterns::SHARED_BASE;
+
+    loop {
+        let mut all_done = true;
+        // advance every live host until it crosses the epoch boundary
+        for hi in 0..hosts.len() {
+            if hosts[hi].done {
+                continue;
+            }
+            all_done = false;
+            while hosts[hi].epoch_vtime < epoch_ns {
+                match hosts[hi].wl.next_event() {
+                    None => {
+                        hosts[hi].done = true;
+                        break;
+                    }
+                    Some(WlEvent::Alloc(mut ev)) => {
+                        let h = &mut hosts[hi];
+                        ev.t_ns = h.native_ns + h.epoch_vtime;
+                        h.tracker.on_alloc_event(&ev);
+                        h.epoch_vtime += cfg.alloc_cost_ns;
+                    }
+                    Some(WlEvent::Access(a)) => {
+                        let h = &mut hosts[hi];
+                        let outcome = h.cache.access(a.addr, a.is_write);
+                        let mut cost = cfg.cpi_ns + h.cache.hit_latency_ns(outcome);
+                        let mut pool = usize::MAX;
+                        if let AccessOutcome::Miss { writeback } = outcome {
+                            cost += if a.is_write {
+                                topo.host.local_write_latency_ns
+                            } else {
+                                topo.host.local_read_latency_ns
+                            } / cfg.mlp.max(1.0);
+                            pool = h.tracker.pool_of(a.addr);
+                            h.misses += 1;
+                            h.epoch_misses += 1.0;
+                            let t = h.epoch_vtime;
+                            bins.record(pool, a.is_write, t, 1.0);
+                            if let Some(wb) = writeback {
+                                let wb_pool = h.tracker.pool_of(wb);
+                                bins.record(wb_pool, true, t, 1.0);
+                            }
+                        }
+                        hosts[hi].epoch_vtime += cost;
+                        // CXL.mem pool coherency (paper §2): a write to
+                        // a shared line back-invalidates every peer's
+                        // cached copy; each delivered invalidation is a
+                        // message through the pool's switch path.
+                        if a.is_write && a.addr >= shared_base {
+                            let t = hosts[hi].epoch_vtime;
+                            if pool == usize::MAX {
+                                pool = hosts[hi].tracker.pool_of(a.addr);
+                            }
+                            for pj in 0..hosts.len() {
+                                if pj == hi {
+                                    continue;
+                                }
+                                if hosts[pj].cache.coherence_invalidate(a.addr) {
+                                    invalidations += 1;
+                                    coherence_msgs += 1;
+                                    bins.record(pool, true, t, 1.0);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if all_done {
+            break;
+        }
+
+        // shared epoch boundary: one analyzer call for everyone
+        let out = model.analyze(&TimingInputs {
+            reads: &bins.reads,
+            writes: &bins.writes,
+            bin_width: bins.bin_width_ns() as f32,
+            bytes_per_ev: topo.host.cacheline_bytes as f32,
+        })?;
+        epochs += 1;
+        total_delay += out.total;
+        cong_total += out.cong_total();
+        bwd_total += out.bwd_total();
+
+        // attribute delay to hosts by their miss share this epoch
+        let epoch_misses: f64 = hosts.iter().map(|h| h.epoch_misses).sum();
+        for h in hosts.iter_mut() {
+            let share = if epoch_misses > 0.0 { h.epoch_misses / epoch_misses } else { 0.0 };
+            h.delay_ns += out.total * share;
+            h.native_ns += h.epoch_vtime;
+            h.epoch_vtime = 0.0;
+            h.epoch_misses = 0.0;
+        }
+        bins.clear();
+        if let Some(max) = cfg.max_epochs {
+            if epochs >= max {
+                break;
+            }
+        }
+    }
+
+    let hosts_out = hosts
+        .iter()
+        .map(|h| HostReport {
+            workload: h.wl.name().to_string(),
+            native_ns: h.native_ns,
+            simulated_ns: h.native_ns + h.delay_ns,
+            delay_ns: h.delay_ns,
+            misses: h.misses,
+        })
+        .collect();
+    Ok(MultiHostReport {
+        hosts: hosts_out,
+        epochs,
+        total_delay_ns: total_delay,
+        cong_delay_ns: cong_total,
+        bwd_delay_ns: bwd_total,
+        invalidations,
+        coherence_msgs,
+        wall_s: wall.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builtin;
+    use crate::workload;
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            scale: 0.002,
+            cache_scale: 64,
+            epoch_ms: 0.1,
+            ..SimConfig::default()
+        }
+    }
+
+    fn mk_hosts(n: usize) -> Vec<Box<dyn Workload>> {
+        (0..n)
+            .map(|i| workload::by_name("stream", 0.002, i as u64).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn single_host_runs() {
+        let rep = run_shared(&builtin::fig2(), &cfg(), mk_hosts(1)).unwrap();
+        assert_eq!(rep.hosts.len(), 1);
+        assert!(rep.hosts[0].misses > 0);
+        assert!(rep.epochs > 0);
+    }
+
+    #[test]
+    fn more_hosts_more_congestion() {
+        let one = run_shared(&builtin::fig2(), &cfg(), mk_hosts(1)).unwrap();
+        let four = run_shared(&builtin::fig2(), &cfg(), mk_hosts(4)).unwrap();
+        // per-epoch shared-switch pressure must grow with host count
+        let c1 = one.cong_delay_ns / one.epochs.max(1) as f64;
+        let c4 = four.cong_delay_ns / four.epochs.max(1) as f64;
+        assert!(c4 > c1, "4-host congestion/epoch {c4} <= 1-host {c1}");
+    }
+
+    #[test]
+    fn delay_attribution_sums() {
+        let rep = run_shared(&builtin::fig2(), &cfg(), mk_hosts(3)).unwrap();
+        let attributed: f64 = rep.hosts.iter().map(|h| h.delay_ns).sum();
+        assert!(
+            (attributed - rep.total_delay_ns).abs() < 1e-6 * rep.total_delay_ns.max(1.0),
+            "attribution {attributed} != total {}",
+            rep.total_delay_ns
+        );
+    }
+
+    #[test]
+    fn mean_slowdown_above_one_with_cxl() {
+        let rep = run_shared(&builtin::fig2(), &cfg(), mk_hosts(2)).unwrap();
+        assert!(rep.mean_slowdown() > 1.0);
+    }
+
+    fn mk_shared(n: usize) -> Vec<Box<dyn Workload>> {
+        (0..n)
+            .map(|i| workload::by_name("shared", 0.002, i as u64).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn shared_writes_generate_coherence_traffic() {
+        let rep = run_shared(&builtin::fig2(), &cfg(), mk_shared(3)).unwrap();
+        assert!(
+            rep.invalidations > 0,
+            "peers caching the same lines must see back-invalidations"
+        );
+        assert_eq!(rep.coherence_msgs, rep.invalidations);
+    }
+
+    #[test]
+    fn private_workloads_have_no_coherence_traffic() {
+        let rep = run_shared(&builtin::fig2(), &cfg(), mk_hosts(3)).unwrap();
+        assert_eq!(rep.invalidations, 0);
+    }
+
+    #[test]
+    fn coherence_invalidations_grow_with_hosts() {
+        let two = run_shared(&builtin::fig2(), &cfg(), mk_shared(2)).unwrap();
+        let four = run_shared(&builtin::fig2(), &cfg(), mk_shared(4)).unwrap();
+        // per-epoch invalidation pressure grows with sharers
+        let r2 = two.invalidations as f64 / two.epochs.max(1) as f64;
+        let r4 = four.invalidations as f64 / four.epochs.max(1) as f64;
+        assert!(r4 > r2, "4 sharers {r4} <= 2 sharers {r2}");
+    }
+
+    #[test]
+    fn coherence_increases_miss_rate() {
+        // invalidated lines must re-miss: with sharing, misses per host
+        // exceed a lone host's on the same workload
+        let one = run_shared(&builtin::fig2(), &cfg(), mk_shared(1)).unwrap();
+        let four = run_shared(&builtin::fig2(), &cfg(), mk_shared(4)).unwrap();
+        let lone = one.hosts[0].misses;
+        let max_shared = four.hosts.iter().map(|h| h.misses).max().unwrap();
+        assert!(
+            max_shared > lone,
+            "sharing must add coherence misses: {max_shared} <= {lone}"
+        );
+    }
+}

@@ -1,0 +1,294 @@
+//! Research-enablement policies (paper §1: "memory scheduling for
+//! complex applications", software vs hardware prefetching/migration,
+//! cache-line vs page management).
+//!
+//! An [`EpochPolicy`] observes each epoch's binned traffic and the
+//! timing analyzer's outputs (including the per-switch congestion
+//! backlog profile) and may act on the allocation tracker — e.g.
+//! migrate hot regions toward local DRAM or rebalance away from
+//! congested switches.
+
+use crate::alloctrack::AllocTracker;
+use crate::runtime::TimingOutputs;
+use crate::topology::{PoolId, LOCAL_POOL};
+use crate::trace::binning::EpochBins;
+
+/// Called once per epoch, after the timing analyzer has run.
+pub trait EpochPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn on_epoch(&mut self, tracker: &mut AllocTracker, bins: &EpochBins, out: &TimingOutputs);
+    /// Total migrations performed (reporting).
+    fn migrations(&self) -> u64;
+}
+
+/// Hotness-based promotion: if a CXL pool dominates the epoch's miss
+/// traffic for `patience` consecutive epochs, migrate that pool's
+/// hottest region to local DRAM (a page-granular what-if of HeMem-style
+/// tiering).
+pub struct HotnessMigration {
+    pub patience: u32,
+    pub local_budget_bytes: u64,
+    streak: Vec<u32>,
+    moved_bytes: u64,
+    migrations: u64,
+}
+
+impl HotnessMigration {
+    pub fn new(patience: u32, local_budget_bytes: u64) -> HotnessMigration {
+        HotnessMigration {
+            patience,
+            local_budget_bytes,
+            streak: Vec::new(),
+            moved_bytes: 0,
+            migrations: 0,
+        }
+    }
+
+    fn hottest_pool(bins: &EpochBins) -> Option<(PoolId, f64)> {
+        (1..bins.pools)
+            .map(|p| (p, bins.read_count(p) + bins.write_count(p)))
+            .filter(|(_, c)| *c > 0.0)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+}
+
+impl EpochPolicy for HotnessMigration {
+    fn name(&self) -> &'static str {
+        "hotness-migration"
+    }
+
+    fn on_epoch(&mut self, tracker: &mut AllocTracker, bins: &EpochBins, _out: &TimingOutputs) {
+        if self.streak.len() < bins.pools {
+            self.streak.resize(bins.pools, 0);
+        }
+        let Some((hot, _count)) = Self::hottest_pool(bins) else {
+            self.streak.iter_mut().for_each(|s| *s = 0);
+            return;
+        };
+        for p in 0..bins.pools {
+            if p == hot {
+                self.streak[p] += 1;
+            } else {
+                self.streak[p] = 0;
+            }
+        }
+        if self.streak[hot] < self.patience || self.moved_bytes >= self.local_budget_bytes {
+            return;
+        }
+        // migrate the largest region currently on the hot pool
+        let candidate = tracker
+            .live_regions()
+            .filter(|r| r.pool_of(r.start) == hot)
+            .map(|r| (r.start, r.len))
+            .max_by_key(|(_, len)| *len);
+        if let Some((start, len)) = candidate {
+            if self.moved_bytes + len <= self.local_budget_bytes
+                && tracker.migrate_region(start, LOCAL_POOL)
+            {
+                self.moved_bytes += len;
+                self.migrations += 1;
+                self.streak[hot] = 0;
+            }
+        }
+    }
+
+    fn migrations(&self) -> u64 {
+        self.migrations
+    }
+}
+
+/// Congestion-aware rebalancing: when a switch's backlog integral
+/// crosses a threshold, move one region off its most-loaded descendant
+/// pool to the least-loaded pool (or local DRAM). Uses the analyzer's
+/// `cong_backlog` output — only available because the timing model
+/// exports it (DESIGN.md §3 L2 outputs).
+pub struct CongestionRebalance {
+    /// Backlog-integral threshold (ns-work · bins) per epoch.
+    pub threshold: f64,
+    migrations: u64,
+}
+
+impl CongestionRebalance {
+    pub fn new(threshold: f64) -> CongestionRebalance {
+        CongestionRebalance { threshold, migrations: 0 }
+    }
+}
+
+impl EpochPolicy for CongestionRebalance {
+    fn name(&self) -> &'static str {
+        "congestion-rebalance"
+    }
+
+    fn on_epoch(&mut self, tracker: &mut AllocTracker, bins: &EpochBins, out: &TimingOutputs) {
+        // total backlog integral over all switches this epoch
+        let backlog: f64 = out.cong.iter().map(|x| *x as f64).sum();
+        if backlog < self.threshold {
+            return;
+        }
+        // most-loaded CXL pool by epoch traffic
+        let Some((hot, _)) = (1..bins.pools)
+            .map(|p| (p, bins.read_count(p) + bins.write_count(p)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        else {
+            return;
+        };
+        // least-loaded destination (local counts as a destination)
+        let dest = (0..bins.pools)
+            .filter(|p| *p != hot)
+            .min_by(|&a, &b| {
+                let ca = bins.read_count(a) + bins.write_count(a);
+                let cb = bins.read_count(b) + bins.write_count(b);
+                ca.partial_cmp(&cb).unwrap()
+            })
+            .unwrap_or(LOCAL_POOL);
+        let candidate = tracker
+            .live_regions()
+            .filter(|r| r.pool_of(r.start) == hot)
+            .map(|r| (r.start, r.len))
+            .max_by_key(|(_, len)| *len);
+        if let Some((start, _)) = candidate {
+            if tracker.migrate_region(start, dest) {
+                self.migrations += 1;
+            }
+        }
+    }
+
+    fn migrations(&self) -> u64 {
+        self.migrations
+    }
+}
+
+/// Software next-line prefetching modelled as traffic shaping: a
+/// fraction of read misses is converted into earlier, overlap-friendly
+/// accesses. In epoch terms: read counts are moved one bin earlier and
+/// de-rated by `coverage` (prefetched lines don't stall the core). This
+/// is a *model-side* policy: it rewrites the bins before analysis.
+pub struct SoftwarePrefetch {
+    /// Fraction of sequential read misses covered by prefetch [0, 1].
+    pub coverage: f32,
+}
+
+impl SoftwarePrefetch {
+    pub fn new(coverage: f32) -> SoftwarePrefetch {
+        SoftwarePrefetch { coverage: coverage.clamp(0.0, 1.0) }
+    }
+
+    /// Apply to an epoch's bins in place (called by experiments before
+    /// the analyzer; not an EpochPolicy since it edits inputs).
+    pub fn apply(&self, bins: &mut EpochBins) {
+        let (p, b) = (bins.pools, bins.nbins);
+        for pool in 0..p {
+            for bin in 1..b {
+                let idx = pool * b + bin;
+                let moved = bins.reads[idx] * self.coverage;
+                bins.reads[idx] -= moved;
+                // prefetched lines still transit the link (bandwidth!)
+                // but one bin earlier and without stalling: keep them as
+                // reads in the earlier bin.
+                bins.reads[idx - 1] += moved;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloctrack::PolicyKind;
+    use crate::topology::builtin;
+    use crate::trace::{AllocEvent, AllocKind};
+
+    fn tracker_with_region(pool_policy: PolicyKind) -> AllocTracker {
+        let topo = builtin::fig2();
+        let mut t = AllocTracker::new(&topo, pool_policy.build(&topo));
+        t.on_alloc_event(&AllocEvent {
+            kind: AllocKind::Mmap,
+            addr: 0x1000,
+            len: 1 << 20,
+            t_ns: 0.0,
+        });
+        t
+    }
+
+    fn bins_hot_on(pool: usize) -> EpochBins {
+        let mut b = EpochBins::new(8, 16, 1600.0);
+        for bin in 0..16 {
+            b.record(pool, false, bin as f64 * 100.0, 50.0);
+        }
+        b
+    }
+
+    fn outputs() -> TimingOutputs {
+        TimingOutputs {
+            total: 1e6,
+            lat: vec![0.0; 8],
+            cong: vec![1e9; 8],
+            bwd: vec![0.0; 8],
+            cong_backlog: vec![0.0; 8 * 16],
+        }
+    }
+
+    #[test]
+    fn hotness_migration_waits_for_patience() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let hot = t.pool_of(0x1000);
+        let bins = bins_hot_on(hot);
+        let mut pol = HotnessMigration::new(3, u64::MAX);
+        pol.on_epoch(&mut t, &bins, &outputs());
+        pol.on_epoch(&mut t, &bins, &outputs());
+        assert_eq!(pol.migrations(), 0, "must wait for patience");
+        pol.on_epoch(&mut t, &bins, &outputs());
+        assert_eq!(pol.migrations(), 1);
+        assert_eq!(t.pool_of(0x1000), LOCAL_POOL);
+    }
+
+    #[test]
+    fn hotness_migration_respects_budget() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let hot = t.pool_of(0x1000);
+        let bins = bins_hot_on(hot);
+        let mut pol = HotnessMigration::new(1, 100); // budget < region size
+        for _ in 0..5 {
+            pol.on_epoch(&mut t, &bins, &outputs());
+        }
+        assert_eq!(pol.migrations(), 0);
+    }
+
+    #[test]
+    fn congestion_rebalance_triggers_on_backlog() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let hot = t.pool_of(0x1000);
+        let bins = bins_hot_on(hot);
+        let mut pol = CongestionRebalance::new(1.0);
+        pol.on_epoch(&mut t, &bins, &outputs());
+        assert_eq!(pol.migrations(), 1);
+        assert_ne!(t.pool_of(0x1000), hot);
+    }
+
+    #[test]
+    fn congestion_rebalance_idle_below_threshold() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let bins = bins_hot_on(1);
+        let mut pol = CongestionRebalance::new(f64::INFINITY);
+        pol.on_epoch(&mut t, &bins, &outputs());
+        assert_eq!(pol.migrations(), 0);
+    }
+
+    #[test]
+    fn prefetch_conserves_traffic() {
+        let mut bins = bins_hot_on(2);
+        let before: f32 = bins.reads.iter().sum();
+        SoftwarePrefetch::new(0.5).apply(&mut bins);
+        let after: f32 = bins.reads.iter().sum();
+        assert!((before - after).abs() < 1e-3, "prefetch must not destroy traffic");
+    }
+
+    #[test]
+    fn prefetch_shifts_earlier() {
+        let mut bins = EpochBins::new(2, 4, 400.0);
+        bins.record(1, false, 350.0, 100.0); // all in last bin
+        SoftwarePrefetch::new(1.0).apply(&mut bins);
+        assert_eq!(bins.reads[1 * 4 + 3], 0.0);
+        assert_eq!(bins.reads[1 * 4 + 2], 100.0);
+    }
+}

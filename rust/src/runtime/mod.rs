@@ -1,0 +1,116 @@
+//! Timing-analyzer runtime: execute the AOT-compiled model per epoch.
+//!
+//! Two interchangeable backends implement [`TimingModel`]:
+//!
+//! * [`pjrt::PjrtAnalyzer`] — loads `artifacts/*.hlo.txt` (HLO text
+//!   lowered once by `python/compile/aot.py`), compiles it on the PJRT
+//!   CPU client at startup, and executes it per epoch. This is the
+//!   shipped configuration; python is never on this path.
+//! * [`native::NativeAnalyzer`] — a pure-rust mirror of the same math.
+//!   Used for differential testing against the HLO module (both are
+//!   checked against `artifacts/golden.json`) and as a zero-dependency
+//!   fast path (`--backend native`).
+//!
+//! Topology tensors are fixed at construction; the per-epoch call only
+//! moves the `[P, B]` read/write histograms.
+
+pub mod native;
+pub mod pjrt;
+pub mod shapes;
+
+use crate::topology::TopoTensors;
+
+/// Per-epoch dynamic inputs (flattened row-major [P, B]).
+pub struct TimingInputs<'a> {
+    pub reads: &'a [f32],
+    pub writes: &'a [f32],
+    /// Bin width, ns (epoch length / nbins).
+    pub bin_width: f32,
+    /// Bytes per sampled event (cacheline).
+    pub bytes_per_ev: f32,
+}
+
+/// Timing-analyzer outputs for one epoch (ns).
+#[derive(Clone, Debug, Default)]
+pub struct TimingOutputs {
+    pub total: f64,
+    pub lat: Vec<f32>,
+    pub cong: Vec<f32>,
+    pub bwd: Vec<f32>,
+    /// Congestion backlog profile [S, B] — input to migration policies.
+    pub cong_backlog: Vec<f32>,
+}
+
+impl TimingOutputs {
+    pub fn lat_total(&self) -> f64 {
+        self.lat.iter().map(|x| *x as f64).sum()
+    }
+    pub fn cong_total(&self) -> f64 {
+        self.cong.iter().map(|x| *x as f64).sum()
+    }
+    pub fn bwd_total(&self) -> f64 {
+        self.bwd.iter().map(|x| *x as f64).sum()
+    }
+}
+
+/// A compiled timing analyzer bound to one topology.
+///
+/// Not `Send`: the PJRT client handles are thread-local; per-thread
+/// analyzers are the supported concurrency model (each thread builds
+/// its own, sharing the on-disk artifact).
+pub trait TimingModel {
+    fn pools(&self) -> usize;
+    fn switches(&self) -> usize;
+    fn nbins(&self) -> usize;
+    fn backend_name(&self) -> &'static str;
+    fn analyze(&mut self, inp: &TimingInputs) -> anyhow::Result<TimingOutputs>;
+    /// Whether `analyze` must copy the congestion-backlog profile into
+    /// its outputs (epoch policies need it; skipping it saves an 8 KB
+    /// allocation per epoch on the native backend). Default: no-op.
+    fn set_export_backlog(&mut self, _on: bool) {}
+}
+
+/// Which backend to construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnalyzerBackend {
+    /// AOT HLO through PJRT (the shipped path).
+    Pjrt,
+    /// Pure-rust mirror (differential testing / fast path).
+    Native,
+}
+
+impl AnalyzerBackend {
+    pub fn parse(s: &str) -> Option<AnalyzerBackend> {
+        match s {
+            "pjrt" => Some(AnalyzerBackend::Pjrt),
+            "native" => Some(AnalyzerBackend::Native),
+            _ => None,
+        }
+    }
+}
+
+/// Construct a timing model for `tensors` with `nbins` time bins.
+/// `artifacts_dir` is only read for the PJRT backend.
+pub fn make_analyzer(
+    backend: AnalyzerBackend,
+    tensors: &TopoTensors,
+    nbins: usize,
+    artifacts_dir: &str,
+) -> anyhow::Result<Box<dyn TimingModel>> {
+    match backend {
+        AnalyzerBackend::Native => Ok(Box::new(native::NativeAnalyzer::new(tensors, nbins))),
+        AnalyzerBackend::Pjrt => Ok(Box::new(pjrt::PjrtAnalyzer::new(tensors, nbins, artifacts_dir)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(AnalyzerBackend::parse("pjrt"), Some(AnalyzerBackend::Pjrt));
+        assert_eq!(AnalyzerBackend::parse("native"), Some(AnalyzerBackend::Native));
+        assert_eq!(AnalyzerBackend::parse("tpu"), None);
+    }
+}

@@ -1,0 +1,284 @@
+//! Pure-rust mirror of the AOT timing analyzer.
+//!
+//! Implements exactly the math of `python/compile/model.py` (and its
+//! oracle `kernels/ref.py`): latency dot products, the descendant-mask
+//! matmul, and the two queueing scans. f32 arithmetic in the same
+//! order as the HLO so results agree to float tolerance — verified
+//! against `artifacts/golden.json` in `rust/tests/golden.rs`.
+//!
+//! This backend is also the performance fast path: for the default
+//! (P=8, S=8, B=256) shapes one invocation is a few microseconds, so
+//! the epoch loop can run at ~10⁵ epochs/s (see benches/hotpath.rs).
+
+use crate::topology::TopoTensors;
+
+use super::{TimingInputs, TimingModel, TimingOutputs};
+
+pub struct NativeAnalyzer {
+    pools: usize,
+    switches: usize,
+    nbins: usize,
+    extra_rd: Vec<f32>,
+    extra_wr: Vec<f32>,
+    desc_mask: Vec<f32>,
+    stt: Vec<f32>,
+    bw: Vec<f32>,
+    /// Switch rows with any routed pool (padded rows are provably inert
+    /// — zero mask, zero stt/bw — so the scans skip them entirely).
+    active_rows: Vec<usize>,
+    // scratch buffers reused across epochs (no hot-loop allocation)
+    ev: Vec<f32>,
+    cong_backlog: Vec<f32>,
+    bw_demand: Vec<f32>,
+    /// Copy the backlog profile into the outputs (needed by epoch
+    /// policies; off by default to keep the hot path allocation-light).
+    pub export_backlog: bool,
+}
+
+impl NativeAnalyzer {
+    pub fn new(t: &TopoTensors, nbins: usize) -> NativeAnalyzer {
+        let active_rows: Vec<usize> = (0..t.switches)
+            .filter(|&s| {
+                (0..t.pools).any(|p| t.desc_mask[s * t.pools + p] != 0.0)
+                    || t.stt[s] != 0.0
+                    || t.bw[s] != 0.0
+            })
+            .collect();
+        NativeAnalyzer {
+            active_rows,
+            pools: t.pools,
+            switches: t.switches,
+            nbins,
+            extra_rd: t.extra_read_lat.clone(),
+            extra_wr: t.extra_write_lat.clone(),
+            desc_mask: t.desc_mask.clone(),
+            stt: t.stt.clone(),
+            bw: t.bw.clone(),
+            ev: vec![0.0; t.switches * nbins],
+            cong_backlog: vec![0.0; t.switches * nbins],
+            bw_demand: vec![0.0; t.switches * nbins],
+            export_backlog: true,
+        }
+    }
+
+    /// Borrow the last epoch's backlog profile without copying.
+    pub fn last_backlog(&self) -> &[f32] {
+        &self.cong_backlog
+    }
+}
+
+impl TimingModel for NativeAnalyzer {
+    fn pools(&self) -> usize {
+        self.pools
+    }
+    fn switches(&self) -> usize {
+        self.switches
+    }
+    fn nbins(&self) -> usize {
+        self.nbins
+    }
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn set_export_backlog(&mut self, on: bool) {
+        self.export_backlog = on;
+    }
+
+    fn analyze(&mut self, inp: &TimingInputs) -> anyhow::Result<TimingOutputs> {
+        let (p, s, b) = (self.pools, self.switches, self.nbins);
+        anyhow::ensure!(inp.reads.len() == p * b, "reads shape");
+        anyhow::ensure!(inp.writes.len() == p * b, "writes shape");
+
+        // 1. latency delay per pool
+        let mut lat = vec![0.0f32; p];
+        for pool in 0..p {
+            let ro: f32 = inp.reads[pool * b..(pool + 1) * b].iter().sum();
+            let wo: f32 = inp.writes[pool * b..(pool + 1) * b].iter().sum();
+            lat[pool] = ro * self.extra_rd[pool] + wo * self.extra_wr[pool];
+        }
+
+        // 2. ev[s, b] = desc_mask @ (reads + writes), active rows only
+        self.ev.iter_mut().for_each(|x| *x = 0.0);
+        for &sw in &self.active_rows {
+            let row = &self.desc_mask[sw * p..(sw + 1) * p];
+            let out = &mut self.ev[sw * b..(sw + 1) * b];
+            for pool in 0..p {
+                let m = row[pool];
+                if m == 0.0 {
+                    continue;
+                }
+                let r = &inp.reads[pool * b..(pool + 1) * b];
+                let w = &inp.writes[pool * b..(pool + 1) * b];
+                for i in 0..b {
+                    out[i] += m * (r[i] + w[i]);
+                }
+            }
+        }
+
+        // 3. congestion scan: demand = ev*stt, capacity = bin_width.
+        // delay = end-of-epoch backlog drain time + transient waiting
+        // capped at one epoch (mirrors model.py; DESIGN.md §5).
+        let epoch_len = inp.bin_width * b as f32;
+        let mut cong = vec![0.0f32; s];
+        for &sw in &self.active_rows {
+            let stt = self.stt[sw];
+            let ev = &self.ev[sw * b..(sw + 1) * b];
+            let backlog = &mut self.cong_backlog[sw * b..(sw + 1) * b];
+            let mut q = 0.0f32;
+            let mut qsum = 0.0f32;
+            for i in 0..b {
+                q = (q + ev[i] * stt - inp.bin_width).max(0.0);
+                backlog[i] = q;
+                qsum += q;
+            }
+            cong[sw] = if stt > 0.0 {
+                q + (qsum * (inp.bin_width / stt)).min(epoch_len)
+            } else {
+                0.0
+            };
+        }
+
+        // 4. bandwidth scan on the served (congestion-shifted) stream
+        let mut bwd = vec![0.0f32; s];
+        for &sw in &self.active_rows {
+            let stt = self.stt[sw];
+            let bw = self.bw[sw];
+            let ev = &self.ev[sw * b..(sw + 1) * b];
+            let backlog = &self.cong_backlog[sw * b..(sw + 1) * b];
+            let demand = &mut self.bw_demand[sw * b..(sw + 1) * b];
+            let mut prev = 0.0f32;
+            for i in 0..b {
+                let served_events = if stt > 0.0 {
+                    (ev[i] * stt + prev - backlog[i]) / stt
+                } else {
+                    ev[i]
+                };
+                demand[i] = served_events * inp.bytes_per_ev;
+                prev = backlog[i];
+            }
+            let cap = bw * inp.bin_width;
+            let mut q = 0.0f32;
+            let mut qsum = 0.0f32;
+            for i in 0..b {
+                q = (q + demand[i] - cap).max(0.0);
+                qsum += q;
+            }
+            bwd[sw] = if bw > 0.0 {
+                q / bw + (qsum * (inp.bin_width / inp.bytes_per_ev)).min(epoch_len)
+            } else {
+                0.0
+            };
+        }
+
+        let total = lat.iter().map(|x| *x as f64).sum::<f64>()
+            + cong.iter().map(|x| *x as f64).sum::<f64>()
+            + bwd.iter().map(|x| *x as f64).sum::<f64>();
+        // backlog is copied out only when a consumer asked for it
+        // (epoch policies); the common path skips the 8 KB clone.
+        let cong_backlog = if self.export_backlog {
+            self.cong_backlog.clone()
+        } else {
+            Vec::new()
+        };
+        Ok(TimingOutputs { total, lat, cong, bwd, cong_backlog })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{builtin, TopoTensors};
+
+    fn analyzer(nbins: usize) -> NativeAnalyzer {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        NativeAnalyzer::new(&t, nbins)
+    }
+
+    #[test]
+    fn zero_traffic_zero_delay() {
+        let mut a = analyzer(16);
+        let reads = vec![0.0; 8 * 16];
+        let writes = vec![0.0; 8 * 16];
+        let out = a
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        assert_eq!(out.total, 0.0);
+    }
+
+    #[test]
+    fn latency_delay_formula() {
+        let mut a = analyzer(4);
+        let mut reads = vec![0.0f32; 8 * 4];
+        // 10 reads to pool 1 in bin 0
+        reads[1 * 4] = 10.0;
+        let writes = vec![0.0; 8 * 4];
+        let out = a
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 1e9, bytes_per_ev: 64.0 })
+            .unwrap();
+        let topo = builtin::fig2();
+        let expect = 10.0 * topo.extra_read_latency(1);
+        assert!((out.lat[1] as f64 - expect).abs() < 1e-3, "{} vs {expect}", out.lat[1]);
+        // huge bin width -> no congestion/bw delay
+        assert_eq!(out.cong_total(), 0.0);
+        assert_eq!(out.bwd_total(), 0.0);
+    }
+
+    #[test]
+    fn congestion_grows_with_burst() {
+        let mut a = analyzer(8);
+        let mk = |n: f32| {
+            let mut reads = vec![0.0f32; 8 * 8];
+            reads[1 * 8] = n; // burst in bin 0 of pool 1
+            reads
+        };
+        let writes = vec![0.0; 8 * 8];
+        let small = a
+            .analyze(&TimingInputs { reads: &mk(2.0), writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        let big = a
+            .analyze(&TimingInputs { reads: &mk(200.0), writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        assert!(big.cong_total() > small.cong_total());
+        assert!(big.total > big.lat_total(), "congestion must add delay");
+    }
+
+    #[test]
+    fn local_pool_free() {
+        let mut a = analyzer(8);
+        let mut reads = vec![0.0f32; 8 * 8];
+        for i in 0..8 {
+            reads[i] = 1000.0; // pool 0 = local
+        }
+        let writes = vec![0.0; 8 * 8];
+        let out = a
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        assert_eq!(out.total, 0.0, "local traffic must cost nothing");
+    }
+
+    #[test]
+    fn outputs_have_model_shapes() {
+        let mut a = analyzer(32);
+        let reads = vec![1.0; 8 * 32];
+        let writes = vec![1.0; 8 * 32];
+        let out = a
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 50.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        assert_eq!(out.lat.len(), 8);
+        assert_eq!(out.cong.len(), 8);
+        assert_eq!(out.bwd.len(), 8);
+        assert_eq!(out.cong_backlog.len(), 8 * 32);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut a = analyzer(8);
+        let reads = vec![0.0; 3];
+        let writes = vec![0.0; 8 * 8];
+        assert!(a
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 1.0, bytes_per_ev: 64.0 })
+            .is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! PJRT backend: load the AOT HLO artifact, compile once, execute per
+//! epoch. This is the shipped configuration — the timing analyzer the
+//! coordinator calls is exactly the module `python/compile/aot.py`
+//! lowered, Pallas kernel included (interpret-mode, so it runs on the
+//! CPU PJRT plugin).
+//!
+//! Topology tensors are uploaded once as reusable `Literal`s; only the
+//! `[P, B]` read/write histograms cross the FFI boundary per call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::topology::TopoTensors;
+
+use super::shapes::Manifest;
+use super::{TimingInputs, TimingModel, TimingOutputs};
+
+thread_local! {
+    /// Process-wide (per-thread) executable cache: PJRT client creation
+    /// + HLO compilation cost ~40 ms; a sweep constructing hundreds of
+    /// Coordinators must pay it once per artifact, not per instance.
+    /// Keyed by artifact path; PJRT handles are thread-local (Rc-based),
+    /// hence thread_local rather than a global Mutex.
+    static EXE_CACHE: RefCell<HashMap<String, Rc<(PjRtClient, PjRtLoadedExecutable)>>> =
+        RefCell::new(HashMap::new());
+}
+
+fn load_cached(path: &str) -> anyhow::Result<Rc<(PjRtClient, PjRtLoadedExecutable)>> {
+    EXE_CACHE.with(|c| {
+        if let Some(hit) = c.borrow().get(path) {
+            return Ok(hit.clone());
+        }
+        let client = PjRtClient::cpu()?;
+        let proto = HloModuleProto::from_text_file(path)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let entry = Rc::new((client, exe));
+        c.borrow_mut().insert(path.to_string(), entry.clone());
+        Ok(entry)
+    })
+}
+
+pub struct PjrtAnalyzer {
+    pools: usize,
+    switches: usize,
+    nbins: usize,
+    exe: Rc<(PjRtClient, PjRtLoadedExecutable)>,
+    // constant inputs, prebuilt
+    extra_rd: Literal,
+    extra_wr: Literal,
+    desc_mask: Literal,
+    stt: Literal,
+    bw: Literal,
+}
+
+fn vec1_f32(v: &[f32]) -> Literal {
+    Literal::vec1(v)
+}
+
+fn mat_f32(v: &[f32], rows: usize, cols: usize) -> anyhow::Result<Literal> {
+    Ok(Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+impl PjrtAnalyzer {
+    pub fn new(t: &TopoTensors, nbins: usize, artifacts_dir: &str) -> anyhow::Result<PjrtAnalyzer> {
+        let m = Manifest::load(artifacts_dir)?;
+        anyhow::ensure!(
+            m.pools == t.pools && m.switches == t.switches && m.nbins == nbins,
+            "artifact shapes (P={}, S={}, B={}) do not match requested (P={}, S={}, B={nbins}); \
+             re-run `make artifacts` with matching sizes",
+            m.pools,
+            m.switches,
+            m.nbins,
+            t.pools,
+            t.switches,
+        );
+        let path = format!("{artifacts_dir}/{}", m.single);
+        let exe = load_cached(&path)?;
+        let mut a = PjrtAnalyzer {
+            pools: t.pools,
+            switches: t.switches,
+            nbins,
+            exe,
+            extra_rd: vec1_f32(&t.extra_read_lat),
+            extra_wr: vec1_f32(&t.extra_write_lat),
+            desc_mask: mat_f32(&t.desc_mask, t.switches, t.pools)?,
+            stt: vec1_f32(&t.stt),
+            bw: vec1_f32(&t.bw),
+        };
+        // warmup execution: the first PJRT dispatch spins up the CPU
+        // client's thread pool (~tens of ms); absorb it at construction
+        // so epoch-loop timings measure steady state.
+        let zeros = vec![0.0f32; t.pools * nbins];
+        let _ = a.analyze(&TimingInputs {
+            reads: &zeros,
+            writes: &zeros,
+            bin_width: 1.0,
+            bytes_per_ev: 64.0,
+        })?;
+        Ok(a)
+    }
+}
+
+impl TimingModel for PjrtAnalyzer {
+    fn pools(&self) -> usize {
+        self.pools
+    }
+    fn switches(&self) -> usize {
+        self.switches
+    }
+    fn nbins(&self) -> usize {
+        self.nbins
+    }
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn analyze(&mut self, inp: &TimingInputs) -> anyhow::Result<TimingOutputs> {
+        let (p, b) = (self.pools, self.nbins);
+        anyhow::ensure!(inp.reads.len() == p * b, "reads shape");
+        anyhow::ensure!(inp.writes.len() == p * b, "writes shape");
+
+        let reads = mat_f32(inp.reads, p, b)?;
+        let writes = mat_f32(inp.writes, p, b)?;
+        let bin_width = Literal::scalar(inp.bin_width);
+        let bytes_per_ev = Literal::scalar(inp.bytes_per_ev);
+
+        let args: [&Literal; 9] = [
+            &reads,
+            &writes,
+            &self.extra_rd,
+            &self.extra_wr,
+            &self.desc_mask,
+            &self.stt,
+            &self.bw,
+            &bin_width,
+            &bytes_per_ev,
+        ];
+        let result = self.exe.1.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 5, "expected 5 outputs, got {}", parts.len());
+        let mut it = parts.into_iter();
+        let total = it.next().unwrap().get_first_element::<f32>()? as f64;
+        let lat = it.next().unwrap().to_vec::<f32>()?;
+        let cong = it.next().unwrap().to_vec::<f32>()?;
+        let bwd = it.next().unwrap().to_vec::<f32>()?;
+        let cong_backlog = it.next().unwrap().to_vec::<f32>()?;
+        Ok(TimingOutputs { total, lat, cong, bwd, cong_backlog })
+    }
+}
+
+/// Batched analyzer over the `timing_batch{E}` artifact: processes E
+/// epochs per PJRT call, amortizing dispatch overhead ~E× for offline
+/// trace replay (see benches/hotpath.rs for the measured difference).
+pub struct PjrtBatchAnalyzer {
+    pub pools: usize,
+    pub switches: usize,
+    pub nbins: usize,
+    pub batch: usize,
+    exe: Rc<(PjRtClient, PjRtLoadedExecutable)>,
+    extra_rd: Literal,
+    extra_wr: Literal,
+    desc_mask: Literal,
+    stt: Literal,
+    bw: Literal,
+}
+
+/// Per-epoch slice of a batched result (no backlog output in the
+/// batched module).
+#[derive(Clone, Debug)]
+pub struct BatchOutputs {
+    pub total: Vec<f64>,
+    pub lat: Vec<f32>,
+    pub cong: Vec<f32>,
+    pub bwd: Vec<f32>,
+}
+
+impl PjrtBatchAnalyzer {
+    pub fn new(
+        t: &TopoTensors,
+        nbins: usize,
+        artifacts_dir: &str,
+    ) -> anyhow::Result<PjrtBatchAnalyzer> {
+        let m = Manifest::load(artifacts_dir)?;
+        anyhow::ensure!(
+            m.pools == t.pools && m.switches == t.switches && m.nbins == nbins,
+            "artifact shapes do not match; re-run `make artifacts`"
+        );
+        let path = format!("{artifacts_dir}/{}", m.batch_module);
+        let exe = load_cached(&path)?;
+        Ok(PjrtBatchAnalyzer {
+            pools: t.pools,
+            switches: t.switches,
+            nbins,
+            batch: m.batch,
+            exe,
+            extra_rd: vec1_f32(&t.extra_read_lat),
+            extra_wr: vec1_f32(&t.extra_write_lat),
+            desc_mask: mat_f32(&t.desc_mask, t.switches, t.pools)?,
+            stt: vec1_f32(&t.stt),
+            bw: vec1_f32(&t.bw),
+        })
+    }
+
+    /// `reads`/`writes` are [E, P, B] flattened; E must equal `batch`
+    /// (zero-pad the tail epochs of a shorter run).
+    pub fn analyze_batch(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        bin_width: f32,
+        bytes_per_ev: f32,
+    ) -> anyhow::Result<BatchOutputs> {
+        let (e, p, b) = (self.batch, self.pools, self.nbins);
+        anyhow::ensure!(reads.len() == e * p * b, "reads shape");
+        anyhow::ensure!(writes.len() == e * p * b, "writes shape");
+        let reads = Literal::vec1(reads).reshape(&[e as i64, p as i64, b as i64])?;
+        let writes = Literal::vec1(writes).reshape(&[e as i64, p as i64, b as i64])?;
+        let bin_width = Literal::scalar(bin_width);
+        let bytes_per_ev = Literal::scalar(bytes_per_ev);
+        let args: [&Literal; 9] = [
+            &reads,
+            &writes,
+            &self.extra_rd,
+            &self.extra_wr,
+            &self.desc_mask,
+            &self.stt,
+            &self.bw,
+            &bin_width,
+            &bytes_per_ev,
+        ];
+        let result = self.exe.1.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        let mut it = parts.into_iter();
+        let total = it
+            .next()
+            .unwrap()
+            .to_vec::<f32>()?
+            .into_iter()
+            .map(|x| x as f64)
+            .collect();
+        Ok(BatchOutputs {
+            total,
+            lat: it.next().unwrap().to_vec::<f32>()?,
+            cong: it.next().unwrap().to_vec::<f32>()?,
+            bwd: it.next().unwrap().to_vec::<f32>()?,
+        })
+    }
+}

@@ -1,0 +1,88 @@
+//! Compiled-model shape constants + `artifacts/manifest.json` reading.
+//!
+//! Must stay in sync with `python/compile/model.py` (NUM_POOLS /
+//! NUM_SWITCHES / NUM_BINS / BATCH); the manifest written by `aot.py`
+//! is the source of truth at runtime and is validated against these.
+
+use crate::util::json::Json;
+
+/// Default AOT shapes (mirror model.py).
+pub const NUM_POOLS: usize = 8;
+pub const NUM_SWITCHES: usize = 8;
+pub const NUM_BINS: usize = 256;
+pub const BATCH: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub pools: usize,
+    pub switches: usize,
+    pub nbins: usize,
+    pub batch: usize,
+    pub single: String,
+    pub batch_module: String,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> anyhow::Result<Manifest> {
+        let path = format!("{artifacts_dir}/manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path}: {e} (run `make artifacts` first)"))?;
+        let v = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let get = |k: &str| -> anyhow::Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("{path}: missing `{k}`"))
+        };
+        let gets = |k: &str| -> anyhow::Result<String> {
+            Ok(v.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow::anyhow!("{path}: missing `{k}`"))?
+                .to_string())
+        };
+        Ok(Manifest {
+            pools: get("pools")?,
+            switches: get("switches")?,
+            nbins: get("nbins")?,
+            batch: get("batch")?,
+            single: gets("single")?,
+            batch_module: gets("batch_module")?,
+        })
+    }
+}
+
+/// Locate the artifacts directory: `CXLMEMSIM_ARTIFACTS` env var, then
+/// `./artifacts`, then relative to the crate root (for `cargo test`).
+pub fn artifacts_dir() -> String {
+    if let Ok(dir) = std::env::var("CXLMEMSIM_ARTIFACTS") {
+        return dir;
+    }
+    for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+        if std::path::Path::new(&format!("{cand}/manifest.json")).exists() {
+            return cand.to_string();
+        }
+    }
+    "artifacts".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_loads_and_matches_constants() {
+        let dir = artifacts_dir();
+        let m = Manifest::load(&dir).expect("run `make artifacts` before cargo test");
+        assert_eq!(m.pools, NUM_POOLS);
+        assert_eq!(m.switches, NUM_SWITCHES);
+        assert_eq!(m.nbins, NUM_BINS);
+        assert_eq!(m.batch, BATCH);
+        assert!(std::path::Path::new(&format!("{dir}/{}", m.single)).exists());
+        assert!(std::path::Path::new(&format!("{dir}/{}", m.batch_module)).exists());
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Built-in topologies, including the paper's Figure 1 and the Figure 2
+//! topology its §4 evaluation simulates.
+//!
+//! The paper's figures annotate BW / Lat / STT per node but the preprint
+//! text does not carry the exact numbers, so the values here follow the
+//! public CXL literature the paper cites: ~(1.5–2)× local DRAM latency
+//! through one switch level (DirectCXL/Pond measurements), x8 PCIe5-class
+//! link bandwidths, and per-64B serialization in the tens of ns through
+//! a switch. Every experiment sweeps these parameters anyway; the
+//! defaults only anchor the shipped configs.
+
+use super::{HostParams, Node, NodeKind, Topology};
+
+pub const BUILTIN_NAMES: &[&str] = &["fig1", "fig2", "direct", "deep", "wide", "pooled"];
+
+fn root(name: &str) -> Node {
+    Node {
+        name: name.into(),
+        kind: NodeKind::Root,
+        parent: None,
+        read_latency_ns: 20.0,
+        write_latency_ns: 20.0,
+        bandwidth: 64.0, // x16 CXL link, GB/s
+        stt_ns: 2.0,
+        capacity_bytes: 0,
+    }
+}
+
+fn switch(name: &str, parent: usize, lat: f64, bw: f64, stt: f64) -> Node {
+    Node {
+        name: name.into(),
+        kind: NodeKind::Switch,
+        parent: Some(parent),
+        read_latency_ns: lat,
+        write_latency_ns: lat,
+        bandwidth: bw,
+        stt_ns: stt,
+        capacity_bytes: 0,
+    }
+}
+
+fn pool(name: &str, parent: usize, rd: f64, wr: f64, bw: f64, stt: f64, gb: u64) -> Node {
+    Node {
+        name: name.into(),
+        kind: NodeKind::Pool,
+        parent: Some(parent),
+        read_latency_ns: rd,
+        write_latency_ns: wr,
+        bandwidth: bw,
+        stt_ns: stt,
+        capacity_bytes: gb << 30,
+    }
+}
+
+/// Paper Figure 1: RC -> {switch0 -> {pool0, pool1}, switch1 -> pool2}.
+/// Two switches, three memory pools.
+pub fn fig1() -> Topology {
+    Topology::new(
+        "fig1",
+        HostParams::default(),
+        vec![
+            root("rc0"),
+            switch("sw0", 0, 35.0, 32.0, 25.0),
+            switch("sw1", 0, 35.0, 32.0, 25.0),
+            pool("pool0", 1, 90.0, 100.0, 30.0, 20.0, 64),
+            pool("pool1", 1, 130.0, 140.0, 24.0, 20.0, 128),
+            pool("pool2", 2, 110.0, 120.0, 28.0, 20.0, 96),
+        ],
+    )
+    .expect("fig1 is valid")
+}
+
+/// Paper Figure 2 / §4: the topology the preliminary evaluation runs —
+/// one switch level with two pools plus one directly-attached pool.
+pub fn fig2() -> Topology {
+    Topology::new(
+        "fig2",
+        HostParams::default(),
+        vec![
+            root("rc0"),
+            switch("sw0", 0, 35.0, 32.0, 25.0),
+            pool("pool0", 1, 90.0, 100.0, 30.0, 20.0, 64),
+            pool("pool1", 1, 130.0, 140.0, 24.0, 20.0, 128),
+            pool("direct0", 0, 85.0, 95.0, 32.0, 15.0, 64),
+        ],
+    )
+    .expect("fig2 is valid")
+}
+
+/// One directly-attached pool (DirectCXL-style, no switch).
+pub fn direct() -> Topology {
+    Topology::new(
+        "direct",
+        HostParams::default(),
+        vec![root("rc0"), pool("pool0", 0, 85.0, 95.0, 32.0, 15.0, 128)],
+    )
+    .expect("direct is valid")
+}
+
+/// Two cascaded switches before the pool (worst-case hierarchy depth).
+pub fn deep() -> Topology {
+    Topology::new(
+        "deep",
+        HostParams::default(),
+        vec![
+            root("rc0"),
+            switch("sw0", 0, 35.0, 32.0, 25.0),
+            switch("sw1", 1, 35.0, 28.0, 25.0),
+            pool("pool0", 2, 90.0, 100.0, 24.0, 20.0, 256),
+        ],
+    )
+    .expect("deep is valid")
+}
+
+/// Four pools fanned out of one switch (stranding-friendly, congestion-prone).
+pub fn wide() -> Topology {
+    Topology::new(
+        "wide",
+        HostParams::default(),
+        vec![
+            root("rc0"),
+            switch("sw0", 0, 35.0, 32.0, 25.0),
+            pool("pool0", 1, 90.0, 100.0, 30.0, 20.0, 64),
+            pool("pool1", 1, 90.0, 100.0, 30.0, 20.0, 64),
+            pool("pool2", 1, 90.0, 100.0, 30.0, 20.0, 64),
+            pool("pool3", 1, 90.0, 100.0, 30.0, 20.0, 64),
+        ],
+    )
+    .expect("wide is valid")
+}
+
+/// Pond-style rack pool: a big shared pool behind two switch levels.
+pub fn pooled() -> Topology {
+    Topology::new(
+        "pooled",
+        HostParams::default(),
+        vec![
+            root("rc0"),
+            switch("tor", 0, 45.0, 48.0, 20.0),
+            switch("shelf", 1, 35.0, 32.0, 25.0),
+            pool("rackpool", 2, 120.0, 130.0, 28.0, 22.0, 1024),
+            pool("nearpool", 1, 95.0, 105.0, 30.0, 20.0, 128),
+        ],
+    )
+    .expect("pooled is valid")
+}
+
+pub fn by_name(name: &str) -> Option<Topology> {
+    match name {
+        "fig1" => Some(fig1()),
+        "fig2" => Some(fig2()),
+        "direct" => Some(direct()),
+        "deep" => Some(deep()),
+        "wide" => Some(wide()),
+        "pooled" => Some(pooled()),
+        _ => None,
+    }
+}

@@ -1,0 +1,509 @@
+//! CXL.mem topology: the user-provided tree of root complex, switches,
+//! and memory pools that CXLMemSim simulates (paper §2, Figure 1).
+//!
+//! A topology is a rooted tree. The root is the host's CXL Root Complex
+//! (RC); interior nodes are CXL switches; leaves are memory pools (or
+//! expander devices). Every node carries the three parameters the paper
+//! annotates in Figure 1: access latency (ns, per hop), bandwidth
+//! (GB/s == bytes/ns), and serial transmission time (STT, ns per
+//! cacheline-sized event).
+//!
+//! Local DRAM is *not* a node: it is pool id 0 by convention, with zero
+//! extra latency and no switch membership, so placement policies can
+//! target it uniformly (see `alloctrack`).
+
+pub mod builtin;
+pub mod parse;
+pub mod tensors;
+
+pub use tensors::TopoTensors;
+
+/// Identifies a memory pool from the allocator's point of view.
+/// Pool 0 is always local DRAM; CXL pools are 1..=num_cxl_pools.
+pub type PoolId = usize;
+
+pub const LOCAL_POOL: PoolId = 0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// The host's CXL root complex (exactly one, the tree root).
+    Root,
+    /// A CXL switch (interior node).
+    Switch,
+    /// A memory pool / type-3 device (leaf).
+    Pool,
+}
+
+/// One node of the topology tree.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub kind: NodeKind,
+    /// Index of the parent node (None only for the root).
+    pub parent: Option<usize>,
+    /// Added read latency of traversing this hop, ns.
+    pub read_latency_ns: f64,
+    /// Added write latency of traversing this hop, ns.
+    pub write_latency_ns: f64,
+    /// Bandwidth of the link into this node, bytes/ns (== GB/s).
+    pub bandwidth: f64,
+    /// Serial transmission time per 64 B event through this node, ns.
+    pub stt_ns: f64,
+    /// Pool capacity in bytes (pools only; 0 otherwise).
+    pub capacity_bytes: u64,
+}
+
+/// Host-side parameters (the machine the program "runs" on).
+#[derive(Clone, Debug)]
+pub struct HostParams {
+    /// Local DRAM load-to-use latency, ns (paper testbed: 88.9).
+    pub local_read_latency_ns: f64,
+    pub local_write_latency_ns: f64,
+    /// Local DRAM bandwidth, bytes/ns.
+    pub local_bandwidth: f64,
+    /// Local DRAM capacity in bytes (placement policies spill past it).
+    pub local_capacity_bytes: u64,
+    pub cacheline_bytes: u64,
+}
+
+impl Default for HostParams {
+    fn default() -> Self {
+        // The paper's evaluation platform: i9-12900K, DDR5-4800, 88.9 ns.
+        HostParams {
+            local_read_latency_ns: 88.9,
+            local_write_latency_ns: 88.9,
+            local_bandwidth: 38.4, // one DDR5-4800 channel pair, GB/s
+            local_capacity_bytes: 96 * (1 << 30),
+            cacheline_bytes: 64,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub host: HostParams,
+    nodes: Vec<Node>,
+    /// Node index of the root complex.
+    root: usize,
+    /// Node indices of pools, in PoolId-1 order (pool id = position+1).
+    pool_nodes: Vec<usize>,
+    /// Node indices of non-pool nodes (RC first), in "switch row" order.
+    switch_nodes: Vec<usize>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TopologyError {
+    #[error("topology must have exactly one root, found {0}")]
+    RootCount(usize),
+    #[error("node `{0}`: unknown parent `{1}`")]
+    UnknownParent(String, String),
+    #[error("node `{0}`: pools must be leaves")]
+    PoolWithChildren(String),
+    #[error("node `{0}`: {1} must be positive (got {2})")]
+    NonPositive(String, &'static str, f64),
+    #[error("duplicate node name `{0}`")]
+    DuplicateName(String),
+    #[error("topology contains a cycle involving `{0}`")]
+    Cycle(String),
+    #[error("node `{0}` is a root but has a parent")]
+    RootWithParent(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("no memory pools in topology")]
+    NoPools,
+}
+
+impl Topology {
+    /// Build and validate a topology from a node list. `nodes[i].parent`
+    /// refers to indices within `nodes`.
+    pub fn new(
+        name: &str,
+        host: HostParams,
+        nodes: Vec<Node>,
+    ) -> Result<Topology, TopologyError> {
+        // name uniqueness
+        let mut seen = std::collections::BTreeSet::new();
+        for n in &nodes {
+            if !seen.insert(n.name.clone()) {
+                return Err(TopologyError::DuplicateName(n.name.clone()));
+            }
+        }
+        // single root
+        let roots: Vec<usize> = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.kind == NodeKind::Root)
+            .map(|(i, _)| i)
+            .collect();
+        if roots.len() != 1 {
+            return Err(TopologyError::RootCount(roots.len()));
+        }
+        let root = roots[0];
+        if nodes[root].parent.is_some() {
+            return Err(TopologyError::RootWithParent(nodes[root].name.clone()));
+        }
+        // parents exist, non-root nodes have parents; check positivity
+        for (i, n) in nodes.iter().enumerate() {
+            if i != root && n.parent.is_none() {
+                return Err(TopologyError::UnknownParent(n.name.clone(), "<none>".into()));
+            }
+            if let Some(p) = n.parent {
+                if p >= nodes.len() {
+                    return Err(TopologyError::UnknownParent(
+                        n.name.clone(),
+                        format!("#{p}"),
+                    ));
+                }
+                if nodes[p].kind == NodeKind::Pool {
+                    return Err(TopologyError::PoolWithChildren(nodes[p].name.clone()));
+                }
+            }
+            if n.read_latency_ns < 0.0 {
+                return Err(TopologyError::NonPositive(
+                    n.name.clone(),
+                    "read_latency_ns",
+                    n.read_latency_ns,
+                ));
+            }
+            if n.bandwidth <= 0.0 {
+                return Err(TopologyError::NonPositive(
+                    n.name.clone(),
+                    "bandwidth",
+                    n.bandwidth,
+                ));
+            }
+            if n.stt_ns < 0.0 {
+                return Err(TopologyError::NonPositive(n.name.clone(), "stt_ns", n.stt_ns));
+            }
+        }
+        // acyclicity: walk each node to the root with a step bound
+        for (i, n) in nodes.iter().enumerate() {
+            let mut cur = i;
+            let mut steps = 0;
+            while let Some(p) = nodes[cur].parent {
+                cur = p;
+                steps += 1;
+                if steps > nodes.len() {
+                    return Err(TopologyError::Cycle(n.name.clone()));
+                }
+            }
+            if cur != root {
+                return Err(TopologyError::Cycle(n.name.clone()));
+            }
+        }
+        let pool_nodes: Vec<usize> = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.kind == NodeKind::Pool)
+            .map(|(i, _)| i)
+            .collect();
+        if pool_nodes.is_empty() {
+            return Err(TopologyError::NoPools);
+        }
+        let mut switch_nodes: Vec<usize> = vec![root];
+        switch_nodes.extend(
+            nodes
+                .iter()
+                .enumerate()
+                .filter(|(i, n)| n.kind == NodeKind::Switch && *i != root)
+                .map(|(i, _)| i),
+        );
+        Ok(Topology {
+            name: name.to_string(),
+            host,
+            nodes,
+            root,
+            pool_nodes,
+            switch_nodes,
+        })
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn root(&self) -> usize {
+        self.root
+    }
+
+    /// Number of CXL pools (excluding local DRAM).
+    pub fn num_cxl_pools(&self) -> usize {
+        self.pool_nodes.len()
+    }
+
+    /// Total pools including local DRAM as pool 0.
+    pub fn num_pools(&self) -> usize {
+        self.pool_nodes.len() + 1
+    }
+
+    pub fn num_switches(&self) -> usize {
+        self.switch_nodes.len()
+    }
+
+    /// Node index for a CXL pool id (>= 1).
+    pub fn pool_node(&self, pool: PoolId) -> Option<usize> {
+        if pool == LOCAL_POOL {
+            None
+        } else {
+            self.pool_nodes.get(pool - 1).copied()
+        }
+    }
+
+    pub fn switch_nodes(&self) -> &[usize] {
+        &self.switch_nodes
+    }
+
+    pub fn pool_name(&self, pool: PoolId) -> &str {
+        if pool == LOCAL_POOL {
+            "local"
+        } else {
+            &self.nodes[self.pool_nodes[pool - 1]].name
+        }
+    }
+
+    /// Pool capacity in bytes (local DRAM for pool 0).
+    pub fn pool_capacity(&self, pool: PoolId) -> u64 {
+        if pool == LOCAL_POOL {
+            self.host.local_capacity_bytes
+        } else {
+            self.nodes[self.pool_nodes[pool - 1]].capacity_bytes
+        }
+    }
+
+    /// Node indices on the path from a pool leaf up to and including the
+    /// root complex.
+    pub fn path_to_root(&self, pool: PoolId) -> Vec<usize> {
+        let mut out = Vec::new();
+        let Some(mut cur) = self.pool_node(pool) else {
+            return out;
+        };
+        loop {
+            out.push(cur);
+            match self.nodes[cur].parent {
+                Some(p) => cur = p,
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Total read path latency for a pool (local DRAM for pool 0), ns.
+    pub fn pool_read_latency(&self, pool: PoolId) -> f64 {
+        if pool == LOCAL_POOL {
+            return self.host.local_read_latency_ns;
+        }
+        self.path_to_root(pool)
+            .iter()
+            .map(|&i| self.nodes[i].read_latency_ns)
+            .sum()
+    }
+
+    pub fn pool_write_latency(&self, pool: PoolId) -> f64 {
+        if pool == LOCAL_POOL {
+            return self.host.local_write_latency_ns;
+        }
+        self.path_to_root(pool)
+            .iter()
+            .map(|&i| self.nodes[i].write_latency_ns)
+            .sum()
+    }
+
+    /// Extra read latency over local DRAM (the paper's "latency delay"
+    /// per event), never negative.
+    pub fn extra_read_latency(&self, pool: PoolId) -> f64 {
+        (self.pool_read_latency(pool) - self.host.local_read_latency_ns).max(0.0)
+    }
+
+    pub fn extra_write_latency(&self, pool: PoolId) -> f64 {
+        (self.pool_write_latency(pool) - self.host.local_write_latency_ns).max(0.0)
+    }
+
+    /// Minimum bandwidth along the pool's path (the path's bottleneck).
+    pub fn pool_path_bandwidth(&self, pool: PoolId) -> f64 {
+        if pool == LOCAL_POOL {
+            return self.host.local_bandwidth;
+        }
+        self.path_to_root(pool)
+            .iter()
+            .map(|&i| self.nodes[i].bandwidth)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Whether `switch_node` (a node index) is on pool's path to root.
+    pub fn routes_through(&self, pool: PoolId, switch_node: usize) -> bool {
+        self.path_to_root(pool).contains(&switch_node)
+    }
+
+    /// Human-readable one-line-per-node rendering (used by `topo show`).
+    pub fn describe(&self) -> String {
+        let mut out = format!(
+            "topology `{}`: {} nodes, {} CXL pools, {} switches (incl. RC)\n",
+            self.name,
+            self.nodes.len(),
+            self.num_cxl_pools(),
+            self.num_switches()
+        );
+        out.push_str(&format!(
+            "  local DRAM: lat {:.1} ns, bw {:.1} GB/s\n",
+            self.host.local_read_latency_ns, self.host.local_bandwidth
+        ));
+        for pool in 1..self.num_pools() {
+            let path: Vec<&str> = self
+                .path_to_root(pool)
+                .iter()
+                .map(|&i| self.nodes[i].name.as_str())
+                .collect();
+            out.push_str(&format!(
+                "  pool {} `{}`: read {:.1} ns (+{:.1}), write {:.1} ns, bw {:.1} GB/s, path {}\n",
+                pool,
+                self.pool_name(pool),
+                self.pool_read_latency(pool),
+                self.extra_read_latency(pool),
+                self.pool_write_latency(pool),
+                self.pool_path_bandwidth(pool),
+                path.join(" -> ")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builtin;
+    use super::*;
+
+    fn mini() -> Topology {
+        // rc -> sw -> pool
+        Topology::new(
+            "mini",
+            HostParams::default(),
+            vec![
+                Node {
+                    name: "rc".into(),
+                    kind: NodeKind::Root,
+                    parent: None,
+                    read_latency_ns: 10.0,
+                    write_latency_ns: 10.0,
+                    bandwidth: 64.0,
+                    stt_ns: 2.0,
+                    capacity_bytes: 0,
+                },
+                Node {
+                    name: "sw".into(),
+                    kind: NodeKind::Switch,
+                    parent: Some(0),
+                    read_latency_ns: 35.0,
+                    write_latency_ns: 35.0,
+                    bandwidth: 32.0,
+                    stt_ns: 25.0,
+                    capacity_bytes: 0,
+                },
+                Node {
+                    name: "pool".into(),
+                    kind: NodeKind::Pool,
+                    parent: Some(1),
+                    read_latency_ns: 150.0,
+                    write_latency_ns: 160.0,
+                    bandwidth: 30.0,
+                    stt_ns: 20.0,
+                    capacity_bytes: 64 << 30,
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn path_latency_sums_hops() {
+        let t = mini();
+        assert!((t.pool_read_latency(1) - 195.0).abs() < 1e-9);
+        assert!((t.pool_write_latency(1) - 205.0).abs() < 1e-9);
+        assert!((t.extra_read_latency(1) - (195.0 - 88.9)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_pool_is_pool_zero() {
+        let t = mini();
+        assert_eq!(t.pool_name(0), "local");
+        assert!((t.pool_read_latency(0) - 88.9).abs() < 1e-9);
+        assert_eq!(t.extra_read_latency(0), 0.0);
+    }
+
+    #[test]
+    fn bottleneck_bandwidth() {
+        let t = mini();
+        assert_eq!(t.pool_path_bandwidth(1), 30.0);
+    }
+
+    #[test]
+    fn routes_through_path_members_only() {
+        let t = mini();
+        assert!(t.routes_through(1, 0));
+        assert!(t.routes_through(1, 1));
+        assert!(t.routes_through(1, 2));
+    }
+
+    #[test]
+    fn rejects_two_roots() {
+        let mk = |name: &str| Node {
+            name: name.into(),
+            kind: NodeKind::Root,
+            parent: None,
+            read_latency_ns: 1.0,
+            write_latency_ns: 1.0,
+            bandwidth: 1.0,
+            stt_ns: 1.0,
+            capacity_bytes: 0,
+        };
+        let err = Topology::new("x", HostParams::default(), vec![mk("a"), mk("b")]);
+        assert!(matches!(err, Err(TopologyError::RootCount(2))));
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let mut nodes = mini().nodes.clone();
+        nodes[2].name = "sw".into();
+        assert!(matches!(
+            Topology::new("x", HostParams::default(), nodes),
+            Err(TopologyError::DuplicateName(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let mut nodes = mini().nodes.clone();
+        nodes[1].parent = Some(2); // sw's parent is pool, pool's parent sw
+        let r = Topology::new("x", HostParams::default(), nodes);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_zero_bandwidth() {
+        let mut nodes = mini().nodes.clone();
+        nodes[1].bandwidth = 0.0;
+        assert!(matches!(
+            Topology::new("x", HostParams::default(), nodes),
+            Err(TopologyError::NonPositive(_, "bandwidth", _))
+        ));
+    }
+
+    #[test]
+    fn builtin_topologies_validate() {
+        for name in builtin::BUILTIN_NAMES {
+            let t = builtin::by_name(name).unwrap();
+            assert!(t.num_pools() >= 2, "{name} has no CXL pools");
+            assert!(!t.describe().is_empty());
+        }
+    }
+
+    #[test]
+    fn fig1_shape_matches_paper() {
+        // Figure 1: two switches, three memory pools.
+        let t = builtin::fig1();
+        assert_eq!(t.num_cxl_pools(), 3);
+        // RC + 2 switches
+        assert_eq!(t.num_switches(), 3);
+    }
+}

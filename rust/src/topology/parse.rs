@@ -1,0 +1,301 @@
+//! Topology configs: TOML parsing (see `configs/*.toml` for examples).
+//!
+//! Format:
+//!
+//! ```toml
+//! name = "fig1"
+//!
+//! [host]
+//! local_latency_ns = 88.9
+//! local_write_latency_ns = 88.9   # optional, defaults to read
+//! local_bandwidth_gbps = 38.4
+//! local_capacity_gb = 96
+//! cacheline_bytes = 64
+//!
+//! [[node]]
+//! name = "rc0"
+//! kind = "root"                    # root | switch | pool
+//! latency_ns = 20                  # read latency of this hop
+//! write_latency_ns = 20            # optional, defaults to latency_ns
+//! bandwidth_gbps = 64
+//! stt_ns = 2
+//!
+//! [[node]]
+//! name = "pool0"
+//! kind = "pool"
+//! parent = "rc0"
+//! latency_ns = 85
+//! bandwidth_gbps = 32
+//! stt_ns = 15
+//! capacity_gb = 128
+//! ```
+
+use std::collections::BTreeMap;
+
+use super::{HostParams, Node, NodeKind, Topology, TopologyError};
+use crate::util::toml::{opt_f64, opt_str, req_f64, req_str, TomlDoc};
+
+impl Topology {
+    pub fn from_toml_str(src: &str) -> Result<Topology, TopologyError> {
+        let doc = TomlDoc::parse(src).map_err(TopologyError::Config)?;
+        let name = doc
+            .table("")
+            .and_then(|t| t.get("name"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("unnamed")
+            .to_string();
+
+        let mut host = HostParams::default();
+        if let Some(h) = doc.table("host") {
+            host.local_read_latency_ns = opt_f64(h, "local_latency_ns", host.local_read_latency_ns);
+            host.local_write_latency_ns =
+                opt_f64(h, "local_write_latency_ns", host.local_read_latency_ns);
+            host.local_bandwidth = opt_f64(h, "local_bandwidth_gbps", host.local_bandwidth);
+            host.local_capacity_bytes =
+                (opt_f64(h, "local_capacity_gb", 96.0) * (1u64 << 30) as f64) as u64;
+            host.cacheline_bytes = opt_f64(h, "cacheline_bytes", 64.0) as u64;
+        }
+
+        // first pass: collect names -> index
+        let raw = doc.array("node");
+        if raw.is_empty() {
+            return Err(TopologyError::Config("no [[node]] entries".into()));
+        }
+        let mut index: BTreeMap<String, usize> = BTreeMap::new();
+        for (i, t) in raw.iter().enumerate() {
+            let n = req_str(t, "name", "node").map_err(TopologyError::Config)?;
+            if index.insert(n.clone(), i).is_some() {
+                return Err(TopologyError::DuplicateName(n));
+            }
+        }
+
+        let mut nodes = Vec::with_capacity(raw.len());
+        for t in raw {
+            let name = req_str(t, "name", "node").map_err(TopologyError::Config)?;
+            let ctx = format!("node `{name}`");
+            let kind = match opt_str(t, "kind", "").as_str() {
+                "root" => NodeKind::Root,
+                "switch" => NodeKind::Switch,
+                "pool" => NodeKind::Pool,
+                other => {
+                    return Err(TopologyError::Config(format!(
+                        "{ctx}: kind must be root|switch|pool, got `{other}`"
+                    )))
+                }
+            };
+            let parent = match t.get("parent").and_then(|v| v.as_str()) {
+                Some(p) => Some(
+                    *index
+                        .get(p)
+                        .ok_or_else(|| TopologyError::UnknownParent(name.clone(), p.into()))?,
+                ),
+                None => None,
+            };
+            let lat = req_f64(t, "latency_ns", &ctx).map_err(TopologyError::Config)?;
+            let wlat = opt_f64(t, "write_latency_ns", lat);
+            let bw = req_f64(t, "bandwidth_gbps", &ctx).map_err(TopologyError::Config)?;
+            let stt = req_f64(t, "stt_ns", &ctx).map_err(TopologyError::Config)?;
+            let cap = (opt_f64(t, "capacity_gb", 0.0) * (1u64 << 30) as f64) as u64;
+            nodes.push(Node {
+                name,
+                kind,
+                parent,
+                read_latency_ns: lat,
+                write_latency_ns: wlat,
+                bandwidth: bw,
+                stt_ns: stt,
+                capacity_bytes: cap,
+            });
+        }
+        Topology::new(&name, host, nodes)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Topology, TopologyError> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| TopologyError::Config(format!("read {path}: {e}")))?;
+        Topology::from_toml_str(&src)
+    }
+
+    /// Resolve `--topo` CLI values: builtin name or path to a .toml file.
+    pub fn resolve(spec: &str) -> Result<Topology, TopologyError> {
+        if let Some(t) = super::builtin::by_name(spec) {
+            return Ok(t);
+        }
+        if spec.ends_with(".toml") {
+            return Topology::from_toml_file(spec);
+        }
+        Err(TopologyError::Config(format!(
+            "unknown topology `{spec}` (builtin: {:?}, or path to .toml)",
+            super::builtin::BUILTIN_NAMES
+        )))
+    }
+
+    /// Emit a TOML config for this topology (inverse of from_toml_str).
+    pub fn to_toml(&self) -> String {
+        let mut out = format!("name = \"{}\"\n\n[host]\n", self.name);
+        out.push_str(&format!(
+            "local_latency_ns = {}\nlocal_write_latency_ns = {}\nlocal_bandwidth_gbps = {}\nlocal_capacity_gb = {}\ncacheline_bytes = {}\n",
+            self.host.local_read_latency_ns,
+            self.host.local_write_latency_ns,
+            self.host.local_bandwidth,
+            self.host.local_capacity_bytes >> 30,
+            self.host.cacheline_bytes
+        ));
+        for n in self.nodes() {
+            out.push_str("\n[[node]]\n");
+            out.push_str(&format!("name = \"{}\"\n", n.name));
+            out.push_str(&format!(
+                "kind = \"{}\"\n",
+                match n.kind {
+                    NodeKind::Root => "root",
+                    NodeKind::Switch => "switch",
+                    NodeKind::Pool => "pool",
+                }
+            ));
+            if let Some(p) = n.parent {
+                out.push_str(&format!("parent = \"{}\"\n", self.nodes()[p].name));
+            }
+            out.push_str(&format!("latency_ns = {}\n", n.read_latency_ns));
+            out.push_str(&format!("write_latency_ns = {}\n", n.write_latency_ns));
+            out.push_str(&format!("bandwidth_gbps = {}\n", n.bandwidth));
+            out.push_str(&format!("stt_ns = {}\n", n.stt_ns));
+            if n.capacity_bytes > 0 {
+                out.push_str(&format!("capacity_gb = {}\n", n.capacity_bytes >> 30));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builtin;
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let t = Topology::from_toml_str(
+            r#"
+name = "t"
+[[node]]
+name = "rc"
+kind = "root"
+latency_ns = 10
+bandwidth_gbps = 64
+stt_ns = 2
+[[node]]
+name = "p"
+kind = "pool"
+parent = "rc"
+latency_ns = 100
+bandwidth_gbps = 32
+stt_ns = 20
+capacity_gb = 64
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.num_cxl_pools(), 1);
+        assert!((t.pool_read_latency(1) - 110.0).abs() < 1e-9);
+        assert_eq!(t.pool_capacity(1), 64 << 30);
+    }
+
+    #[test]
+    fn roundtrip_builtins_through_toml() {
+        for name in builtin::BUILTIN_NAMES {
+            let t = builtin::by_name(name).unwrap();
+            let t2 = Topology::from_toml_str(&t.to_toml()).unwrap();
+            assert_eq!(t.num_pools(), t2.num_pools(), "{name}");
+            assert_eq!(t.num_switches(), t2.num_switches(), "{name}");
+            for p in 0..t.num_pools() {
+                assert!(
+                    (t.pool_read_latency(p) - t2.pool_read_latency(p)).abs() < 1e-9,
+                    "{name} pool {p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_parent_is_error() {
+        let r = Topology::from_toml_str(
+            r#"
+[[node]]
+name = "rc"
+kind = "root"
+latency_ns = 10
+bandwidth_gbps = 64
+stt_ns = 2
+[[node]]
+name = "p"
+kind = "pool"
+parent = "nope"
+latency_ns = 100
+bandwidth_gbps = 32
+stt_ns = 20
+"#,
+        );
+        assert!(matches!(r, Err(TopologyError::UnknownParent(_, _))));
+    }
+
+    #[test]
+    fn bad_kind_is_error() {
+        let r = Topology::from_toml_str(
+            r#"
+[[node]]
+name = "rc"
+kind = "hub"
+latency_ns = 10
+bandwidth_gbps = 64
+stt_ns = 2
+"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_required_key_is_error() {
+        let r = Topology::from_toml_str(
+            r#"
+[[node]]
+name = "rc"
+kind = "root"
+bandwidth_gbps = 64
+stt_ns = 2
+"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn resolve_builtin() {
+        assert!(Topology::resolve("fig2").is_ok());
+        assert!(Topology::resolve("nonexistent").is_err());
+    }
+
+    #[test]
+    fn host_overrides_apply() {
+        let t = Topology::from_toml_str(
+            r#"
+[host]
+local_latency_ns = 70
+local_bandwidth_gbps = 50
+[[node]]
+name = "rc"
+kind = "root"
+latency_ns = 10
+bandwidth_gbps = 64
+stt_ns = 2
+[[node]]
+name = "p"
+kind = "pool"
+parent = "rc"
+latency_ns = 100
+bandwidth_gbps = 32
+stt_ns = 20
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.host.local_read_latency_ns, 70.0);
+        assert!((t.extra_read_latency(1) - 40.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Tensorization: flatten the topology tree into the fixed-shape f32
+//! arrays the AOT-compiled timing analyzer consumes (see
+//! `python/compile/model.py` for the input contract).
+//!
+//! Padding convention: topologies smaller than the compiled (P, S)
+//! shapes are zero-padded; zero `desc_mask` rows with zero stt/bw are
+//! provably inert in the model (tested on both sides).
+
+use super::{Topology, TopologyError};
+
+/// The timing model's topology-dependent inputs, row-major.
+#[derive(Clone, Debug)]
+pub struct TopoTensors {
+    /// Padded pool count P (pool 0 = local DRAM).
+    pub pools: usize,
+    /// Padded switch count S (row 0 = root complex).
+    pub switches: usize,
+    /// f32[P]: per-pool extra read latency vs local DRAM, ns.
+    pub extra_read_lat: Vec<f32>,
+    /// f32[P]: per-pool extra write latency vs local DRAM, ns.
+    pub extra_write_lat: Vec<f32>,
+    /// f32[S*P] row-major: 1.0 iff pool p routes through switch row s.
+    pub desc_mask: Vec<f32>,
+    /// f32[S]: serial transmission time per event, ns.
+    pub stt: Vec<f32>,
+    /// f32[S]: switch bandwidth, bytes/ns.
+    pub bw: Vec<f32>,
+}
+
+impl TopoTensors {
+    /// Build tensors padded to (pools=p, switches=s). Fails if the
+    /// topology is larger than the compiled shapes.
+    pub fn build(topo: &Topology, p: usize, s: usize) -> Result<TopoTensors, TopologyError> {
+        if topo.num_pools() > p {
+            return Err(TopologyError::Config(format!(
+                "topology has {} pools but the compiled model supports {p}",
+                topo.num_pools()
+            )));
+        }
+        if topo.num_switches() > s {
+            return Err(TopologyError::Config(format!(
+                "topology has {} switches but the compiled model supports {s}",
+                topo.num_switches()
+            )));
+        }
+        let mut t = TopoTensors {
+            pools: p,
+            switches: s,
+            extra_read_lat: vec![0.0; p],
+            extra_write_lat: vec![0.0; p],
+            desc_mask: vec![0.0; s * p],
+            stt: vec![0.0; s],
+            bw: vec![0.0; s],
+        };
+        for pool in 0..topo.num_pools() {
+            t.extra_read_lat[pool] = topo.extra_read_latency(pool) as f32;
+            t.extra_write_lat[pool] = topo.extra_write_latency(pool) as f32;
+        }
+        for (row, &node) in topo.switch_nodes().iter().enumerate() {
+            t.stt[row] = topo.nodes()[node].stt_ns as f32;
+            t.bw[row] = topo.nodes()[node].bandwidth as f32;
+            for pool in 1..topo.num_pools() {
+                if topo.routes_through(pool, node) {
+                    t.desc_mask[row * p + pool] = 1.0;
+                }
+            }
+        }
+        Ok(t)
+    }
+
+    /// desc_mask entry accessor (tests & native analyzer).
+    pub fn mask(&self, switch_row: usize, pool: usize) -> f32 {
+        self.desc_mask[switch_row * self.pools + pool]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builtin;
+    use super::*;
+
+    #[test]
+    fn fig2_tensors_shape() {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        assert_eq!(t.extra_read_lat.len(), 8);
+        assert_eq!(t.desc_mask.len(), 64);
+        // local pool contributes no extra latency
+        assert_eq!(t.extra_read_lat[0], 0.0);
+        // every CXL pool routes through the RC (row 0)
+        for pool in 1..topo.num_pools() {
+            assert_eq!(t.mask(0, pool), 1.0, "pool {pool} not under RC");
+        }
+        // padding rows are zeroed
+        for row in topo.num_switches()..8 {
+            assert_eq!(t.stt[row], 0.0);
+            assert_eq!(t.bw[row], 0.0);
+            for pool in 0..8 {
+                assert_eq!(t.mask(row, pool), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fig2_switch_membership() {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        // fig2: sw0 (row 1) carries pool0+pool1 (= pools 1 and 2),
+        // direct0 (pool 3) hangs off the RC only.
+        assert_eq!(t.mask(1, 1), 1.0);
+        assert_eq!(t.mask(1, 2), 1.0);
+        assert_eq!(t.mask(1, 3), 0.0);
+        assert_eq!(t.mask(0, 3), 1.0);
+    }
+
+    #[test]
+    fn too_many_pools_rejected() {
+        let topo = builtin::wide(); // 4 CXL pools + local = 5
+        assert!(TopoTensors::build(&topo, 4, 8).is_err());
+        assert!(TopoTensors::build(&topo, 5, 8).is_ok());
+    }
+
+    #[test]
+    fn too_many_switches_rejected() {
+        let topo = builtin::deep(); // RC + 2 switches
+        assert!(TopoTensors::build(&topo, 8, 2).is_err());
+        assert!(TopoTensors::build(&topo, 8, 3).is_ok());
+    }
+
+    #[test]
+    fn local_pool_never_masked() {
+        for name in builtin::BUILTIN_NAMES {
+            let topo = builtin::by_name(name).unwrap();
+            let t = TopoTensors::build(&topo, 8, 8).unwrap();
+            for row in 0..8 {
+                assert_eq!(t.mask(row, 0), 0.0, "{name} row {row}");
+            }
+        }
+    }
+}

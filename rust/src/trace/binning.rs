@@ -1,0 +1,154 @@
+//! Epoch histograms: turn the epoch's sampled miss events into the
+//! fixed-shape `[P, B]` read/write tensors the timing model consumes.
+//!
+//! The paper iterates the raw PEBS event list per epoch; binning to B
+//! fixed time bins is what makes the analyzer a dense tensor program
+//! (DESIGN.md §5). Bin width = epoch_len / B.
+
+use crate::topology::PoolId;
+
+/// Per-epoch [P, B] read/write histograms, f32 row-major (model input).
+#[derive(Clone, Debug)]
+pub struct EpochBins {
+    pub pools: usize,
+    pub nbins: usize,
+    pub epoch_ns: f64,
+    pub reads: Vec<f32>,
+    pub writes: Vec<f32>,
+    /// Total events binned (reads + writes), for sanity checks.
+    pub total_events: u64,
+    /// Events whose timestamp fell outside [0, epoch_ns) — clamped into
+    /// the edge bins; should be ~0 in a healthy run.
+    pub clamped: u64,
+}
+
+impl EpochBins {
+    pub fn new(pools: usize, nbins: usize, epoch_ns: f64) -> EpochBins {
+        assert!(pools > 0 && nbins > 0 && epoch_ns > 0.0);
+        EpochBins {
+            pools,
+            nbins,
+            epoch_ns,
+            reads: vec![0.0; pools * nbins],
+            writes: vec![0.0; pools * nbins],
+            total_events: 0,
+            clamped: 0,
+        }
+    }
+
+    pub fn bin_width_ns(&self) -> f64 {
+        self.epoch_ns / self.nbins as f64
+    }
+
+    /// Record one sampled miss at epoch-relative time `t_ns` against
+    /// pool `pool`, weighted by the PEBS sampling period (a sample with
+    /// period k stands for k misses).
+    #[inline]
+    pub fn record(&mut self, pool: PoolId, is_write: bool, t_ns: f64, weight: f32) {
+        debug_assert!(pool < self.pools);
+        let mut b = (t_ns / self.bin_width_ns()).floor() as i64;
+        if b < 0 {
+            b = 0;
+            self.clamped += 1;
+        } else if b >= self.nbins as i64 {
+            b = self.nbins as i64 - 1;
+            if t_ns >= self.epoch_ns + 1e-9 {
+                self.clamped += 1;
+            }
+        }
+        let idx = pool * self.nbins + b as usize;
+        if is_write {
+            self.writes[idx] += weight;
+        } else {
+            self.reads[idx] += weight;
+        }
+        self.total_events += 1;
+    }
+
+    /// Zero all counters for reuse (avoids reallocating every epoch —
+    /// this is on the coordinator's hot path).
+    pub fn clear(&mut self) {
+        self.reads.iter_mut().for_each(|x| *x = 0.0);
+        self.writes.iter_mut().for_each(|x| *x = 0.0);
+        self.total_events = 0;
+        self.clamped = 0;
+    }
+
+    pub fn read_count(&self, pool: PoolId) -> f64 {
+        self.reads[pool * self.nbins..(pool + 1) * self.nbins]
+            .iter()
+            .map(|x| *x as f64)
+            .sum()
+    }
+
+    pub fn write_count(&self, pool: PoolId) -> f64 {
+        self.writes[pool * self.nbins..(pool + 1) * self.nbins]
+            .iter()
+            .map(|x| *x as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_land_in_right_bin() {
+        let mut b = EpochBins::new(2, 10, 1000.0); // bin width 100ns
+        b.record(0, false, 0.0, 1.0);
+        b.record(0, false, 150.0, 1.0);
+        b.record(1, true, 950.0, 1.0);
+        assert_eq!(b.reads[0], 1.0);
+        assert_eq!(b.reads[1], 1.0);
+        assert_eq!(b.writes[1 * 10 + 9], 1.0);
+        assert_eq!(b.total_events, 3);
+        assert_eq!(b.clamped, 0);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let mut b = EpochBins::new(1, 4, 400.0);
+        b.record(0, false, -5.0, 1.0);
+        b.record(0, false, 401.0, 1.0);
+        assert_eq!(b.reads[0], 1.0);
+        assert_eq!(b.reads[3], 1.0);
+        assert_eq!(b.clamped, 2);
+    }
+
+    #[test]
+    fn boundary_time_goes_to_last_bin_unclamped() {
+        let mut b = EpochBins::new(1, 4, 400.0);
+        b.record(0, false, 400.0, 1.0); // == epoch_ns: edge, not an error
+        assert_eq!(b.reads[3], 1.0);
+        assert_eq!(b.clamped, 0);
+    }
+
+    #[test]
+    fn weights_accumulate() {
+        let mut b = EpochBins::new(1, 2, 100.0);
+        b.record(0, true, 10.0, 64.0);
+        b.record(0, true, 20.0, 64.0);
+        assert_eq!(b.write_count(0), 128.0);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut b = EpochBins::new(2, 8, 800.0);
+        b.record(1, false, 10.0, 1.0);
+        b.clear();
+        assert_eq!(b.total_events, 0);
+        assert!(b.reads.iter().all(|x| *x == 0.0));
+        assert!(b.writes.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn per_pool_counts() {
+        let mut b = EpochBins::new(3, 4, 400.0);
+        for i in 0..10 {
+            b.record(2, i % 2 == 0, (i * 37) as f64 % 400.0, 1.0);
+        }
+        assert_eq!(b.read_count(2) + b.write_count(2), 10.0);
+        assert_eq!(b.read_count(0), 0.0);
+    }
+}

@@ -1,0 +1,278 @@
+//! Trace persistence: JSONL (human-greppable) and a compact binary
+//! format for large traces. Lets users record a workload's event stream
+//! once and replay it against many topologies (`cxlmemsim record` /
+//! `--trace` on `run`), mirroring how the real tool would archive PEBS
+//! + eBPF captures.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+
+use super::{Access, AllocEvent, AllocKind, WlEvent};
+use crate::util::json::Json;
+
+/// Magic header for the binary format (version byte at the end).
+const MAGIC: &[u8; 8] = b"CXLTRC\x00\x01";
+
+// ---------------------------------------------------------------- JSONL
+
+pub fn write_jsonl<W: Write>(w: &mut W, events: &[WlEvent]) -> std::io::Result<()> {
+    let mut bw = BufWriter::new(w);
+    for ev in events {
+        let line = match ev {
+            WlEvent::Alloc(a) => format!(
+                r#"{{"ev":"alloc","kind":"{}","addr":{},"len":{},"t_ns":{}}}"#,
+                a.kind.as_str(),
+                a.addr,
+                a.len,
+                a.t_ns
+            ),
+            WlEvent::Access(a) => format!(
+                r#"{{"ev":"access","addr":{},"w":{}}}"#,
+                a.addr,
+                if a.is_write { 1 } else { 0 }
+            ),
+        };
+        bw.write_all(line.as_bytes())?;
+        bw.write_all(b"\n")?;
+    }
+    bw.flush()
+}
+
+pub fn read_jsonl<R: Read>(r: R) -> Result<Vec<WlEvent>, String> {
+    let br = BufReader::new(r);
+    let mut out = Vec::new();
+    for (i, line) in br.lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", i + 1))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let ev = v
+            .get("ev")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| format!("line {}: missing ev", i + 1))?;
+        match ev {
+            "alloc" => {
+                let kind = v
+                    .get("kind")
+                    .and_then(|x| x.as_str())
+                    .and_then(AllocKind::parse)
+                    .ok_or_else(|| format!("line {}: bad kind", i + 1))?;
+                out.push(WlEvent::Alloc(AllocEvent {
+                    kind,
+                    addr: v.get("addr").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+                    len: v.get("len").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+                    t_ns: v.get("t_ns").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                }));
+            }
+            "access" => {
+                out.push(WlEvent::Access(Access {
+                    addr: v.get("addr").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+                    is_write: v.get("w").and_then(|x| x.as_f64()).unwrap_or(0.0) != 0.0,
+                }));
+            }
+            other => return Err(format!("line {}: unknown ev `{other}`", i + 1)),
+        }
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------- binary
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(b: &[u8], off: &mut usize) -> Result<u64, String> {
+    let end = *off + 8;
+    if end > b.len() {
+        return Err("truncated trace".into());
+    }
+    let v = u64::from_le_bytes(b[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
+/// Binary layout: MAGIC, u64 count, then per event:
+///   tag u8 (0=access-read, 1=access-write, 2=alloc)
+///   access: u64 addr
+///   alloc:  u8 kind, u64 addr, u64 len, f64 t_ns
+pub fn write_binary<W: Write>(w: &mut W, events: &[WlEvent]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(events.len() * 9 + 16);
+    buf.extend_from_slice(MAGIC);
+    put_u64(&mut buf, events.len() as u64);
+    for ev in events {
+        match ev {
+            WlEvent::Access(a) => {
+                buf.push(if a.is_write { 1 } else { 0 });
+                put_u64(&mut buf, a.addr);
+            }
+            WlEvent::Alloc(a) => {
+                buf.push(2);
+                buf.push(a.kind as u8);
+                put_u64(&mut buf, a.addr);
+                put_u64(&mut buf, a.len);
+                buf.extend_from_slice(&a.t_ns.to_le_bytes());
+            }
+        }
+    }
+    w.write_all(&buf)
+}
+
+fn kind_from_u8(k: u8) -> Result<AllocKind, String> {
+    Ok(match k {
+        0 => AllocKind::Mmap,
+        1 => AllocKind::Munmap,
+        2 => AllocKind::Sbrk,
+        3 => AllocKind::Brk,
+        4 => AllocKind::Malloc,
+        5 => AllocKind::Calloc,
+        6 => AllocKind::Free,
+        _ => return Err(format!("bad alloc kind {k}")),
+    })
+}
+
+pub fn read_binary(b: &[u8]) -> Result<Vec<WlEvent>, String> {
+    if b.len() < 16 || &b[..8] != MAGIC {
+        return Err("not a CXLTRC trace (bad magic)".into());
+    }
+    let mut off = 8;
+    let n = get_u64(b, &mut off)? as usize;
+    // the count is untrusted input: never preallocate more than the
+    // byte stream could possibly hold (smallest event = 9 bytes) —
+    // found by the corrupt-trace fuzz test in rust/tests/failures.rs
+    if n > (b.len() - off) / 9 + 1 {
+        return Err(format!("event count {n} exceeds trace size {}", b.len()));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if off >= b.len() {
+            return Err("truncated trace".into());
+        }
+        let tag = b[off];
+        off += 1;
+        match tag {
+            0 | 1 => {
+                let addr = get_u64(b, &mut off)?;
+                out.push(WlEvent::Access(Access { addr, is_write: tag == 1 }));
+            }
+            2 => {
+                if off >= b.len() {
+                    return Err("truncated trace".into());
+                }
+                let kind = kind_from_u8(b[off])?;
+                off += 1;
+                let addr = get_u64(b, &mut off)?;
+                let len = get_u64(b, &mut off)?;
+                let end = off + 8;
+                if end > b.len() {
+                    return Err("truncated trace".into());
+                }
+                let t_ns = f64::from_le_bytes(b[off..end].try_into().unwrap());
+                off = end;
+                out.push(WlEvent::Alloc(AllocEvent { kind, addr, len, t_ns }));
+            }
+            t => return Err(format!("bad tag {t}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<WlEvent> {
+        vec![
+            WlEvent::Alloc(AllocEvent {
+                kind: AllocKind::Mmap,
+                addr: 0x7000_0000,
+                len: 4096,
+                t_ns: 12.5,
+            }),
+            WlEvent::Access(Access { addr: 0x7000_0040, is_write: false }),
+            WlEvent::Access(Access { addr: 0x7000_0080, is_write: true }),
+            WlEvent::Alloc(AllocEvent {
+                kind: AllocKind::Free,
+                addr: 0x7000_0000,
+                len: 4096,
+                t_ns: 99.0,
+            }),
+        ]
+    }
+
+    fn assert_equal(a: &[WlEvent], b: &[WlEvent]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            match (x, y) {
+                (WlEvent::Access(p), WlEvent::Access(q)) => {
+                    assert_eq!(p.addr, q.addr);
+                    assert_eq!(p.is_write, q.is_write);
+                }
+                (WlEvent::Alloc(p), WlEvent::Alloc(q)) => {
+                    assert_eq!(p.kind, q.kind);
+                    assert_eq!(p.addr, q.addr);
+                    assert_eq!(p.len, q.len);
+                    assert!((p.t_ns - q.t_ns).abs() < 1e-12);
+                }
+                _ => panic!("event kind mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let evs = sample_events();
+        let mut buf = Vec::new();
+        write_jsonl(&mut buf, &evs).unwrap();
+        let back = read_jsonl(&buf[..]).unwrap();
+        assert_equal(&evs, &back);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let evs = sample_events();
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &evs).unwrap();
+        let back = read_binary(&buf).unwrap();
+        assert_equal(&evs, &back);
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        assert!(read_binary(b"NOTATRACE_______").is_err());
+        assert!(read_binary(b"short").is_err());
+    }
+
+    #[test]
+    fn binary_rejects_truncation() {
+        let evs = sample_events();
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &evs).unwrap();
+        for cut in [17, buf.len() - 3] {
+            assert!(read_binary(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn jsonl_skips_blank_lines() {
+        let src = "\n\n{\"ev\":\"access\",\"addr\":64,\"w\":1}\n\n";
+        let evs = read_jsonl(src.as_bytes()).unwrap();
+        assert_eq!(evs.len(), 1);
+    }
+
+    #[test]
+    fn jsonl_rejects_unknown_event() {
+        let src = "{\"ev\":\"mystery\"}\n";
+        assert!(read_jsonl(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn empty_traces_roundtrip() {
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &[]).unwrap();
+        assert_eq!(read_binary(&buf).unwrap().len(), 0);
+        let mut jbuf = Vec::new();
+        write_jsonl(&mut jbuf, &[]).unwrap();
+        assert_eq!(read_jsonl(&jbuf[..]).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Event vocabulary shared by the tracer substrate and the coordinator.
+//!
+//! In the paper, the *Tracer* produces two streams: allocation events
+//! (eBPF on `mmap`/`munmap`/`sbrk`/`brk`) and memory events (PEBS
+//! samples of LLC misses). Here the workload engine emits the same two
+//! streams; the vocabulary below is deliberately the union of what eBPF
+//! + PEBS would deliver so the downstream logic is identical.
+
+pub mod binning;
+pub mod io;
+
+/// Which allocation interface produced an allocation event — used by
+/// size-class placement policies and by the microbenchmarks, which are
+/// named after exactly these calls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    Mmap,
+    Munmap,
+    Sbrk,
+    Brk,
+    Malloc,
+    Calloc,
+    Free,
+}
+
+impl AllocKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AllocKind::Mmap => "mmap",
+            AllocKind::Munmap => "munmap",
+            AllocKind::Sbrk => "sbrk",
+            AllocKind::Brk => "brk",
+            AllocKind::Malloc => "malloc",
+            AllocKind::Calloc => "calloc",
+            AllocKind::Free => "free",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AllocKind> {
+        Some(match s {
+            "mmap" => AllocKind::Mmap,
+            "munmap" => AllocKind::Munmap,
+            "sbrk" => AllocKind::Sbrk,
+            "brk" => AllocKind::Brk,
+            "malloc" => AllocKind::Malloc,
+            "calloc" => AllocKind::Calloc,
+            "free" => AllocKind::Free,
+            _ => return None,
+        })
+    }
+
+    /// Does this event release memory rather than acquire it?
+    pub fn is_release(&self) -> bool {
+        matches!(self, AllocKind::Munmap | AllocKind::Free)
+    }
+}
+
+/// What eBPF would report for one allocation syscall.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocEvent {
+    pub kind: AllocKind,
+    /// Virtual base address of the affected range.
+    pub addr: u64,
+    /// Length in bytes.
+    pub len: u64,
+    /// Virtual time of the call, ns since workload start.
+    pub t_ns: f64,
+}
+
+/// One memory access as issued by the program (pre cache filtering).
+#[derive(Clone, Copy, Debug)]
+pub struct Access {
+    pub addr: u64,
+    pub is_write: bool,
+}
+
+/// What PEBS would report for one sampled LLC-miss event.
+#[derive(Clone, Copy, Debug)]
+pub struct MissSample {
+    pub addr: u64,
+    pub is_write: bool,
+    /// Virtual time of the miss, ns since epoch start.
+    pub t_ns: f64,
+}
+
+/// Everything a workload can emit, in program order.
+#[derive(Clone, Copy, Debug)]
+pub enum WlEvent {
+    Alloc(AllocEvent),
+    Access(Access),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_kind_roundtrip() {
+        for k in [
+            AllocKind::Mmap,
+            AllocKind::Munmap,
+            AllocKind::Sbrk,
+            AllocKind::Brk,
+            AllocKind::Malloc,
+            AllocKind::Calloc,
+            AllocKind::Free,
+        ] {
+            assert_eq!(AllocKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(AllocKind::parse("posix_memalign"), None);
+    }
+
+    #[test]
+    fn release_classification() {
+        assert!(AllocKind::Munmap.is_release());
+        assert!(AllocKind::Free.is_release());
+        assert!(!AllocKind::Mmap.is_release());
+        assert!(!AllocKind::Sbrk.is_release());
+    }
+}

@@ -1,0 +1,154 @@
+//! Small benchmarking harness (criterion is unavailable offline).
+//!
+//! Each bench binary (`rust/benches/*.rs`, `harness = false`) uses this
+//! to time closures with warmup, report mean / median / p95 / stddev,
+//! and print both a human-readable markdown table (what the paper's
+//! tables look like) and machine-readable JSON lines for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            median_s: xs[n / 2],
+            p95_s: xs[((n as f64 * 0.95) as usize).min(n - 1)],
+            stddev_s: var.sqrt(),
+            min_s: xs[0],
+            max_s: xs[n - 1],
+        }
+    }
+}
+
+/// Time `f` for `iters` measured runs after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(name, samples)
+}
+
+/// Time a single long run (Table-1 style wall-clock measurements).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Render a markdown table; `rows` are already-formatted cells.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!(" {:<w$} |", c, w = w));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&line(
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&line(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples("x", vec![1.0; 10]);
+        assert_eq!(s.mean_s, 1.0);
+        assert_eq!(s.median_s, 1.0);
+        assert_eq!(s.stddev_s, 0.0);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 1.0);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples("x", (1..=100).map(|i| i as f64).collect());
+        assert!(s.min_s <= s.median_s && s.median_s <= s.p95_s && s.p95_s <= s.max_s);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut n = 0usize;
+        let s = bench("count", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-6).contains("µs"));
+        assert!(fmt_secs(5e-3).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("| a"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments. Subcommand dispatch lives in `main.rs`; this
+//! module only tokenizes and provides typed accessors with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse a raw arg list (without the program / subcommand name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.u64(key, default as u64) as usize
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse(&["--epoch-ms", "5", "--topo=fig2", "run"]);
+        assert_eq!(a.str("epoch-ms", ""), "5");
+        assert_eq!(a.str("topo", ""), "fig2");
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["--verbose", "--native"]);
+        assert!(a.bool("verbose"));
+        assert!(a.bool("native"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--dry-run", "--seed", "7"]);
+        assert!(a.bool("dry-run"));
+        assert_eq!(a.u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.f64("x", 2.5), 2.5);
+        assert_eq!(a.usize("n", 3), 3);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--bias=-3.5"]);
+        assert_eq!(a.f64("bias", 0.0), -3.5);
+    }
+}

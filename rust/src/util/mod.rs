@@ -1,0 +1,9 @@
+//! Dependency-free utility layer: PRNG, JSON, TOML-subset, CLI args,
+//! and a small benchmarking harness. These exist because offline builds
+//! only have the `xla` crate's dependency closure available.
+
+pub mod benchutil;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod toml;

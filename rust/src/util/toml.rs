@@ -1,0 +1,300 @@
+//! Minimal TOML-subset parser for topology / simulation configs.
+//!
+//! Supports the subset the repo's configs use: top-level keys, `[table]`
+//! headers, `[[array-of-tables]]` headers, string / float / integer /
+//! boolean values, inline arrays of scalars, and `#` comments. Dotted
+//! keys and inline tables are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+pub type Table = BTreeMap<String, TomlValue>;
+
+/// A parsed document: scalar tables by path plus array-of-tables.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    /// `""` holds top-level keys; `"host"` holds `[host]`, etc.
+    pub tables: BTreeMap<String, Table>,
+    /// `[[node]]` entries, in file order, keyed by header name.
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        doc.tables.insert(String::new(), Table::new());
+        // current insertion point: either a named table or the last
+        // element of an array-of-tables.
+        enum Cur {
+            Table(String),
+            Array(String),
+        }
+        let mut cur = Cur::Table(String::new());
+
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.arrays.entry(name.clone()).or_default().push(Table::new());
+                cur = Cur::Array(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default();
+                cur = Cur::Table(name);
+            } else if let Some(eq) = find_eq(&line) {
+                let key = line[..eq].trim().to_string();
+                if key.is_empty() {
+                    return Err(format!("line {}: empty key", lineno + 1));
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+                let tbl = match &cur {
+                    Cur::Table(name) => doc.tables.get_mut(name).unwrap(),
+                    Cur::Array(name) => doc.arrays.get_mut(name).unwrap().last_mut().unwrap(),
+                };
+                tbl.insert(key, val);
+            } else {
+                return Err(format!("line {}: cannot parse `{}`", lineno + 1, line));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.get(name)
+    }
+
+    pub fn array(&self, name: &str) -> &[Table] {
+        self.arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the `=` separating key from value (not inside a string).
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> = split_top_level(inner).iter().map(|x| parse_value(x)).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    // numbers, allowing underscores per TOML
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value `{s}`"))
+}
+
+/// Split an inline-array body at top-level commas (no nested arrays of
+/// arrays in our configs, but strings may contain commas).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Typed accessors with contextual error messages.
+pub fn req_str(t: &Table, key: &str, ctx: &str) -> Result<String, String> {
+    t.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("{ctx}: missing string key `{key}`"))
+}
+
+pub fn req_f64(t: &Table, key: &str, ctx: &str) -> Result<f64, String> {
+    t.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("{ctx}: missing numeric key `{key}`"))
+}
+
+pub fn opt_f64(t: &Table, key: &str, default: f64) -> f64 {
+    t.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+pub fn opt_str(t: &Table, key: &str, default: &str) -> String {
+    t.get(key)
+        .and_then(|v| v.as_str())
+        .unwrap_or(default)
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+title = "demo"
+count = 42
+ratio = 0.5
+
+[host]
+local_latency_ns = 88.9  # trailing comment
+name = "i9-12900k # not a comment"
+
+[[node]]
+name = "rc0"
+kind = "root"
+
+[[node]]
+name = "sw0"
+parent = "rc0"
+ports = [1, 2, 3]
+"#;
+
+    #[test]
+    fn parses_top_level() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        let top = d.table("").unwrap();
+        assert_eq!(top["title"].as_str(), Some("demo"));
+        assert_eq!(top["count"].as_f64(), Some(42.0));
+        assert_eq!(top["ratio"].as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn parses_named_table() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        let host = d.table("host").unwrap();
+        assert_eq!(host["local_latency_ns"].as_f64(), Some(88.9));
+        assert_eq!(host["name"].as_str(), Some("i9-12900k # not a comment"));
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        let nodes = d.array("node");
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0]["name"].as_str(), Some("rc0"));
+        assert_eq!(nodes[1]["parent"].as_str(), Some("rc0"));
+        assert_eq!(
+            nodes[1]["ports"],
+            TomlValue::Arr(vec![
+                TomlValue::Num(1.0),
+                TomlValue::Num(2.0),
+                TomlValue::Num(3.0)
+            ])
+        );
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let d = TomlDoc::parse("big = 1_000_000").unwrap();
+        assert_eq!(d.table("").unwrap()["big"].as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn bools() {
+        let d = TomlDoc::parse("a = true\nb = false").unwrap();
+        assert_eq!(d.table("").unwrap()["a"].as_bool(), Some(true));
+        assert_eq!(d.table("").unwrap()["b"].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("this is not toml").is_err());
+        assert!(TomlDoc::parse("x =").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let d = TomlDoc::parse("xs = []").unwrap();
+        assert_eq!(d.table("").unwrap()["xs"], TomlValue::Arr(vec![]));
+    }
+}

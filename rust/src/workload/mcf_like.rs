@@ -1,0 +1,249 @@
+//! `mcf_like`: SPEC2017 505.mcf's dominant memory behaviour.
+//!
+//! mcf runs network simplex over a large arc/node graph; its signature
+//! is pointer chasing with near-zero spatial locality plus periodic
+//! sequential passes over the arc array (the pricing step). This twin
+//! reproduces both phases:
+//!
+//!   * node array: a random permutation cycle chased for `hops` steps
+//!     (every hop is a dependent read of a random cacheline);
+//!   * arc array: every `PRICE_EVERY` hops, a sequential scan segment
+//!     with a read + occasional write (cost update).
+//!
+//! Working set defaults to ~340 MB like the real benchmark's resident
+//! set, scaled by `scale`.
+
+use crate::trace::{Access, AllocEvent, AllocKind, WlEvent};
+use crate::util::rng::Rng;
+
+use super::Workload;
+
+const LINE: u64 = 64;
+const MB: u64 = 1 << 20;
+const NODE_BASE: u64 = 0x7f10_0000_0000;
+const ARC_BASE: u64 = 0x7f20_0000_0000;
+/// One pricing scan burst per this many chase hops.
+const PRICE_EVERY: u64 = 64;
+/// Length of each pricing scan burst, lines.
+const PRICE_BURST: u64 = 32;
+
+enum Phase {
+    AllocNodes,
+    AllocArcs,
+    Run,
+    Done,
+}
+
+pub struct McfLike {
+    nodes_bytes: u64,
+    arcs_bytes: u64,
+    hops_left: u64,
+    total_hops: u64,
+    phase: Phase,
+    /// Current node index (line index into node array).
+    cursor: u64,
+    /// Multiplicative step of the permutation cycle (odd => full cycle
+    /// over power-of-two domain).
+    step: u64,
+    node_lines: u64,
+    arc_lines: u64,
+    /// Pricing-burst state: remaining lines in the current burst.
+    burst_left: u64,
+    arc_cursor: u64,
+    hop_in_round: u64,
+    rng: Rng,
+    vtime_ns: f64,
+}
+
+impl McfLike {
+    pub fn new(scale: f64, seed: u64) -> McfLike {
+        let nodes_bytes = (((240.0 * scale) as u64).max(1) * MB).next_power_of_two();
+        let arcs_bytes = ((100.0 * scale) as u64).max(1) * MB;
+        let node_lines = nodes_bytes / LINE;
+        let mut rng = Rng::new(seed ^ 0x6d63_665f); // "mcf_"
+        // odd multiplier ~ golden ratio of the domain: visits all lines
+        let step = (0x9E37_79B9_7F4A_7C15u64 | 1) % node_lines.max(2) | 1;
+        let total_hops = (node_lines * 4).max(1024);
+        McfLike {
+            nodes_bytes,
+            arcs_bytes,
+            hops_left: total_hops,
+            total_hops,
+            phase: Phase::AllocNodes,
+            cursor: rng.below(node_lines.max(1)),
+            step,
+            node_lines,
+            arc_lines: arcs_bytes / LINE,
+            burst_left: 0,
+            arc_cursor: 0,
+            hop_in_round: 0,
+            rng,
+            vtime_ns: 0.0,
+        }
+    }
+}
+
+impl Workload for McfLike {
+    fn name(&self) -> &str {
+        "mcf_like"
+    }
+
+    fn next_event(&mut self) -> Option<WlEvent> {
+        loop {
+            match self.phase {
+                Phase::AllocNodes => {
+                    self.phase = Phase::AllocArcs;
+                    self.vtime_ns += 2_000.0;
+                    return Some(WlEvent::Alloc(AllocEvent {
+                        kind: AllocKind::Mmap,
+                        addr: NODE_BASE,
+                        len: self.nodes_bytes,
+                        t_ns: self.vtime_ns,
+                    }));
+                }
+                Phase::AllocArcs => {
+                    self.phase = Phase::Run;
+                    self.vtime_ns += 2_000.0;
+                    return Some(WlEvent::Alloc(AllocEvent {
+                        kind: AllocKind::Malloc,
+                        addr: ARC_BASE,
+                        len: self.arcs_bytes,
+                        t_ns: self.vtime_ns,
+                    }));
+                }
+                Phase::Run => {
+                    if self.burst_left > 0 {
+                        // pricing scan: sequential arc reads, 1/8 writes
+                        self.burst_left -= 1;
+                        let line = self.arc_cursor % self.arc_lines.max(1);
+                        self.arc_cursor += 1;
+                        let is_write = self.burst_left % 8 == 0;
+                        return Some(WlEvent::Access(Access {
+                            addr: ARC_BASE + line * LINE,
+                            is_write,
+                        }));
+                    }
+                    if self.hops_left == 0 {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    self.hops_left -= 1;
+                    self.hop_in_round += 1;
+                    if self.hop_in_round >= PRICE_EVERY {
+                        self.hop_in_round = 0;
+                        self.burst_left = PRICE_BURST.min(self.arc_lines);
+                    }
+                    // dependent chase: permutation walk + jitter so the
+                    // prefetcher-unfriendly behaviour survives
+                    self.cursor = (self
+                        .cursor
+                        .wrapping_mul(self.step)
+                        .wrapping_add(self.rng.below(7)))
+                        % self.node_lines.max(1);
+                    return Some(WlEvent::Access(Access {
+                        addr: NODE_BASE + self.cursor * LINE,
+                        is_write: false,
+                    }));
+                }
+                Phase::Done => return None,
+            }
+        }
+    }
+
+    fn total_accesses_hint(&self) -> u64 {
+        self.total_hops + self.total_hops / PRICE_EVERY * PRICE_BURST
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_two_regions_then_chases() {
+        let mut wl = McfLike::new(0.001, 1);
+        let a = wl.next_event().unwrap();
+        let b = wl.next_event().unwrap();
+        assert!(matches!(a, WlEvent::Alloc(e) if e.addr == NODE_BASE));
+        assert!(matches!(b, WlEvent::Alloc(e) if e.addr == ARC_BASE));
+        let c = wl.next_event().unwrap();
+        assert!(matches!(c, WlEvent::Access(_)));
+    }
+
+    #[test]
+    fn chase_has_poor_locality() {
+        let mut wl = McfLike::new(0.01, 2);
+        wl.next_event();
+        wl.next_event();
+        let mut node_addrs = Vec::new();
+        while let Some(ev) = wl.next_event() {
+            if let WlEvent::Access(a) = ev {
+                if a.addr >= NODE_BASE && a.addr < ARC_BASE {
+                    node_addrs.push(a.addr);
+                }
+            }
+            if node_addrs.len() >= 1000 {
+                break;
+            }
+        }
+        // fraction of consecutive accesses within 4KB must be small
+        let near = node_addrs
+            .windows(2)
+            .filter(|w| w[0].abs_diff(w[1]) < 4096)
+            .count();
+        assert!(near < node_addrs.len() / 10, "near={near}");
+    }
+
+    #[test]
+    fn emits_pricing_bursts_with_writes() {
+        let mut wl = McfLike::new(0.01, 3);
+        let mut arc_writes = 0;
+        let mut arc_reads = 0;
+        for _ in 0..200_000 {
+            match wl.next_event() {
+                Some(WlEvent::Access(a)) if a.addr >= ARC_BASE => {
+                    if a.is_write {
+                        arc_writes += 1;
+                    } else {
+                        arc_reads += 1;
+                    }
+                }
+                None => break,
+                _ => {}
+            }
+        }
+        assert!(arc_reads > 0, "no pricing reads");
+        assert!(arc_writes > 0, "no pricing writes");
+        assert!(arc_reads > arc_writes);
+    }
+
+    #[test]
+    fn terminates() {
+        let mut wl = McfLike::new(0.001, 4);
+        let hint = wl.total_accesses_hint();
+        let mut n = 0u64;
+        while wl.next_event().is_some() {
+            n += 1;
+            assert!(n < hint * 3 + 100);
+        }
+        assert!(n > hint / 2);
+    }
+
+    #[test]
+    fn chase_covers_many_lines() {
+        let mut wl = McfLike::new(0.005, 5);
+        wl.next_event();
+        wl.next_event();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..50_000 {
+            match wl.next_event() {
+                Some(WlEvent::Access(a)) if a.addr < ARC_BASE => {
+                    seen.insert(a.addr);
+                }
+                None => break,
+                _ => {}
+            }
+        }
+        assert!(seen.len() > 1000, "chase revisits too few lines: {}", seen.len());
+    }
+}

@@ -1,0 +1,278 @@
+//! The five allocation microbenchmarks of the paper's §4 (Table 1).
+//!
+//! Each allocates a working set through a different interface and then
+//! sweeps it sequentially, one access per cacheline, mirroring the
+//! paper's description ("allocate memory with different system calls
+//! ... and perform sequential writes to the allocated memory"). The
+//! interfaces differ in how the allocation event stream looks:
+//!
+//!   mmap_read / mmap_write — one big anonymous mmap, then reads/writes;
+//!   sbrk   — heap grown in 1 MB brk increments, each written as it grows;
+//!   malloc — many 64 KB chunks (glibc serves these via brk/mmap mix;
+//!            we emit malloc events, which is what eBPF uprobes see);
+//!   calloc — one huge zeroed region: calloc's zeroing pass *is* a
+//!            sequential write pass, then one more write sweep.
+//!
+//! Paper working sets: 100 MB (micro), 10 GB (calloc), scaled by `scale`.
+
+use crate::trace::{Access, AllocEvent, AllocKind, WlEvent};
+
+use super::Workload;
+
+const LINE: u64 = 64;
+const MB: u64 = 1 << 20;
+/// Synthetic virtual address bases, disjoint per region class.
+const MMAP_BASE: u64 = 0x7f00_0000_0000;
+const HEAP_BASE: u64 = 0x5600_0000_0000;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Mode {
+    MmapRead,
+    MmapWrite,
+    Sbrk,
+    Malloc,
+    Calloc,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Phase {
+    /// Emit the allocation event for chunk `i`, then its sweep.
+    Alloc { chunk: u64 },
+    /// Sweep chunk `i` at line index `line`.
+    Sweep { chunk: u64, line: u64 },
+    /// Final extra sweep over everything (calloc only), line index.
+    FinalSweep { line: u64 },
+    Done,
+}
+
+pub struct MicroBench {
+    name: &'static str,
+    mode: Mode,
+    /// Total working set, bytes (multiple of chunk size).
+    total: u64,
+    /// Allocation granularity, bytes.
+    chunk: u64,
+    /// ns of virtual CPU time per allocation call (syscall cost).
+    alloc_cost_ns: f64,
+    phase: Phase,
+    vtime_ns: f64,
+}
+
+impl MicroBench {
+    fn new(name: &'static str, mode: Mode, total_bytes: u64, chunk: u64, alloc_cost_ns: f64) -> Self {
+        let chunk = chunk.min(total_bytes).max(LINE);
+        let total = (total_bytes / chunk).max(1) * chunk;
+        MicroBench {
+            name,
+            mode,
+            total,
+            chunk,
+            alloc_cost_ns,
+            phase: Phase::Alloc { chunk: 0 },
+            vtime_ns: 0.0,
+        }
+    }
+
+    pub fn mmap_read(scale: f64) -> Self {
+        let ws = ((100.0 * scale) as u64).max(1) * MB;
+        Self::new("mmap_read", Mode::MmapRead, ws, ws, 2_000.0)
+    }
+
+    pub fn mmap_write(scale: f64) -> Self {
+        let ws = ((100.0 * scale) as u64).max(1) * MB;
+        Self::new("mmap_write", Mode::MmapWrite, ws, ws, 2_000.0)
+    }
+
+    pub fn sbrk(scale: f64) -> Self {
+        let ws = ((100.0 * scale) as u64).max(1) * MB;
+        Self::new("sbrk", Mode::Sbrk, ws, MB, 700.0)
+    }
+
+    pub fn malloc(scale: f64) -> Self {
+        let ws = ((100.0 * scale) as u64).max(1) * MB;
+        Self::new("malloc", Mode::Malloc, ws, 64 << 10, 120.0)
+    }
+
+    pub fn calloc(scale: f64) -> Self {
+        // paper: 10 GB working set for calloc
+        let ws = ((10_240.0 * scale) as u64).max(1) * MB;
+        Self::new("calloc", Mode::Calloc, ws, ws, 3_000.0)
+    }
+
+    fn base(&self) -> u64 {
+        match self.mode {
+            Mode::MmapRead | Mode::MmapWrite | Mode::Calloc => MMAP_BASE,
+            Mode::Sbrk | Mode::Malloc => HEAP_BASE,
+        }
+    }
+
+    fn chunks(&self) -> u64 {
+        self.total / self.chunk
+    }
+
+    fn lines_per_chunk(&self) -> u64 {
+        self.chunk / LINE
+    }
+
+    fn alloc_kind(&self) -> AllocKind {
+        match self.mode {
+            Mode::MmapRead | Mode::MmapWrite => AllocKind::Mmap,
+            Mode::Sbrk => AllocKind::Sbrk,
+            Mode::Malloc => AllocKind::Malloc,
+            Mode::Calloc => AllocKind::Calloc,
+        }
+    }
+
+    fn sweep_is_write(&self) -> bool {
+        !matches!(self.mode, Mode::MmapRead)
+    }
+}
+
+impl Workload for MicroBench {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn next_event(&mut self) -> Option<WlEvent> {
+        loop {
+            match self.phase {
+                Phase::Alloc { chunk } => {
+                    if chunk >= self.chunks() {
+                        // all chunks allocated+swept; calloc gets one
+                        // extra full write pass (the post-zeroing use).
+                        self.phase = if self.mode == Mode::Calloc {
+                            Phase::FinalSweep { line: 0 }
+                        } else {
+                            Phase::Done
+                        };
+                        continue;
+                    }
+                    self.phase = Phase::Sweep { chunk, line: 0 };
+                    self.vtime_ns += self.alloc_cost_ns;
+                    return Some(WlEvent::Alloc(AllocEvent {
+                        kind: self.alloc_kind(),
+                        addr: self.base() + chunk * self.chunk,
+                        len: self.chunk,
+                        t_ns: self.vtime_ns,
+                    }));
+                }
+                Phase::Sweep { chunk, line } => {
+                    if line >= self.lines_per_chunk() {
+                        self.phase = Phase::Alloc { chunk: chunk + 1 };
+                        continue;
+                    }
+                    self.phase = Phase::Sweep { chunk, line: line + 1 };
+                    return Some(WlEvent::Access(Access {
+                        addr: self.base() + chunk * self.chunk + line * LINE,
+                        is_write: self.sweep_is_write(),
+                    }));
+                }
+                Phase::FinalSweep { line } => {
+                    if line >= self.total / LINE {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    self.phase = Phase::FinalSweep { line: line + 1 };
+                    return Some(WlEvent::Access(Access {
+                        addr: self.base() + line * LINE,
+                        is_write: true,
+                    }));
+                }
+                Phase::Done => return None,
+            }
+        }
+    }
+
+    fn total_accesses_hint(&self) -> u64 {
+        let sweeps = if self.mode == Mode::Calloc { 2 } else { 1 };
+        self.total / LINE * sweeps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(mut wl: MicroBench) -> (Vec<AllocEvent>, Vec<Access>) {
+        let mut allocs = Vec::new();
+        let mut accesses = Vec::new();
+        while let Some(ev) = wl.next_event() {
+            match ev {
+                WlEvent::Alloc(a) => allocs.push(a),
+                WlEvent::Access(a) => accesses.push(a),
+            }
+        }
+        (allocs, accesses)
+    }
+
+    #[test]
+    fn mmap_read_allocates_once_then_reads() {
+        let (allocs, accesses) = drain(MicroBench::mmap_read(0.01)); // 1 MB
+        assert_eq!(allocs.len(), 1);
+        assert_eq!(allocs[0].kind, AllocKind::Mmap);
+        assert_eq!(allocs[0].len, MB);
+        assert_eq!(accesses.len(), (MB / LINE) as usize);
+        assert!(accesses.iter().all(|a| !a.is_write));
+    }
+
+    #[test]
+    fn mmap_write_writes() {
+        let (_, accesses) = drain(MicroBench::mmap_write(0.01));
+        assert!(accesses.iter().all(|a| a.is_write));
+    }
+
+    #[test]
+    fn sbrk_grows_in_increments() {
+        let (allocs, accesses) = drain(MicroBench::sbrk(0.05)); // 5 MB
+        assert_eq!(allocs.len(), 5);
+        assert!(allocs.iter().all(|a| a.kind == AllocKind::Sbrk && a.len == MB));
+        // heap grows contiguously
+        for (i, a) in allocs.iter().enumerate() {
+            assert_eq!(a.addr, HEAP_BASE + i as u64 * MB);
+        }
+        assert_eq!(accesses.len(), (5 * MB / LINE) as usize);
+    }
+
+    #[test]
+    fn malloc_many_small_chunks() {
+        let (allocs, _) = drain(MicroBench::malloc(0.01)); // 1 MB, 64 KB chunks
+        assert_eq!(allocs.len(), 16);
+        assert!(allocs.iter().all(|a| a.kind == AllocKind::Malloc));
+    }
+
+    #[test]
+    fn calloc_double_sweeps() {
+        let wl = MicroBench::calloc(0.0005); // ~5 MB
+        let hint = wl.total_accesses_hint();
+        let (allocs, accesses) = drain(wl);
+        assert_eq!(allocs.len(), 1);
+        assert_eq!(allocs[0].kind, AllocKind::Calloc);
+        assert_eq!(accesses.len() as u64, hint);
+        // two full passes over every line
+        assert_eq!(hint, allocs[0].len / LINE * 2);
+    }
+
+    #[test]
+    fn sweep_is_sequential_by_line() {
+        let (_, accesses) = drain(MicroBench::mmap_write(0.01));
+        for w in accesses.windows(2) {
+            assert_eq!(w[1].addr - w[0].addr, LINE);
+        }
+    }
+
+    #[test]
+    fn alloc_events_carry_monotone_time() {
+        let (allocs, _) = drain(MicroBench::sbrk(0.03));
+        for w in allocs.windows(2) {
+            assert!(w[1].t_ns > w[0].t_ns);
+        }
+    }
+
+    #[test]
+    fn scale_changes_working_set() {
+        let a = MicroBench::mmap_read(1.0);
+        let b = MicroBench::mmap_read(0.01);
+        assert_eq!(a.total, 100 * MB);
+        assert_eq!(b.total, MB);
+    }
+}

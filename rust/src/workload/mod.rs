@@ -1,0 +1,216 @@
+//! Workload engine — the "attached, unmodified program" substitute.
+//!
+//! CXLMemSim attaches to arbitrary programs; here, deterministic
+//! synthetic twins of the paper's benchmarks emit the exact event
+//! stream (allocation syscalls + memory accesses) that eBPF + the CPU
+//! would produce. §4's benchmarks are reproduced by name:
+//!
+//!   * five allocation microbenchmarks (`mmap_read`, `mmap_write`,
+//!     `sbrk`, `malloc`, `calloc`) — allocate via different interfaces,
+//!     then sweep the region sequentially (paper: "perform sequential
+//!     writes to the allocated memory"; `mmap_read` reads);
+//!   * `mcf_like` — SPEC2017 mcf's dominant pattern: pointer chasing
+//!     over a network-simplex graph with poor locality;
+//!   * `wrf_like` — SPEC2017 wrf's dominant pattern: 3-D stencil sweeps
+//!     over a large grid with streaming locality.
+//!
+//! Working sets default to the paper's (100 MB micro, 10 GB calloc) and
+//! scale with `--scale` so tests stay fast.
+
+pub mod mcf_like;
+pub mod micro;
+pub mod patterns;
+pub mod wrf_like;
+
+use crate::trace::WlEvent;
+
+/// A deterministic program that emits events one at a time.
+pub trait Workload: Send {
+    fn name(&self) -> &str;
+    /// Next event in program order; None when the program exits.
+    fn next_event(&mut self) -> Option<WlEvent>;
+    /// Rough total number of accesses (progress reporting only).
+    fn total_accesses_hint(&self) -> u64;
+}
+
+/// Pull up to `budget` events into `sink`; returns false if finished.
+pub fn advance<W: Workload + ?Sized>(
+    wl: &mut W,
+    budget: usize,
+    sink: &mut dyn FnMut(WlEvent),
+) -> bool {
+    for _ in 0..budget {
+        match wl.next_event() {
+            Some(ev) => sink(ev),
+            None => return false,
+        }
+    }
+    true
+}
+
+/// The paper's Table-1 benchmark list, in row order.
+pub const TABLE1_WORKLOADS: &[&str] = &[
+    "mmap_read",
+    "mmap_write",
+    "sbrk",
+    "malloc",
+    "calloc",
+    "mcf_like",
+    "wrf_like",
+];
+
+/// Construct a workload by name. `scale` in (0, 1] shrinks working sets
+/// (1.0 = the paper's sizes); `seed` drives any randomized structure.
+pub fn by_name(name: &str, scale: f64, seed: u64) -> Option<Box<dyn Workload>> {
+    let scale = scale.clamp(1e-6, 1.0);
+    Some(match name {
+        "mmap_read" => Box::new(micro::MicroBench::mmap_read(scale)),
+        "mmap_write" => Box::new(micro::MicroBench::mmap_write(scale)),
+        "sbrk" => Box::new(micro::MicroBench::sbrk(scale)),
+        "malloc" => Box::new(micro::MicroBench::malloc(scale)),
+        "calloc" => Box::new(micro::MicroBench::calloc(scale)),
+        "mcf_like" => Box::new(mcf_like::McfLike::new(scale, seed)),
+        "wrf_like" => Box::new(wrf_like::WrfLike::new(scale)),
+        "uniform" => Box::new(patterns::PatternWorkload::uniform(scale, seed)),
+        "zipfian" => Box::new(patterns::PatternWorkload::zipfian(scale, seed)),
+        "stream" => Box::new(patterns::PatternWorkload::stream(scale)),
+        "shared" => Box::new(patterns::PatternWorkload::shared(scale, seed, 0.3)),
+        _ => return None,
+    })
+}
+
+/// Replay a recorded trace (`cxlmemsim record` / `trace::io`) as a
+/// workload — lets one capture be simulated against many topologies.
+pub struct TraceReplay {
+    name: String,
+    events: std::vec::IntoIter<WlEvent>,
+    total: u64,
+}
+
+impl TraceReplay {
+    pub fn new(name: &str, events: Vec<WlEvent>) -> TraceReplay {
+        let total = events
+            .iter()
+            .filter(|e| matches!(e, WlEvent::Access(_)))
+            .count() as u64;
+        TraceReplay { name: name.to_string(), events: events.into_iter(), total }
+    }
+}
+
+impl Workload for TraceReplay {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn next_event(&mut self) -> Option<WlEvent> {
+        self.events.next()
+    }
+    fn total_accesses_hint(&self) -> u64 {
+        self.total
+    }
+}
+
+pub const ALL_WORKLOADS: &[&str] = &[
+    "mmap_read",
+    "mmap_write",
+    "sbrk",
+    "malloc",
+    "calloc",
+    "mcf_like",
+    "wrf_like",
+    "uniform",
+    "zipfian",
+    "stream",
+    "shared",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::WlEvent;
+
+    #[test]
+    fn all_workloads_construct_and_emit() {
+        for name in ALL_WORKLOADS {
+            let mut wl = by_name(name, 0.001, 7).unwrap_or_else(|| panic!("{name}"));
+            let mut alloc = 0;
+            let mut access = 0;
+            for _ in 0..10_000 {
+                match wl.next_event() {
+                    Some(WlEvent::Alloc(_)) => alloc += 1,
+                    Some(WlEvent::Access(_)) => access += 1,
+                    None => break,
+                }
+            }
+            assert!(alloc > 0, "{name} never allocated");
+            assert!(access > 0, "{name} never accessed memory");
+        }
+    }
+
+    #[test]
+    fn workloads_terminate_at_tiny_scale() {
+        for name in ALL_WORKLOADS {
+            let mut wl = by_name(name, 0.0005, 7).unwrap();
+            let mut n = 0u64;
+            while wl.next_event().is_some() {
+                n += 1;
+                assert!(n < 80_000_000, "{name} too long at tiny scale");
+            }
+            assert!(n > 0);
+        }
+    }
+
+    #[test]
+    fn workloads_are_deterministic() {
+        for name in ["mcf_like", "uniform", "zipfian"] {
+            let mut a = by_name(name, 0.001, 42).unwrap();
+            let mut b = by_name(name, 0.001, 42).unwrap();
+            for _ in 0..5000 {
+                match (a.next_event(), b.next_event()) {
+                    (Some(WlEvent::Access(x)), Some(WlEvent::Access(y))) => {
+                        assert_eq!(x.addr, y.addr, "{name}");
+                        assert_eq!(x.is_write, y.is_write);
+                    }
+                    (Some(WlEvent::Alloc(x)), Some(WlEvent::Alloc(y))) => {
+                        assert_eq!(x.addr, y.addr);
+                        assert_eq!(x.len, y.len);
+                    }
+                    (None, None) => break,
+                    _ => panic!("{name} diverged"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_change_random_workloads() {
+        let mut a = by_name("uniform", 0.001, 1).unwrap();
+        let mut b = by_name("uniform", 0.001, 2).unwrap();
+        let mut differs = false;
+        for _ in 0..2000 {
+            match (a.next_event(), b.next_event()) {
+                (Some(WlEvent::Access(x)), Some(WlEvent::Access(y))) => {
+                    if x.addr != y.addr {
+                        differs = true;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn unknown_workload_is_none() {
+        assert!(by_name("quake3", 1.0, 0).is_none());
+    }
+
+    #[test]
+    fn advance_respects_budget() {
+        let mut wl = by_name("stream", 0.01, 0).unwrap();
+        let mut n = 0;
+        let more = advance(wl.as_mut(), 100, &mut |_| n += 1);
+        assert!(more);
+        assert_eq!(n, 100);
+    }
+}

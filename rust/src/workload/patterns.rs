@@ -1,0 +1,243 @@
+//! Parameterizable synthetic access patterns for characterization
+//! experiments (topology sweeps, congestion studies, policy ablations):
+//! uniform-random, zipfian-hot-set, and pure streaming.
+
+use crate::trace::{Access, AllocEvent, AllocKind, WlEvent};
+use crate::util::rng::{Rng, Zipf};
+
+use super::Workload;
+
+const LINE: u64 = 64;
+const MB: u64 = 1 << 20;
+const BASE: u64 = 0x7f40_0000_0000;
+
+/// Address range shared by every host in a multihost simulation
+/// (coherency studies): workloads built by [`PatternWorkload::shared`]
+/// allocate and access this range, so peer writes back-invalidate.
+pub const SHARED_BASE: u64 = 0x7f80_0000_0000;
+
+enum Pattern {
+    Uniform,
+    Zipfian(Zipf),
+    Stream,
+}
+
+pub struct PatternWorkload {
+    name: &'static str,
+    pattern: Pattern,
+    bytes: u64,
+    lines: u64,
+    base: u64,
+    accesses_left: u64,
+    total: u64,
+    write_ratio: f64,
+    cursor: u64,
+    rng: Rng,
+    allocated: bool,
+}
+
+impl PatternWorkload {
+    fn new(
+        name: &'static str,
+        pattern: Pattern,
+        scale: f64,
+        seed: u64,
+        write_ratio: f64,
+    ) -> PatternWorkload {
+        let bytes = ((200.0 * scale) as u64).max(1) * MB;
+        let lines = bytes / LINE;
+        let total = lines * 4;
+        PatternWorkload {
+            name,
+            pattern,
+            bytes,
+            lines,
+            base: BASE,
+            accesses_left: total,
+            total,
+            write_ratio,
+            cursor: 0,
+            rng: Rng::new(seed ^ 0x7061_7474),
+            allocated: false,
+        }
+    }
+
+    pub fn uniform(scale: f64, seed: u64) -> PatternWorkload {
+        Self::new("uniform", Pattern::Uniform, scale, seed, 0.3)
+    }
+
+    pub fn zipfian(scale: f64, seed: u64) -> PatternWorkload {
+        let bytes = ((200.0 * scale) as u64).max(1) * MB;
+        let z = Zipf::new(bytes / LINE, 0.99);
+        Self::new("zipfian", Pattern::Zipfian(z), scale, seed, 0.3)
+    }
+
+    pub fn stream(scale: f64) -> PatternWorkload {
+        Self::new("stream", Pattern::Stream, scale, 0, 0.5)
+    }
+
+    /// Zipfian traffic over the *shared* range (multihost coherency
+    /// studies): every host built this way touches the same addresses.
+    pub fn shared(scale: f64, seed: u64, write_ratio: f64) -> PatternWorkload {
+        let bytes = ((50.0 * scale) as u64).max(1) * MB;
+        let z = Zipf::new(bytes / LINE, 0.9);
+        let mut wl = Self::new("shared", Pattern::Zipfian(z), scale, seed, write_ratio);
+        wl.bytes = bytes;
+        wl.lines = bytes / LINE;
+        wl.base = SHARED_BASE;
+        wl.accesses_left = wl.lines * 8;
+        wl.total = wl.accesses_left;
+        wl
+    }
+
+    /// Tunable constructor for experiments.
+    pub fn custom(
+        ws_mb: u64,
+        accesses: u64,
+        write_ratio: f64,
+        zipf_theta: Option<f64>,
+        seed: u64,
+    ) -> PatternWorkload {
+        let bytes = ws_mb.max(1) * MB;
+        let lines = bytes / LINE;
+        let pattern = match zipf_theta {
+            Some(t) => Pattern::Zipfian(Zipf::new(lines, t)),
+            None => Pattern::Uniform,
+        };
+        PatternWorkload {
+            name: "custom",
+            pattern,
+            bytes,
+            lines,
+            base: BASE,
+            accesses_left: accesses,
+            total: accesses,
+            write_ratio,
+            cursor: 0,
+            rng: Rng::new(seed),
+            allocated: false,
+        }
+    }
+}
+
+impl Workload for PatternWorkload {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn next_event(&mut self) -> Option<WlEvent> {
+        if !self.allocated {
+            self.allocated = true;
+            return Some(WlEvent::Alloc(AllocEvent {
+                kind: AllocKind::Mmap,
+                addr: self.base,
+                len: self.bytes,
+                t_ns: 1_000.0,
+            }));
+        }
+        if self.accesses_left == 0 {
+            return None;
+        }
+        self.accesses_left -= 1;
+        let line = match &self.pattern {
+            Pattern::Uniform => self.rng.below(self.lines),
+            Pattern::Zipfian(z) => z.sample(&mut self.rng),
+            Pattern::Stream => {
+                let l = self.cursor;
+                self.cursor = (self.cursor + 1) % self.lines;
+                l
+            }
+        };
+        let is_write = self.rng.f64() < self.write_ratio;
+        Some(WlEvent::Access(Access { addr: self.base + line * LINE, is_write }))
+    }
+
+    fn total_accesses_hint(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_spreads_over_working_set() {
+        let mut wl = PatternWorkload::uniform(0.01, 3);
+        wl.next_event();
+        let mut lo = 0u64;
+        let mut hi = 0u64;
+        let lines = wl.lines;
+        for _ in 0..20_000 {
+            if let Some(WlEvent::Access(a)) = wl.next_event() {
+                let line = (a.addr - BASE) / LINE;
+                if line < lines / 2 {
+                    lo += 1;
+                } else {
+                    hi += 1;
+                }
+            }
+        }
+        let ratio = lo as f64 / (lo + hi) as f64;
+        assert!((0.45..0.55).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn zipfian_is_skewed() {
+        let mut wl = PatternWorkload::zipfian(0.01, 3);
+        wl.next_event();
+        let lines = wl.lines;
+        let mut head = 0u64;
+        let mut n = 0u64;
+        for _ in 0..20_000 {
+            if let Some(WlEvent::Access(a)) = wl.next_event() {
+                n += 1;
+                if (a.addr - BASE) / LINE < lines / 100 {
+                    head += 1;
+                }
+            }
+        }
+        assert!(head as f64 / n as f64 > 0.3, "head fraction too low");
+    }
+
+    #[test]
+    fn stream_is_sequential() {
+        let mut wl = PatternWorkload::stream(0.01);
+        wl.next_event();
+        let mut prev = None;
+        for _ in 0..1000 {
+            if let Some(WlEvent::Access(a)) = wl.next_event() {
+                if let Some(p) = prev {
+                    assert_eq!(a.addr - p, LINE);
+                }
+                prev = Some(a.addr);
+            }
+        }
+    }
+
+    #[test]
+    fn write_ratio_respected() {
+        let mut wl = PatternWorkload::custom(2, 50_000, 0.25, None, 11);
+        wl.next_event();
+        let mut writes = 0u64;
+        let mut n = 0u64;
+        while let Some(WlEvent::Access(a)) = wl.next_event() {
+            n += 1;
+            if a.is_write {
+                writes += 1;
+            }
+        }
+        let ratio = writes as f64 / n as f64;
+        assert!((0.23..0.27).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn custom_access_budget_exact() {
+        let mut wl = PatternWorkload::custom(1, 1234, 0.5, Some(0.9), 1);
+        let mut n = 0;
+        while wl.next_event().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 1234 + 1); // + the alloc event
+    }
+}

@@ -1,0 +1,207 @@
+//! `wrf_like`: SPEC2017 521.wrf's dominant memory behaviour.
+//!
+//! WRF (weather research & forecasting) advances coupled PDEs over a
+//! 3-D grid; memory-wise it is streaming stencil sweeps: for each cell,
+//! read the 6 face neighbours + itself, write the result. Cells carry
+//! multiple physics fields, so one cell ≈ one 64 B cacheline. This twin
+//! sweeps a `dim³` grid (~128 MB at scale 1.0, comfortably past the
+//! 30 MB LLC) for a few timesteps.
+
+use crate::trace::{Access, AllocEvent, AllocKind, WlEvent};
+
+use super::Workload;
+
+const LINE: u64 = 64;
+const GRID_BASE: u64 = 0x7f30_0000_0000;
+const SWEEPS: u64 = 2;
+
+enum Phase {
+    Alloc,
+    Run,
+    Done,
+}
+
+pub struct WrfLike {
+    dim: u64,
+    phase: Phase,
+    sweep: u64,
+    cell: u64,
+    /// 0..=6: neighbour read index within the current cell (6 = center),
+    /// 7 = write-back of the result.
+    micro_step: u64,
+}
+
+impl WrfLike {
+    pub fn new(scale: f64) -> WrfLike {
+        // dim^3 cells * 64B; scale 1.0 -> dim 128 -> 128 MB
+        let dim = ((128.0 * scale.powf(1.0 / 3.0)) as u64).max(4);
+        WrfLike { dim, phase: Phase::Alloc, sweep: 0, cell: 0, micro_step: 0 }
+    }
+
+    fn cells(&self) -> u64 {
+        self.dim * self.dim * self.dim
+    }
+
+    fn grid_bytes(&self) -> u64 {
+        self.cells() * LINE
+    }
+
+    #[inline]
+    fn addr_of(&self, cell: u64) -> u64 {
+        GRID_BASE + cell * LINE
+    }
+
+    /// Neighbour cell index for micro_step 0..6 (clamped at faces).
+    #[inline]
+    fn neighbour(&self, cell: u64, step: u64) -> u64 {
+        let d = self.dim;
+        let x = cell % d;
+        let y = (cell / d) % d;
+        let z = cell / (d * d);
+        let (nx, ny, nz) = match step {
+            0 => (x.saturating_sub(1), y, z),
+            1 => ((x + 1).min(d - 1), y, z),
+            2 => (x, y.saturating_sub(1), z),
+            3 => (x, (y + 1).min(d - 1), z),
+            4 => (x, y, z.saturating_sub(1)),
+            5 => (x, y, (z + 1).min(d - 1)),
+            _ => (x, y, z),
+        };
+        nx + ny * d + nz * d * d
+    }
+}
+
+impl Workload for WrfLike {
+    fn name(&self) -> &str {
+        "wrf_like"
+    }
+
+    fn next_event(&mut self) -> Option<WlEvent> {
+        loop {
+            match self.phase {
+                Phase::Alloc => {
+                    self.phase = Phase::Run;
+                    return Some(WlEvent::Alloc(AllocEvent {
+                        kind: AllocKind::Mmap,
+                        addr: GRID_BASE,
+                        len: self.grid_bytes(),
+                        t_ns: 2_000.0,
+                    }));
+                }
+                Phase::Run => {
+                    if self.sweep >= SWEEPS {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    let ev = if self.micro_step < 7 {
+                        let n = self.neighbour(self.cell, self.micro_step);
+                        WlEvent::Access(Access { addr: self.addr_of(n), is_write: false })
+                    } else {
+                        WlEvent::Access(Access { addr: self.addr_of(self.cell), is_write: true })
+                    };
+                    self.micro_step += 1;
+                    if self.micro_step > 7 {
+                        self.micro_step = 0;
+                        self.cell += 1;
+                        if self.cell >= self.cells() {
+                            self.cell = 0;
+                            self.sweep += 1;
+                        }
+                    }
+                    return Some(ev);
+                }
+                Phase::Done => return None,
+            }
+        }
+    }
+
+    fn total_accesses_hint(&self) -> u64 {
+        self.cells() * 8 * SWEEPS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_grid_then_runs() {
+        let mut wl = WrfLike::new(0.001);
+        match wl.next_event().unwrap() {
+            WlEvent::Alloc(a) => {
+                assert_eq!(a.addr, GRID_BASE);
+                assert_eq!(a.len, wl.grid_bytes());
+            }
+            _ => panic!("expected alloc first"),
+        }
+    }
+
+    #[test]
+    fn stencil_pattern_reads_then_writes() {
+        let mut wl = WrfLike::new(0.001);
+        wl.next_event(); // alloc
+        let evs: Vec<_> = (0..8).map(|_| wl.next_event().unwrap()).collect();
+        let reads = evs
+            .iter()
+            .filter(|e| matches!(e, WlEvent::Access(a) if !a.is_write))
+            .count();
+        let writes = evs
+            .iter()
+            .filter(|e| matches!(e, WlEvent::Access(a) if a.is_write))
+            .count();
+        assert_eq!(reads, 7);
+        assert_eq!(writes, 1);
+    }
+
+    #[test]
+    fn exact_event_count() {
+        let mut wl = WrfLike::new(0.0008); // tiny grid
+        let hint = wl.total_accesses_hint();
+        let mut n = 0u64;
+        let mut allocs = 0;
+        while let Some(ev) = wl.next_event() {
+            match ev {
+                WlEvent::Alloc(_) => allocs += 1,
+                WlEvent::Access(_) => n += 1,
+            }
+        }
+        assert_eq!(allocs, 1);
+        assert_eq!(n, hint);
+    }
+
+    #[test]
+    fn neighbours_stay_in_grid() {
+        let wl = WrfLike::new(0.002);
+        let cells = wl.cells();
+        for cell in [0, cells / 2, cells - 1] {
+            for step in 0..7 {
+                assert!(wl.neighbour(cell, step) < cells);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_locality_is_high() {
+        let mut wl = WrfLike::new(0.002);
+        wl.next_event();
+        let mut addrs = Vec::new();
+        for _ in 0..8000 {
+            if let Some(WlEvent::Access(a)) = wl.next_event() {
+                addrs.push(a.addr);
+            }
+        }
+        // most consecutive accesses are within a dim^2 plane stride
+        let near = addrs
+            .windows(2)
+            .filter(|w| w[0].abs_diff(w[1]) <= wl.dim * wl.dim * LINE)
+            .count();
+        assert!(near as f64 / addrs.len() as f64 > 0.7);
+    }
+
+    #[test]
+    fn scale_shrinks_dim_cubically() {
+        assert_eq!(WrfLike::new(1.0).dim, 128);
+        let d = WrfLike::new(1.0 / 8.0).dim;
+        assert!((63..=64).contains(&d), "dim={d}");
+    }
+}

@@ -1,0 +1,180 @@
+//! End-to-end integration: full pipeline (workload → cache → tracker →
+//! binning → AOT timing analyzer via PJRT → report) on real builtin
+//! topologies, plus trace record/replay and CLI-level consistency.
+
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::gem5like::DetailedSim;
+use cxlmemsim::multihost;
+use cxlmemsim::prelude::*;
+use cxlmemsim::alloctrack::PolicyKind;
+use cxlmemsim::trace::io as trace_io;
+use cxlmemsim::workload::{self, TraceReplay};
+
+fn fast_cfg() -> SimConfig {
+    SimConfig {
+        scale: 0.002,
+        cache_scale: 64,
+        epoch_ms: 0.1,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn pjrt_full_pipeline_mmap_read() {
+    let mut cfg = fast_cfg();
+    cfg.backend = AnalyzerBackend::Pjrt;
+    let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+    let rep = sim.run_workload("mmap_read").unwrap();
+    assert!(rep.total_misses > 0);
+    assert!(rep.simulated_ns > rep.native_ns);
+    assert_eq!(rep.backend, "pjrt");
+}
+
+#[test]
+fn pjrt_and_native_agree_end_to_end() {
+    // identical seeds + workload => identical binned inputs => the two
+    // backends must produce near-identical *simulated* time.
+    let run = |backend| {
+        let mut cfg = fast_cfg();
+        cfg.backend = backend;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        sim.run_workload("zipfian").unwrap()
+    };
+    let p = run(AnalyzerBackend::Pjrt);
+    let n = run(AnalyzerBackend::Native);
+    assert_eq!(p.total_misses, n.total_misses, "substrate must be deterministic");
+    let rel = (p.simulated_ns - n.simulated_ns).abs() / n.simulated_ns;
+    assert!(rel < 1e-3, "pjrt {} vs native {} (rel {rel})", p.simulated_ns, n.simulated_ns);
+}
+
+#[test]
+fn all_table1_workloads_run_e2e() {
+    for wl in TABLE1_WORKLOADS {
+        let mut sim = Coordinator::new(builtin::fig2(), fast_cfg()).unwrap();
+        let rep = sim.run_workload(wl).unwrap();
+        assert!(rep.total_accesses > 0, "{wl}");
+        assert!(rep.epochs_run > 0, "{wl}");
+        assert!(rep.simulated_ns >= rep.native_ns, "{wl}");
+    }
+}
+
+#[test]
+fn record_replay_matches_direct_run() {
+    // record the trace, replay it: must see the same misses and delay.
+    let mut wl = workload::by_name("stream", 0.002, 9).unwrap();
+    let mut events = Vec::new();
+    while let Some(ev) = wl.next_event() {
+        events.push(ev);
+    }
+    // roundtrip through the binary format
+    let mut buf = Vec::new();
+    trace_io::write_binary(&mut buf, &events).unwrap();
+    let back = trace_io::read_binary(&buf).unwrap();
+    assert_eq!(back.len(), events.len());
+
+    let mut cfg = fast_cfg();
+    cfg.seed = 9;
+    let mut direct = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let direct_rep = direct.run_workload("stream").unwrap();
+
+    let mut replayed = Coordinator::new(builtin::fig2(), cfg).unwrap();
+    let mut replay = TraceReplay::new("replay", back);
+    let replay_rep = replayed.run(&mut replay).unwrap();
+
+    assert_eq!(direct_rep.total_misses, replay_rep.total_misses);
+    let rel = (direct_rep.delay_ns - replay_rep.delay_ns).abs() / direct_rep.delay_ns.max(1.0);
+    assert!(rel < 1e-6, "replay drifted: {rel}");
+}
+
+#[test]
+fn detailed_and_epoch_models_rank_topologies_identically() {
+    // accuracy shape check: both models must agree that deep > fig2 >
+    // direct in simulated slowdown for a CXL-heavy streaming workload.
+    let mut sims = Vec::new();
+    for topo in [builtin::direct(), builtin::fig2(), builtin::deep()] {
+        let mut sim = Coordinator::new(topo.clone(), fast_cfg()).unwrap();
+        let rep = sim.run_workload("mmap_write").unwrap();
+        let mut det = DetailedSim::new(topo, 64, PolicyKind::CxlOnly);
+        let mut wl = workload::by_name("mmap_write", 0.002, fast_cfg().seed).unwrap();
+        let det_rep = det.run(wl.as_mut());
+        sims.push((rep.simulated_ns, det_rep.simulated_ns));
+    }
+    assert!(sims[0].0 < sims[2].0, "epoch model: direct must beat deep");
+    assert!(sims[0].1 < sims[2].1, "detailed model: direct must beat deep");
+}
+
+#[test]
+fn multihost_shares_one_analyzer() {
+    let cfg = fast_cfg();
+    let hosts: Vec<_> = (0..3)
+        .map(|i| workload::by_name("uniform", 0.002, i).unwrap())
+        .collect();
+    let rep = multihost::run_shared(&builtin::wide(), &cfg, hosts).unwrap();
+    assert_eq!(rep.hosts.len(), 3);
+    assert!(rep.epochs > 0);
+    assert!(rep.hosts.iter().all(|h| h.misses > 0));
+}
+
+#[test]
+fn policy_changes_outcome() {
+    // local-only vs cxl-only must bracket localfirst
+    let run = |policy| {
+        let mut cfg = fast_cfg();
+        cfg.policy = policy;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        sim.run_workload("mmap_write").unwrap().delay_ns
+    };
+    let local = run(PolicyKind::LocalOnly);
+    let cxl = run(PolicyKind::CxlOnly);
+    assert_eq!(local, 0.0);
+    assert!(cxl > 0.0);
+    let lf = run(PolicyKind::LocalFirst { local_cap_bytes: u64::MAX });
+    assert_eq!(lf, 0.0, "everything fits locally under localfirst");
+}
+
+#[test]
+fn batched_replay_matches_sequential_coordinator() {
+    // the batch-16 artifact must produce the same totals as the
+    // sequential epoch loop (delays don't feed back into the stream)
+    let mut cfg = fast_cfg();
+    cfg.backend = AnalyzerBackend::Pjrt;
+    cfg.scale = 0.004;
+    let mut seq = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let seq_rep = seq.run_workload("zipfian").unwrap();
+
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let bat_rep =
+        cxlmemsim::coordinator::run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+
+    assert_eq!(seq_rep.epochs_run, bat_rep.epochs_run);
+    assert_eq!(seq_rep.total_misses, bat_rep.total_misses);
+    let rel = (seq_rep.delay_ns - bat_rep.delay_ns).abs() / seq_rep.delay_ns.max(1.0);
+    assert!(
+        rel < 1e-3,
+        "batched {} vs sequential {} (rel {rel})",
+        bat_rep.delay_ns,
+        seq_rep.delay_ns
+    );
+}
+
+#[test]
+fn epoch_migration_policy_reduces_delay() {
+    use cxlmemsim::policy::HotnessMigration;
+    let run = |migrate: bool| {
+        let mut cfg = fast_cfg();
+        cfg.scale = 0.004;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        if migrate {
+            sim.set_epoch_policy(Box::new(HotnessMigration::new(2, u64::MAX)));
+        }
+        sim.run_workload("zipfian").unwrap()
+    };
+    let without = run(false);
+    let with = run(true);
+    assert!(
+        with.delay_ns < without.delay_ns,
+        "migration should help a zipfian workload: {} !< {}",
+        with.delay_ns,
+        without.delay_ns
+    );
+}

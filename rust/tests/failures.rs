@@ -1,0 +1,163 @@
+//! Failure injection: every user-reachable error path must fail with a
+//! clear error, never a panic, and never corrupt subsequent runs.
+
+use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::runtime::pjrt::PjrtAnalyzer;
+use cxlmemsim::runtime::shapes;
+use cxlmemsim::topology::{builtin, TopoTensors, Topology};
+use cxlmemsim::trace::io as trace_io;
+use cxlmemsim::util::json::Json;
+use cxlmemsim::util::toml::TomlDoc;
+
+fn fast_cfg() -> SimConfig {
+    SimConfig { scale: 0.002, cache_scale: 64, epoch_ms: 0.1, ..SimConfig::default() }
+}
+
+/// `unwrap_err` without requiring `T: Debug` on the success side.
+fn err_of<T>(r: anyhow::Result<T>) -> String {
+    match r {
+        Ok(_) => panic!("expected an error"),
+        Err(e) => e.to_string(),
+    }
+}
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    let mut cfg = fast_cfg();
+    cfg.backend = cxlmemsim::runtime::AnalyzerBackend::Pjrt;
+    cfg.artifacts_dir = "/does/not/exist".into();
+    let err = err_of(Coordinator::new(builtin::fig2(), cfg));
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
+
+#[test]
+fn corrupt_manifest_is_clean_error() {
+    let dir = std::env::temp_dir().join(format!("cxlms-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{not json").unwrap();
+    let mut cfg = fast_cfg();
+    cfg.backend = cxlmemsim::runtime::AnalyzerBackend::Pjrt;
+    cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+    assert!(Coordinator::new(builtin::fig2(), cfg).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn artifact_shape_mismatch_is_detected() {
+    // manifest claiming other shapes than requested must be rejected
+    let dir = std::env::temp_dir().join(format!("cxlms-shape-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"pools":2,"switches":2,"nbins":8,"batch":2,
+            "single":"x.hlo.txt","batch_module":"y.hlo.txt"}"#,
+    )
+    .unwrap();
+    let topo = builtin::fig2();
+    let t = TopoTensors::build(&topo, 8, 8).unwrap();
+    let err = err_of(PjrtAnalyzer::new(&t, shapes::NUM_BINS, dir.to_str().unwrap()));
+    assert!(err.contains("make artifacts"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oversized_topology_rejected_before_model_load() {
+    // 9 pools > compiled P=8
+    let mut src = String::from(
+        "name = \"big\"\n[[node]]\nname = \"rc\"\nkind = \"root\"\nlatency_ns = 10\nbandwidth_gbps = 64\nstt_ns = 2\n",
+    );
+    for i in 0..9 {
+        src.push_str(&format!(
+            "[[node]]\nname = \"p{i}\"\nkind = \"pool\"\nparent = \"rc\"\nlatency_ns = 100\nbandwidth_gbps = 32\nstt_ns = 20\n"
+        ));
+    }
+    let topo = Topology::from_toml_str(&src).unwrap();
+    let err = err_of(Coordinator::new(topo, fast_cfg()));
+    assert!(err.contains("pools"), "{err}");
+}
+
+#[test]
+fn corrupt_traces_never_panic() {
+    // bit-flip a valid trace at every 7th byte; reader must error or
+    // return events, never panic.
+    let mut wl = cxlmemsim::workload::by_name("sbrk", 0.001, 1).unwrap();
+    let mut events = Vec::new();
+    while let Some(ev) = wl.next_event() {
+        events.push(ev);
+        if events.len() > 200 {
+            break;
+        }
+    }
+    let mut buf = Vec::new();
+    trace_io::write_binary(&mut buf, &events).unwrap();
+    for i in (0..buf.len()).step_by(7) {
+        let mut corrupted = buf.clone();
+        corrupted[i] ^= 0xff;
+        let _ = trace_io::read_binary(&corrupted); // must not panic
+    }
+    // truncations at every length
+    for cut in 0..buf.len().min(64) {
+        let _ = trace_io::read_binary(&buf[..cut]);
+    }
+}
+
+#[test]
+fn malformed_jsonl_lines_error_with_line_numbers() {
+    let src = "{\"ev\":\"access\",\"addr\":64,\"w\":0}\n{\"ev\":\"access\",\"addr\":}\n";
+    let err = trace_io::read_jsonl(src.as_bytes()).unwrap_err();
+    assert!(err.contains("line 2"), "{err}");
+}
+
+#[test]
+fn fuzz_json_parser_never_panics() {
+    use cxlmemsim::util::rng::Rng;
+    let mut rng = Rng::new(0xf00d);
+    let alphabet: &[u8] = b"{}[]\",:0123456789.eE+-truefalsn\\ ";
+    for _ in 0..2000 {
+        let len = rng.below(64) as usize;
+        let s: Vec<u8> = (0..len)
+            .map(|_| alphabet[rng.below(alphabet.len() as u64) as usize])
+            .collect();
+        if let Ok(s) = String::from_utf8(s) {
+            let _ = Json::parse(&s); // must not panic
+        }
+    }
+}
+
+#[test]
+fn fuzz_toml_parser_never_panics() {
+    use cxlmemsim::util::rng::Rng;
+    let mut rng = Rng::new(0xbeef);
+    let alphabet: &[u8] = b"[]\"=#\nabc_0123456789. -";
+    for _ in 0..2000 {
+        let len = rng.below(96) as usize;
+        let s: Vec<u8> = (0..len)
+            .map(|_| alphabet[rng.below(alphabet.len() as u64) as usize])
+            .collect();
+        if let Ok(s) = String::from_utf8(s) {
+            let _ = TomlDoc::parse(&s); // must not panic
+        }
+    }
+}
+
+#[test]
+fn zero_length_and_empty_workload_edge_cases() {
+    // tiniest possible scale must still terminate and produce a report
+    let mut cfg = fast_cfg();
+    cfg.scale = 1e-9; // clamps to minimum working set
+    let mut sim = Coordinator::new(builtin::direct(), cfg).unwrap();
+    let rep = sim.run_workload("mmap_read").unwrap();
+    assert!(rep.total_accesses > 0);
+}
+
+#[test]
+fn bad_topology_configs_all_error_cleanly() {
+    let cases = [
+        "",                                     // empty
+        "[[node]]\nname = \"x\"\nkind = \"pool\"\nlatency_ns = 1\nbandwidth_gbps = 1\nstt_ns = 1", // no root
+        "nonsense without equals",
+    ];
+    for (i, src) in cases.iter().enumerate() {
+        assert!(Topology::from_toml_str(src).is_err(), "case {i} should fail");
+    }
+}

@@ -1,0 +1,182 @@
+//! Three-way differential test: the AOT HLO module (through PJRT), the
+//! pure-rust native analyzer, and the python oracle's golden vectors
+//! (`artifacts/golden.json`, produced by `kernels/ref.py` at `make
+//! artifacts` time) must all agree on the same inputs.
+//!
+//! This is the repo's cross-language correctness anchor: if the Pallas
+//! kernel, the JAX model, the HLO lowering, the PJRT runtime, or the
+//! rust mirror drift apart, this test fails.
+
+use cxlmemsim::runtime::native::NativeAnalyzer;
+use cxlmemsim::runtime::pjrt::PjrtAnalyzer;
+use cxlmemsim::runtime::shapes;
+use cxlmemsim::runtime::{TimingInputs, TimingModel};
+use cxlmemsim::topology::TopoTensors;
+use cxlmemsim::util::json::Json;
+
+struct Golden {
+    pools: usize,
+    switches: usize,
+    nbins: usize,
+    reads: Vec<f32>,
+    writes: Vec<f32>,
+    extra_rd: Vec<f32>,
+    extra_wr: Vec<f32>,
+    desc_mask: Vec<f32>,
+    stt: Vec<f32>,
+    bw: Vec<f32>,
+    bin_width: f32,
+    bytes_per_ev: f32,
+    out_total: f64,
+    out_lat: Vec<f32>,
+    out_cong: Vec<f32>,
+    out_bwd: Vec<f32>,
+    out_backlog: Vec<f32>,
+}
+
+fn load_golden() -> Golden {
+    let dir = shapes::artifacts_dir();
+    let src = std::fs::read_to_string(format!("{dir}/golden.json"))
+        .expect("run `make artifacts` before cargo test");
+    let v = Json::parse(&src).unwrap();
+    let sh = v.get("shapes").unwrap();
+    let inp = v.get("inputs").unwrap();
+    let out = v.get("outputs").unwrap();
+    let fv = |o: &Json, k: &str| -> Vec<f32> { o.get(k).unwrap().as_f32_vec().unwrap() };
+    Golden {
+        pools: sh.get("pools").unwrap().as_usize().unwrap(),
+        switches: sh.get("switches").unwrap().as_usize().unwrap(),
+        nbins: sh.get("nbins").unwrap().as_usize().unwrap(),
+        reads: fv(inp, "reads"),
+        writes: fv(inp, "writes"),
+        extra_rd: fv(inp, "extra_read_lat"),
+        extra_wr: fv(inp, "extra_write_lat"),
+        desc_mask: fv(inp, "desc_mask"),
+        stt: fv(inp, "stt"),
+        bw: fv(inp, "bw"),
+        bin_width: fv(inp, "bin_width")[0],
+        bytes_per_ev: fv(inp, "bytes_per_ev")[0],
+        out_total: out.get("total").unwrap().as_f64().unwrap(),
+        out_lat: fv(out, "lat"),
+        out_cong: fv(out, "cong"),
+        out_bwd: fv(out, "bwd"),
+        out_backlog: fv(out, "cong_backlog"),
+    }
+}
+
+fn tensors_of(g: &Golden) -> TopoTensors {
+    TopoTensors {
+        pools: g.pools,
+        switches: g.switches,
+        extra_read_lat: g.extra_rd.clone(),
+        extra_write_lat: g.extra_wr.clone(),
+        desc_mask: g.desc_mask.clone(),
+        stt: g.stt.clone(),
+        bw: g.bw.clone(),
+    }
+}
+
+fn assert_close(name: &str, got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "{name} length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * b.abs();
+        assert!(
+            (a - b).abs() <= tol,
+            "{name}[{i}]: got {a}, want {b} (tol {tol})"
+        );
+    }
+}
+
+fn check_model(model: &mut dyn TimingModel, g: &Golden) {
+    let out = model
+        .analyze(&TimingInputs {
+            reads: &g.reads,
+            writes: &g.writes,
+            bin_width: g.bin_width,
+            bytes_per_ev: g.bytes_per_ev,
+        })
+        .unwrap();
+    let rel = (out.total - g.out_total).abs() / g.out_total.max(1.0);
+    assert!(
+        rel < 1e-4,
+        "{}: total {} vs golden {} (rel {rel})",
+        model.backend_name(),
+        out.total,
+        g.out_total
+    );
+    assert_close("lat", &out.lat, &g.out_lat, 1e-4, 1e-2);
+    assert_close("cong", &out.cong, &g.out_cong, 1e-3, 1.0);
+    assert_close("bwd", &out.bwd, &g.out_bwd, 1e-3, 1.0);
+    assert_close("backlog", &out.cong_backlog, &g.out_backlog, 1e-3, 1.0);
+}
+
+#[test]
+fn native_matches_python_golden() {
+    let g = load_golden();
+    let mut m = NativeAnalyzer::new(&tensors_of(&g), g.nbins);
+    check_model(&mut m, &g);
+}
+
+#[test]
+fn pjrt_matches_python_golden() {
+    let g = load_golden();
+    let mut m = PjrtAnalyzer::new(&tensors_of(&g), g.nbins, &shapes::artifacts_dir()).unwrap();
+    check_model(&mut m, &g);
+}
+
+#[test]
+fn pjrt_and_native_agree_on_random_inputs() {
+    let g = load_golden();
+    let t = tensors_of(&g);
+    let dir = shapes::artifacts_dir();
+    let mut pjrt = PjrtAnalyzer::new(&t, g.nbins, &dir).unwrap();
+    let mut native = NativeAnalyzer::new(&t, g.nbins);
+    let mut rng = cxlmemsim::util::rng::Rng::new(99);
+    for round in 0..5 {
+        let n = g.pools * g.nbins;
+        let reads: Vec<f32> = (0..n).map(|_| rng.below(20) as f32).collect();
+        let writes: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+        let inp = TimingInputs {
+            reads: &reads,
+            writes: &writes,
+            bin_width: 1000.0,
+            bytes_per_ev: 64.0,
+        };
+        let a = pjrt.analyze(&inp).unwrap();
+        let b = native.analyze(&inp).unwrap();
+        let rel = (a.total - b.total).abs() / b.total.max(1.0);
+        assert!(rel < 1e-3, "round {round}: pjrt {} vs native {}", a.total, b.total);
+        assert_close("lat", &a.lat, &b.lat, 1e-3, 1e-1);
+        assert_close("cong", &a.cong, &b.cong, 1e-3, 1.0);
+        assert_close("bwd", &a.bwd, &b.bwd, 1e-3, 1.0);
+    }
+}
+
+#[test]
+fn batch_module_matches_single() {
+    use cxlmemsim::runtime::pjrt::PjrtBatchAnalyzer;
+    let g = load_golden();
+    let t = tensors_of(&g);
+    let dir = shapes::artifacts_dir();
+    let mut single = PjrtAnalyzer::new(&t, g.nbins, &dir).unwrap();
+    let mut batch = PjrtBatchAnalyzer::new(&t, g.nbins, &dir).unwrap();
+    let e = batch.batch;
+    let n = g.pools * g.nbins;
+    let mut rng = cxlmemsim::util::rng::Rng::new(7);
+    let reads: Vec<f32> = (0..e * n).map(|_| rng.below(12) as f32).collect();
+    let writes: Vec<f32> = (0..e * n).map(|_| rng.below(6) as f32).collect();
+    let out = batch.analyze_batch(&reads, &writes, 1000.0, 64.0).unwrap();
+    assert_eq!(out.total.len(), e);
+    for i in [0, e / 2, e - 1] {
+        let s = single
+            .analyze(&TimingInputs {
+                reads: &reads[i * n..(i + 1) * n],
+                writes: &writes[i * n..(i + 1) * n],
+                bin_width: 1000.0,
+                bytes_per_ev: 64.0,
+            })
+            .unwrap();
+        let rel = (out.total[i] - s.total).abs() / s.total.max(1.0);
+        assert!(rel < 1e-3, "epoch {i}: batch {} vs single {}", out.total[i], s.total);
+    }
+}

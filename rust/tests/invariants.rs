@@ -1,0 +1,270 @@
+//! Randomized property tests over coordinator-facing invariants.
+//!
+//! proptest is not available offline, so this uses the repo's own
+//! deterministic PRNG for many-seed randomized checks; each failure
+//! message carries the seed, which is sufficient to reproduce (the
+//! whole substrate is seed-deterministic).
+
+use cxlmemsim::alloctrack::{AllocTracker, PolicyKind};
+use cxlmemsim::cache::CacheHierarchy;
+use cxlmemsim::runtime::native::NativeAnalyzer;
+use cxlmemsim::runtime::{TimingInputs, TimingModel};
+use cxlmemsim::topology::{builtin, HostParams, Node, NodeKind, TopoTensors, Topology, LOCAL_POOL};
+use cxlmemsim::trace::{AllocEvent, AllocKind};
+use cxlmemsim::util::rng::Rng;
+
+// ------------------------------------------------------------ topology
+
+/// Generate a random valid topology with up to 7 pools / 7 switches.
+fn random_topology(seed: u64) -> Topology {
+    let mut rng = Rng::new(seed);
+    let n_switch = rng.below(5) as usize; // interior switches
+    let n_pool = 1 + rng.below(6) as usize;
+    let mut nodes = vec![Node {
+        name: "rc".into(),
+        kind: NodeKind::Root,
+        parent: None,
+        read_latency_ns: rng.range_f64(5.0, 40.0),
+        write_latency_ns: rng.range_f64(5.0, 40.0),
+        bandwidth: rng.range_f64(16.0, 128.0),
+        stt_ns: rng.range_f64(0.5, 8.0),
+        capacity_bytes: 0,
+    }];
+    for i in 0..n_switch {
+        let parent = rng.below(nodes.len() as u64) as usize;
+        // parents must be non-pool; all nodes so far are non-pool
+        nodes.push(Node {
+            name: format!("sw{i}"),
+            kind: NodeKind::Switch,
+            parent: Some(parent),
+            read_latency_ns: rng.range_f64(10.0, 80.0),
+            write_latency_ns: rng.range_f64(10.0, 80.0),
+            bandwidth: rng.range_f64(8.0, 64.0),
+            stt_ns: rng.range_f64(5.0, 50.0),
+            capacity_bytes: 0,
+        });
+    }
+    let interior = nodes.len();
+    for i in 0..n_pool {
+        let parent = rng.below(interior as u64) as usize;
+        nodes.push(Node {
+            name: format!("pool{i}"),
+            kind: NodeKind::Pool,
+            parent: Some(parent),
+            read_latency_ns: rng.range_f64(60.0, 250.0),
+            write_latency_ns: rng.range_f64(60.0, 280.0),
+            bandwidth: rng.range_f64(8.0, 48.0),
+            stt_ns: rng.range_f64(5.0, 40.0),
+            capacity_bytes: (1 + rng.below(512)) << 30,
+        });
+    }
+    Topology::new(&format!("rand{seed}"), HostParams::default(), nodes).unwrap()
+}
+
+#[test]
+fn random_topologies_validate_and_tensorize() {
+    for seed in 0..200 {
+        let t = random_topology(seed);
+        let tensors = TopoTensors::build(&t, 8, 8).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // invariant: every CXL pool routes through the RC row
+        for pool in 1..t.num_pools() {
+            assert_eq!(tensors.mask(0, pool), 1.0, "seed {seed} pool {pool} not under RC");
+            // extra latency is nonnegative and consistent with the tree
+            assert!(tensors.extra_read_lat[pool] >= 0.0, "seed {seed}");
+        }
+        // invariant: pool path latency >= RC hop latency
+        for pool in 1..t.num_pools() {
+            assert!(
+                t.pool_read_latency(pool) >= t.nodes()[t.root()].read_latency_ns,
+                "seed {seed}"
+            );
+        }
+        // local pool is never masked
+        for row in 0..8 {
+            assert_eq!(tensors.mask(row, 0), 0.0, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn deeper_pools_have_larger_latency() {
+    for seed in 0..100 {
+        let t = random_topology(seed);
+        for pool in 1..t.num_pools() {
+            let path = t.path_to_root(pool);
+            let partial: f64 = path[1..].iter().map(|&i| t.nodes()[i].read_latency_ns).sum();
+            assert!(
+                t.pool_read_latency(pool) > partial - 1e-9,
+                "seed {seed}: pool hop must add latency"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------- timing model
+
+#[test]
+fn analyzer_monotone_in_traffic() {
+    // adding traffic anywhere never decreases total delay
+    let topo = builtin::fig2();
+    let tensors = TopoTensors::build(&topo, 8, 8).unwrap();
+    let mut model = NativeAnalyzer::new(&tensors, 64);
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let n = 8 * 64;
+        let reads: Vec<f32> = (0..n).map(|_| rng.below(30) as f32).collect();
+        let writes: Vec<f32> = (0..n).map(|_| rng.below(15) as f32).collect();
+        let base = model
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 500.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        let mut more = reads.clone();
+        let idx = (1 + rng.below(3)) as usize * 64 + rng.below(64) as usize; // a CXL pool row
+        more[idx] += 10.0;
+        let bumped = model
+            .analyze(&TimingInputs { reads: &more, writes: &writes, bin_width: 500.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        assert!(
+            bumped.total >= base.total - 1e-3,
+            "seed {seed}: traffic increase reduced delay {} -> {}",
+            base.total,
+            bumped.total
+        );
+    }
+}
+
+#[test]
+fn analyzer_scale_invariance_of_latency_term() {
+    // with huge bin width (no congestion/bw), delay is exactly linear
+    let topo = builtin::fig2();
+    let tensors = TopoTensors::build(&topo, 8, 8).unwrap();
+    let mut model = NativeAnalyzer::new(&tensors, 32);
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed ^ 0xabc);
+        let n = 8 * 32;
+        let reads: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+        let writes = vec![0.0f32; n];
+        let one = model
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 1e9, bytes_per_ev: 64.0 })
+            .unwrap();
+        let doubled: Vec<f32> = reads.iter().map(|x| x * 2.0).collect();
+        let two = model
+            .analyze(&TimingInputs { reads: &doubled, writes: &writes, bin_width: 1e9, bytes_per_ev: 64.0 })
+            .unwrap();
+        let rel = (two.total - 2.0 * one.total).abs() / (one.total.max(1.0) * 2.0);
+        assert!(rel < 1e-5, "seed {seed}: latency term not linear ({rel})");
+    }
+}
+
+// ------------------------------------------------------------ tracker
+
+#[test]
+fn tracker_accounting_never_negative_and_conserves() {
+    for seed in 0..100u64 {
+        let topo = builtin::fig2();
+        let mut rng = Rng::new(seed);
+        let mut tracker = AllocTracker::new(&topo, PolicyKind::CxlOnly.build(&topo));
+        let mut live: Vec<(u64, u64)> = Vec::new();
+        for step in 0..200 {
+            if live.is_empty() || rng.f64() < 0.6 {
+                let addr = (1 + rng.below(1 << 20)) * 4096;
+                let len = (1 + rng.below(64)) * 4096;
+                tracker.on_alloc_event(&AllocEvent {
+                    kind: AllocKind::Mmap,
+                    addr,
+                    len,
+                    t_ns: step as f64,
+                });
+                // shadow model mirrors MAP_FIXED splitting: overlapped
+                // parts are dropped, non-overlapping heads/tails kept
+                let mut next = Vec::new();
+                for (a, l) in live.drain(..) {
+                    let end = a + l;
+                    let new_end = addr + len;
+                    if end <= addr || a >= new_end {
+                        next.push((a, l)); // disjoint
+                    } else {
+                        if a < addr {
+                            next.push((a, addr - a)); // head
+                        }
+                        if end > new_end {
+                            next.push((new_end, end - new_end)); // tail
+                        }
+                    }
+                }
+                live = next;
+                live.push((addr, len));
+            } else {
+                let pick = rng.below(live.len() as u64) as usize;
+                let (addr, len) = live.swap_remove(pick);
+                tracker.on_alloc_event(&AllocEvent {
+                    kind: AllocKind::Munmap,
+                    addr,
+                    len,
+                    t_ns: step as f64,
+                });
+            }
+            let expect: u64 = live.iter().map(|(_, l)| *l).sum();
+            assert_eq!(
+                tracker.stats.live_bytes, expect,
+                "seed {seed} step {step}: live bytes diverged"
+            );
+            let pool_sum: u64 = tracker.stats.pool_bytes.iter().sum();
+            assert_eq!(pool_sum, expect, "seed {seed} step {step}: pool bytes diverged");
+        }
+    }
+}
+
+#[test]
+fn tracker_lookup_respects_regions() {
+    for seed in 0..50u64 {
+        let topo = builtin::fig2();
+        let mut rng = Rng::new(seed ^ 0x77);
+        let mut tracker = AllocTracker::new(&topo, PolicyKind::CxlOnly.build(&topo));
+        let addr = (1 + rng.below(1000)) * 0x10000;
+        let len = (1 + rng.below(16)) * 4096;
+        tracker.on_alloc_event(&AllocEvent { kind: AllocKind::Mmap, addr, len, t_ns: 0.0 });
+        // inside: not local (CxlOnly)
+        assert_ne!(tracker.pool_of(addr), LOCAL_POOL, "seed {seed}");
+        assert_ne!(tracker.pool_of(addr + len - 1), LOCAL_POOL, "seed {seed}");
+        // outside: local
+        assert_eq!(tracker.pool_of(addr + len), LOCAL_POOL, "seed {seed}");
+        assert_eq!(tracker.pool_of(addr.wrapping_sub(1)), LOCAL_POOL, "seed {seed}");
+    }
+}
+
+// -------------------------------------------------------------- cache
+
+#[test]
+fn cache_hierarchy_hit_rate_increases_with_locality() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let mut narrow = CacheHierarchy::scaled(64);
+        let mut wide = CacheHierarchy::scaled(64);
+        for _ in 0..50_000 {
+            narrow.access(rng.below(1 << 14) & !63, false); // 16 KB set
+            wide.access(rng.below(1 << 26) & !63, false); // 64 MB set
+        }
+        assert!(
+            narrow.stats.miss_rate() < wide.stats.miss_rate(),
+            "seed {seed}: locality must reduce misses"
+        );
+    }
+}
+
+#[test]
+fn cache_inclusive_invariant_no_stale_hits_after_eviction() {
+    // after an LLC invalidation storm, previously-hot lines must miss
+    let mut h = CacheHierarchy::scaled(512);
+    for i in 0..8u64 {
+        h.access(i * 64, true);
+    }
+    // stream far past LLC capacity
+    for i in 1000..200_000u64 {
+        h.access(i * 64, false);
+    }
+    let before = h.stats.misses;
+    for i in 0..8u64 {
+        h.access(i * 64, false);
+    }
+    assert!(h.stats.misses > before, "hot lines must have been evicted");
+}
