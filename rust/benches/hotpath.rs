@@ -1,28 +1,41 @@
 //! Bench P1 — hot-path microbenchmarks for the §Perf pass:
 //!
-//!   * timing-analyzer invocations/s: native mirror vs PJRT single vs
-//!     PJRT batched (the L2/L3 boundary cost);
+//!   * event-pump throughput: per-event (`next_event`, one virtual call
+//!     per event) vs batched (`next_batch`, monomorphic inner loop);
+//!   * `AllocTracker::pool_of` lookups/s: MRU + flat-index fast path vs
+//!     the `BTreeMap::range` walk baseline;
+//!   * timing-analyzer invocations/s: native mirror (and, with
+//!     `--features pjrt`, PJRT single vs PJRT batched — the L2/L3
+//!     boundary cost);
 //!   * cache-hierarchy accesses/s (the per-access substrate cost);
-//!   * end-to-end coordinator epochs/s and accesses/s.
+//!   * end-to-end coordinator accesses/s, per-event vs batched pump —
+//!     the headline number for the paper's "orders of magnitude faster
+//!     than cycle-accurate" claim.
+//!
+//! Also emits machine-readable `BENCH_hotpath.json` so future PRs can
+//! track the perf trajectory.
 //!
 //!     cargo bench --offline --bench hotpath
 
+use cxlmemsim::alloctrack::AllocTracker;
 use cxlmemsim::cache::CacheHierarchy;
 use cxlmemsim::coordinator::{Coordinator, SimConfig};
 use cxlmemsim::prelude::*;
 use cxlmemsim::runtime::native::NativeAnalyzer;
-use cxlmemsim::runtime::pjrt::{PjrtAnalyzer, PjrtBatchAnalyzer};
 use cxlmemsim::runtime::shapes;
 use cxlmemsim::runtime::{TimingInputs, TimingModel};
+use cxlmemsim::trace::{AllocEvent, AllocKind};
 use cxlmemsim::util::benchutil::{bench, fmt_secs};
+use cxlmemsim::util::json::{self, Json};
 use cxlmemsim::util::rng::Rng;
+use cxlmemsim::workload::{self, drain_batched};
 
 fn main() {
     let topo = builtin::fig2();
     let tensors = TopoTensors::build(&topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES).unwrap();
     let nbins = shapes::NUM_BINS;
-    let dir = shapes::artifacts_dir();
     let n = shapes::NUM_POOLS * nbins;
+    let mut results: Vec<(&str, Json)> = Vec::new();
 
     let mut rng = Rng::new(4);
     let reads: Vec<f32> = (0..n).map(|_| rng.below(20) as f32).collect();
@@ -36,6 +49,99 @@ fn main() {
 
     println!("## P1: hot-path microbenchmarks\n");
 
+    // --- event-pump throughput -----------------------------------
+    // the tracer substrate's raw feed rate: how fast workloads emit
+    for wl_name in ["mcf_like", "stream", "wrf_like"] {
+        let s = bench(&format!("{wl_name} per-event"), 1, 5, || {
+            let mut wl = workload::by_name(wl_name, 0.01, 7).unwrap();
+            let mut n = 0u64;
+            while wl.next_event().is_some() {
+                n += 1;
+            }
+            std::hint::black_box(n);
+        });
+        let mut wl = workload::by_name(wl_name, 0.01, 7).unwrap();
+        let total = drain_batched(wl.as_mut(), 4096) as f64;
+        let per_event_rate = total / s.mean_s;
+        let s = bench(&format!("{wl_name} batched"), 1, 5, || {
+            let mut wl = workload::by_name(wl_name, 0.01, 7).unwrap();
+            std::hint::black_box(drain_batched(wl.as_mut(), 4096));
+        });
+        let batched_rate = total / s.mean_s;
+        println!(
+            "event pump[{wl_name:9}]: per-event {:>7.1} M ev/s | batched {:>7.1} M ev/s ({:.2}x)",
+            per_event_rate / 1e6,
+            batched_rate / 1e6,
+            batched_rate / per_event_rate
+        );
+        results.push((
+            "event_pump",
+            json::obj(vec![
+                ("workload", json::s(wl_name)),
+                ("per_event_evps", json::num(per_event_rate)),
+                ("batched_evps", json::num(batched_rate)),
+                ("speedup", json::num(batched_rate / per_event_rate)),
+            ]),
+        ));
+    }
+
+    // --- pool_of lookup cost -------------------------------------
+    // a tracker with a realistically fragmented address space
+    let mut tracker = AllocTracker::new(&topo, cxlmemsim::alloctrack::PolicyKind::CxlOnly.build(&topo));
+    let regions = 512u64;
+    let region_len = 1u64 << 20;
+    for i in 0..regions {
+        tracker.on_alloc_event(&AllocEvent {
+            kind: AllocKind::Mmap,
+            addr: 0x7f00_0000_0000 + i * 2 * region_len,
+            len: region_len,
+            t_ns: 0.0,
+        });
+    }
+    // spatially local probe stream (the LLC-miss shape: streams/stencils)
+    let mut probes: Vec<u64> = Vec::with_capacity(1_000_000);
+    let mut r = Rng::new(9);
+    let mut cur = 0x7f00_0000_0000u64;
+    for i in 0..1_000_000u64 {
+        if i % 4096 == 0 {
+            cur = 0x7f00_0000_0000 + r.below(regions) * 2 * region_len;
+        }
+        probes.push(cur + (i % (region_len / 64)) * 64);
+    }
+    let mut sum = 0u64;
+    let s = bench("pool_of fast", 2, 10, || {
+        for &a in &probes {
+            sum = sum.wrapping_add(tracker.pool_of(a) as u64);
+        }
+    });
+    let fast_rate = probes.len() as f64 / s.mean_s;
+    let s = bench("pool_of btree", 2, 10, || {
+        for &a in &probes {
+            sum = sum.wrapping_add(tracker.pool_of_btree(a) as u64);
+        }
+    });
+    std::hint::black_box(sum);
+    let btree_rate = probes.len() as f64 / s.mean_s;
+    // 12 fast passes ran (2 warmup + 10 timed) over `probes`
+    let mru_hit_rate = tracker.stats.mru_hits as f64 / (12.0 * probes.len() as f64);
+    println!(
+        "pool_of:              fast {:>7.1} M/s ({:.1}% MRU hits) | btree {:>7.1} M/s ({:.2}x)",
+        fast_rate / 1e6,
+        mru_hit_rate * 100.0,
+        btree_rate / 1e6,
+        fast_rate / btree_rate
+    );
+    results.push((
+        "pool_of",
+        json::obj(vec![
+            ("regions", json::num(regions as f64)),
+            ("fast_lookups_per_s", json::num(fast_rate)),
+            ("btree_lookups_per_s", json::num(btree_rate)),
+            ("speedup", json::num(fast_rate / btree_rate)),
+            ("mru_hits", json::num(tracker.stats.mru_hits as f64)),
+        ]),
+    ));
+
     // --- analyzer invocation cost --------------------------------
     let mut native = NativeAnalyzer::new(&tensors, nbins);
     let s = bench("native analyze", 50, 500, || {
@@ -46,29 +152,38 @@ fn main() {
         fmt_secs(s.mean_s),
         1.0 / s.mean_s
     );
+    results.push((
+        "native_analyzer",
+        json::obj(vec![("mean_s", json::num(s.mean_s))]),
+    ));
 
-    let mut pjrt = PjrtAnalyzer::new(&tensors, nbins, &dir).unwrap();
-    let s = bench("pjrt analyze", 20, 200, || {
-        pjrt.analyze(&inp()).unwrap();
-    });
-    println!(
-        "pjrt analyzer:        {:>10}/call  ({:.0} calls/s)",
-        fmt_secs(s.mean_s),
-        1.0 / s.mean_s
-    );
-
-    let mut batch = PjrtBatchAnalyzer::new(&tensors, nbins, &dir).unwrap();
-    let e = batch.batch;
-    let breads: Vec<f32> = (0..e * n).map(|_| rng.below(20) as f32).collect();
-    let bwrites: Vec<f32> = (0..e * n).map(|_| rng.below(10) as f32).collect();
-    let s = bench("pjrt batch analyze", 10, 100, || {
-        batch.analyze_batch(&breads, &bwrites, 3906.25, 64.0).unwrap();
-    });
-    println!(
-        "pjrt batch ({e:>2}/call): {:>10}/call  ({:.0} epochs/s effective)",
-        fmt_secs(s.mean_s),
-        e as f64 / s.mean_s
-    );
+    #[cfg(feature = "pjrt")]
+    {
+        use cxlmemsim::runtime::pjrt::{PjrtAnalyzer, PjrtBatchAnalyzer};
+        let dir = shapes::artifacts_dir();
+        let mut pjrt = PjrtAnalyzer::new(&tensors, nbins, &dir).unwrap();
+        let s = bench("pjrt analyze", 20, 200, || {
+            pjrt.analyze(&inp()).unwrap();
+        });
+        println!(
+            "pjrt analyzer:        {:>10}/call  ({:.0} calls/s)",
+            fmt_secs(s.mean_s),
+            1.0 / s.mean_s
+        );
+        let mut rng = Rng::new(5);
+        let mut batch = PjrtBatchAnalyzer::new(&tensors, nbins, &dir).unwrap();
+        let e = batch.batch;
+        let breads: Vec<f32> = (0..e * n).map(|_| rng.below(20) as f32).collect();
+        let bwrites: Vec<f32> = (0..e * n).map(|_| rng.below(10) as f32).collect();
+        let s = bench("pjrt batch analyze", 10, 100, || {
+            batch.analyze_batch(&breads, &bwrites, 3906.25, 64.0).unwrap();
+        });
+        println!(
+            "pjrt batch ({e:>2}/call): {:>10}/call  ({:.0} epochs/s effective)",
+            fmt_secs(s.mean_s),
+            e as f64 / s.mean_s
+        );
+    }
 
     // --- cache substrate cost ------------------------------------
     // worst case: uniform-random over 1 GB, every access an LLC miss
@@ -98,20 +213,69 @@ fn main() {
         1.0 / s.mean_s
     );
 
-    // --- end-to-end coordinator ----------------------------------
-    for (label, backend) in [("native", AnalyzerBackend::Native), ("pjrt", AnalyzerBackend::Pjrt)] {
+    // --- end-to-end coordinator: per-event vs batched pump -------
+    let run_coord = |event_batch: usize| {
         let mut cfg = SimConfig::default();
         cfg.scale = 0.01;
         cfg.cache_scale = 1;
-        cfg.backend = backend;
+        cfg.backend = AnalyzerBackend::Native;
+        cfg.event_batch = event_batch;
+        let mut sim = Coordinator::new(topo.clone(), cfg).unwrap();
+        sim.run_workload("mcf_like").unwrap()
+    };
+    let per_event = run_coord(1);
+    let batched = run_coord(4096);
+    let pe_rate = per_event.total_accesses as f64 / per_event.wall_s;
+    let ba_rate = batched.total_accesses as f64 / batched.wall_s;
+    assert_eq!(per_event.total_misses, batched.total_misses, "pipelines diverged");
+    println!(
+        "coordinator[mcf_like]: per-event {:>6.2} M acc/s | batched {:>6.2} M acc/s ({:.2}x)",
+        pe_rate / 1e6,
+        ba_rate / 1e6,
+        ba_rate / pe_rate
+    );
+    results.push((
+        "coordinator_e2e",
+        json::obj(vec![
+            ("workload", json::s("mcf_like")),
+            ("per_event_accps", json::num(pe_rate)),
+            ("batched_accps", json::num(ba_rate)),
+            ("speedup", json::num(ba_rate / pe_rate)),
+            ("epochs", json::num(batched.epochs_run as f64)),
+            ("accesses", json::num(batched.total_accesses as f64)),
+        ]),
+    ));
+
+    #[cfg(feature = "pjrt")]
+    {
+        let mut cfg = SimConfig::default();
+        cfg.scale = 0.01;
+        cfg.cache_scale = 1;
+        cfg.backend = AnalyzerBackend::Pjrt;
         let mut sim = Coordinator::new(topo.clone(), cfg).unwrap();
         let rep = sim.run_workload("mcf_like").unwrap();
         println!(
-            "coordinator[{label:6}]: {:>10} wall, {} epochs ({:.0} epochs/s), {:.1} M accesses/s",
+            "coordinator[pjrt  ]: {:>10} wall, {} epochs ({:.0} epochs/s), {:.1} M accesses/s",
             fmt_secs(rep.wall_s),
             rep.epochs_run,
             rep.epochs_run as f64 / rep.wall_s,
             rep.total_accesses as f64 / rep.wall_s / 1e6
         );
     }
+
+    // --- machine-readable trajectory file ------------------------
+    let doc = json::obj(vec![
+        ("bench", json::s("hotpath")),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .into_iter()
+                    .map(|(name, v)| json::obj(vec![("name", json::s(name)), ("data", v)]))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_hotpath.json", doc.to_string()).ok();
+    println!("\nwrote BENCH_hotpath.json");
 }

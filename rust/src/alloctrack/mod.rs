@@ -51,12 +51,30 @@ pub struct TrackerStats {
     pub live_bytes: u64,
     /// Bytes currently resident per pool (index = PoolId).
     pub pool_bytes: Vec<u64>,
+    /// `pool_of` lookups answered by the one-entry MRU region cache.
+    pub mru_hits: u64,
+    /// Times the flat interval index was rebuilt after alloc/free.
+    pub index_rebuilds: u64,
 }
 
 /// Interval map of live regions + placement policy + per-pool usage.
+///
+/// Lookup hot path (one call per LLC miss): a one-entry MRU region
+/// cache backed by a flat sorted-`Vec` interval index, rebuilt lazily
+/// after allocation-map mutations and binary-searched on MRU misses.
+/// Misses have strong spatial locality (streams, stencils), so the MRU
+/// entry absorbs the vast majority of lookups; the `BTreeMap` stays the
+/// source of truth for mutation (split/merge on partial unmap).
 pub struct AllocTracker {
-    /// start -> region; regions never overlap.
+    /// start -> region; regions never overlap. Source of truth.
     regions: BTreeMap<u64, Region>,
+    /// Flat copy of `regions` sorted by start; rebuilt lazily when
+    /// `index_dirty`. Binary-searched by `pool_of`.
+    index: Vec<Region>,
+    index_dirty: bool,
+    /// Index into `index` of the last region that answered a lookup
+    /// (usize::MAX = invalid).
+    mru: usize,
     policy: Box<dyn PlacementPolicy>,
     pub stats: TrackerStats,
     num_pools: usize,
@@ -67,6 +85,9 @@ impl AllocTracker {
         let num_pools = topo.num_pools();
         AllocTracker {
             regions: BTreeMap::new(),
+            index: Vec::new(),
+            index_dirty: false,
+            mru: usize::MAX,
             policy,
             stats: TrackerStats { pool_bytes: vec![0; num_pools], ..Default::default() },
             num_pools,
@@ -90,6 +111,7 @@ impl AllocTracker {
         if ev.len == 0 {
             return;
         }
+        self.index_dirty = true;
         // Overlapping re-allocation: drop any overlapped live regions
         // first (matches kernel mmap MAP_FIXED semantics and keeps the
         // interval map consistent for malformed traces).
@@ -102,6 +124,7 @@ impl AllocTracker {
     }
 
     fn release(&mut self, addr: u64, len: u64) {
+        self.index_dirty = true;
         let end = if len == 0 { addr + 1 } else { addr + len };
         // collect candidate starts overlapping [addr, end)
         let starts: Vec<u64> = self
@@ -174,15 +197,55 @@ impl AllocTracker {
 
     /// Pool owning an address. Unknown addresses (stack, code, ...) are
     /// local DRAM, like the real tool's default for untracked ranges.
+    ///
+    /// Fast path: one-entry MRU cache, then binary search over the flat
+    /// interval index (rebuilt lazily after alloc/free). Equivalent to
+    /// [`AllocTracker::pool_of_btree`] — asserted by differential test.
     #[inline]
     pub fn pool_of(&mut self, addr: u64) -> PoolId {
-        if let Some((_, r)) = self.regions.range(..=addr).next_back() {
+        if self.index_dirty {
+            self.rebuild_index();
+        }
+        if let Some(r) = self.index.get(self.mru) {
+            if addr >= r.start && addr < r.end() {
+                self.stats.mru_hits += 1;
+                return r.pool_of(addr);
+            }
+        }
+        // regions are disjoint and sorted by start: the candidate is
+        // the last region whose start is <= addr
+        let i = self.index.partition_point(|r| r.start <= addr);
+        if i > 0 {
+            let r = &self.index[i - 1];
             if addr < r.end() {
+                self.mru = i - 1;
                 return r.pool_of(addr);
             }
         }
         self.stats.lookup_misses += 1;
         LOCAL_POOL
+    }
+
+    /// The pre-optimization lookup (a `BTreeMap::range` walk), kept as
+    /// the differential-test oracle and the `benches/hotpath.rs`
+    /// baseline. Does not touch stats or the MRU cache.
+    #[inline]
+    pub fn pool_of_btree(&self, addr: u64) -> PoolId {
+        if let Some((_, r)) = self.regions.range(..=addr).next_back() {
+            if addr < r.end() {
+                return r.pool_of(addr);
+            }
+        }
+        LOCAL_POOL
+    }
+
+    #[cold]
+    fn rebuild_index(&mut self) {
+        self.index.clear();
+        self.index.extend(self.regions.values().cloned());
+        self.index_dirty = false;
+        self.mru = usize::MAX;
+        self.stats.index_rebuilds += 1;
     }
 
     /// Move a whole region (page-set) to another pool — the migration
@@ -193,6 +256,7 @@ impl AllocTracker {
         }
         // remove + reinsert to fix accounting
         if let Some(r) = self.regions.remove(&start) {
+            self.index_dirty = true;
             self.account(&r, false);
             let moved = Region { placement: Placement::Single(to), ..r };
             self.account(&moved, true);
@@ -320,5 +384,55 @@ mod tests {
     fn migrate_unknown_region_fails() {
         let mut t = tracker(PolicyKind::CxlOnly);
         assert!(!t.migrate_region(0x9999, LOCAL_POOL));
+    }
+
+    #[test]
+    fn fast_lookup_matches_btree_walk_under_churn() {
+        use crate::util::rng::Rng;
+        let mut t = tracker(PolicyKind::CxlOnly);
+        let mut rng = Rng::new(0x100c);
+        for round in 0..2000u64 {
+            let slot = rng.below(64);
+            let addr = 0x10_0000 + slot * 0x4000;
+            match rng.below(4) {
+                0 => t.on_alloc_event(&ev(AllocKind::Mmap, addr, 0x1000 + rng.below(0x3000))),
+                1 => t.on_alloc_event(&ev(AllocKind::Munmap, addr, 0x2000)),
+                2 => {
+                    t.migrate_region(addr, (rng.below(4)) as usize);
+                }
+                _ => {}
+            }
+            for _ in 0..8 {
+                let q = 0x10_0000 + rng.below(64 * 0x4000 + 0x8000);
+                assert_eq!(
+                    t.pool_of(q),
+                    t.pool_of_btree(q),
+                    "round {round}, addr {q:#x}"
+                );
+            }
+        }
+        assert!(t.stats.index_rebuilds > 0);
+    }
+
+    #[test]
+    fn mru_absorbs_spatially_local_lookups() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x10000, 1 << 20));
+        for i in 0..1000u64 {
+            t.pool_of(0x10000 + i * 64);
+        }
+        // first lookup warms the MRU; the rest must hit it
+        assert_eq!(t.stats.mru_hits, 999);
+        assert_eq!(t.stats.lookup_misses, 0);
+    }
+
+    #[test]
+    fn migration_invalidates_fast_index() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x1000));
+        let before = t.pool_of(0x1800);
+        assert_ne!(before, LOCAL_POOL);
+        assert!(t.migrate_region(0x1000, LOCAL_POOL));
+        assert_eq!(t.pool_of(0x1800), LOCAL_POOL, "stale MRU/index after migrate");
     }
 }

@@ -1,161 +1,67 @@
-//! Batched offline replay: process a recorded trace with the
-//! `timing_batch{E}` AOT artifact, amortizing PJRT dispatch across E
-//! epochs per call (§Perf: ~46 µs/epoch vs ~150 µs single-shot).
+//! Batched offline replay: process a workload with a grouped analyzer
+//! flush, amortizing analyzer dispatch across E epochs per call. On the
+//! PJRT backend this uses the `timing_batch{E}` AOT artifact (§Perf:
+//! ~46 µs/epoch vs ~150 µs single-shot); on the native backend it is a
+//! plain loop, so batched replay works without artifacts and is
+//! bit-identical to the sequential coordinator.
 //!
-//! Semantically identical to the sequential epoch loop because epoch
+//! Semantically equivalent to the sequential epoch loop because epoch
 //! delays do not feed back into the event stream (the workload's events
 //! are independent of injected delay); verified against the sequential
-//! coordinator in `rust/tests/e2e.rs`.
+//! coordinator in `rust/tests/e2e.rs` and
+//! `rust/tests/pipeline_equivalence.rs`.
+//!
+//! Event accounting runs through the shared [`super::EpochDriver`], so
+//! this mode has full parity with the sequential coordinator —
+//! prefetcher traffic, write-backs, sampling, and (via
+//! [`run_batched_with`]) epoch policies, whose tracker mutations apply
+//! at group-flush time, i.e. up to E−1 epochs late. The pre-driver
+//! implementation silently dropped prefetcher traffic and never invoked
+//! policies; `tests/pipeline_equivalence.rs` keeps that fixed.
 
-use crate::alloctrack::AllocTracker;
-use crate::cache::{AccessOutcome, CacheHierarchy};
-use crate::runtime::pjrt::PjrtBatchAnalyzer;
-use crate::runtime::shapes;
+use crate::policy::EpochPolicy;
+use crate::runtime::{self, shapes};
 use crate::topology::{TopoTensors, Topology};
-use crate::trace::binning::EpochBins;
-use crate::trace::WlEvent;
 use crate::workload::Workload;
 
+use super::driver::{BatchedFlush, EpochDriver};
 use super::report::SimReport;
 use super::SimConfig;
 
-/// Run a workload through the batched analyzer. Bins all epochs first
-/// (cache + tracker pass), then flushes them through PJRT in groups of
-/// the artifact's batch size.
+/// Run a workload through the grouped analyzer (no epoch policy).
 pub fn run_batched(
     topo: &Topology,
     cfg: &SimConfig,
     wl: &mut dyn Workload,
 ) -> anyhow::Result<SimReport> {
+    run_batched_with(topo, cfg, wl, None)
+}
+
+/// Run a workload through the grouped analyzer, optionally applying an
+/// epoch policy (invoked per epoch at group-flush time).
+pub fn run_batched_with(
+    topo: &Topology,
+    cfg: &SimConfig,
+    wl: &mut dyn Workload,
+    policy: Option<&mut dyn EpochPolicy>,
+) -> anyhow::Result<SimReport> {
     let wall_start = std::time::Instant::now();
     let tensors = TopoTensors::build(topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES)?;
-    let mut model = PjrtBatchAnalyzer::new(&tensors, cfg.nbins, &cfg.artifacts_dir)?;
-    let e = model.batch;
-    let (p, b) = (shapes::NUM_POOLS, cfg.nbins);
+    let mut model =
+        runtime::make_batch_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
+    let mut driver = EpochDriver::new(topo, cfg)?;
 
-    let mut report = SimReport::new(wl.name(), &topo.name, "pjrt-batch", topo.num_pools());
-    let mut cache = CacheHierarchy::scaled(cfg.cache_scale);
-    let mut tracker = AllocTracker::new(topo, cfg.policy.build(topo));
-    let mut bins = EpochBins::new(p, b, cfg.epoch_ns());
-
-    let epoch_ns = cfg.epoch_ns();
-    let mut epoch_vtime = 0.0f64;
-    let mut sample_ctr = 0u32;
-    // accumulated per-epoch histograms + native durations
-    let mut batched_reads: Vec<f32> = Vec::with_capacity(e * p * b);
-    let mut batched_writes: Vec<f32> = Vec::with_capacity(e * p * b);
-    let mut natives: Vec<f64> = Vec::with_capacity(e);
-    let mut done = false;
-
-    let flush = |reads: &mut Vec<f32>,
-                     writes: &mut Vec<f32>,
-                     natives: &mut Vec<f64>,
-                     report: &mut SimReport,
-                     model: &mut PjrtBatchAnalyzer,
-                     bin_width: f32|
-     -> anyhow::Result<()> {
-        if natives.is_empty() {
-            return Ok(());
-        }
-        let filled = natives.len();
-        reads.resize(e * p * b, 0.0);
-        writes.resize(e * p * b, 0.0);
-        let out = model.analyze_batch(
-            reads,
-            writes,
-            bin_width,
-            64.0, // cacheline bytes
-        )?;
-        for i in 0..filled {
-            report.epochs_run += 1;
-            report.native_ns += natives[i];
-            report.delay_ns += out.total[i];
-            report.simulated_ns += natives[i] + out.total[i];
-            let s = shapes::NUM_SWITCHES;
-            report.lat_delay_ns += out.lat[i * p..(i + 1) * p]
-                .iter()
-                .map(|x| *x as f64)
-                .sum::<f64>();
-            report.cong_delay_ns += out.cong[i * s..(i + 1) * s]
-                .iter()
-                .map(|x| *x as f64)
-                .sum::<f64>();
-            report.bwd_delay_ns += out.bwd[i * s..(i + 1) * s]
-                .iter()
-                .map(|x| *x as f64)
-                .sum::<f64>();
-        }
-        reads.clear();
-        writes.clear();
-        natives.clear();
-        Ok(())
-    };
-
-    while !done {
-        match wl.next_event() {
-            None => done = true,
-            Some(WlEvent::Alloc(mut ev)) => {
-                ev.t_ns = report.native_ns + epoch_vtime;
-                tracker.on_alloc_event(&ev);
-                report.alloc_events += 1;
-                epoch_vtime += cfg.alloc_cost_ns;
-            }
-            Some(WlEvent::Access(a)) => {
-                let outcome = cache.access(a.addr, a.is_write);
-                let mut cost = cfg.cpi_ns + cache.hit_latency_ns(outcome);
-                if let AccessOutcome::Miss { writeback } = outcome {
-                    cost += if a.is_write {
-                        topo.host.local_write_latency_ns
-                    } else {
-                        topo.host.local_read_latency_ns
-                    } / cfg.mlp.max(1.0);
-                    let pool = tracker.pool_of(a.addr);
-                    report.record_miss(pool, a.is_write);
-                    sample_ctr += 1;
-                    if sample_ctr >= cfg.sample_period {
-                        sample_ctr = 0;
-                        bins.record(pool, a.is_write, epoch_vtime, cfg.sample_period as f32);
-                    }
-                    if let Some(wb) = writeback {
-                        let wb_pool = tracker.pool_of(wb);
-                        report.record_writeback(wb_pool);
-                        bins.record(wb_pool, true, epoch_vtime, 1.0);
-                    }
-                }
-                epoch_vtime += cost;
-            }
-        }
-        if epoch_vtime >= epoch_ns || (done && epoch_vtime > 0.0) {
-            batched_reads.extend_from_slice(&bins.reads);
-            batched_writes.extend_from_slice(&bins.writes);
-            natives.push(epoch_vtime);
-            bins.clear();
-            epoch_vtime = 0.0;
-            if natives.len() == e {
-                flush(
-                    &mut batched_reads,
-                    &mut batched_writes,
-                    &mut natives,
-                    &mut report,
-                    &mut model,
-                    bins.bin_width_ns() as f32,
-                )?;
-            }
-            if let Some(max) = cfg.max_epochs {
-                if report.epochs_run + natives.len() as u64 >= max {
-                    done = true;
-                }
-            }
-        }
-    }
-    flush(
-        &mut batched_reads,
-        &mut batched_writes,
-        &mut natives,
-        &mut report,
-        &mut model,
-        bins.bin_width_ns() as f32,
-    )?;
-    report.finish(&cache.stats, &tracker.stats, wall_start.elapsed());
+    let mut report = SimReport::new(wl.name(), &topo.name, model.backend_name(), topo.num_pools());
+    let mut flush = BatchedFlush::new(
+        model.as_mut(),
+        topo.host.cacheline_bytes as f32,
+        cfg.keep_epoch_records,
+        driver.bins.bin_width_ns() as f32,
+        cfg.nbins,
+        cfg.epoch_ns(),
+    );
+    flush.policy = policy;
+    driver.run(wl, &mut flush, &mut report, cfg.max_epochs)?;
+    report.finish(&driver.cache.stats, &driver.tracker.stats, wall_start.elapsed());
     Ok(report)
 }

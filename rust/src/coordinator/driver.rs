@@ -1,0 +1,423 @@
+//! The shared epoch driver — one optimized event pump for every
+//! execution mode.
+//!
+//! Before this module, the cache→tracker→bins accounting loop existed
+//! twice (the sequential coordinator and the batched replay runner)
+//! and the copies had drifted: `run_batched` silently dropped
+//! prefetcher traffic and never invoked the installed `EpochPolicy`.
+//! [`EpochDriver`] owns that accounting once; execution modes differ
+//! only in their [`EpochFlush`] strategy (per-epoch analyze vs.
+//! grouped batch analyze). `gem5like` keeps its own accounting loop —
+//! it models a different machine — but shares the batched event pump.
+//!
+//! The pump pulls events through [`Workload::next_batch`]
+//! (`SimConfig::event_batch` events per virtual call) so the inner loop
+//! is a monomorphic iteration over a `Vec<WlEvent>` instead of one dyn
+//! dispatch per event — set `event_batch = 1` to recover the old
+//! per-event behaviour as a measurable baseline (`benches/hotpath.rs`).
+//! Both paths produce bit-identical `SimReport`s
+//! (`tests/pipeline_equivalence.rs`).
+
+use crate::alloctrack::AllocTracker;
+use crate::cache::{AccessOutcome, CacheHierarchy, Prefetcher};
+use crate::policy::EpochPolicy;
+use crate::runtime::{BatchTimingModel, TimingInputs, TimingModel};
+use crate::topology::Topology;
+use crate::trace::binning::EpochBins;
+use crate::trace::WlEvent;
+use crate::workload::Workload;
+
+use super::report::SimReport;
+use super::SimConfig;
+
+/// Default `SimConfig::event_batch`: events pulled per `next_batch`.
+pub const DEFAULT_EVENT_BATCH: usize = 4096;
+
+/// What happens when an epoch boundary fires. The driver hands over the
+/// filled bins, the epoch's native virtual time, and the tracker (epoch
+/// policies migrate regions through it); the strategy is responsible
+/// for calling `report.push_epoch` once per epoch, in order.
+pub trait EpochFlush {
+    fn on_epoch(
+        &mut self,
+        bins: &EpochBins,
+        native_ns: f64,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()>;
+
+    /// Called once after the workload exits (tail flush for grouped
+    /// strategies).
+    fn finish(
+        &mut self,
+        _tracker: &mut AllocTracker,
+        _report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Owns the tracer substrate (cache hierarchy, allocation tracker,
+/// epoch bins, optional hardware prefetcher) and drives a workload
+/// through it epoch by epoch.
+pub struct EpochDriver {
+    pub cache: CacheHierarchy,
+    pub tracker: AllocTracker,
+    pub bins: EpochBins,
+    pub prefetcher: Option<Box<dyn Prefetcher>>,
+    epoch_ns: f64,
+    cpi_ns: f64,
+    alloc_cost_ns: f64,
+    /// Precomputed `max(mlp, 1.0)` divisor.
+    mlp_div: f64,
+    sample_period: u32,
+    local_read_ns: f64,
+    local_write_ns: f64,
+    event_batch: usize,
+    // per-run state
+    epoch_vtime: f64,
+    sample_ctr: u32,
+    buf: Vec<WlEvent>,
+}
+
+impl EpochDriver {
+    pub fn new(topo: &Topology, cfg: &SimConfig) -> anyhow::Result<EpochDriver> {
+        let prefetcher = match &cfg.prefetcher {
+            Some(name) => Some(
+                crate::cache::prefetch::by_name(name, topo.host.cacheline_bytes)
+                    .ok_or_else(|| anyhow::anyhow!("unknown prefetcher `{name}`"))?,
+            ),
+            None => None,
+        };
+        Ok(EpochDriver {
+            cache: CacheHierarchy::scaled(cfg.cache_scale),
+            tracker: AllocTracker::new(topo, cfg.policy.build(topo)),
+            bins: EpochBins::new(
+                crate::runtime::shapes::NUM_POOLS,
+                cfg.nbins,
+                cfg.epoch_ns(),
+            ),
+            prefetcher,
+            epoch_ns: cfg.epoch_ns(),
+            cpi_ns: cfg.cpi_ns,
+            alloc_cost_ns: cfg.alloc_cost_ns,
+            mlp_div: cfg.mlp.max(1.0),
+            sample_period: cfg.sample_period,
+            local_read_ns: topo.host.local_read_latency_ns,
+            local_write_ns: topo.host.local_write_latency_ns,
+            event_batch: cfg.event_batch.max(1),
+            epoch_vtime: 0.0,
+            sample_ctr: 0,
+            buf: Vec::with_capacity(cfg.event_batch.max(1)),
+        })
+    }
+
+    /// Reset per-run state (cache stats, bins, epoch clock). The
+    /// tracker deliberately persists across runs, matching the previous
+    /// coordinator behaviour (allocations outlive a `run` call).
+    pub fn reset(&mut self) {
+        self.cache.reset_stats();
+        self.bins.clear();
+        self.epoch_vtime = 0.0;
+        self.sample_ctr = 0;
+    }
+
+    /// Account one event: virtual time, cache walk, miss sampling,
+    /// write-back traffic, prefetcher traffic.
+    #[inline]
+    fn on_event(&mut self, ev: WlEvent, report: &mut SimReport) {
+        match ev {
+            WlEvent::Alloc(mut a) => {
+                a.t_ns = report.native_ns + self.epoch_vtime;
+                self.tracker.on_alloc_event(&a);
+                report.alloc_events += 1;
+                self.epoch_vtime += self.alloc_cost_ns;
+            }
+            WlEvent::Access(a) => {
+                let outcome = self.cache.access(a.addr, a.is_write);
+                let mut cost = self.cpi_ns + self.cache.hit_latency_ns(outcome);
+                if let AccessOutcome::Miss { writeback } = outcome {
+                    // native run: the miss is served by local DRAM; the
+                    // OoO core overlaps `mlp` misses on average
+                    cost += if a.is_write { self.local_write_ns } else { self.local_read_ns }
+                        / self.mlp_div;
+                    let pool = self.tracker.pool_of(a.addr);
+                    report.record_miss(pool, a.is_write);
+                    self.sample_ctr += 1;
+                    if self.sample_ctr >= self.sample_period {
+                        self.sample_ctr = 0;
+                        self.bins.record(
+                            pool,
+                            a.is_write,
+                            self.epoch_vtime,
+                            self.sample_period as f32,
+                        );
+                    }
+                    if let Some(wb_addr) = writeback {
+                        // dirty eviction: a write transits to the victim
+                        // line's pool (unsampled, weight 1)
+                        let wb_pool = self.tracker.pool_of(wb_addr);
+                        report.record_writeback(wb_pool);
+                        self.bins.record(wb_pool, true, self.epoch_vtime, 1.0);
+                    }
+                }
+                // hardware prefetcher: observe, fill, bin the traffic
+                if let Some(pf) = &mut self.prefetcher {
+                    let was_miss = matches!(outcome, AccessOutcome::Miss { .. });
+                    let targets = pf.observe(a.addr, was_miss);
+                    if !targets.is_empty() {
+                        let fetched =
+                            crate::cache::prefetch::issue_prefetches(&mut self.cache, &targets);
+                        for t in fetched {
+                            let pool = self.tracker.pool_of(t);
+                            report.prefetches += 1;
+                            self.bins.record(pool, false, self.epoch_vtime, 1.0);
+                        }
+                    }
+                }
+                self.epoch_vtime += cost;
+            }
+        }
+    }
+
+    fn flush_epoch<F: EpochFlush + ?Sized>(
+        &mut self,
+        flush: &mut F,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        flush.on_epoch(&self.bins, self.epoch_vtime, &mut self.tracker, report)?;
+        self.bins.clear();
+        self.epoch_vtime = 0.0;
+        Ok(())
+    }
+
+    /// The epoch loop (paper Figure 2): pump events, fire the Timer at
+    /// every epoch boundary, flush through the strategy.
+    pub fn run<F: EpochFlush + ?Sized>(
+        &mut self,
+        wl: &mut dyn Workload,
+        flush: &mut F,
+        report: &mut SimReport,
+        max_epochs: Option<u64>,
+    ) -> anyhow::Result<()> {
+        let mut buf = std::mem::take(&mut self.buf);
+        let mut done = false;
+        // count boundaries fired here, NOT report.epochs_run: grouped
+        // flush strategies only push to the report at group-flush time,
+        // so the report count lags by up to a group and max_epochs
+        // would overshoot
+        let mut epochs_fired = 0u64;
+        'pump: while !done {
+            buf.clear();
+            if !wl.next_batch(&mut buf, self.event_batch) {
+                done = true;
+            } else {
+                debug_assert!(
+                    !buf.is_empty(),
+                    "Workload::next_batch returned true without pushing events"
+                );
+            }
+            for i in 0..buf.len() {
+                self.on_event(buf[i], report);
+                // epoch boundary: the Timer fires
+                if self.epoch_vtime >= self.epoch_ns {
+                    self.flush_epoch(flush, report)?;
+                    epochs_fired += 1;
+                    if let Some(max) = max_epochs {
+                        if epochs_fired >= max {
+                            // remaining buffered events are discarded,
+                            // exactly like the per-event loop that never
+                            // pulled them
+                            break 'pump;
+                        }
+                    }
+                }
+            }
+        }
+        // the program exited mid-epoch: flush the partial epoch
+        if self.epoch_vtime > 0.0 {
+            self.flush_epoch(flush, report)?;
+        }
+        self.buf = buf;
+        flush.finish(&mut self.tracker, report)
+    }
+}
+
+/// Per-epoch analyze strategy: the classic coordinator mode. Runs the
+/// timing model on every epoch boundary and lets the installed epoch
+/// policy act on the fresh outputs before the next epoch starts.
+pub struct PerEpochAnalyze<'m, 'p> {
+    pub model: &'m mut dyn TimingModel,
+    pub policy: Option<&'p mut dyn EpochPolicy>,
+    pub bytes_per_ev: f32,
+    pub keep_epoch_records: bool,
+}
+
+impl EpochFlush for PerEpochAnalyze<'_, '_> {
+    fn on_epoch(
+        &mut self,
+        bins: &EpochBins,
+        native_ns: f64,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        let out = self.model.analyze(&TimingInputs {
+            reads: &bins.reads,
+            writes: &bins.writes,
+            bin_width: bins.bin_width_ns() as f32,
+            bytes_per_ev: self.bytes_per_ev,
+        })?;
+        if let Some(policy) = &mut self.policy {
+            policy.on_epoch(tracker, bins, &out);
+        }
+        report.push_epoch(native_ns, &out, bins.total_events, self.keep_epoch_records);
+        Ok(())
+    }
+}
+
+/// One epoch parked in a [`BatchedFlush`] group, waiting for analysis.
+struct PendingEpoch {
+    reads: Vec<f32>,
+    writes: Vec<f32>,
+    native_ns: f64,
+    events: u64,
+}
+
+/// Grouped-analyze strategy: accumulates E epochs of histograms and
+/// flushes them through one [`BatchTimingModel`] call (PJRT dispatch
+/// amortization for offline replay; a plain loop on the native
+/// backend). Epoch policies still run — per epoch, at group-flush time,
+/// so their tracker mutations take effect up to E−1 epochs late; that
+/// is the documented fidelity trade of batched replay (delays never
+/// feed back into the event stream either way).
+pub struct BatchedFlush<'m, 'p> {
+    pub model: &'m mut dyn BatchTimingModel,
+    pub policy: Option<&'p mut dyn EpochPolicy>,
+    pub bytes_per_ev: f32,
+    pub keep_epoch_records: bool,
+    pending: Vec<PendingEpoch>,
+    /// Recycled `PendingEpoch`s: after a group flush their buffers are
+    /// reused, so steady state allocates nothing per epoch.
+    spare: Vec<PendingEpoch>,
+    /// Scratch [E, P, B] upload buffers, reused across group flushes.
+    scratch_reads: Vec<f32>,
+    scratch_writes: Vec<f32>,
+    /// Scratch bins handed to the policy (allocated once, on demand).
+    policy_bins: Option<EpochBins>,
+    bin_width: f32,
+    nbins: usize,
+    epoch_ns: f64,
+}
+
+impl<'m, 'p> BatchedFlush<'m, 'p> {
+    pub fn new(
+        model: &'m mut dyn BatchTimingModel,
+        bytes_per_ev: f32,
+        keep_epoch_records: bool,
+        bin_width: f32,
+        nbins: usize,
+        epoch_ns: f64,
+    ) -> BatchedFlush<'m, 'p> {
+        let cap = model.batch();
+        BatchedFlush {
+            model,
+            policy: None,
+            bytes_per_ev,
+            keep_epoch_records,
+            pending: Vec::with_capacity(cap),
+            spare: Vec::with_capacity(cap),
+            scratch_reads: Vec::new(),
+            scratch_writes: Vec::new(),
+            policy_bins: None,
+            bin_width,
+            nbins,
+            epoch_ns,
+        }
+    }
+
+    fn flush_group(
+        &mut self,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let (e, p, s, b) = (
+            self.model.batch(),
+            self.model.pools(),
+            self.model.switches(),
+            self.model.nbins(),
+        );
+        let filled = self.pending.len();
+        self.scratch_reads.clear();
+        self.scratch_reads.resize(e * p * b, 0.0);
+        self.scratch_writes.clear();
+        self.scratch_writes.resize(e * p * b, 0.0);
+        for (i, ep) in self.pending.iter().enumerate() {
+            self.scratch_reads[i * p * b..i * p * b + ep.reads.len()]
+                .copy_from_slice(&ep.reads);
+            self.scratch_writes[i * p * b..i * p * b + ep.writes.len()]
+                .copy_from_slice(&ep.writes);
+        }
+        let out = self.model.analyze_batch(
+            &self.scratch_reads,
+            &self.scratch_writes,
+            self.bin_width,
+            self.bytes_per_ev,
+        )?;
+        for i in 0..filled {
+            let one = out.epoch(i, p, s);
+            let ep = &self.pending[i];
+            if let Some(policy) = &mut self.policy {
+                // rebuild this epoch's bins view for the policy
+                let bins = self
+                    .policy_bins
+                    .get_or_insert_with(|| EpochBins::new(p, self.nbins, self.epoch_ns));
+                bins.reads.copy_from_slice(&ep.reads);
+                bins.writes.copy_from_slice(&ep.writes);
+                bins.total_events = ep.events;
+                policy.on_epoch(tracker, bins, &one);
+            }
+            report.push_epoch(ep.native_ns, &one, ep.events, self.keep_epoch_records);
+        }
+        self.spare.append(&mut self.pending);
+        Ok(())
+    }
+}
+
+impl EpochFlush for BatchedFlush<'_, '_> {
+    fn on_epoch(
+        &mut self,
+        bins: &EpochBins,
+        native_ns: f64,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        let mut ep = self.spare.pop().unwrap_or_else(|| PendingEpoch {
+            reads: Vec::with_capacity(bins.reads.len()),
+            writes: Vec::with_capacity(bins.writes.len()),
+            native_ns: 0.0,
+            events: 0,
+        });
+        ep.reads.clear();
+        ep.reads.extend_from_slice(&bins.reads);
+        ep.writes.clear();
+        ep.writes.extend_from_slice(&bins.writes);
+        ep.native_ns = native_ns;
+        ep.events = bins.total_events;
+        self.pending.push(ep);
+        if self.pending.len() == self.model.batch() {
+            self.flush_group(tracker, report)?;
+        }
+        Ok(())
+    }
+
+    fn finish(
+        &mut self,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        self.flush_group(tracker, report)
+    }
+}

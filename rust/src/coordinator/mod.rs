@@ -18,18 +18,17 @@
 //! * **wall time** — what running the tool costs us: Table 1's metric.
 
 pub mod batch;
+pub mod driver;
 pub mod report;
 
-pub use batch::run_batched;
+pub use batch::{run_batched, run_batched_with};
+pub use driver::{BatchedFlush, EpochDriver, EpochFlush, PerEpochAnalyze, DEFAULT_EVENT_BATCH};
 pub use report::{EpochRecord, SimReport};
 
 use crate::alloctrack::{AllocTracker, PolicyKind};
-use crate::cache::{AccessOutcome, CacheHierarchy};
 use crate::policy::EpochPolicy;
-use crate::runtime::{self, AnalyzerBackend, TimingInputs, TimingModel};
+use crate::runtime::{self, AnalyzerBackend, TimingModel};
 use crate::topology::{TopoTensors, Topology};
-use crate::trace::binning::EpochBins;
-use crate::trace::WlEvent;
 use crate::workload::{self, Workload};
 
 /// Coordinator configuration (CLI flags map 1:1 onto these fields).
@@ -71,6 +70,12 @@ pub struct SimConfig {
     /// latency) and their link traffic is binned as reads — a
     /// conservative accounting documented in DESIGN.md §5.
     pub prefetcher: Option<String>,
+    /// Events pulled per `Workload::next_batch` call in the epoch
+    /// driver's pump. 1 = the legacy one-virtual-call-per-event loop
+    /// (kept as a measurable baseline); larger values keep the inner
+    /// loop monomorphic. Simulation output is identical for any value
+    /// (`tests/pipeline_equivalence.rs`).
+    pub event_batch: usize,
 }
 
 impl Default for SimConfig {
@@ -91,6 +96,7 @@ impl Default for SimConfig {
             alloc_cost_ns: 1_000.0,
             keep_epoch_records: false,
             prefetcher: None,
+            event_batch: driver::DEFAULT_EVENT_BATCH,
         }
     }
 }
@@ -106,11 +112,8 @@ pub struct Coordinator {
     pub topo: Topology,
     pub cfg: SimConfig,
     model: Box<dyn TimingModel>,
-    cache: CacheHierarchy,
-    tracker: AllocTracker,
-    bins: EpochBins,
+    driver: EpochDriver,
     epoch_policy: Option<Box<dyn EpochPolicy>>,
-    prefetcher: Option<Box<dyn crate::cache::Prefetcher>>,
 }
 
 impl Coordinator {
@@ -123,17 +126,8 @@ impl Coordinator {
         let mut model =
             runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
         model.set_export_backlog(false); // re-enabled by set_epoch_policy
-        let cache = CacheHierarchy::scaled(cfg.cache_scale);
-        let tracker = AllocTracker::new(&topo, cfg.policy.build(&topo));
-        let bins = EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns());
-        let prefetcher = match &cfg.prefetcher {
-            Some(name) => Some(
-                crate::cache::prefetch::by_name(name, topo.host.cacheline_bytes)
-                    .ok_or_else(|| anyhow::anyhow!("unknown prefetcher `{name}`"))?,
-            ),
-            None => None,
-        };
-        Ok(Coordinator { topo, cfg, model, cache, tracker, bins, epoch_policy: None, prefetcher })
+        let driver = EpochDriver::new(&topo, &cfg)?;
+        Ok(Coordinator { topo, cfg, model, driver, epoch_policy: None })
     }
 
     /// Install a per-epoch research policy (migration / prefetch).
@@ -143,7 +137,7 @@ impl Coordinator {
     }
 
     pub fn tracker(&self) -> &AllocTracker {
-        &self.tracker
+        &self.driver.tracker
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -157,109 +151,29 @@ impl Coordinator {
         self.run(wl.as_mut())
     }
 
-    /// The epoch loop (paper Figure 2).
+    /// The epoch loop (paper Figure 2), driven by the shared
+    /// [`EpochDriver`] with a per-epoch analyze flush.
     pub fn run(&mut self, wl: &mut dyn Workload) -> anyhow::Result<SimReport> {
         let wall_start = std::time::Instant::now();
-        let epoch_ns = self.cfg.epoch_ns();
         let mut report = SimReport::new(
             wl.name(),
             &self.topo.name,
             self.model.backend_name(),
             self.topo.num_pools(),
         );
-        self.cache.reset_stats();
-        self.bins.clear();
-
-        let mut epoch_vtime = 0.0f64; // ns into the current epoch
-        let mut sample_ctr = 0u32;
-        let mut done = false;
-
-        while !done {
-            match wl.next_event() {
-                None => done = true,
-                Some(WlEvent::Alloc(mut ev)) => {
-                    ev.t_ns = report.native_ns + epoch_vtime;
-                    self.tracker.on_alloc_event(&ev);
-                    report.alloc_events += 1;
-                    epoch_vtime += self.cfg.alloc_cost_ns;
-                }
-                Some(WlEvent::Access(a)) => {
-                    let outcome = self.cache.access(a.addr, a.is_write);
-                    let mut cost = self.cfg.cpi_ns + self.cache.hit_latency_ns(outcome);
-                    if let AccessOutcome::Miss { writeback } = outcome {
-                        // native run: the miss is served by local DRAM;
-                        // the OoO core overlaps `mlp` misses on average
-                        cost += if a.is_write {
-                            self.topo.host.local_write_latency_ns
-                        } else {
-                            self.topo.host.local_read_latency_ns
-                        } / self.cfg.mlp.max(1.0);
-                        let pool = self.tracker.pool_of(a.addr);
-                        report.record_miss(pool, a.is_write);
-                        sample_ctr += 1;
-                        if sample_ctr >= self.cfg.sample_period {
-                            sample_ctr = 0;
-                            self.bins.record(
-                                pool,
-                                a.is_write,
-                                epoch_vtime,
-                                self.cfg.sample_period as f32,
-                            );
-                        }
-                        if let Some(wb_addr) = writeback {
-                            // dirty eviction: a write transits to the
-                            // victim line's pool (unsampled, weight 1)
-                            let wb_pool = self.tracker.pool_of(wb_addr);
-                            report.record_writeback(wb_pool);
-                            self.bins.record(wb_pool, true, epoch_vtime, 1.0);
-                        }
-                    }
-                    // hardware prefetcher: observe, fill, bin the traffic
-                    if let Some(pf) = &mut self.prefetcher {
-                        let was_miss = matches!(outcome, AccessOutcome::Miss { .. });
-                        let targets = pf.observe(a.addr, was_miss);
-                        if !targets.is_empty() {
-                            let fetched =
-                                crate::cache::prefetch::issue_prefetches(&mut self.cache, &targets);
-                            for t in fetched {
-                                let pool = self.tracker.pool_of(t);
-                                report.prefetches += 1;
-                                self.bins.record(pool, false, epoch_vtime, 1.0);
-                            }
-                        }
-                    }
-                    epoch_vtime += cost;
-                }
-            }
-
-            // epoch boundary: the Timer fires (or the program exited)
-            if epoch_vtime >= epoch_ns || (done && epoch_vtime > 0.0) {
-                let out = self.model.analyze(&TimingInputs {
-                    reads: &self.bins.reads,
-                    writes: &self.bins.writes,
-                    bin_width: self.bins.bin_width_ns() as f32,
-                    bytes_per_ev: self.topo.host.cacheline_bytes as f32,
-                })?;
-                if let Some(policy) = &mut self.epoch_policy {
-                    policy.on_epoch(&mut self.tracker, &self.bins, &out);
-                }
-                report.push_epoch(
-                    epoch_vtime,
-                    &out,
-                    self.bins.total_events,
-                    self.cfg.keep_epoch_records,
-                );
-                self.bins.clear();
-                epoch_vtime = 0.0;
-                if let Some(max) = self.cfg.max_epochs {
-                    if report.epochs_run >= max {
-                        done = true;
-                    }
-                }
-            }
-        }
-
-        report.finish(&self.cache.stats, &self.tracker.stats, wall_start.elapsed());
+        self.driver.reset();
+        let mut flush = PerEpochAnalyze {
+            model: self.model.as_mut(),
+            policy: self.epoch_policy.as_deref_mut(),
+            bytes_per_ev: self.topo.host.cacheline_bytes as f32,
+            keep_epoch_records: self.cfg.keep_epoch_records,
+        };
+        self.driver.run(wl, &mut flush, &mut report, self.cfg.max_epochs)?;
+        report.finish(
+            &self.driver.cache.stats,
+            &self.driver.tracker.stats,
+            wall_start.elapsed(),
+        );
         Ok(report)
     }
 }

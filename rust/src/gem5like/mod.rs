@@ -264,7 +264,17 @@ impl DetailedSim {
         let mut now = 0.0f64;
         let mut pkt_id = 0u64;
 
-        while let Some(ev) = wl.next_event() {
+        // batched event pump: pull events through the workload's native
+        // batched emission so the (already expensive) detailed model
+        // does not also pay a virtual call per event
+        let mut buf: Vec<WlEvent> =
+            Vec::with_capacity(crate::coordinator::DEFAULT_EVENT_BATCH);
+        let mut more = true;
+        while more {
+            buf.clear();
+            more = wl.next_batch(&mut buf, crate::coordinator::DEFAULT_EVENT_BATCH);
+            for i in 0..buf.len() {
+            let ev = buf[i];
             match ev {
                 WlEvent::Alloc(mut a) => {
                     a.t_ns = now;
@@ -334,6 +344,7 @@ impl DetailedSim {
                         }
                     }
                 }
+            }
             }
         }
         // drain

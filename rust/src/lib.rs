@@ -13,8 +13,44 @@
 //! * **Layer 1** — the per-switch queueing scan as a Pallas kernel
 //!   (`python/compile/kernels/queue_scan.py`).
 //!
-//! Python never runs at simulation time: `runtime` loads the HLO
-//! artifacts through PJRT (`xla` crate) and executes them per epoch.
+//! Python never runs at simulation time: with the `pjrt` cargo feature,
+//! `runtime` loads the HLO artifacts through PJRT (`xla` crate) and
+//! executes them per epoch; the default build uses the pure-rust
+//! `native` mirror of the same math and needs no artifacts at all.
+//!
+//! ## The batched event pipeline
+//!
+//! The tracer substrate is the product: the paper's claim is epoch
+//! sampling running orders of magnitude faster than cycle-accurate
+//! simulation, so per-event overhead is the whole game. The hot path is
+//! organized around three ideas (see `coordinator::driver`):
+//!
+//! * **Batched event flow** — `Workload::next_batch` emits runs of
+//!   events through one virtual call (all built-in workloads implement
+//!   native run-length emission), and the `EpochDriver` pump iterates a
+//!   plain `Vec<WlEvent>`: a monomorphic inner loop instead of one dyn
+//!   dispatch per event. `SimConfig::event_batch = 1` recovers the
+//!   legacy per-event loop as a measurable baseline, with bit-identical
+//!   simulation output (`tests/pipeline_equivalence.rs`).
+//! * **Tracer fast paths** — `AllocTracker::pool_of` (one call per LLC
+//!   miss) answers through a one-entry MRU region cache backed by a
+//!   lazily rebuilt flat interval index (binary search), instead of a
+//!   `BTreeMap::range` walk per miss; misses have strong spatial
+//!   locality so the MRU entry absorbs the vast majority of lookups.
+//! * **One epoch driver for the epoch-sampling modes** — the
+//!   sequential coordinator and the grouped-analyzer replay
+//!   (`coordinator::run_batched`) share one `EpochDriver`, differing
+//!   only in their `EpochFlush` strategy, so accounting semantics
+//!   (prefetcher traffic, sampling, write-backs, epoch policies) land
+//!   once for both. The `gem5like` detailed baseline keeps its own
+//!   event-accounting loop by design (it models a different machine)
+//!   but adopts the same batched pump. The multihost runner shards its
+//!   per-epoch host phase across OS threads and merges per-host bins
+//!   deterministically at the epoch barrier.
+//!
+//! `benches/hotpath.rs` measures all three against their baselines
+//! (per-event pump, `pool_of_btree`) and writes the numbers to
+//! `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //!

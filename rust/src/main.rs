@@ -62,7 +62,7 @@ fn usage() {
          usage: cxlmemsim <run|table1|sweep|multihost|record|replay|topo|list> [--flags]\n\
          common flags: --workload W --topo T --policy P --backend pjrt|native\n\
                        --epoch-ms F --scale F --seed N --sample-period N\n\
-                       --cache-scale N --max-epochs N --json"
+                       --cache-scale N --max-epochs N --event-batch N --json"
     );
 }
 
@@ -91,6 +91,7 @@ fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
     }
     cfg.prefetcher = args.opt_str("prefetch");
     cfg.keep_epoch_records = args.bool("epoch-records");
+    cfg.event_batch = args.usize("event-batch", cfg.event_batch).max(1);
     Ok(cfg)
 }
 
@@ -230,7 +231,12 @@ fn cmd_multihost(args: &Args) -> anyhow::Result<()> {
     let workloads: Vec<_> = (0..n)
         .map(|i| workload::by_name(&wl_name, cfg.scale, cfg.seed + i as u64).unwrap())
         .collect();
-    let rep = multihost::run_shared(&topo, &cfg, workloads)?;
+    // --threads N pins the host-phase thread count (0 = one per core);
+    // the result is identical either way, only wall-clock changes
+    let rep = match args.usize("threads", 0) {
+        0 => multihost::run_shared(&topo, &cfg, workloads)?,
+        t => multihost::run_shared_threads(&topo, &cfg, workloads, t)?,
+    };
     println!(
         "multihost: {} x {} on `{}`: {} epochs, mean slowdown {:.3}x",
         n,

@@ -4,17 +4,29 @@
 //! performance impact of CXL.mem pool coherency on applications that
 //! share memory across multiple servers").
 //!
-//! Each host has its own cache hierarchy and allocation tracker (its
-//! own address space), but all hosts' misses route into the *same*
-//! per-epoch bins, so the shared switches see the union of the traffic
-//! and the congestion/bandwidth scans charge everyone. The computed
-//! epoch delay is attributed to hosts proportionally to their traffic.
+//! Each host has its own cache hierarchy, allocation tracker (its own
+//! address space), and per-epoch bins. Within an epoch every host
+//! advances independently — which is why the host phase parallelizes:
+//! hosts are sharded across OS threads (`std::thread::scope`), and the
+//! per-host bins are merged into the shared bins at the epoch barrier,
+//! always in host order, so the result is bit-identical for any thread
+//! count (`tests/pipeline_equivalence.rs`). The shared switches then
+//! see the union of the traffic and the congestion/bandwidth scans
+//! charge everyone; the computed epoch delay is attributed to hosts
+//! proportionally to their traffic.
+//!
+//! CXL.mem pool coherency (paper §2): writes to the shared range are
+//! logged during the host phase and applied at the barrier — each
+//! delivered back-invalidation drops the line from the peer's caches
+//! and transits the topology as a write message. Deferring delivery to
+//! the barrier (epoch granularity, the simulator's native resolution)
+//! is what makes the host phase embarrassingly parallel.
 
 use crate::alloctrack::AllocTracker;
 use crate::cache::{AccessOutcome, CacheHierarchy};
 use crate::coordinator::SimConfig;
 use crate::runtime::{self, TimingInputs};
-use crate::topology::{TopoTensors, Topology};
+use crate::topology::{PoolId, TopoTensors, Topology};
 use crate::trace::binning::EpochBins;
 use crate::trace::WlEvent;
 use crate::workload::Workload;
@@ -59,24 +71,132 @@ impl MultiHostReport {
     }
 }
 
+/// A write to the shared range, logged during the host phase and
+/// delivered as back-invalidations at the epoch barrier.
+struct SharedWrite {
+    addr: u64,
+    pool: PoolId,
+    /// Writer's epoch-relative virtual time of the write.
+    t_ns: f64,
+}
+
 struct Host {
     wl: Box<dyn Workload>,
     cache: CacheHierarchy,
     tracker: AllocTracker,
+    /// This host's slice of the epoch's traffic; merged at the barrier.
+    bins: EpochBins,
+    /// Carry-over event buffer (events pulled past the epoch boundary
+    /// stay queued for the next epoch).
+    buf: Vec<WlEvent>,
+    cursor: usize,
+    shared_writes: Vec<SharedWrite>,
     native_ns: f64,
     epoch_vtime: f64,
     epoch_misses: f64,
     misses: u64,
     delay_ns: f64,
+    /// The workload emitted its last event (buffer may still drain).
+    src_done: bool,
+    /// Fully finished: source exhausted and buffer drained.
     done: bool,
 }
 
-/// Run `workloads` concurrently over one topology; round-robin event
-/// interleaving approximates concurrent execution at epoch granularity.
+/// Advance one host to its epoch boundary (or to completion). Pure in
+/// everything but the host's own state — safe to run hosts on separate
+/// threads.
+fn advance_host_epoch(
+    h: &mut Host,
+    topo: &Topology,
+    cfg: &SimConfig,
+    epoch_ns: f64,
+    shared_base: u64,
+    batch: usize,
+) {
+    if h.done {
+        return;
+    }
+    loop {
+        if h.epoch_vtime >= epoch_ns {
+            break;
+        }
+        if h.cursor >= h.buf.len() {
+            if h.src_done {
+                h.done = true;
+                break;
+            }
+            h.buf.clear();
+            h.cursor = 0;
+            if !h.wl.next_batch(&mut h.buf, batch) {
+                h.src_done = true;
+            }
+            if h.buf.is_empty() {
+                h.done = true;
+                break;
+            }
+        }
+        let ev = h.buf[h.cursor];
+        h.cursor += 1;
+        match ev {
+            WlEvent::Alloc(mut a) => {
+                a.t_ns = h.native_ns + h.epoch_vtime;
+                h.tracker.on_alloc_event(&a);
+                h.epoch_vtime += cfg.alloc_cost_ns;
+            }
+            WlEvent::Access(a) => {
+                let outcome = h.cache.access(a.addr, a.is_write);
+                let mut cost = cfg.cpi_ns + h.cache.hit_latency_ns(outcome);
+                let mut pool = usize::MAX;
+                if let AccessOutcome::Miss { writeback } = outcome {
+                    cost += if a.is_write {
+                        topo.host.local_write_latency_ns
+                    } else {
+                        topo.host.local_read_latency_ns
+                    } / cfg.mlp.max(1.0);
+                    pool = h.tracker.pool_of(a.addr);
+                    h.misses += 1;
+                    h.epoch_misses += 1.0;
+                    let t = h.epoch_vtime;
+                    h.bins.record(pool, a.is_write, t, 1.0);
+                    if let Some(wb) = writeback {
+                        let wb_pool = h.tracker.pool_of(wb);
+                        h.bins.record(wb_pool, true, t, 1.0);
+                    }
+                }
+                h.epoch_vtime += cost;
+                // CXL.mem pool coherency: log the shared write; peers'
+                // copies are back-invalidated at the epoch barrier.
+                if a.is_write && a.addr >= shared_base {
+                    if pool == usize::MAX {
+                        pool = h.tracker.pool_of(a.addr);
+                    }
+                    h.shared_writes.push(SharedWrite { addr: a.addr, pool, t_ns: h.epoch_vtime });
+                }
+            }
+        }
+    }
+}
+
+/// Run `workloads` concurrently over one topology, sharding the host
+/// phase over as many threads as the machine offers; round-robin epoch
+/// barriers approximate concurrent execution at epoch granularity.
 pub fn run_shared(
     topo: &Topology,
     cfg: &SimConfig,
     workloads: Vec<Box<dyn Workload>>,
+) -> anyhow::Result<MultiHostReport> {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    run_shared_threads(topo, cfg, workloads, threads)
+}
+
+/// [`run_shared`] with an explicit host-phase thread count. The result
+/// is bit-identical for every `threads` value (deterministic barrier
+/// merge); `threads == 1` runs everything inline.
+pub fn run_shared_threads(
+    topo: &Topology,
+    cfg: &SimConfig,
+    workloads: Vec<Box<dyn Workload>>,
+    threads: usize,
 ) -> anyhow::Result<MultiHostReport> {
     let wall = std::time::Instant::now();
     let tensors = TopoTensors::build(
@@ -87,17 +207,23 @@ pub fn run_shared(
     let mut model = runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
     let mut bins = EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns());
 
+    let batch = cfg.event_batch.max(1);
     let mut hosts: Vec<Host> = workloads
         .into_iter()
         .map(|wl| Host {
             wl,
             cache: CacheHierarchy::scaled(cfg.cache_scale),
             tracker: AllocTracker::new(topo, cfg.policy.build(topo)),
+            bins: EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns()),
+            buf: Vec::with_capacity(batch),
+            cursor: 0,
+            shared_writes: Vec::new(),
             native_ns: 0.0,
             epoch_vtime: 0.0,
             epoch_misses: 0.0,
             misses: 0,
             delay_ns: 0.0,
+            src_done: false,
             done: false,
         })
         .collect();
@@ -110,78 +236,67 @@ pub fn run_shared(
     let mut invalidations = 0u64;
     let mut coherence_msgs = 0u64;
     let shared_base = crate::workload::patterns::SHARED_BASE;
+    let nthreads = threads.max(1).min(hosts.len().max(1));
 
     loop {
-        let mut all_done = true;
-        // advance every live host until it crosses the epoch boundary
+        let live = hosts.iter().filter(|h| !h.done).count();
+        if live == 0 {
+            break;
+        }
+        // ---- parallel host phase: advance every live host one epoch.
+        // A fresh thread scope per epoch keeps the borrow story trivial
+        // (workers own disjoint &mut chunks only while the scope lives,
+        // the barrier below gets the whole Vec back); the spawn cost is
+        // amortized over an epoch's worth of event processing, and we
+        // drop to the inline path when threads can't help.
+        if nthreads <= 1 || live <= 1 {
+            for h in hosts.iter_mut() {
+                advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
+            }
+        } else {
+            let chunk = hosts.len().div_ceil(nthreads);
+            std::thread::scope(|s| {
+                for slice in hosts.chunks_mut(chunk) {
+                    s.spawn(move || {
+                        for h in slice {
+                            advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
+                        }
+                    });
+                }
+            });
+        }
+
+        // ---- epoch barrier (sequential, host order => deterministic)
+        // 1. merge per-host traffic into the shared switch view
+        for h in hosts.iter_mut() {
+            bins.merge_from(&h.bins);
+            h.bins.clear();
+        }
+        // 2. deliver coherence back-invalidations for shared writes
         for hi in 0..hosts.len() {
-            if hosts[hi].done {
+            if hosts[hi].shared_writes.is_empty() {
                 continue;
             }
-            all_done = false;
-            while hosts[hi].epoch_vtime < epoch_ns {
-                match hosts[hi].wl.next_event() {
-                    None => {
-                        hosts[hi].done = true;
-                        break;
+            let writes = std::mem::take(&mut hosts[hi].shared_writes);
+            for w in &writes {
+                for pj in 0..hosts.len() {
+                    if pj == hi {
+                        continue;
                     }
-                    Some(WlEvent::Alloc(mut ev)) => {
-                        let h = &mut hosts[hi];
-                        ev.t_ns = h.native_ns + h.epoch_vtime;
-                        h.tracker.on_alloc_event(&ev);
-                        h.epoch_vtime += cfg.alloc_cost_ns;
-                    }
-                    Some(WlEvent::Access(a)) => {
-                        let h = &mut hosts[hi];
-                        let outcome = h.cache.access(a.addr, a.is_write);
-                        let mut cost = cfg.cpi_ns + h.cache.hit_latency_ns(outcome);
-                        let mut pool = usize::MAX;
-                        if let AccessOutcome::Miss { writeback } = outcome {
-                            cost += if a.is_write {
-                                topo.host.local_write_latency_ns
-                            } else {
-                                topo.host.local_read_latency_ns
-                            } / cfg.mlp.max(1.0);
-                            pool = h.tracker.pool_of(a.addr);
-                            h.misses += 1;
-                            h.epoch_misses += 1.0;
-                            let t = h.epoch_vtime;
-                            bins.record(pool, a.is_write, t, 1.0);
-                            if let Some(wb) = writeback {
-                                let wb_pool = h.tracker.pool_of(wb);
-                                bins.record(wb_pool, true, t, 1.0);
-                            }
-                        }
-                        hosts[hi].epoch_vtime += cost;
-                        // CXL.mem pool coherency (paper §2): a write to
-                        // a shared line back-invalidates every peer's
-                        // cached copy; each delivered invalidation is a
-                        // message through the pool's switch path.
-                        if a.is_write && a.addr >= shared_base {
-                            let t = hosts[hi].epoch_vtime;
-                            if pool == usize::MAX {
-                                pool = hosts[hi].tracker.pool_of(a.addr);
-                            }
-                            for pj in 0..hosts.len() {
-                                if pj == hi {
-                                    continue;
-                                }
-                                if hosts[pj].cache.coherence_invalidate(a.addr) {
-                                    invalidations += 1;
-                                    coherence_msgs += 1;
-                                    bins.record(pool, true, t, 1.0);
-                                }
-                            }
-                        }
+                    if hosts[pj].cache.coherence_invalidate(w.addr) {
+                        invalidations += 1;
+                        coherence_msgs += 1;
+                        bins.record(w.pool, true, w.t_ns, 1.0);
                     }
                 }
             }
-        }
-        if all_done {
-            break;
+            // hand the (cleared) allocation back to the host
+            let mut writes = writes;
+            writes.clear();
+            hosts[hi].shared_writes = writes;
         }
 
-        // shared epoch boundary: one analyzer call for everyone
+        // 3. one analyzer call for everyone
         let out = model.analyze(&TimingInputs {
             reads: &bins.reads,
             writes: &bins.writes,
@@ -193,7 +308,7 @@ pub fn run_shared(
         cong_total += out.cong_total();
         bwd_total += out.bwd_total();
 
-        // attribute delay to hosts by their miss share this epoch
+        // 4. attribute delay to hosts by their miss share this epoch
         let epoch_misses: f64 = hosts.iter().map(|h| h.epoch_misses).sum();
         for h in hosts.iter_mut() {
             let share = if epoch_misses > 0.0 { h.epoch_misses / epoch_misses } else { 0.0 };
@@ -332,5 +447,15 @@ mod tests {
             max_shared > lone,
             "sharing must add coherence misses: {max_shared} <= {lone}"
         );
+    }
+
+    #[test]
+    fn explicit_thread_counts_run() {
+        for threads in [1usize, 2, 8] {
+            let rep =
+                run_shared_threads(&builtin::fig2(), &cfg(), mk_hosts(3), threads).unwrap();
+            assert_eq!(rep.hosts.len(), 3);
+            assert!(rep.epochs > 0);
+        }
     }
 }

@@ -2,19 +2,27 @@
 //!
 //! Two interchangeable backends implement [`TimingModel`]:
 //!
-//! * [`pjrt::PjrtAnalyzer`] — loads `artifacts/*.hlo.txt` (HLO text
+//! * `pjrt::PjrtAnalyzer` — loads `artifacts/*.hlo.txt` (HLO text
 //!   lowered once by `python/compile/aot.py`), compiles it on the PJRT
-//!   CPU client at startup, and executes it per epoch. This is the
-//!   shipped configuration; python is never on this path.
+//!   CPU client at startup, and executes it per epoch. Gated behind the
+//!   `pjrt` cargo feature (off by default) because it needs the `xla`
+//!   crate; with the feature off, requesting the backend is a clean
+//!   runtime error and python is never required.
 //! * [`native::NativeAnalyzer`] — a pure-rust mirror of the same math.
 //!   Used for differential testing against the HLO module (both are
 //!   checked against `artifacts/golden.json`) and as a zero-dependency
 //!   fast path (`--backend native`).
 //!
+//! Both backends also come in a *batched* flavour ([`BatchTimingModel`])
+//! that analyzes E epochs per call — the PJRT one amortizes FFI
+//! dispatch across the `timing_batch{E}` artifact, the native one is a
+//! plain loop so batched replay works identically without artifacts.
+//!
 //! Topology tensors are fixed at construction; the per-epoch call only
 //! moves the `[P, B]` read/write histograms.
 
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod shapes;
 
@@ -89,6 +97,48 @@ impl AnalyzerBackend {
     }
 }
 
+/// Outputs of one batched analyzer call over E epochs: `total` is [E];
+/// `lat` is [E, P] flattened; `cong`/`bwd` are [E, S] flattened.
+#[derive(Clone, Debug)]
+pub struct BatchOutputs {
+    pub total: Vec<f64>,
+    pub lat: Vec<f32>,
+    pub cong: Vec<f32>,
+    pub bwd: Vec<f32>,
+}
+
+impl BatchOutputs {
+    /// Slice epoch `i` out of the batch as per-epoch [`TimingOutputs`]
+    /// (no backlog in batched modules).
+    pub fn epoch(&self, i: usize, pools: usize, switches: usize) -> TimingOutputs {
+        TimingOutputs {
+            total: self.total[i],
+            lat: self.lat[i * pools..(i + 1) * pools].to_vec(),
+            cong: self.cong[i * switches..(i + 1) * switches].to_vec(),
+            bwd: self.bwd[i * switches..(i + 1) * switches].to_vec(),
+            cong_backlog: Vec::new(),
+        }
+    }
+}
+
+/// A timing analyzer that processes E epochs per call (offline replay).
+pub trait BatchTimingModel {
+    fn pools(&self) -> usize;
+    fn switches(&self) -> usize;
+    fn nbins(&self) -> usize;
+    /// Epochs per call; callers zero-pad the tail of a shorter run.
+    fn batch(&self) -> usize;
+    fn backend_name(&self) -> &'static str;
+    /// `reads`/`writes` are [E, P, B] flattened with E == `batch()`.
+    fn analyze_batch(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        bin_width: f32,
+        bytes_per_ev: f32,
+    ) -> anyhow::Result<BatchOutputs>;
+}
+
 /// Construct a timing model for `tensors` with `nbins` time bins.
 /// `artifacts_dir` is only read for the PJRT backend.
 pub fn make_analyzer(
@@ -98,8 +148,43 @@ pub fn make_analyzer(
     artifacts_dir: &str,
 ) -> anyhow::Result<Box<dyn TimingModel>> {
     match backend {
-        AnalyzerBackend::Native => Ok(Box::new(native::NativeAnalyzer::new(tensors, nbins))),
-        AnalyzerBackend::Pjrt => Ok(Box::new(pjrt::PjrtAnalyzer::new(tensors, nbins, artifacts_dir)?)),
+        AnalyzerBackend::Native => {
+            let _ = artifacts_dir;
+            Ok(Box::new(native::NativeAnalyzer::new(tensors, nbins)))
+        }
+        #[cfg(feature = "pjrt")]
+        AnalyzerBackend::Pjrt => {
+            Ok(Box::new(pjrt::PjrtAnalyzer::new(tensors, nbins, artifacts_dir)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        AnalyzerBackend::Pjrt => Err(anyhow::anyhow!(
+            "backend `pjrt` requires building with `--features pjrt` (and the `xla` crate); \
+             use `--backend native` or rebuild with the feature"
+        )),
+    }
+}
+
+/// Construct a batched analyzer (E epochs per call) for offline replay.
+pub fn make_batch_analyzer(
+    backend: AnalyzerBackend,
+    tensors: &TopoTensors,
+    nbins: usize,
+    artifacts_dir: &str,
+) -> anyhow::Result<Box<dyn BatchTimingModel>> {
+    match backend {
+        AnalyzerBackend::Native => {
+            let _ = artifacts_dir;
+            Ok(Box::new(native::NativeBatchAnalyzer::new(tensors, nbins, shapes::BATCH)))
+        }
+        #[cfg(feature = "pjrt")]
+        AnalyzerBackend::Pjrt => {
+            Ok(Box::new(pjrt::PjrtBatchAnalyzer::new(tensors, nbins, artifacts_dir)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        AnalyzerBackend::Pjrt => Err(anyhow::anyhow!(
+            "backend `pjrt` requires building with `--features pjrt` (and the `xla` crate); \
+             use `--backend native` or rebuild with the feature"
+        )),
     }
 }
 

@@ -12,7 +12,7 @@
 
 use crate::topology::TopoTensors;
 
-use super::{TimingInputs, TimingModel, TimingOutputs};
+use super::{BatchOutputs, BatchTimingModel, TimingInputs, TimingModel, TimingOutputs};
 
 pub struct NativeAnalyzer {
     pools: usize,
@@ -185,6 +185,73 @@ impl TimingModel for NativeAnalyzer {
     }
 }
 
+/// Batched flavour of the native analyzer: a plain loop over E epochs
+/// per call. Exists so the batched replay path ([`crate::coordinator::
+/// run_batched`]) has a backend that needs no AOT artifacts and is
+/// bit-identical to the per-epoch native analyzer — the PJRT batch
+/// module is the dispatch-amortizing counterpart.
+pub struct NativeBatchAnalyzer {
+    inner: NativeAnalyzer,
+    batch: usize,
+}
+
+impl NativeBatchAnalyzer {
+    pub fn new(t: &TopoTensors, nbins: usize, batch: usize) -> NativeBatchAnalyzer {
+        let mut inner = NativeAnalyzer::new(t, nbins);
+        inner.export_backlog = false;
+        NativeBatchAnalyzer { inner, batch: batch.max(1) }
+    }
+}
+
+impl BatchTimingModel for NativeBatchAnalyzer {
+    fn pools(&self) -> usize {
+        self.inner.pools
+    }
+    fn switches(&self) -> usize {
+        self.inner.switches
+    }
+    fn nbins(&self) -> usize {
+        self.inner.nbins
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn backend_name(&self) -> &'static str {
+        "native-batch"
+    }
+
+    fn analyze_batch(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        bin_width: f32,
+        bytes_per_ev: f32,
+    ) -> anyhow::Result<BatchOutputs> {
+        let (e, p, s, b) = (self.batch, self.inner.pools, self.inner.switches, self.inner.nbins);
+        anyhow::ensure!(reads.len() == e * p * b, "reads shape");
+        anyhow::ensure!(writes.len() == e * p * b, "writes shape");
+        let mut out = BatchOutputs {
+            total: Vec::with_capacity(e),
+            lat: Vec::with_capacity(e * p),
+            cong: Vec::with_capacity(e * s),
+            bwd: Vec::with_capacity(e * s),
+        };
+        for i in 0..e {
+            let one = self.inner.analyze(&TimingInputs {
+                reads: &reads[i * p * b..(i + 1) * p * b],
+                writes: &writes[i * p * b..(i + 1) * p * b],
+                bin_width,
+                bytes_per_ev,
+            })?;
+            out.total.push(one.total);
+            out.lat.extend_from_slice(&one.lat);
+            out.cong.extend_from_slice(&one.cong);
+            out.bwd.extend_from_slice(&one.bwd);
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +337,34 @@ mod tests {
         assert_eq!(out.cong.len(), 8);
         assert_eq!(out.bwd.len(), 8);
         assert_eq!(out.cong_backlog.len(), 8 * 32);
+    }
+
+    #[test]
+    fn native_batch_matches_single_bit_exactly() {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        let mut single = NativeAnalyzer::new(&t, 16);
+        let mut batch = NativeBatchAnalyzer::new(&t, 16, 4);
+        let n = 8 * 16;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let reads: Vec<f32> = (0..4 * n).map(|_| rng.below(20) as f32).collect();
+        let writes: Vec<f32> = (0..4 * n).map(|_| rng.below(9) as f32).collect();
+        let out = batch.analyze_batch(&reads, &writes, 100.0, 64.0).unwrap();
+        assert_eq!(out.total.len(), 4);
+        for i in 0..4 {
+            let s = single
+                .analyze(&TimingInputs {
+                    reads: &reads[i * n..(i + 1) * n],
+                    writes: &writes[i * n..(i + 1) * n],
+                    bin_width: 100.0,
+                    bytes_per_ev: 64.0,
+                })
+                .unwrap();
+            assert_eq!(out.total[i], s.total, "epoch {i}");
+            assert_eq!(out.epoch(i, 8, 8).lat, s.lat);
+            assert_eq!(out.epoch(i, 8, 8).cong, s.cong);
+            assert_eq!(out.epoch(i, 8, 8).bwd, s.bwd);
+        }
     }
 
     #[test]

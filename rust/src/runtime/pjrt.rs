@@ -16,7 +16,7 @@ use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputat
 use crate::topology::TopoTensors;
 
 use super::shapes::Manifest;
-use super::{TimingInputs, TimingModel, TimingOutputs};
+use super::{BatchOutputs, BatchTimingModel, TimingInputs, TimingModel, TimingOutputs};
 
 thread_local! {
     /// Process-wide (per-thread) executable cache: PJRT client creation
@@ -168,16 +168,6 @@ pub struct PjrtBatchAnalyzer {
     bw: Literal,
 }
 
-/// Per-epoch slice of a batched result (no backlog output in the
-/// batched module).
-#[derive(Clone, Debug)]
-pub struct BatchOutputs {
-    pub total: Vec<f64>,
-    pub lat: Vec<f32>,
-    pub cong: Vec<f32>,
-    pub bwd: Vec<f32>,
-}
-
 impl PjrtBatchAnalyzer {
     pub fn new(
         t: &TopoTensors,
@@ -249,5 +239,32 @@ impl PjrtBatchAnalyzer {
             cong: it.next().unwrap().to_vec::<f32>()?,
             bwd: it.next().unwrap().to_vec::<f32>()?,
         })
+    }
+}
+
+impl BatchTimingModel for PjrtBatchAnalyzer {
+    fn pools(&self) -> usize {
+        self.pools
+    }
+    fn switches(&self) -> usize {
+        self.switches
+    }
+    fn nbins(&self) -> usize {
+        self.nbins
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn backend_name(&self) -> &'static str {
+        "pjrt-batch"
+    }
+    fn analyze_batch(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        bin_width: f32,
+        bytes_per_ev: f32,
+    ) -> anyhow::Result<BatchOutputs> {
+        PjrtBatchAnalyzer::analyze_batch(self, reads, writes, bin_width, bytes_per_ev)
     }
 }

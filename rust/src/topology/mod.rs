@@ -92,27 +92,50 @@ pub struct Topology {
     switch_nodes: Vec<usize>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TopologyError {
-    #[error("topology must have exactly one root, found {0}")]
     RootCount(usize),
-    #[error("node `{0}`: unknown parent `{1}`")]
     UnknownParent(String, String),
-    #[error("node `{0}`: pools must be leaves")]
     PoolWithChildren(String),
-    #[error("node `{0}`: {1} must be positive (got {2})")]
     NonPositive(String, &'static str, f64),
-    #[error("duplicate node name `{0}`")]
     DuplicateName(String),
-    #[error("topology contains a cycle involving `{0}`")]
     Cycle(String),
-    #[error("node `{0}` is a root but has a parent")]
     RootWithParent(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("no memory pools in topology")]
     NoPools,
 }
+
+// Hand-written (the `thiserror` derive is unavailable in the offline
+// vendored build; messages are unchanged).
+impl std::fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologyError::RootCount(n) => {
+                write!(f, "topology must have exactly one root, found {n}")
+            }
+            TopologyError::UnknownParent(node, parent) => {
+                write!(f, "node `{node}`: unknown parent `{parent}`")
+            }
+            TopologyError::PoolWithChildren(node) => {
+                write!(f, "node `{node}`: pools must be leaves")
+            }
+            TopologyError::NonPositive(node, field, got) => {
+                write!(f, "node `{node}`: {field} must be positive (got {got})")
+            }
+            TopologyError::DuplicateName(name) => write!(f, "duplicate node name `{name}`"),
+            TopologyError::Cycle(node) => {
+                write!(f, "topology contains a cycle involving `{node}`")
+            }
+            TopologyError::RootWithParent(node) => {
+                write!(f, "node `{node}` is a root but has a parent")
+            }
+            TopologyError::Config(msg) => write!(f, "config error: {msg}"),
+            TopologyError::NoPools => write!(f, "no memory pools in topology"),
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
 
 impl Topology {
     /// Build and validate a topology from a node list. `nodes[i].parent`

@@ -65,6 +65,23 @@ impl EpochBins {
         self.total_events += 1;
     }
 
+    /// Element-wise accumulate another bins' counters (same shape).
+    /// Used by multihost to merge per-host epoch bins at the epoch
+    /// barrier — always in host order, so the result is deterministic
+    /// regardless of how the host phase was threaded.
+    pub fn merge_from(&mut self, other: &EpochBins) {
+        assert_eq!(self.pools, other.pools);
+        assert_eq!(self.nbins, other.nbins);
+        for (a, b) in self.reads.iter_mut().zip(&other.reads) {
+            *a += *b;
+        }
+        for (a, b) in self.writes.iter_mut().zip(&other.writes) {
+            *a += *b;
+        }
+        self.total_events += other.total_events;
+        self.clamped += other.clamped;
+    }
+
     /// Zero all counters for reuse (avoids reallocating every epoch —
     /// this is on the coordinator's hot path).
     pub fn clear(&mut self) {
@@ -140,6 +157,19 @@ mod tests {
         assert_eq!(b.total_events, 0);
         assert!(b.reads.iter().all(|x| *x == 0.0));
         assert!(b.writes.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn merge_from_accumulates() {
+        let mut a = EpochBins::new(2, 4, 400.0);
+        let mut b = EpochBins::new(2, 4, 400.0);
+        a.record(0, false, 10.0, 1.0);
+        b.record(0, false, 10.0, 2.0);
+        b.record(1, true, 350.0, 1.0);
+        a.merge_from(&b);
+        assert_eq!(a.reads[0], 3.0);
+        assert_eq!(a.write_count(1), 1.0);
+        assert_eq!(a.total_events, 3);
     }
 
     #[test]

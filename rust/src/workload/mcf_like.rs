@@ -150,6 +150,89 @@ impl Workload for McfLike {
         }
     }
 
+    /// Native batched emission: pricing bursts are emitted as one inner
+    /// run per burst, and chase hops loop without per-event dispatch.
+    /// Emits the exact sequence `next_event` would (same RNG order).
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        let mut left = budget as u64;
+        while left > 0 {
+            match self.phase {
+                Phase::AllocNodes => {
+                    self.phase = Phase::AllocArcs;
+                    self.vtime_ns += 2_000.0;
+                    sink.push(WlEvent::Alloc(AllocEvent {
+                        kind: AllocKind::Mmap,
+                        addr: NODE_BASE,
+                        len: self.nodes_bytes,
+                        t_ns: self.vtime_ns,
+                    }));
+                    left -= 1;
+                }
+                Phase::AllocArcs => {
+                    self.phase = Phase::Run;
+                    self.vtime_ns += 2_000.0;
+                    sink.push(WlEvent::Alloc(AllocEvent {
+                        kind: AllocKind::Malloc,
+                        addr: ARC_BASE,
+                        len: self.arcs_bytes,
+                        t_ns: self.vtime_ns,
+                    }));
+                    left -= 1;
+                }
+                Phase::Run => {
+                    if self.burst_left > 0 {
+                        // pricing scan: one run per burst segment
+                        let run = self.burst_left.min(left);
+                        let arc_lines = self.arc_lines.max(1);
+                        for _ in 0..run {
+                            self.burst_left -= 1;
+                            let line = self.arc_cursor % arc_lines;
+                            self.arc_cursor += 1;
+                            let is_write = self.burst_left % 8 == 0;
+                            sink.push(WlEvent::Access(Access {
+                                addr: ARC_BASE + line * LINE,
+                                is_write,
+                            }));
+                        }
+                        left -= run;
+                        continue;
+                    }
+                    if self.hops_left == 0 {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    // dependent chase hops until the budget runs out or
+                    // a pricing burst becomes due
+                    let node_lines = self.node_lines.max(1);
+                    while left > 0 && self.hops_left > 0 {
+                        self.hops_left -= 1;
+                        self.hop_in_round += 1;
+                        let burst_due = self.hop_in_round >= PRICE_EVERY;
+                        if burst_due {
+                            self.hop_in_round = 0;
+                            self.burst_left = PRICE_BURST.min(self.arc_lines);
+                        }
+                        self.cursor = (self
+                            .cursor
+                            .wrapping_mul(self.step)
+                            .wrapping_add(self.rng.below(7)))
+                            % node_lines;
+                        sink.push(WlEvent::Access(Access {
+                            addr: NODE_BASE + self.cursor * LINE,
+                            is_write: false,
+                        }));
+                        left -= 1;
+                        if burst_due {
+                            break;
+                        }
+                    }
+                }
+                Phase::Done => return false,
+            }
+        }
+        true
+    }
+
     fn total_accesses_hint(&self) -> u64 {
         self.total_hops + self.total_hops / PRICE_EVERY * PRICE_BURST
     }
@@ -227,6 +310,16 @@ mod tests {
             assert!(n < hint * 3 + 100);
         }
         assert!(n > hint / 2);
+    }
+
+    #[test]
+    fn batched_emission_identical() {
+        use crate::workload::assert_same_stream;
+        for batch in [1usize, 17, 4096] {
+            let mut a = McfLike::new(0.002, 9);
+            let mut b = McfLike::new(0.002, 9);
+            assert_same_stream(&mut a, &mut b, batch);
+        }
     }
 
     #[test]

@@ -183,6 +183,68 @@ impl Workload for MicroBench {
         }
     }
 
+    /// Native batched emission: the sequential sweeps are emitted as
+    /// run-length inner loops (one bounds check per run, not per line),
+    /// so the coordinator's event pump stays monomorphic. Emits the
+    /// exact sequence `next_event` would.
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        let mut left = budget as u64;
+        while left > 0 {
+            match self.phase {
+                Phase::Alloc { chunk } => {
+                    if chunk >= self.chunks() {
+                        self.phase = if self.mode == Mode::Calloc {
+                            Phase::FinalSweep { line: 0 }
+                        } else {
+                            Phase::Done
+                        };
+                        continue;
+                    }
+                    self.phase = Phase::Sweep { chunk, line: 0 };
+                    self.vtime_ns += self.alloc_cost_ns;
+                    sink.push(WlEvent::Alloc(AllocEvent {
+                        kind: self.alloc_kind(),
+                        addr: self.base() + chunk * self.chunk,
+                        len: self.chunk,
+                        t_ns: self.vtime_ns,
+                    }));
+                    left -= 1;
+                }
+                Phase::Sweep { chunk, line } => {
+                    let lines = self.lines_per_chunk();
+                    if line >= lines {
+                        self.phase = Phase::Alloc { chunk: chunk + 1 };
+                        continue;
+                    }
+                    let run = (lines - line).min(left);
+                    let base = self.base() + chunk * self.chunk + line * LINE;
+                    let is_write = self.sweep_is_write();
+                    for i in 0..run {
+                        sink.push(WlEvent::Access(Access { addr: base + i * LINE, is_write }));
+                    }
+                    self.phase = Phase::Sweep { chunk, line: line + run };
+                    left -= run;
+                }
+                Phase::FinalSweep { line } => {
+                    let lines = self.total / LINE;
+                    if line >= lines {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    let run = (lines - line).min(left);
+                    let base = self.base() + line * LINE;
+                    for i in 0..run {
+                        sink.push(WlEvent::Access(Access { addr: base + i * LINE, is_write: true }));
+                    }
+                    self.phase = Phase::FinalSweep { line: line + run };
+                    left -= run;
+                }
+                Phase::Done => return false,
+            }
+        }
+        true
+    }
+
     fn total_accesses_hint(&self) -> u64 {
         let sweeps = if self.mode == Mode::Calloc { 2 } else { 1 };
         self.total / LINE * sweeps
@@ -274,5 +336,21 @@ mod tests {
         let b = MicroBench::mmap_read(0.01);
         assert_eq!(a.total, 100 * MB);
         assert_eq!(b.total, MB);
+    }
+
+    #[test]
+    fn batched_emission_identical() {
+        use crate::workload::assert_same_stream;
+        for (mk, batch) in [
+            (MicroBench::mmap_read as fn(f64) -> MicroBench, 1usize),
+            (MicroBench::mmap_write, 3),
+            (MicroBench::sbrk, 100),
+            (MicroBench::malloc, 1000),
+            (MicroBench::calloc, 4096),
+        ] {
+            let mut a = mk(0.003);
+            let mut b = mk(0.003);
+            assert_same_stream(&mut a, &mut b, batch);
+        }
     }
 }

@@ -24,11 +24,36 @@ pub mod wrf_like;
 
 use crate::trace::WlEvent;
 
-/// A deterministic program that emits events one at a time.
+/// A deterministic program that emits events in program order.
+///
+/// `next_event` is the one-at-a-time interface; the hot path is
+/// [`Workload::next_batch`], which lets an implementation emit a run of
+/// events through one virtual call so the coordinator's inner loop
+/// stays monomorphic. Implementations MUST emit the exact same event
+/// sequence through both interfaces (asserted per-module in tests and
+/// end-to-end in `tests/pipeline_equivalence.rs`).
 pub trait Workload: Send {
     fn name(&self) -> &str;
     /// Next event in program order; None when the program exits.
     fn next_event(&mut self) -> Option<WlEvent>;
+    /// Append up to `budget` events (in program order) to `sink`;
+    /// returns false once the program has exited. The default
+    /// delegates to `next_event`; the built-in workloads override it
+    /// with native run-length emission.
+    ///
+    /// Contract: for `budget > 0`, an implementation must either push
+    /// at least one event or return false — a `true` return with
+    /// nothing pushed would stall consumers (the epoch driver
+    /// debug-asserts against it; multihost treats it as exhaustion).
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        for _ in 0..budget {
+            match self.next_event() {
+                Some(ev) => sink.push(ev),
+                None => return false,
+            }
+        }
+        true
+    }
     /// Rough total number of accesses (progress reporting only).
     fn total_accesses_hint(&self) -> u64;
 }
@@ -46,6 +71,59 @@ pub fn advance<W: Workload + ?Sized>(
         }
     }
     true
+}
+
+/// Drain a workload completely through the batched interface, counting
+/// events without storing them (bench/baseline helper).
+pub fn drain_batched<W: Workload + ?Sized>(wl: &mut W, batch: usize) -> u64 {
+    let mut buf: Vec<WlEvent> = Vec::with_capacity(batch.max(1));
+    let mut n = 0u64;
+    loop {
+        buf.clear();
+        let more = wl.next_batch(&mut buf, batch.max(1));
+        n += buf.len() as u64;
+        if !more {
+            return n;
+        }
+    }
+}
+
+/// Assert that `a` (drained per-event) and `b` (drained batched with
+/// `batch`) emit identical event streams. Test helper shared by the
+/// per-module equivalence tests.
+pub fn assert_same_stream(a: &mut dyn Workload, b: &mut dyn Workload, batch: usize) {
+    let mut bbuf: Vec<WlEvent> = Vec::new();
+    let mut i = 0usize;
+    let mut b_done = false;
+    let mut n = 0u64;
+    loop {
+        if i >= bbuf.len() {
+            if b_done {
+                assert!(a.next_event().is_none(), "batched stream ended early at {n}");
+                return;
+            }
+            bbuf.clear();
+            i = 0;
+            b_done = !b.next_batch(&mut bbuf, batch);
+            continue;
+        }
+        let ev_b = bbuf[i];
+        i += 1;
+        let ev_a = a.next_event().unwrap_or_else(|| panic!("per-event stream ended early at {n}"));
+        match (ev_a, ev_b) {
+            (WlEvent::Access(x), WlEvent::Access(y)) => {
+                assert_eq!(x.addr, y.addr, "access addr diverged at {n}");
+                assert_eq!(x.is_write, y.is_write, "access rw diverged at {n}");
+            }
+            (WlEvent::Alloc(x), WlEvent::Alloc(y)) => {
+                assert_eq!(x.addr, y.addr, "alloc addr diverged at {n}");
+                assert_eq!(x.len, y.len, "alloc len diverged at {n}");
+                assert_eq!(x.kind, y.kind, "alloc kind diverged at {n}");
+            }
+            _ => panic!("event kind diverged at {n}"),
+        }
+        n += 1;
+    }
 }
 
 /// The paper's Table-1 benchmark list, in row order.
@@ -103,6 +181,11 @@ impl Workload for TraceReplay {
     }
     fn next_event(&mut self) -> Option<WlEvent> {
         self.events.next()
+    }
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        let before = sink.len();
+        sink.extend(self.events.by_ref().take(budget));
+        sink.len() - before == budget
     }
     fn total_accesses_hint(&self) -> u64 {
         self.total
@@ -212,5 +295,42 @@ mod tests {
         let more = advance(wl.as_mut(), 100, &mut |_| n += 1);
         assert!(more);
         assert_eq!(n, 100);
+    }
+
+    #[test]
+    fn next_batch_respects_budget_and_termination() {
+        let mut wl = by_name("stream", 0.001, 0).unwrap();
+        let mut buf = Vec::new();
+        assert!(wl.next_batch(&mut buf, 64));
+        assert_eq!(buf.len(), 64);
+        // drain the remainder; the final pull must report exhaustion
+        let rest = drain_batched(wl.as_mut(), 4096);
+        assert!(rest > 0);
+        let mut buf = Vec::new();
+        assert!(!wl.next_batch(&mut buf, 16));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn batched_stream_identical_for_every_workload() {
+        for name in ALL_WORKLOADS {
+            for batch in [1usize, 7, 1024] {
+                let mut a = by_name(name, 0.0008, 11).unwrap();
+                let mut b = by_name(name, 0.0008, 11).unwrap();
+                assert_same_stream(a.as_mut(), b.as_mut(), batch);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_replay_batched_matches_per_event() {
+        let mut src = by_name("sbrk", 0.002, 1).unwrap();
+        let mut events = Vec::new();
+        while let Some(ev) = src.next_event() {
+            events.push(ev);
+        }
+        let mut a = TraceReplay::new("r", events.clone());
+        let mut b = TraceReplay::new("r", events);
+        assert_same_stream(&mut a, &mut b, 33);
     }
 }

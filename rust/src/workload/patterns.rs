@@ -152,6 +152,59 @@ impl Workload for PatternWorkload {
         Some(WlEvent::Access(Access { addr: self.base + line * LINE, is_write }))
     }
 
+    /// Native batched emission: the pattern branch is hoisted out of
+    /// the per-event loop, so each batch runs one tight monomorphic
+    /// loop (same RNG call order as `next_event`, hence an identical
+    /// event sequence).
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        let mut left = budget as u64;
+        if left == 0 {
+            return true;
+        }
+        if !self.allocated {
+            self.allocated = true;
+            sink.push(WlEvent::Alloc(AllocEvent {
+                kind: AllocKind::Mmap,
+                addr: self.base,
+                len: self.bytes,
+                t_ns: 1_000.0,
+            }));
+            left -= 1;
+        }
+        let run = self.accesses_left.min(left);
+        let base = self.base;
+        let lines = self.lines;
+        let wr = self.write_ratio;
+        match &mut self.pattern {
+            Pattern::Uniform => {
+                for _ in 0..run {
+                    let line = self.rng.below(lines);
+                    let is_write = self.rng.f64() < wr;
+                    sink.push(WlEvent::Access(Access { addr: base + line * LINE, is_write }));
+                }
+            }
+            Pattern::Zipfian(z) => {
+                for _ in 0..run {
+                    let line = z.sample(&mut self.rng);
+                    let is_write = self.rng.f64() < wr;
+                    sink.push(WlEvent::Access(Access { addr: base + line * LINE, is_write }));
+                }
+            }
+            Pattern::Stream => {
+                for _ in 0..run {
+                    let line = self.cursor;
+                    self.cursor = (self.cursor + 1) % lines;
+                    let is_write = self.rng.f64() < wr;
+                    sink.push(WlEvent::Access(Access { addr: base + line * LINE, is_write }));
+                }
+            }
+        }
+        self.accesses_left -= run;
+        left -= run;
+        // finished mid-batch: report exhaustion like next_event's None
+        !(self.accesses_left == 0 && left > 0)
+    }
+
     fn total_accesses_hint(&self) -> u64 {
         self.total
     }

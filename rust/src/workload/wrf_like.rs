@@ -115,6 +115,61 @@ impl Workload for WrfLike {
         }
     }
 
+    /// Native batched emission: the 8-step stencil micro-loop runs
+    /// inside one monomorphic loop per batch. Emits the exact sequence
+    /// `next_event` would.
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        let mut left = budget as u64;
+        while left > 0 {
+            match self.phase {
+                Phase::Alloc => {
+                    self.phase = Phase::Run;
+                    sink.push(WlEvent::Alloc(AllocEvent {
+                        kind: AllocKind::Mmap,
+                        addr: GRID_BASE,
+                        len: self.grid_bytes(),
+                        t_ns: 2_000.0,
+                    }));
+                    left -= 1;
+                }
+                Phase::Run => {
+                    if self.sweep >= SWEEPS {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    let cells = self.cells();
+                    while left > 0 {
+                        let ev = if self.micro_step < 7 {
+                            let n = self.neighbour(self.cell, self.micro_step);
+                            WlEvent::Access(Access { addr: self.addr_of(n), is_write: false })
+                        } else {
+                            WlEvent::Access(Access {
+                                addr: self.addr_of(self.cell),
+                                is_write: true,
+                            })
+                        };
+                        sink.push(ev);
+                        left -= 1;
+                        self.micro_step += 1;
+                        if self.micro_step > 7 {
+                            self.micro_step = 0;
+                            self.cell += 1;
+                            if self.cell >= cells {
+                                self.cell = 0;
+                                self.sweep += 1;
+                                if self.sweep >= SWEEPS {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                Phase::Done => return false,
+            }
+        }
+        true
+    }
+
     fn total_accesses_hint(&self) -> u64 {
         self.cells() * 8 * SWEEPS
     }
@@ -196,6 +251,16 @@ mod tests {
             .filter(|w| w[0].abs_diff(w[1]) <= wl.dim * wl.dim * LINE)
             .count();
         assert!(near as f64 / addrs.len() as f64 > 0.7);
+    }
+
+    #[test]
+    fn batched_emission_identical() {
+        use crate::workload::assert_same_stream;
+        for batch in [1usize, 5, 512] {
+            let mut a = WrfLike::new(0.001);
+            let mut b = WrfLike::new(0.001);
+            assert_same_stream(&mut a, &mut b, batch);
+        }
     }
 
     #[test]

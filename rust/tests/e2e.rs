@@ -19,6 +19,7 @@ fn fast_cfg() -> SimConfig {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_full_pipeline_mmap_read() {
     let mut cfg = fast_cfg();
@@ -30,6 +31,7 @@ fn pjrt_full_pipeline_mmap_read() {
     assert_eq!(rep.backend, "pjrt");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_and_native_agree_end_to_end() {
     // identical seeds + workload => identical binned inputs => the two
@@ -132,6 +134,7 @@ fn policy_changes_outcome() {
     assert_eq!(lf, 0.0, "everything fits locally under localfirst");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn batched_replay_matches_sequential_coordinator() {
     // the batch-16 artifact must produce the same totals as the

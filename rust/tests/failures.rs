@@ -2,9 +2,13 @@
 //! clear error, never a panic, and never corrupt subsequent runs.
 
 use cxlmemsim::coordinator::{Coordinator, SimConfig};
+#[cfg(feature = "pjrt")]
 use cxlmemsim::runtime::pjrt::PjrtAnalyzer;
+#[cfg(feature = "pjrt")]
 use cxlmemsim::runtime::shapes;
-use cxlmemsim::topology::{builtin, TopoTensors, Topology};
+#[cfg(feature = "pjrt")]
+use cxlmemsim::topology::TopoTensors;
+use cxlmemsim::topology::{builtin, Topology};
 use cxlmemsim::trace::io as trace_io;
 use cxlmemsim::util::json::Json;
 use cxlmemsim::util::toml::TomlDoc;
@@ -21,6 +25,7 @@ fn err_of<T>(r: anyhow::Result<T>) -> String {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn missing_artifacts_dir_is_clean_error() {
     let mut cfg = fast_cfg();
@@ -42,6 +47,7 @@ fn corrupt_manifest_is_clean_error() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn artifact_shape_mismatch_is_detected() {
     // manifest claiming other shapes than requested must be rejected

@@ -1,0 +1,224 @@
+//! The batched event pipeline must be an *optimization*, never a
+//! semantic change:
+//!
+//! * the coordinator with `event_batch > 1` (monomorphic pump) must
+//!   produce a bit-identical `SimReport` to `event_batch = 1` (the
+//!   legacy one-virtual-call-per-event loop);
+//! * multihost with N host-phase threads must match the single-thread
+//!   result bit-for-bit (deterministic epoch-barrier merge);
+//! * `run_batched` (grouped analyzer flush) on the native backend must
+//!   match the sequential coordinator, including the prefetcher traffic
+//!   and epoch-policy invocation the pre-`EpochDriver` implementation
+//!   silently dropped.
+
+use cxlmemsim::coordinator::{run_batched, run_batched_with, Coordinator, SimConfig, SimReport};
+use cxlmemsim::multihost::{run_shared_threads, MultiHostReport};
+use cxlmemsim::policy::EpochPolicy;
+use cxlmemsim::prelude::*;
+use cxlmemsim::workload;
+
+fn fast_cfg() -> SimConfig {
+    SimConfig {
+        scale: 0.002,
+        cache_scale: 64,
+        epoch_ms: 0.1,
+        ..SimConfig::default()
+    }
+}
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+    assert_eq!(a.total_accesses, b.total_accesses, "{ctx}: accesses");
+    assert_eq!(a.total_misses, b.total_misses, "{ctx}: misses");
+    assert_eq!(a.writebacks, b.writebacks, "{ctx}: writebacks");
+    assert_eq!(a.alloc_events, b.alloc_events, "{ctx}: allocs");
+    assert_eq!(a.prefetches, b.prefetches, "{ctx}: prefetches");
+    assert_eq!(a.epochs_run, b.epochs_run, "{ctx}: epochs");
+    assert_eq!(a.pool_read_misses, b.pool_read_misses, "{ctx}: pool reads");
+    assert_eq!(a.pool_write_misses, b.pool_write_misses, "{ctx}: pool writes");
+    // f64 accumulators: same inputs in the same order => bit-identical
+    assert_eq!(a.native_ns, b.native_ns, "{ctx}: native_ns");
+    assert_eq!(a.delay_ns, b.delay_ns, "{ctx}: delay_ns");
+    assert_eq!(a.lat_delay_ns, b.lat_delay_ns, "{ctx}: lat");
+    assert_eq!(a.cong_delay_ns, b.cong_delay_ns, "{ctx}: cong");
+    assert_eq!(a.bwd_delay_ns, b.bwd_delay_ns, "{ctx}: bwd");
+    assert_eq!(a.simulated_ns, b.simulated_ns, "{ctx}: simulated_ns");
+}
+
+fn run_with_batch(wl: &str, event_batch: usize, mutate: impl Fn(&mut SimConfig)) -> SimReport {
+    let mut cfg = fast_cfg();
+    cfg.event_batch = event_batch;
+    mutate(&mut cfg);
+    let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+    sim.run_workload(wl).unwrap()
+}
+
+#[test]
+fn batched_pipeline_bit_identical_to_per_event_loop() {
+    for wl in ["mcf_like", "stream"] {
+        let per_event = run_with_batch(wl, 1, |_| {});
+        for batch in [7usize, 4096] {
+            let batched = run_with_batch(wl, batch, |_| {});
+            assert_reports_identical(&per_event, &batched, &format!("{wl} batch={batch}"));
+        }
+    }
+}
+
+#[test]
+fn batched_pipeline_identical_with_prefetcher_and_sampling() {
+    for wl in ["stream", "wrf_like"] {
+        let mk = |batch: usize| {
+            run_with_batch(wl, batch, |cfg| {
+                cfg.prefetcher = Some("nextline".into());
+                cfg.sample_period = 4;
+            })
+        };
+        let per_event = mk(1);
+        let batched = mk(4096);
+        assert!(per_event.prefetches > 0, "{wl}: prefetcher must fire");
+        assert_reports_identical(&per_event, &batched, wl);
+    }
+}
+
+#[test]
+fn batched_pipeline_identical_under_max_epochs() {
+    let mk = |batch: usize| {
+        run_with_batch("uniform", batch, |cfg| {
+            cfg.scale = 0.05;
+            cfg.max_epochs = Some(3);
+        })
+    };
+    let per_event = mk(1);
+    let batched = mk(4096);
+    assert_eq!(per_event.epochs_run, 3);
+    assert_reports_identical(&per_event, &batched, "max_epochs");
+}
+
+// ---------------------------------------------------------- multihost
+
+fn assert_multihost_identical(a: &MultiHostReport, b: &MultiHostReport) {
+    assert_eq!(a.epochs, b.epochs);
+    assert_eq!(a.invalidations, b.invalidations);
+    assert_eq!(a.coherence_msgs, b.coherence_msgs);
+    assert_eq!(a.total_delay_ns, b.total_delay_ns);
+    assert_eq!(a.cong_delay_ns, b.cong_delay_ns);
+    assert_eq!(a.bwd_delay_ns, b.bwd_delay_ns);
+    assert_eq!(a.hosts.len(), b.hosts.len());
+    for (x, y) in a.hosts.iter().zip(&b.hosts) {
+        assert_eq!(x.misses, y.misses);
+        assert_eq!(x.native_ns, y.native_ns);
+        assert_eq!(x.delay_ns, y.delay_ns);
+    }
+}
+
+#[test]
+fn multihost_threaded_matches_single_thread_bit_exactly() {
+    for wl in ["stream", "shared"] {
+        let mk_hosts = || -> Vec<Box<dyn Workload>> {
+            (0..4)
+                .map(|i| workload::by_name(wl, 0.002, i as u64).unwrap())
+                .collect()
+        };
+        let one = run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), 1).unwrap();
+        for threads in [2usize, 4, 16] {
+            let many =
+                run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), threads).unwrap();
+            assert_multihost_identical(&one, &many);
+        }
+    }
+}
+
+// ------------------------------------------------- batched replay mode
+
+#[test]
+fn run_batched_native_matches_sequential_coordinator() {
+    // the native batch analyzer is a loop over the per-epoch analyzer,
+    // so grouped replay must match the sequential coordinator exactly
+    let cfg = fast_cfg();
+    let mut seq = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let seq_rep = seq.run_workload("zipfian").unwrap();
+
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let bat_rep = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+
+    assert_eq!(seq_rep.epochs_run, bat_rep.epochs_run);
+    assert_eq!(seq_rep.total_misses, bat_rep.total_misses);
+    assert_eq!(seq_rep.native_ns, bat_rep.native_ns);
+    assert_eq!(seq_rep.delay_ns, bat_rep.delay_ns, "grouped flush drifted");
+    assert_eq!(seq_rep.lat_delay_ns, bat_rep.lat_delay_ns);
+    assert_eq!(seq_rep.cong_delay_ns, bat_rep.cong_delay_ns);
+    assert_eq!(seq_rep.bwd_delay_ns, bat_rep.bwd_delay_ns);
+}
+
+#[test]
+fn run_batched_honors_max_epochs() {
+    // regression: the grouped flush only pushes epochs to the report at
+    // group boundaries, so a max_epochs check based on report.epochs_run
+    // would overshoot by up to batch-1 epochs
+    let mut cfg = fast_cfg();
+    cfg.scale = 0.05;
+    cfg.max_epochs = Some(3);
+    let mut wl = workload::by_name("uniform", cfg.scale, cfg.seed).unwrap();
+    let bat_rep = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    assert_eq!(bat_rep.epochs_run, 3);
+
+    let mut seq = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let seq_rep = seq.run_workload("uniform").unwrap();
+    assert_eq!(seq_rep.epochs_run, bat_rep.epochs_run);
+    assert_eq!(seq_rep.delay_ns, bat_rep.delay_ns);
+}
+
+#[test]
+fn run_batched_carries_prefetcher_traffic() {
+    // regression: the pre-EpochDriver run_batched dropped prefetcher
+    // traffic entirely
+    let mut cfg = fast_cfg();
+    cfg.prefetcher = Some("nextline".into());
+    let mut seq = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let seq_rep = seq.run_workload("stream").unwrap();
+    assert!(seq_rep.prefetches > 0);
+
+    let mut wl = workload::by_name("stream", cfg.scale, cfg.seed).unwrap();
+    let bat_rep = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    assert_eq!(
+        seq_rep.prefetches, bat_rep.prefetches,
+        "batched replay must bin the same prefetch traffic"
+    );
+    assert_eq!(seq_rep.delay_ns, bat_rep.delay_ns);
+}
+
+/// Counts invocations; proves batched replay drives installed policies.
+struct ProbePolicy {
+    calls: u64,
+}
+
+impl EpochPolicy for ProbePolicy {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+    fn on_epoch(
+        &mut self,
+        _tracker: &mut cxlmemsim::alloctrack::AllocTracker,
+        _bins: &cxlmemsim::trace::binning::EpochBins,
+        _out: &cxlmemsim::runtime::TimingOutputs,
+    ) {
+        self.calls += 1;
+    }
+    fn migrations(&self) -> u64 {
+        0
+    }
+}
+
+#[test]
+fn run_batched_invokes_epoch_policy() {
+    // regression: the pre-EpochDriver run_batched never called policies
+    let cfg = fast_cfg();
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let mut probe = ProbePolicy { calls: 0 };
+    let rep =
+        run_batched_with(&builtin::fig2(), &cfg, wl.as_mut(), Some(&mut probe)).unwrap();
+    assert!(rep.epochs_run > 0);
+    assert_eq!(
+        probe.calls, rep.epochs_run,
+        "policy must be invoked once per epoch at group-flush time"
+    );
+}

@@ -1,0 +1,177 @@
+//! Offline-vendored minimal subset of the `anyhow` API.
+//!
+//! The container this repo builds in has no crates.io access, so the
+//! workspace vendors the small slice of `anyhow` the codebase actually
+//! uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, and `?`-conversion from any `std::error::Error`.
+//! Swapping back to the real crate is a one-line Cargo.toml change —
+//! no call sites need to move.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error: a message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Build an error wrapping an underlying `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// Iterate the `source()` chain of the wrapped error, if any.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|b| b.as_ref() as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        for cause in self.chain().skip(1) {
+            write!(f, "\n  caused by: {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// std::error::Error — that is what makes this blanket `From` legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` to results (subset of anyhow's).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let _ = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = fails_io().unwrap_err();
+        assert!(!err.to_string().is_empty());
+        assert!(err.chain().count() >= 1);
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("got {} of {}", 1, 2);
+        assert_eq!(e.to_string(), "got 1 of 2");
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e = anyhow!(io);
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn ensure_returns_err() {
+        fn check(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            Ok(n)
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(check(30).unwrap_err().to_string(), "n too big: 30");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn go() -> Result<()> {
+            bail!("nope");
+        }
+        assert_eq!(go().unwrap_err().to_string(), "nope");
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let e = fails_io().context("loading config").unwrap_err();
+        assert!(e.to_string().starts_with("loading config: "));
+    }
+}
