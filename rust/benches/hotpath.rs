@@ -8,6 +8,11 @@
 //!     `--features pjrt`, PJRT single vs PJRT batched — the L2/L3
 //!     boundary cost);
 //!   * cache-hierarchy accesses/s (the per-access substrate cost);
+//!   * `EpochBins` recording: scalar per-sample `record` vs the staged
+//!     `stage` + `record_bulk` scatter the epoch driver uses;
+//!   * batched timing analysis: the fused `NativeBatchAnalyzer` kernel
+//!     vs E scalar `analyze` calls;
+//!   * multihost epochs/s: persistent worker pool, 1 thread vs N;
 //!   * end-to-end coordinator accesses/s, per-event vs batched pump —
 //!     the headline number for the paper's "orders of magnitude faster
 //!     than cycle-accurate" claim.
@@ -16,14 +21,19 @@
 //! track the perf trajectory.
 //!
 //!     cargo bench --offline --bench hotpath
+//!
+//! Set `HOTPATH_SMOKE=1` (CI does) to shrink workloads and iteration
+//! counts ~10x: same JSON schema, same comparisons, minutes → seconds.
 
 use cxlmemsim::alloctrack::AllocTracker;
 use cxlmemsim::cache::CacheHierarchy;
 use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::multihost::run_shared_threads;
 use cxlmemsim::prelude::*;
-use cxlmemsim::runtime::native::NativeAnalyzer;
+use cxlmemsim::runtime::native::{NativeAnalyzer, NativeBatchAnalyzer};
 use cxlmemsim::runtime::shapes;
-use cxlmemsim::runtime::{TimingInputs, TimingModel};
+use cxlmemsim::runtime::{BatchTimingModel, TimingInputs, TimingModel};
+use cxlmemsim::trace::binning::{BinDelta, EpochBins};
 use cxlmemsim::trace::{AllocEvent, AllocKind};
 use cxlmemsim::util::benchutil::{bench, fmt_secs};
 use cxlmemsim::util::json::{self, Json};
@@ -31,6 +41,11 @@ use cxlmemsim::util::rng::Rng;
 use cxlmemsim::workload::{self, drain_batched};
 
 fn main() {
+    let smoke = std::env::var("HOTPATH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    // iteration scaler: smoke mode cuts measured iterations ~10x
+    let it = |n: usize| if smoke { (n / 10).max(1) } else { n };
+    let wl_scale = if smoke { 0.002 } else { 0.01 };
+
     let topo = builtin::fig2();
     let tensors = TopoTensors::build(&topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES).unwrap();
     let nbins = shapes::NUM_BINS;
@@ -47,24 +62,24 @@ fn main() {
         bytes_per_ev: 64.0,
     };
 
-    println!("## P1: hot-path microbenchmarks\n");
+    println!("## P1: hot-path microbenchmarks{}\n", if smoke { " (smoke)" } else { "" });
 
     // --- event-pump throughput -----------------------------------
     // the tracer substrate's raw feed rate: how fast workloads emit
     for wl_name in ["mcf_like", "stream", "wrf_like"] {
-        let s = bench(&format!("{wl_name} per-event"), 1, 5, || {
-            let mut wl = workload::by_name(wl_name, 0.01, 7).unwrap();
+        let s = bench(&format!("{wl_name} per-event"), 1, it(5), || {
+            let mut wl = workload::by_name(wl_name, wl_scale, 7).unwrap();
             let mut n = 0u64;
             while wl.next_event().is_some() {
                 n += 1;
             }
             std::hint::black_box(n);
         });
-        let mut wl = workload::by_name(wl_name, 0.01, 7).unwrap();
+        let mut wl = workload::by_name(wl_name, wl_scale, 7).unwrap();
         let total = drain_batched(wl.as_mut(), 4096) as f64;
         let per_event_rate = total / s.mean_s;
-        let s = bench(&format!("{wl_name} batched"), 1, 5, || {
-            let mut wl = workload::by_name(wl_name, 0.01, 7).unwrap();
+        let s = bench(&format!("{wl_name} batched"), 1, it(5), || {
+            let mut wl = workload::by_name(wl_name, wl_scale, 7).unwrap();
             std::hint::black_box(drain_batched(wl.as_mut(), 4096));
         });
         let batched_rate = total / s.mean_s;
@@ -99,31 +114,34 @@ fn main() {
         });
     }
     // spatially local probe stream (the LLC-miss shape: streams/stencils)
-    let mut probes: Vec<u64> = Vec::with_capacity(1_000_000);
+    let nprobes = if smoke { 100_000u64 } else { 1_000_000u64 };
+    let mut probes: Vec<u64> = Vec::with_capacity(nprobes as usize);
     let mut r = Rng::new(9);
     let mut cur = 0x7f00_0000_0000u64;
-    for i in 0..1_000_000u64 {
+    for i in 0..nprobes {
         if i % 4096 == 0 {
             cur = 0x7f00_0000_0000 + r.below(regions) * 2 * region_len;
         }
         probes.push(cur + (i % (region_len / 64)) * 64);
     }
+    let (pool_warm, pool_iters) = (2usize, it(10));
     let mut sum = 0u64;
-    let s = bench("pool_of fast", 2, 10, || {
+    let s = bench("pool_of fast", pool_warm, pool_iters, || {
         for &a in &probes {
             sum = sum.wrapping_add(tracker.pool_of(a) as u64);
         }
     });
     let fast_rate = probes.len() as f64 / s.mean_s;
-    let s = bench("pool_of btree", 2, 10, || {
+    let s = bench("pool_of btree", pool_warm, pool_iters, || {
         for &a in &probes {
             sum = sum.wrapping_add(tracker.pool_of_btree(a) as u64);
         }
     });
     std::hint::black_box(sum);
     let btree_rate = probes.len() as f64 / s.mean_s;
-    // 12 fast passes ran (2 warmup + 10 timed) over `probes`
-    let mru_hit_rate = tracker.stats.mru_hits as f64 / (12.0 * probes.len() as f64);
+    // only the fast passes (warmup + timed) touch the MRU stats
+    let fast_passes = (pool_warm + pool_iters) as f64;
+    let mru_hit_rate = tracker.stats.mru_hits as f64 / (fast_passes * probes.len() as f64);
     println!(
         "pool_of:              fast {:>7.1} M/s ({:.1}% MRU hits) | btree {:>7.1} M/s ({:.2}x)",
         fast_rate / 1e6,
@@ -142,9 +160,60 @@ fn main() {
         ]),
     ));
 
+    // --- bins recording: scalar record vs staged bulk scatter ----
+    // the per-sampled-miss accounting cost inside the epoch driver
+    let epoch_ns = 1e6f64;
+    let nsamples = if smoke { 100_000usize } else { 1_000_000usize };
+    let mut samples: Vec<(usize, bool, f64, f32)> = Vec::with_capacity(nsamples);
+    let mut r = Rng::new(11);
+    for _ in 0..nsamples {
+        samples.push((
+            r.below(shapes::NUM_POOLS as u64) as usize,
+            r.below(2) == 0,
+            r.range_f64(0.0, epoch_ns),
+            1.0 + r.below(64) as f32,
+        ));
+    }
+    let mut bins = EpochBins::new(shapes::NUM_POOLS, nbins, epoch_ns);
+    let s = bench("bins record", 2, it(10), || {
+        bins.clear();
+        for &(p, w, t, wt) in &samples {
+            bins.record(p, w, t, wt);
+        }
+    });
+    let record_rate = samples.len() as f64 / s.mean_s;
+    let mut staged: Vec<BinDelta> = Vec::with_capacity(4096);
+    let s = bench("bins stage+record_bulk", 2, it(10), || {
+        bins.clear();
+        for chunk in samples.chunks(4096) {
+            staged.clear();
+            for &(p, w, t, wt) in chunk {
+                bins.stage(p, w, t, wt, &mut staged);
+            }
+            bins.record_bulk(&staged);
+        }
+    });
+    std::hint::black_box(bins.total_events);
+    let bulk_rate = samples.len() as f64 / s.mean_s;
+    println!(
+        "bins record:          scalar {:>7.1} M rec/s | bulk {:>7.1} M rec/s ({:.2}x)",
+        record_rate / 1e6,
+        bulk_rate / 1e6,
+        bulk_rate / record_rate
+    );
+    results.push((
+        "bins_record",
+        json::obj(vec![
+            ("samples", json::num(samples.len() as f64)),
+            ("scalar_recs_per_s", json::num(record_rate)),
+            ("bulk_recs_per_s", json::num(bulk_rate)),
+            ("speedup", json::num(bulk_rate / record_rate)),
+        ]),
+    ));
+
     // --- analyzer invocation cost --------------------------------
     let mut native = NativeAnalyzer::new(&tensors, nbins);
-    let s = bench("native analyze", 50, 500, || {
+    let s = bench("native analyze", it(50), it(500), || {
         native.analyze(&inp()).unwrap();
     });
     println!(
@@ -155,6 +224,43 @@ fn main() {
     results.push((
         "native_analyzer",
         json::obj(vec![("mean_s", json::num(s.mean_s))]),
+    ));
+
+    // --- batched analysis: fused kernel vs E scalar calls --------
+    let e = shapes::BATCH;
+    let mut batcher = NativeBatchAnalyzer::new(&tensors, nbins, e);
+    let mut r = Rng::new(5);
+    let breads: Vec<f32> = (0..e * n).map(|_| r.below(20) as f32).collect();
+    let bwrites: Vec<f32> = (0..e * n).map(|_| r.below(10) as f32).collect();
+    let s = bench("native batch analyze", it(20), it(200), || {
+        batcher.analyze_batch(&breads, &bwrites, 3906.25, 64.0).unwrap();
+    });
+    let fused_rate = e as f64 / s.mean_s;
+    let s = bench("native scalar xE", it(20), it(200), || {
+        for i in 0..e {
+            native
+                .analyze(&TimingInputs {
+                    reads: &breads[i * n..(i + 1) * n],
+                    writes: &bwrites[i * n..(i + 1) * n],
+                    bin_width: 3906.25,
+                    bytes_per_ev: 64.0,
+                })
+                .unwrap();
+        }
+    });
+    let scalar_rate = e as f64 / s.mean_s;
+    println!(
+        "batch analyze ({e:>2}/call): scalar {:>8.0} ep/s | fused {:>8.0} ep/s ({:.2}x)",
+        scalar_rate, fused_rate, fused_rate / scalar_rate
+    );
+    results.push((
+        "batch_analyze",
+        json::obj(vec![
+            ("batch", json::num(e as f64)),
+            ("scalar_epochs_per_s", json::num(scalar_rate)),
+            ("fused_epochs_per_s", json::num(fused_rate)),
+            ("speedup", json::num(fused_rate / scalar_rate)),
+        ]),
     ));
 
     #[cfg(feature = "pjrt")]
@@ -187,37 +293,76 @@ fn main() {
 
     // --- cache substrate cost ------------------------------------
     // worst case: uniform-random over 1 GB, every access an LLC miss
+    let naddr = nprobes; // same smoke scaling as the probe stream
     let mut cache = CacheHierarchy::scaled(1);
-    let addrs: Vec<u64> = (0..1_000_000u64).map(|_| rng.below(1 << 30) & !63).collect();
-    let s = bench("cache 1M misses", 1, 10, || {
+    let addrs: Vec<u64> = (0..naddr).map(|_| rng.below(1 << 30) & !63).collect();
+    let s = bench("cache misses", 1, it(10), || {
         for &a in &addrs {
             cache.access(a, a & 64 != 0);
         }
     });
     println!(
-        "cache (all-miss):     {:>10}/1M acc ({:.1} M accesses/s)",
+        "cache (all-miss):     {:>10}/pass  ({:.1} M accesses/s)",
         fmt_secs(s.mean_s),
-        1.0 / s.mean_s
+        addrs.len() as f64 / s.mean_s / 1e6
     );
     // common case: hot working set, L1-resident
     let mut cache = CacheHierarchy::scaled(1);
-    let hot: Vec<u64> = (0..1_000_000u64).map(|_| rng.below(512) * 64).collect();
-    let s = bench("cache 1M hits", 1, 10, || {
+    let hot: Vec<u64> = (0..naddr).map(|_| rng.below(512) * 64).collect();
+    let s = bench("cache hits", 1, it(10), || {
         for &a in &hot {
             cache.access(a, a & 64 != 0);
         }
     });
     println!(
-        "cache (L1-hot):       {:>10}/1M acc ({:.1} M accesses/s)",
+        "cache (L1-hot):       {:>10}/pass  ({:.1} M accesses/s)",
         fmt_secs(s.mean_s),
-        1.0 / s.mean_s
+        hot.len() as f64 / s.mean_s / 1e6
     );
+
+    // --- multihost epochs/s: persistent pool, 1 thread vs N ------
+    // short epochs make the per-epoch coordination cost visible — this
+    // is exactly the regime the persistent worker pool (vs a fresh
+    // thread scope per epoch) is for
+    let mh_hosts = if smoke { 4usize } else { 8usize };
+    let mh = |threads: usize| {
+        let mut c = SimConfig::default();
+        c.scale = 0.002;
+        c.cache_scale = 64;
+        c.epoch_ms = 0.05;
+        c.backend = AnalyzerBackend::Native;
+        let hosts: Vec<Box<dyn Workload>> = (0..mh_hosts)
+            .map(|i| workload::by_name("stream", c.scale, i as u64).unwrap())
+            .collect();
+        run_shared_threads(&topo, &c, hosts, threads).unwrap()
+    };
+    let one = mh(1);
+    let par_threads = mh_hosts.min(4);
+    let many = mh(par_threads);
+    assert_eq!(one.epochs, many.epochs, "multihost pipelines diverged");
+    let one_rate = one.epochs as f64 / one.wall_s;
+    let many_rate = many.epochs as f64 / many.wall_s;
+    println!(
+        "multihost[{mh_hosts} hosts]:    1-thread {:>7.0} ep/s | {par_threads}-thread {:>7.0} ep/s ({:.2}x)",
+        one_rate, many_rate, many_rate / one_rate
+    );
+    results.push((
+        "multihost_epoch",
+        json::obj(vec![
+            ("hosts", json::num(mh_hosts as f64)),
+            ("threads", json::num(par_threads as f64)),
+            ("epochs", json::num(one.epochs as f64)),
+            ("single_epochs_per_s", json::num(one_rate)),
+            ("pooled_epochs_per_s", json::num(many_rate)),
+            ("speedup", json::num(many_rate / one_rate)),
+        ]),
+    ));
 
     // --- end-to-end coordinator: per-event vs batched pump -------
     let run_coord = |event_batch: usize| {
         let mut cfg = SimConfig::default();
-        cfg.scale = 0.01;
-        cfg.cache_scale = 1;
+        cfg.scale = wl_scale;
+        cfg.cache_scale = if smoke { 64 } else { 1 };
         cfg.backend = AnalyzerBackend::Native;
         cfg.event_batch = event_batch;
         let mut sim = Coordinator::new(topo.clone(), cfg).unwrap();

@@ -62,6 +62,6 @@ pub fn run_batched_with(
     );
     flush.policy = policy;
     driver.run(wl, &mut flush, &mut report, cfg.max_epochs)?;
-    report.finish(&driver.cache.stats, &driver.tracker.stats, wall_start.elapsed());
+    report.finish(&driver.cache.stats, driver.tracer_run_stats(), wall_start.elapsed());
     Ok(report)
 }

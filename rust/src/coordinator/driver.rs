@@ -15,6 +15,10 @@
 //! is a monomorphic iteration over a `Vec<WlEvent>` instead of one dyn
 //! dispatch per event — set `event_batch = 1` to recover the old
 //! per-event behaviour as a measurable baseline (`benches/hotpath.rs`).
+//! Miss accounting is bulk too: sampled misses, write-backs, and
+//! prefetch fills are staged as pre-binned `(pool, rw, bin, weight)`
+//! deltas and scattered into the `[P, B]` tensors once per event batch
+//! (`EpochBins::record_bulk`) rather than one `record` call per sample.
 //! Both paths produce bit-identical `SimReport`s
 //! (`tests/pipeline_equivalence.rs`).
 
@@ -23,11 +27,11 @@ use crate::cache::{AccessOutcome, CacheHierarchy, Prefetcher};
 use crate::policy::EpochPolicy;
 use crate::runtime::{BatchTimingModel, TimingInputs, TimingModel};
 use crate::topology::Topology;
-use crate::trace::binning::EpochBins;
+use crate::trace::binning::{BinDelta, EpochBins};
 use crate::trace::WlEvent;
 use crate::workload::Workload;
 
-use super::report::SimReport;
+use super::report::{SimReport, TracerRunStats};
 use super::SimConfig;
 
 /// Default `SimConfig::event_batch`: events pulled per `next_batch`.
@@ -78,6 +82,23 @@ pub struct EpochDriver {
     epoch_vtime: f64,
     sample_ctr: u32,
     buf: Vec<WlEvent>,
+    /// Staged `(pool, rw, bin, weight)` deltas awaiting the bulk
+    /// scatter into `bins` — filled by `on_event`, drained once per
+    /// event batch (and at every epoch boundary) by `scatter_staged`.
+    staged: Vec<BinDelta>,
+    /// Deltas staged over the run (== samples binned); exported to
+    /// `SimReport` so bulk-path regressions show up in reports.
+    pub staged_total: u64,
+    /// Bulk scatters performed (`record_bulk` calls with a non-empty
+    /// staging buffer); `staged_total / bulk_flushes` is the achieved
+    /// amortization factor.
+    pub bulk_flushes: u64,
+    /// Tracker-stat snapshots taken at `reset` — the tracker persists
+    /// across runs, so per-run reports subtract these baselines
+    /// (`tracer_run_stats`).
+    mru_hits_base: u64,
+    lookup_misses_base: u64,
+    index_rebuilds_base: u64,
 }
 
 impl EpochDriver {
@@ -109,17 +130,57 @@ impl EpochDriver {
             epoch_vtime: 0.0,
             sample_ctr: 0,
             buf: Vec::with_capacity(cfg.event_batch.max(1)),
+            staged: Vec::with_capacity(cfg.event_batch.max(1)),
+            staged_total: 0,
+            bulk_flushes: 0,
+            mru_hits_base: 0,
+            lookup_misses_base: 0,
+            index_rebuilds_base: 0,
         })
     }
 
     /// Reset per-run state (cache stats, bins, epoch clock). The
     /// tracker deliberately persists across runs, matching the previous
-    /// coordinator behaviour (allocations outlive a `run` call).
+    /// coordinator behaviour (allocations outlive a `run` call) — its
+    /// counters are snapshotted here so reports show this run's deltas.
     pub fn reset(&mut self) {
         self.cache.reset_stats();
         self.bins.clear();
         self.epoch_vtime = 0.0;
         self.sample_ctr = 0;
+        self.staged.clear();
+        self.staged_total = 0;
+        self.bulk_flushes = 0;
+        self.mru_hits_base = self.tracker.stats.mru_hits;
+        self.lookup_misses_base = self.tracker.stats.lookup_misses;
+        self.index_rebuilds_base = self.tracker.stats.index_rebuilds;
+    }
+
+    /// This run's tracer fast-path counters (tracker deltas since the
+    /// last `reset` plus the staging-buffer totals), for
+    /// `SimReport::finish`.
+    pub fn tracer_run_stats(&self) -> TracerRunStats {
+        TracerRunStats {
+            mru_hits: self.tracker.stats.mru_hits - self.mru_hits_base,
+            lookup_misses: self.tracker.stats.lookup_misses - self.lookup_misses_base,
+            index_rebuilds: self.tracker.stats.index_rebuilds - self.index_rebuilds_base,
+            bins_staged: self.staged_total,
+            bins_bulk_flushes: self.bulk_flushes,
+        }
+    }
+
+    /// Drain the staging buffer into the bins tensors. Runs once per
+    /// event batch (the common case: one scatter amortized over up to
+    /// `event_batch` events) and at every epoch boundary.
+    #[inline]
+    fn scatter_staged(&mut self) {
+        if self.staged.is_empty() {
+            return;
+        }
+        self.staged_total += self.staged.len() as u64;
+        self.bulk_flushes += 1;
+        self.bins.record_bulk(&self.staged);
+        self.staged.clear();
     }
 
     /// Account one event: virtual time, cache walk, miss sampling,
@@ -146,11 +207,12 @@ impl EpochDriver {
                     self.sample_ctr += 1;
                     if self.sample_ctr >= self.sample_period {
                         self.sample_ctr = 0;
-                        self.bins.record(
+                        self.bins.stage(
                             pool,
                             a.is_write,
                             self.epoch_vtime,
                             self.sample_period as f32,
+                            &mut self.staged,
                         );
                     }
                     if let Some(wb_addr) = writeback {
@@ -158,7 +220,7 @@ impl EpochDriver {
                         // line's pool (unsampled, weight 1)
                         let wb_pool = self.tracker.pool_of(wb_addr);
                         report.record_writeback(wb_pool);
-                        self.bins.record(wb_pool, true, self.epoch_vtime, 1.0);
+                        self.bins.stage(wb_pool, true, self.epoch_vtime, 1.0, &mut self.staged);
                     }
                 }
                 // hardware prefetcher: observe, fill, bin the traffic
@@ -171,7 +233,7 @@ impl EpochDriver {
                         for t in fetched {
                             let pool = self.tracker.pool_of(t);
                             report.prefetches += 1;
-                            self.bins.record(pool, false, self.epoch_vtime, 1.0);
+                            self.bins.stage(pool, false, self.epoch_vtime, 1.0, &mut self.staged);
                         }
                     }
                 }
@@ -185,6 +247,9 @@ impl EpochDriver {
         flush: &mut F,
         report: &mut SimReport,
     ) -> anyhow::Result<()> {
+        // the boundary can fire mid-batch: scatter pending deltas so
+        // the strategy sees the complete epoch
+        self.scatter_staged();
         flush.on_epoch(&self.bins, self.epoch_vtime, &mut self.tracker, report)?;
         self.bins.clear();
         self.epoch_vtime = 0.0;
@@ -233,6 +298,9 @@ impl EpochDriver {
                     }
                 }
             }
+            // bulk scatter: one `record_bulk` pass per event batch
+            // instead of one `record` call per sampled miss
+            self.scatter_staged();
         }
         // the program exited mid-epoch: flush the partial epoch
         if self.epoch_vtime > 0.0 {

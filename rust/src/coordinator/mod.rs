@@ -23,7 +23,7 @@ pub mod report;
 
 pub use batch::{run_batched, run_batched_with};
 pub use driver::{BatchedFlush, EpochDriver, EpochFlush, PerEpochAnalyze, DEFAULT_EVENT_BATCH};
-pub use report::{EpochRecord, SimReport};
+pub use report::{EpochRecord, SimReport, TracerRunStats};
 
 use crate::alloctrack::{AllocTracker, PolicyKind};
 use crate::policy::EpochPolicy;
@@ -123,9 +123,10 @@ impl Coordinator {
             runtime::shapes::NUM_POOLS,
             runtime::shapes::NUM_SWITCHES,
         )?;
-        let mut model =
+        // backlog export defaults off everywhere (hot path stays
+        // allocation-light); set_epoch_policy re-enables it
+        let model =
             runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
-        model.set_export_backlog(false); // re-enabled by set_epoch_policy
         let driver = EpochDriver::new(&topo, &cfg)?;
         Ok(Coordinator { topo, cfg, model, driver, epoch_policy: None })
     }
@@ -171,7 +172,7 @@ impl Coordinator {
         self.driver.run(wl, &mut flush, &mut report, self.cfg.max_epochs)?;
         report.finish(
             &self.driver.cache.stats,
-            &self.driver.tracker.stats,
+            self.driver.tracer_run_stats(),
             wall_start.elapsed(),
         );
         Ok(report)
@@ -322,6 +323,27 @@ mod tests {
         let mut cfg = cfg_fast();
         cfg.prefetcher = Some("oracle".into());
         assert!(Coordinator::new(builtin::fig2(), cfg).is_err());
+    }
+
+    #[test]
+    fn tracer_counters_are_per_run_not_cumulative() {
+        // the tracker persists across runs on one Coordinator; the
+        // report must still carry THIS run's deltas. Invariant: MRU
+        // hits can never exceed this run's pool_of lookups (one per
+        // miss, write-back, and prefetch fill) — a cumulative counter
+        // blows through that bound on the second run.
+        let mut sim = Coordinator::new(builtin::fig2(), cfg_fast()).unwrap();
+        let first = sim.run_workload("stream").unwrap();
+        assert!(first.pool_mru_hits > 0);
+        assert!(first.bins_staged > 0);
+        let second = sim.run_workload("stream").unwrap();
+        let lookups = second.total_misses + second.writebacks + second.prefetches;
+        assert!(
+            second.pool_mru_hits <= lookups,
+            "second run reports {} MRU hits but only {} lookups — cumulative leak",
+            second.pool_mru_hits,
+            lookups
+        );
     }
 
     #[test]

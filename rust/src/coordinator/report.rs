@@ -2,10 +2,24 @@
 //! export. These are the numbers Table 1 and the characterization
 //! benches print.
 
-use crate::alloctrack::TrackerStats;
 use crate::cache::CacheStats;
 use crate::runtime::TimingOutputs;
 use crate::util::json::{self, Json};
+
+/// Tracer fast-path counters for ONE run. The allocation tracker
+/// deliberately persists across `Coordinator::run` calls, so its
+/// lifetime-cumulative stats are snapshotted at run start and the
+/// deltas reported here (`EpochDriver::tracer_run_stats`) — otherwise
+/// a second run's MRU-hit-rate canary would include the first run's
+/// hits and mask regressions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TracerRunStats {
+    pub mru_hits: u64,
+    pub lookup_misses: u64,
+    pub index_rebuilds: u64,
+    pub bins_staged: u64,
+    pub bins_bulk_flushes: u64,
+}
 
 /// One epoch's outcome (kept only with `keep_epoch_records`).
 #[derive(Clone, Debug)]
@@ -45,6 +59,20 @@ pub struct SimReport {
     /// LLC misses routed to each pool (reads, writes), index = PoolId.
     pub pool_read_misses: Vec<u64>,
     pub pool_write_misses: Vec<u64>,
+    /// Tracer fast-path observability (perf-regression canaries —
+    /// `benches/hotpath.rs` has the timings, these make the hit rates
+    /// visible in every report; all values are deltas for THIS run):
+    /// `pool_of` lookups answered by the one-entry MRU region cache,
+    /// lookups that fell through to local DRAM, and flat-index
+    /// rebuilds after allocation churn.
+    pub pool_mru_hits: u64,
+    pub pool_lookup_misses: u64,
+    pub pool_index_rebuilds: u64,
+    /// Bulk miss accounting: histogram deltas staged over the run and
+    /// the number of `record_bulk` scatters that drained them
+    /// (`bins_staged / bins_bulk_flushes` ≈ achieved amortization).
+    pub bins_staged: u64,
+    pub bins_bulk_flushes: u64,
     pub epochs: Vec<EpochRecord>,
 }
 
@@ -69,6 +97,11 @@ impl SimReport {
             prefetches: 0,
             pool_read_misses: vec![0; pools],
             pool_write_misses: vec![0; pools],
+            pool_mru_hits: 0,
+            pool_lookup_misses: 0,
+            pool_index_rebuilds: 0,
+            bins_staged: 0,
+            bins_bulk_flushes: 0,
             epochs: Vec::new(),
         }
     }
@@ -116,10 +149,15 @@ impl SimReport {
     pub(crate) fn finish(
         &mut self,
         cache: &CacheStats,
-        _tracker: &TrackerStats,
+        tracer: TracerRunStats,
         wall: std::time::Duration,
     ) {
         self.total_accesses = cache.accesses;
+        self.pool_mru_hits = tracer.mru_hits;
+        self.pool_lookup_misses = tracer.lookup_misses;
+        self.pool_index_rebuilds = tracer.index_rebuilds;
+        self.bins_staged = tracer.bins_staged;
+        self.bins_bulk_flushes = tracer.bins_bulk_flushes;
         self.wall_s = wall.as_secs_f64();
     }
 
@@ -186,6 +224,15 @@ impl SimReport {
             })
             .collect();
         s.push_str(&format!("  pool traffic: {}\n", per_pool.join("  ")));
+        s.push_str(&format!(
+            "  tracer: {} MRU hits / {} untracked lookups / {} index rebuilds; \
+             {} bins staged in {} bulk flushes\n",
+            self.pool_mru_hits,
+            self.pool_lookup_misses,
+            self.pool_index_rebuilds,
+            self.bins_staged,
+            self.bins_bulk_flushes
+        ));
         s.push_str(&format!("  tool wall-clock {:.3} s\n", self.wall_s));
         s
     }
@@ -208,6 +255,11 @@ impl SimReport {
             ("llc_misses", json::num(self.total_misses as f64)),
             ("writebacks", json::num(self.writebacks as f64)),
             ("alloc_events", json::num(self.alloc_events as f64)),
+            ("pool_mru_hits", json::num(self.pool_mru_hits as f64)),
+            ("pool_lookup_misses", json::num(self.pool_lookup_misses as f64)),
+            ("pool_index_rebuilds", json::num(self.pool_index_rebuilds as f64)),
+            ("bins_staged", json::num(self.bins_staged as f64)),
+            ("bins_bulk_flushes", json::num(self.bins_bulk_flushes as f64)),
             (
                 "pool_read_misses",
                 json::arr_f64(&self.pool_read_misses.iter().map(|x| *x as f64).collect::<Vec<_>>()),

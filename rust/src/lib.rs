@@ -32,6 +32,12 @@
 //!   dispatch per event. `SimConfig::event_batch = 1` recovers the
 //!   legacy per-event loop as a measurable baseline, with bit-identical
 //!   simulation output (`tests/pipeline_equivalence.rs`).
+//! * **Bulk miss accounting** — sampled misses, write-backs, and
+//!   prefetch fills are staged as pre-binned `(pool, rw, bin, weight)`
+//!   deltas (`EpochBins::stage`: one reciprocal multiply, clamp
+//!   branches run once at stage time) and scattered into the `[P, B]`
+//!   histograms once per event batch (`EpochBins::record_bulk`); the
+//!   scalar `EpochBins::record` stays as the differential baseline.
 //! * **Tracer fast paths** — `AllocTracker::pool_of` (one call per LLC
 //!   miss) answers through a one-entry MRU region cache backed by a
 //!   lazily rebuilt flat interval index (binary search), instead of a
@@ -44,13 +50,33 @@
 //!   (prefetcher traffic, sampling, write-backs, epoch policies) land
 //!   once for both. The `gem5like` detailed baseline keeps its own
 //!   event-accounting loop by design (it models a different machine)
-//!   but adopts the same batched pump. The multihost runner shards its
-//!   per-epoch host phase across OS threads and merges per-host bins
-//!   deterministically at the epoch barrier.
+//!   but adopts the same batched pump.
+//! * **Fused batched analysis** — `NativeAnalyzer` runs its congestion
+//!   and bandwidth queueing scans fused into one pass per active
+//!   switch row, skips all-zero pool columns in the descendant-mask
+//!   matmul, and only stores/exports the backlog profile when an epoch
+//!   policy asked for it; `NativeBatchAnalyzer` drives the same core
+//!   over E epochs with outputs written straight into pre-sized
+//!   `[E, ·]` tensors (no per-epoch allocation).
+//! * **Persistent multihost workers** — the multihost runner splits
+//!   hosts into per-worker shards once per run and keeps the worker
+//!   threads alive across epochs behind a `std::sync::Barrier`
+//!   (replacing a fresh thread scope per epoch); per-host bins still
+//!   merge deterministically, in host order, at the epoch barrier.
 //!
-//! `benches/hotpath.rs` measures all three against their baselines
-//! (per-event pump, `pool_of_btree`) and writes the numbers to
-//! `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
+//! ## Hot path anatomy
+//!
+//! One `Access` event costs, in order: the cache walk
+//! (`cache::CacheHierarchy::access`), on a miss a `pool_of` lookup
+//! (MRU hit in the common case) plus a staged bin delta, and the
+//! epoch-boundary check. Everything else — the bulk scatter, the
+//! analyzer call, policy hooks — is amortized per batch or per epoch.
+//! `benches/hotpath.rs` measures each stage against its kept-runnable
+//! baseline (per-event pump vs batched, `pool_of_btree` vs fast path,
+//! `record` vs `record_bulk`, scalar vs fused batch analyze, 1-thread
+//! vs pooled multihost) and writes `BENCH_hotpath.json` so the perf
+//! trajectory is tracked across PRs (CI uploads it per run, in
+//! `HOTPATH_SMOKE` mode).
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //!

@@ -7,13 +7,16 @@
 //! Each host has its own cache hierarchy, allocation tracker (its own
 //! address space), and per-epoch bins. Within an epoch every host
 //! advances independently — which is why the host phase parallelizes:
-//! hosts are sharded across OS threads (`std::thread::scope`), and the
-//! per-host bins are merged into the shared bins at the epoch barrier,
-//! always in host order, so the result is bit-identical for any thread
-//! count (`tests/pipeline_equivalence.rs`). The shared switches then
-//! see the union of the traffic and the congestion/bandwidth scans
-//! charge everyone; the computed epoch delay is attributed to hosts
-//! proportionally to their traffic.
+//! hosts are split into per-worker shards ONCE for the whole run and
+//! driven by a persistent worker pool (one OS thread per shard, kept
+//! alive across epochs and synchronized with a `std::sync::Barrier` —
+//! spawning a fresh thread scope per epoch was measurable for short
+//! epochs). Per-host bins are merged into the shared bins at the epoch
+//! barrier, always in host order, so the result is bit-identical for
+//! any thread count (`tests/pipeline_equivalence.rs`). The shared
+//! switches then see the union of the traffic and the
+//! congestion/bandwidth scans charge everyone; the computed epoch
+//! delay is attributed to hosts proportionally to their traffic.
 //!
 //! CXL.mem pool coherency (paper §2): writes to the shared range are
 //! logged during the host phase and applied at the barrier — each
@@ -21,6 +24,9 @@
 //! and transits the topology as a write message. Deferring delivery to
 //! the barrier (epoch granularity, the simulator's native resolution)
 //! is what makes the host phase embarrassingly parallel.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex};
 
 use crate::alloctrack::AllocTracker;
 use crate::cache::{AccessOutcome, CacheHierarchy};
@@ -191,7 +197,7 @@ pub fn run_shared(
 
 /// [`run_shared`] with an explicit host-phase thread count. The result
 /// is bit-identical for every `threads` value (deterministic barrier
-/// merge); `threads == 1` runs everything inline.
+/// merge); `threads == 1` runs everything inline, with no worker pool.
 pub fn run_shared_threads(
     topo: &Topology,
     cfg: &SimConfig,
@@ -208,7 +214,8 @@ pub fn run_shared_threads(
     let mut bins = EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns());
 
     let batch = cfg.event_batch.max(1);
-    let mut hosts: Vec<Host> = workloads
+    let nhosts = workloads.len();
+    let hosts: Vec<Host> = workloads
         .into_iter()
         .map(|wl| Host {
             wl,
@@ -236,105 +243,197 @@ pub fn run_shared_threads(
     let mut invalidations = 0u64;
     let mut coherence_msgs = 0u64;
     let shared_base = crate::workload::patterns::SHARED_BASE;
-    let nthreads = threads.max(1).min(hosts.len().max(1));
+    let nthreads = threads.max(1).min(nhosts.max(1));
+    let use_pool = nthreads > 1 && nhosts > 1;
 
-    loop {
-        let live = hosts.iter().filter(|h| !h.done).count();
-        if live == 0 {
-            break;
-        }
-        // ---- parallel host phase: advance every live host one epoch.
-        // A fresh thread scope per epoch keeps the borrow story trivial
-        // (workers own disjoint &mut chunks only while the scope lives,
-        // the barrier below gets the whole Vec back); the spawn cost is
-        // amortized over an epoch's worth of event processing, and we
-        // drop to the inline path when threads can't help.
-        if nthreads <= 1 || live <= 1 {
-            for h in hosts.iter_mut() {
-                advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
-            }
-        } else {
-            let chunk = hosts.len().div_ceil(nthreads);
-            std::thread::scope(|s| {
-                for slice in hosts.chunks_mut(chunk) {
-                    s.spawn(move || {
-                        for h in slice {
-                            advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
-                        }
-                    });
-                }
-            });
-        }
-
-        // ---- epoch barrier (sequential, host order => deterministic)
-        // 1. merge per-host traffic into the shared switch view
-        for h in hosts.iter_mut() {
-            bins.merge_from(&h.bins);
-            h.bins.clear();
-        }
-        // 2. deliver coherence back-invalidations for shared writes
-        for hi in 0..hosts.len() {
-            if hosts[hi].shared_writes.is_empty() {
-                continue;
-            }
-            let writes = std::mem::take(&mut hosts[hi].shared_writes);
-            for w in &writes {
-                for pj in 0..hosts.len() {
-                    if pj == hi {
-                        continue;
-                    }
-                    if hosts[pj].cache.coherence_invalidate(w.addr) {
-                        invalidations += 1;
-                        coherence_msgs += 1;
-                        bins.record(w.pool, true, w.t_ns, 1.0);
-                    }
-                }
-            }
-            // hand the (cleared) allocation back to the host
-            let mut writes = writes;
-            writes.clear();
-            hosts[hi].shared_writes = writes;
-        }
-
-        // 3. one analyzer call for everyone
-        let out = model.analyze(&TimingInputs {
-            reads: &bins.reads,
-            writes: &bins.writes,
-            bin_width: bins.bin_width_ns() as f32,
-            bytes_per_ev: topo.host.cacheline_bytes as f32,
-        })?;
-        epochs += 1;
-        total_delay += out.total;
-        cong_total += out.cong_total();
-        bwd_total += out.bwd_total();
-
-        // 4. attribute delay to hosts by their miss share this epoch
-        let epoch_misses: f64 = hosts.iter().map(|h| h.epoch_misses).sum();
-        for h in hosts.iter_mut() {
-            let share = if epoch_misses > 0.0 { h.epoch_misses / epoch_misses } else { 0.0 };
-            h.delay_ns += out.total * share;
-            h.native_ns += h.epoch_vtime;
-            h.epoch_vtime = 0.0;
-            h.epoch_misses = 0.0;
-        }
-        bins.clear();
-        if let Some(max) = cfg.max_epochs {
-            if epochs >= max {
+    // ---- persistent worker pool: hosts are split into per-worker
+    // shards ONCE for the whole run. Each shard lives behind its own
+    // Mutex, but the locks are never contended — the Barrier alternates
+    // exclusive phases (workers advance their shard while the
+    // coordinator is parked; the coordinator merges at the epoch
+    // barrier while the workers are parked), so the Mutex only carries
+    // ownership across the phase boundary for the borrow checker.
+    // Replaces the fresh `std::thread::scope` per epoch, whose
+    // spawn/join cost was measurable for short epochs (ROADMAP item).
+    let shard_len = nhosts.div_ceil(nthreads).max(1);
+    let mut shards: Vec<Mutex<Vec<Host>>> = Vec::new();
+    {
+        let mut it = hosts.into_iter();
+        loop {
+            let shard: Vec<Host> = it.by_ref().take(shard_len).collect();
+            if shard.is_empty() {
                 break;
             }
+            shards.push(Mutex::new(shard));
         }
     }
+    if shards.is_empty() {
+        shards.push(Mutex::new(Vec::new())); // zero hosts: empty run
+    }
+    // two rendezvous per epoch: open the host phase, then collect it
+    let barrier = Barrier::new(shards.len() + 1);
+    let stop = AtomicBool::new(false);
+    let panicked = AtomicBool::new(false);
+    let mut run_err: Option<anyhow::Error> = None;
 
-    let hosts_out = hosts
-        .iter()
-        .map(|h| HostReport {
-            workload: h.wl.name().to_string(),
-            native_ns: h.native_ns,
-            simulated_ns: h.native_ns + h.delay_ns,
-            delay_ns: h.delay_ns,
-            misses: h.misses,
-        })
-        .collect();
+    std::thread::scope(|s| {
+        if use_pool {
+            for shard in &shards {
+                let barrier = &barrier;
+                let stop = &stop;
+                let panicked = &panicked;
+                s.spawn(move || loop {
+                    barrier.wait(); // parked until the epoch opens
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    // a panic here must not strand the coordinator at
+                    // the end-of-phase barrier (std Barrier has no
+                    // poisoning): catch it, flag it, make the
+                    // rendezvous anyway; the coordinator turns the flag
+                    // into an error after the phase.
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let mut hs = shard.lock().unwrap();
+                        for h in hs.iter_mut() {
+                            advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
+                        }
+                    }));
+                    if result.is_err() {
+                        panicked.store(true, Ordering::Release);
+                    }
+                    barrier.wait(); // shard advanced one epoch
+                });
+            }
+        }
+
+        loop {
+            let mut guards: Vec<std::sync::MutexGuard<'_, Vec<Host>>> =
+                shards.iter().map(|sh| sh.lock().unwrap()).collect();
+            let live = guards.iter().flat_map(|g| g.iter()).filter(|h| !h.done).count();
+            if live == 0 {
+                break;
+            }
+
+            // ---- host phase: every live host advances one epoch
+            if use_pool {
+                drop(guards);
+                barrier.wait(); // open the host phase
+                barrier.wait(); // every shard done
+                // check BEFORE re-locking: a worker panic poisons its
+                // shard Mutex, so surface the error instead of a
+                // PoisonError unwrap (or, worse, a silent hang at the
+                // barrier, which is what a stranded rendezvous gave)
+                if panicked.load(Ordering::Acquire) {
+                    run_err = Some(anyhow::anyhow!(
+                        "multihost worker panicked during the host phase \
+                         (see stderr for the panic message)"
+                    ));
+                    break;
+                }
+                guards = shards.iter().map(|sh| sh.lock().unwrap()).collect();
+            } else {
+                for g in guards.iter_mut() {
+                    for h in g.iter_mut() {
+                        advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
+                    }
+                }
+            }
+            // flatten the shards back into host order for the barrier
+            // phase (shards partition the original order, so this view
+            // is exactly the pre-pool `Vec<Host>` iteration order)
+            let mut all: Vec<&mut Host> = guards.iter_mut().flat_map(|g| g.iter_mut()).collect();
+
+            // ---- epoch barrier (coordinator thread, host order =>
+            // deterministic for any worker count)
+            // 1. merge per-host traffic into the shared switch view
+            for h in all.iter_mut() {
+                bins.merge_from(&h.bins);
+                h.bins.clear();
+            }
+            // 2. deliver coherence back-invalidations for shared writes
+            for hi in 0..all.len() {
+                if all[hi].shared_writes.is_empty() {
+                    continue;
+                }
+                let writes = std::mem::take(&mut all[hi].shared_writes);
+                for w in &writes {
+                    for pj in 0..all.len() {
+                        if pj == hi {
+                            continue;
+                        }
+                        if all[pj].cache.coherence_invalidate(w.addr) {
+                            invalidations += 1;
+                            coherence_msgs += 1;
+                            bins.record(w.pool, true, w.t_ns, 1.0);
+                        }
+                    }
+                }
+                // hand the (cleared) allocation back to the host
+                let mut writes = writes;
+                writes.clear();
+                all[hi].shared_writes = writes;
+            }
+
+            // 3. one analyzer call for everyone
+            let out = match model.analyze(&TimingInputs {
+                reads: &bins.reads,
+                writes: &bins.writes,
+                bin_width: bins.bin_width_ns() as f32,
+                bytes_per_ev: topo.host.cacheline_bytes as f32,
+            }) {
+                Ok(out) => out,
+                Err(e) => {
+                    // fall through to the shutdown barrier below so the
+                    // scope can join the parked workers
+                    run_err = Some(e);
+                    break;
+                }
+            };
+            epochs += 1;
+            total_delay += out.total;
+            cong_total += out.cong_total();
+            bwd_total += out.bwd_total();
+
+            // 4. attribute delay to hosts by their miss share this epoch
+            let epoch_misses: f64 = all.iter().map(|h| h.epoch_misses).sum();
+            for h in all.iter_mut() {
+                let share = if epoch_misses > 0.0 { h.epoch_misses / epoch_misses } else { 0.0 };
+                h.delay_ns += out.total * share;
+                h.native_ns += h.epoch_vtime;
+                h.epoch_vtime = 0.0;
+                h.epoch_misses = 0.0;
+            }
+            bins.clear();
+            if let Some(max) = cfg.max_epochs {
+                if epochs >= max {
+                    break;
+                }
+            }
+        }
+
+        if use_pool {
+            // wake the parked workers into the stop check so they exit
+            // and the scope join returns
+            stop.store(true, Ordering::Release);
+            barrier.wait();
+        }
+    });
+    if let Some(e) = run_err {
+        return Err(e);
+    }
+
+    let mut hosts_out = Vec::with_capacity(nhosts);
+    for sh in shards {
+        for h in sh.into_inner().unwrap() {
+            hosts_out.push(HostReport {
+                workload: h.wl.name().to_string(),
+                native_ns: h.native_ns,
+                simulated_ns: h.native_ns + h.delay_ns,
+                delay_ns: h.delay_ns,
+                misses: h.misses,
+            });
+        }
+    }
     Ok(MultiHostReport {
         hosts: hosts_out,
         epochs,
@@ -457,5 +556,30 @@ mod tests {
             assert_eq!(rep.hosts.len(), 3);
             assert!(rep.epochs > 0);
         }
+    }
+
+    #[test]
+    fn uneven_shards_and_excess_threads_run() {
+        // 5 hosts over 3 workers leaves a short tail shard; 64 threads
+        // clamps to one host per shard — the persistent pool must
+        // handle both and keep hosts in order
+        for threads in [3usize, 64] {
+            let rep =
+                run_shared_threads(&builtin::fig2(), &cfg(), mk_hosts(5), threads).unwrap();
+            assert_eq!(rep.hosts.len(), 5);
+            assert!(rep.epochs > 0);
+            for (i, h) in rep.hosts.iter().enumerate() {
+                assert_eq!(h.workload, "stream", "host {i} out of place");
+                assert!(h.misses > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_hosts_is_an_empty_run() {
+        let rep = run_shared_threads(&builtin::fig2(), &cfg(), Vec::new(), 4).unwrap();
+        assert!(rep.hosts.is_empty());
+        assert_eq!(rep.epochs, 0);
+        assert_eq!(rep.total_delay_ns, 0.0);
     }
 }

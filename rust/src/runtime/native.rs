@@ -2,9 +2,11 @@
 //!
 //! Implements exactly the math of `python/compile/model.py` (and its
 //! oracle `kernels/ref.py`): latency dot products, the descendant-mask
-//! matmul, and the two queueing scans. f32 arithmetic in the same
-//! order as the HLO so results agree to float tolerance — verified
-//! against `artifacts/golden.json` in `rust/tests/golden.rs`.
+//! matmul, and the two queueing scans — fused here into a single pass
+//! per switch row, with all-zero pool columns skipped. f32 arithmetic
+//! produces every value with the same operations in the same order as
+//! the HLO so results agree to float tolerance — verified against
+//! `artifacts/golden.json` in `rust/tests/golden.rs`.
 //!
 //! This backend is also the performance fast path: for the default
 //! (P=8, S=8, B=256) shapes one invocation is a few microseconds, so
@@ -29,9 +31,13 @@ pub struct NativeAnalyzer {
     // scratch buffers reused across epochs (no hot-loop allocation)
     ev: Vec<f32>,
     cong_backlog: Vec<f32>,
-    bw_demand: Vec<f32>,
-    /// Copy the backlog profile into the outputs (needed by epoch
-    /// policies; off by default to keep the hot path allocation-light).
+    /// Pools whose read+write histograms are all-zero this epoch; the
+    /// masked matmul skips their columns (histograms are event counts,
+    /// so a zero sum means a zero row and skipping is bit-exact).
+    pool_zero: Vec<bool>,
+    /// Copy the backlog profile into the outputs. Off by default to
+    /// keep the hot path allocation-light; `Coordinator` turns it on
+    /// when an epoch policy is installed (policies read the profile).
     pub export_backlog: bool,
 }
 
@@ -56,14 +62,150 @@ impl NativeAnalyzer {
             bw: t.bw.clone(),
             ev: vec![0.0; t.switches * nbins],
             cong_backlog: vec![0.0; t.switches * nbins],
-            bw_demand: vec![0.0; t.switches * nbins],
-            export_backlog: true,
+            pool_zero: vec![false; t.pools],
+            export_backlog: false,
         }
     }
 
-    /// Borrow the last epoch's backlog profile without copying.
+    /// Borrow the last epoch's backlog profile without copying. Only
+    /// maintained while `export_backlog` is on — the common path skips
+    /// the per-bin backlog stores entirely.
     pub fn last_backlog(&self) -> &[f32] {
         &self.cong_backlog
+    }
+
+    /// The model's three stages for one epoch, writing into caller
+    /// slices — shared by the per-epoch [`TimingModel::analyze`] and
+    /// the batched kernel so both are bit-identical by construction:
+    ///
+    /// 1. latency dot products (also yields the sparse-pool mask);
+    /// 2. descendant-mask matmul `ev[s,b]`, active rows × live pools;
+    /// 3. congestion + bandwidth queueing scans, fused into ONE pass
+    ///    over each active switch row (the bandwidth scan needs only
+    ///    the current and previous backlog values, which the fused
+    ///    loop carries in registers instead of re-reading an [S, B]
+    ///    scratch array).
+    ///
+    /// Every f32 value is produced by the same operations in the same
+    /// order as the unfused reference (`kernels/ref.py`), so outputs
+    /// stay bit-identical — asserted against `artifacts/golden.json`
+    /// in `rust/tests/golden.rs` and across paths in
+    /// `tests/pipeline_equivalence.rs`.
+    fn analyze_core(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        bin_width: f32,
+        bytes_per_ev: f32,
+        lat: &mut [f32],
+        cong: &mut [f32],
+        bwd: &mut [f32],
+        store_backlog: bool,
+    ) -> f64 {
+        let (p, b) = (self.pools, self.nbins);
+        debug_assert_eq!(reads.len(), p * b);
+        debug_assert_eq!(writes.len(), p * b);
+        debug_assert_eq!(lat.len(), p);
+
+        // 1. latency delay per pool + sparsity mask
+        let mut any_traffic = false;
+        for pool in 0..p {
+            let ro: f32 = reads[pool * b..(pool + 1) * b].iter().sum();
+            let wo: f32 = writes[pool * b..(pool + 1) * b].iter().sum();
+            lat[pool] = ro * self.extra_rd[pool] + wo * self.extra_wr[pool];
+            let zero = ro == 0.0 && wo == 0.0;
+            self.pool_zero[pool] = zero;
+            any_traffic |= !zero;
+        }
+        cong.fill(0.0);
+        bwd.fill(0.0);
+        if !any_traffic {
+            // empty epoch: all outputs are exactly zero; skip the
+            // matmul and scans entirely (a zeroed input drives every
+            // queue term to 0 — see the scan recurrences below)
+            if store_backlog {
+                self.cong_backlog.fill(0.0);
+            }
+            return 0.0;
+        }
+
+        // 2. ev[s, b] = desc_mask @ (reads + writes), active rows ×
+        // pools with traffic only
+        self.ev.fill(0.0);
+        for &sw in &self.active_rows {
+            let row = &self.desc_mask[sw * p..(sw + 1) * p];
+            let out = &mut self.ev[sw * b..(sw + 1) * b];
+            for pool in 0..p {
+                let m = row[pool];
+                if m == 0.0 || self.pool_zero[pool] {
+                    continue;
+                }
+                let r = &reads[pool * b..(pool + 1) * b];
+                let w = &writes[pool * b..(pool + 1) * b];
+                for i in 0..b {
+                    out[i] += m * (r[i] + w[i]);
+                }
+            }
+        }
+
+        // 3. fused queueing scans per active row. Congestion: demand =
+        // ev*stt against capacity = bin_width; delay = end-of-epoch
+        // backlog drain time + transient waiting capped at one epoch
+        // (mirrors model.py; DESIGN.md §5). Bandwidth: byte demand of
+        // the served (congestion-shifted) stream against bw*bin_width.
+        let epoch_len = bin_width * b as f32;
+        for &sw in &self.active_rows {
+            let stt = self.stt[sw];
+            let bw = self.bw[sw];
+            let ev = &self.ev[sw * b..(sw + 1) * b];
+            let cap = bw * bin_width;
+            let mut qc = 0.0f32; // congestion backlog
+            let mut qcsum = 0.0f32;
+            let mut prev = 0.0f32; // previous bin's backlog
+            let mut qb = 0.0f32; // bandwidth backlog (bytes)
+            let mut qbsum = 0.0f32;
+            if store_backlog {
+                let backlog = &mut self.cong_backlog[sw * b..(sw + 1) * b];
+                for i in 0..b {
+                    let e = ev[i] * stt;
+                    qc = (qc + e - bin_width).max(0.0);
+                    backlog[i] = qc;
+                    qcsum += qc;
+                    let served = if stt > 0.0 { (e + prev - qc) / stt } else { ev[i] };
+                    let demand = served * bytes_per_ev;
+                    prev = qc;
+                    qb = (qb + demand - cap).max(0.0);
+                    qbsum += qb;
+                }
+            } else {
+                for i in 0..b {
+                    let e = ev[i] * stt;
+                    qc = (qc + e - bin_width).max(0.0);
+                    qcsum += qc;
+                    let served = if stt > 0.0 { (e + prev - qc) / stt } else { ev[i] };
+                    let demand = served * bytes_per_ev;
+                    prev = qc;
+                    qb = (qb + demand - cap).max(0.0);
+                    qbsum += qb;
+                }
+            }
+            cong[sw] = if stt > 0.0 {
+                qc + (qcsum * (bin_width / stt)).min(epoch_len)
+            } else {
+                0.0
+            };
+            bwd[sw] = if bw > 0.0 {
+                qb / bw + (qbsum * (bin_width / bytes_per_ev)).min(epoch_len)
+            } else {
+                0.0
+            };
+        }
+
+        // three partial sums added together, matching the reference's
+        // reduction order exactly
+        lat.iter().map(|x| *x as f64).sum::<f64>()
+            + cong.iter().map(|x| *x as f64).sum::<f64>()
+            + bwd.iter().map(|x| *x as f64).sum::<f64>()
     }
 }
 
@@ -89,107 +231,37 @@ impl TimingModel for NativeAnalyzer {
         let (p, s, b) = (self.pools, self.switches, self.nbins);
         anyhow::ensure!(inp.reads.len() == p * b, "reads shape");
         anyhow::ensure!(inp.writes.len() == p * b, "writes shape");
-
-        // 1. latency delay per pool
         let mut lat = vec![0.0f32; p];
-        for pool in 0..p {
-            let ro: f32 = inp.reads[pool * b..(pool + 1) * b].iter().sum();
-            let wo: f32 = inp.writes[pool * b..(pool + 1) * b].iter().sum();
-            lat[pool] = ro * self.extra_rd[pool] + wo * self.extra_wr[pool];
-        }
-
-        // 2. ev[s, b] = desc_mask @ (reads + writes), active rows only
-        self.ev.iter_mut().for_each(|x| *x = 0.0);
-        for &sw in &self.active_rows {
-            let row = &self.desc_mask[sw * p..(sw + 1) * p];
-            let out = &mut self.ev[sw * b..(sw + 1) * b];
-            for pool in 0..p {
-                let m = row[pool];
-                if m == 0.0 {
-                    continue;
-                }
-                let r = &inp.reads[pool * b..(pool + 1) * b];
-                let w = &inp.writes[pool * b..(pool + 1) * b];
-                for i in 0..b {
-                    out[i] += m * (r[i] + w[i]);
-                }
-            }
-        }
-
-        // 3. congestion scan: demand = ev*stt, capacity = bin_width.
-        // delay = end-of-epoch backlog drain time + transient waiting
-        // capped at one epoch (mirrors model.py; DESIGN.md §5).
-        let epoch_len = inp.bin_width * b as f32;
         let mut cong = vec![0.0f32; s];
-        for &sw in &self.active_rows {
-            let stt = self.stt[sw];
-            let ev = &self.ev[sw * b..(sw + 1) * b];
-            let backlog = &mut self.cong_backlog[sw * b..(sw + 1) * b];
-            let mut q = 0.0f32;
-            let mut qsum = 0.0f32;
-            for i in 0..b {
-                q = (q + ev[i] * stt - inp.bin_width).max(0.0);
-                backlog[i] = q;
-                qsum += q;
-            }
-            cong[sw] = if stt > 0.0 {
-                q + (qsum * (inp.bin_width / stt)).min(epoch_len)
-            } else {
-                0.0
-            };
-        }
-
-        // 4. bandwidth scan on the served (congestion-shifted) stream
         let mut bwd = vec![0.0f32; s];
-        for &sw in &self.active_rows {
-            let stt = self.stt[sw];
-            let bw = self.bw[sw];
-            let ev = &self.ev[sw * b..(sw + 1) * b];
-            let backlog = &self.cong_backlog[sw * b..(sw + 1) * b];
-            let demand = &mut self.bw_demand[sw * b..(sw + 1) * b];
-            let mut prev = 0.0f32;
-            for i in 0..b {
-                let served_events = if stt > 0.0 {
-                    (ev[i] * stt + prev - backlog[i]) / stt
-                } else {
-                    ev[i]
-                };
-                demand[i] = served_events * inp.bytes_per_ev;
-                prev = backlog[i];
-            }
-            let cap = bw * inp.bin_width;
-            let mut q = 0.0f32;
-            let mut qsum = 0.0f32;
-            for i in 0..b {
-                q = (q + demand[i] - cap).max(0.0);
-                qsum += q;
-            }
-            bwd[sw] = if bw > 0.0 {
-                q / bw + (qsum * (inp.bin_width / inp.bytes_per_ev)).min(epoch_len)
-            } else {
-                0.0
-            };
-        }
-
-        let total = lat.iter().map(|x| *x as f64).sum::<f64>()
-            + cong.iter().map(|x| *x as f64).sum::<f64>()
-            + bwd.iter().map(|x| *x as f64).sum::<f64>();
-        // backlog is copied out only when a consumer asked for it
-        // (epoch policies); the common path skips the 8 KB clone.
-        let cong_backlog = if self.export_backlog {
-            self.cong_backlog.clone()
-        } else {
-            Vec::new()
-        };
+        // backlog is stored and copied out only when a consumer asked
+        // for it (epoch policies); the common path skips both the
+        // per-bin stores and the 8 KB clone.
+        let store = self.export_backlog;
+        let total = self.analyze_core(
+            inp.reads,
+            inp.writes,
+            inp.bin_width,
+            inp.bytes_per_ev,
+            &mut lat,
+            &mut cong,
+            &mut bwd,
+            store,
+        );
+        let cong_backlog = if store { self.cong_backlog.clone() } else { Vec::new() };
         Ok(TimingOutputs { total, lat, cong, bwd, cong_backlog })
     }
 }
 
-/// Batched flavour of the native analyzer: a plain loop over E epochs
-/// per call. Exists so the batched replay path ([`crate::coordinator::
-/// run_batched`]) has a backend that needs no AOT artifacts and is
-/// bit-identical to the per-epoch native analyzer — the PJRT batch
-/// module is the dispatch-amortizing counterpart.
+/// Batched flavour of the native analyzer: a real batched kernel over
+/// E epochs per call — output tensors are allocated once per call at
+/// their exact `[E, ·]` sizes and each epoch's stage runs through the
+/// shared fused [`NativeAnalyzer::analyze_core`] (no per-epoch
+/// `TimingOutputs` allocation, no backlog clone, scratch reused across
+/// the E-epoch loop). Exists so the batched replay path
+/// ([`crate::coordinator::run_batched`]) has a backend that needs no
+/// AOT artifacts and is bit-identical to the per-epoch native analyzer
+/// — the PJRT batch module is the dispatch-amortizing counterpart.
 pub struct NativeBatchAnalyzer {
     inner: NativeAnalyzer,
     batch: usize,
@@ -197,9 +269,7 @@ pub struct NativeBatchAnalyzer {
 
 impl NativeBatchAnalyzer {
     pub fn new(t: &TopoTensors, nbins: usize, batch: usize) -> NativeBatchAnalyzer {
-        let mut inner = NativeAnalyzer::new(t, nbins);
-        inner.export_backlog = false;
-        NativeBatchAnalyzer { inner, batch: batch.max(1) }
+        NativeBatchAnalyzer { inner: NativeAnalyzer::new(t, nbins), batch: batch.max(1) }
     }
 }
 
@@ -232,21 +302,22 @@ impl BatchTimingModel for NativeBatchAnalyzer {
         anyhow::ensure!(writes.len() == e * p * b, "writes shape");
         let mut out = BatchOutputs {
             total: Vec::with_capacity(e),
-            lat: Vec::with_capacity(e * p),
-            cong: Vec::with_capacity(e * s),
-            bwd: Vec::with_capacity(e * s),
+            lat: vec![0.0; e * p],
+            cong: vec![0.0; e * s],
+            bwd: vec![0.0; e * s],
         };
         for i in 0..e {
-            let one = self.inner.analyze(&TimingInputs {
-                reads: &reads[i * p * b..(i + 1) * p * b],
-                writes: &writes[i * p * b..(i + 1) * p * b],
+            let total = self.inner.analyze_core(
+                &reads[i * p * b..(i + 1) * p * b],
+                &writes[i * p * b..(i + 1) * p * b],
                 bin_width,
                 bytes_per_ev,
-            })?;
-            out.total.push(one.total);
-            out.lat.extend_from_slice(&one.lat);
-            out.cong.extend_from_slice(&one.cong);
-            out.bwd.extend_from_slice(&one.bwd);
+                &mut out.lat[i * p..(i + 1) * p],
+                &mut out.cong[i * s..(i + 1) * s],
+                &mut out.bwd[i * s..(i + 1) * s],
+                false,
+            );
+            out.total.push(total);
         }
         Ok(out)
     }
@@ -330,13 +401,66 @@ mod tests {
         let mut a = analyzer(32);
         let reads = vec![1.0; 8 * 32];
         let writes = vec![1.0; 8 * 32];
+        // default: hot path, no backlog export
         let out = a
             .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 50.0, bytes_per_ev: 64.0 })
             .unwrap();
         assert_eq!(out.lat.len(), 8);
         assert_eq!(out.cong.len(), 8);
         assert_eq!(out.bwd.len(), 8);
+        assert!(out.cong_backlog.is_empty(), "backlog export must be opt-in");
+        // policies opt in and get the full [S, B] profile
+        a.set_export_backlog(true);
+        let out = a
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 50.0, bytes_per_ev: 64.0 })
+            .unwrap();
         assert_eq!(out.cong_backlog.len(), 8 * 32);
+    }
+
+    #[test]
+    fn empty_epoch_resets_exported_backlog() {
+        // a zero-traffic epoch must overwrite the previous epoch's
+        // backlog profile, not leak it through the early-exit
+        let mut a = analyzer(8);
+        a.set_export_backlog(true);
+        let mut reads = vec![0.0f32; 8 * 8];
+        reads[1 * 8] = 500.0;
+        let writes = vec![0.0; 8 * 8];
+        let busy = a
+            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 10.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        assert!(busy.cong_backlog.iter().any(|x| *x > 0.0));
+        let zeros = vec![0.0f32; 8 * 8];
+        let idle = a
+            .analyze(&TimingInputs { reads: &zeros, writes: &zeros, bin_width: 10.0, bytes_per_ev: 64.0 })
+            .unwrap();
+        assert!(idle.cong_backlog.iter().all(|x| *x == 0.0));
+        assert_eq!(idle.total, 0.0);
+    }
+
+    #[test]
+    fn batch_scratch_does_not_leak_between_epochs() {
+        // [dense, all-zero, same-dense]: epoch 1 must be exactly zero
+        // (stale ev/backlog scratch would corrupt it) and epoch 2 must
+        // equal epoch 0 bit-for-bit
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        let mut batch = NativeBatchAnalyzer::new(&t, 16, 3);
+        let n = 8 * 16;
+        let mut rng = crate::util::rng::Rng::new(41);
+        let dense: Vec<f32> = (0..n).map(|_| rng.below(30) as f32).collect();
+        let mut reads = vec![0.0f32; 3 * n];
+        reads[..n].copy_from_slice(&dense);
+        reads[2 * n..].copy_from_slice(&dense);
+        let writes = vec![0.0f32; 3 * n];
+        let out = batch.analyze_batch(&reads, &writes, 25.0, 64.0).unwrap();
+        assert_eq!(out.total[1], 0.0, "empty epoch must cost nothing");
+        assert!(out.cong[8..16].iter().all(|x| *x == 0.0));
+        assert!(out.bwd[8..16].iter().all(|x| *x == 0.0));
+        assert_eq!(out.total[0], out.total[2]);
+        assert_eq!(out.epoch(0, 8, 8).lat, out.epoch(2, 8, 8).lat);
+        assert_eq!(out.epoch(0, 8, 8).cong, out.epoch(2, 8, 8).cong);
+        assert_eq!(out.epoch(0, 8, 8).bwd, out.epoch(2, 8, 8).bwd);
     }
 
     #[test]

@@ -4,8 +4,32 @@
 //! The paper iterates the raw PEBS event list per epoch; binning to B
 //! fixed time bins is what makes the analyzer a dense tensor program
 //! (DESIGN.md §5). Bin width = epoch_len / B.
+//!
+//! Two recording paths exist and are bit-identical (differential test
+//! in `tests/pipeline_equivalence.rs`):
+//!
+//! * [`EpochBins::record`] — the scalar baseline: one call per sample,
+//!   bin + clamp + accumulate inline;
+//! * [`EpochBins::stage`] + [`EpochBins::record_bulk`] — the bulk path
+//!   the `EpochDriver` uses: samples are resolved to `(pool, rw, bin,
+//!   weight)` deltas up front (clamp branches run once, here) and
+//!   scattered into the tensors in one branch-light pass per event
+//!   batch. Both paths bin through the same precomputed
+//!   `inv_bin_width` multiply, so grouping never changes results.
 
 use crate::topology::PoolId;
+
+/// One staged histogram delta: a sample already resolved to its
+/// `(pool, rw, bin)` cell, waiting for [`EpochBins::record_bulk`]'s
+/// scatter. Small and `Copy` — a batch of these is the staging buffer
+/// the epoch driver reuses across batches.
+#[derive(Clone, Copy, Debug)]
+pub struct BinDelta {
+    pub pool: u32,
+    pub bin: u32,
+    pub is_write: bool,
+    pub weight: f32,
+}
 
 /// Per-epoch [P, B] read/write histograms, f32 row-major (model input).
 #[derive(Clone, Debug)]
@@ -20,6 +44,9 @@ pub struct EpochBins {
     /// Events whose timestamp fell outside [0, epoch_ns) — clamped into
     /// the edge bins; should be ~0 in a healthy run.
     pub clamped: u64,
+    /// Precomputed `1.0 / bin_width_ns()`: both recording paths multiply
+    /// by this instead of dividing per sample.
+    inv_bin_width: f64,
 }
 
 impl EpochBins {
@@ -33,6 +60,7 @@ impl EpochBins {
             writes: vec![0.0; pools * nbins],
             total_events: 0,
             clamped: 0,
+            inv_bin_width: nbins as f64 / epoch_ns,
         }
     }
 
@@ -40,29 +68,74 @@ impl EpochBins {
         self.epoch_ns / self.nbins as f64
     }
 
+    /// Resolve an epoch-relative time to its (clamped) bin. One shared
+    /// helper so `record` and `stage` bin identically.
+    #[inline]
+    fn bin_of(&self, t_ns: f64) -> (usize, bool) {
+        let b = (t_ns * self.inv_bin_width).floor() as i64;
+        if b < 0 {
+            (0, true)
+        } else if b >= self.nbins as i64 {
+            (self.nbins - 1, t_ns >= self.epoch_ns + 1e-9)
+        } else {
+            (b as usize, false)
+        }
+    }
+
     /// Record one sampled miss at epoch-relative time `t_ns` against
     /// pool `pool`, weighted by the PEBS sampling period (a sample with
-    /// period k stands for k misses).
+    /// period k stands for k misses). The scalar baseline for
+    /// [`EpochBins::record_bulk`] (kept runnable for differential tests
+    /// and `benches/hotpath.rs`, like `pool_of_btree`).
     #[inline]
     pub fn record(&mut self, pool: PoolId, is_write: bool, t_ns: f64, weight: f32) {
         debug_assert!(pool < self.pools);
-        let mut b = (t_ns / self.bin_width_ns()).floor() as i64;
-        if b < 0 {
-            b = 0;
-            self.clamped += 1;
-        } else if b >= self.nbins as i64 {
-            b = self.nbins as i64 - 1;
-            if t_ns >= self.epoch_ns + 1e-9 {
-                self.clamped += 1;
-            }
-        }
-        let idx = pool * self.nbins + b as usize;
+        let (bin, clamped) = self.bin_of(t_ns);
+        self.clamped += u64::from(clamped);
+        let idx = pool * self.nbins + bin;
         if is_write {
             self.writes[idx] += weight;
         } else {
             self.reads[idx] += weight;
         }
         self.total_events += 1;
+    }
+
+    /// Stage one sample for a later bulk scatter: the bin is resolved
+    /// (and the clamp branches run) here, once per sample; the deferred
+    /// f32 accumulation happens in [`EpochBins::record_bulk`]. Staging
+    /// order must equal event order — the scatter preserves it, which
+    /// is what makes `stage` + `record_bulk` bit-identical to calling
+    /// [`EpochBins::record`] per sample.
+    #[inline]
+    pub fn stage(
+        &mut self,
+        pool: PoolId,
+        is_write: bool,
+        t_ns: f64,
+        weight: f32,
+        out: &mut Vec<BinDelta>,
+    ) {
+        debug_assert!(pool < self.pools);
+        let (bin, clamped) = self.bin_of(t_ns);
+        self.clamped += u64::from(clamped);
+        self.total_events += 1;
+        out.push(BinDelta { pool: pool as u32, bin: bin as u32, is_write, weight });
+    }
+
+    /// Scatter a staged batch into the `[P, B]` tensors. Branch-light:
+    /// binning and clamping already happened at stage time, so this
+    /// loop is index + select + add. Accumulation order == staging
+    /// order, so results are bit-identical to the per-sample path.
+    pub fn record_bulk(&mut self, deltas: &[BinDelta]) {
+        for d in deltas {
+            let idx = d.pool as usize * self.nbins + d.bin as usize;
+            if d.is_write {
+                self.writes[idx] += d.weight;
+            } else {
+                self.reads[idx] += d.weight;
+            }
+        }
     }
 
     /// Element-wise accumulate another bins' counters (same shape).
@@ -85,8 +158,8 @@ impl EpochBins {
     /// Zero all counters for reuse (avoids reallocating every epoch —
     /// this is on the coordinator's hot path).
     pub fn clear(&mut self) {
-        self.reads.iter_mut().for_each(|x| *x = 0.0);
-        self.writes.iter_mut().for_each(|x| *x = 0.0);
+        self.reads.fill(0.0);
+        self.writes.fill(0.0);
         self.total_events = 0;
         self.clamped = 0;
     }
@@ -170,6 +243,53 @@ mod tests {
         assert_eq!(a.reads[0], 3.0);
         assert_eq!(a.write_count(1), 1.0);
         assert_eq!(a.total_events, 3);
+    }
+
+    #[test]
+    fn bulk_scatter_matches_scalar_record() {
+        let mut scalar = EpochBins::new(2, 10, 1000.0);
+        let mut bulk = EpochBins::new(2, 10, 1000.0);
+        let samples = [
+            (0usize, false, 0.0, 1.0f32),
+            (0, false, 150.0, 2.0),
+            (1, true, 950.0, 64.0),
+            (0, false, -5.0, 1.0),   // clamps low
+            (1, true, 1001.0, 1.0),  // clamps high
+            (1, false, 1000.0, 1.0), // boundary: last bin, unclamped
+        ];
+        let mut staged = Vec::new();
+        for &(p, w, t, wt) in &samples {
+            scalar.record(p, w, t, wt);
+            bulk.stage(p, w, t, wt, &mut staged);
+        }
+        bulk.record_bulk(&staged);
+        assert_eq!(scalar.reads, bulk.reads);
+        assert_eq!(scalar.writes, bulk.writes);
+        assert_eq!(scalar.total_events, bulk.total_events);
+        assert_eq!(scalar.clamped, bulk.clamped);
+    }
+
+    #[test]
+    fn stage_counts_clamps_and_events_immediately() {
+        let mut b = EpochBins::new(1, 4, 400.0);
+        let mut staged = Vec::new();
+        b.stage(0, false, -1.0, 1.0, &mut staged);
+        b.stage(0, false, 500.0, 1.0, &mut staged);
+        // bookkeeping lands at stage time, before the scatter
+        assert_eq!(b.total_events, 2);
+        assert_eq!(b.clamped, 2);
+        assert!(b.reads.iter().all(|x| *x == 0.0), "tensors untouched pre-scatter");
+        b.record_bulk(&staged);
+        assert_eq!(b.reads[0], 1.0);
+        assert_eq!(b.reads[3], 1.0);
+    }
+
+    #[test]
+    fn empty_bulk_scatter_is_noop() {
+        let mut b = EpochBins::new(1, 4, 400.0);
+        b.record_bulk(&[]);
+        assert_eq!(b.total_events, 0);
+        assert!(b.reads.iter().all(|x| *x == 0.0));
     }
 
     #[test]

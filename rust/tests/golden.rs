@@ -97,6 +97,9 @@ fn assert_close(name: &str, got: &[f32], want: &[f32], rtol: f32, atol: f32) {
 }
 
 fn check_model(model: &mut dyn TimingModel, g: &Golden) {
+    // backlog export defaults off (hot-path optimization); the golden
+    // vectors include the full profile, so opt in here
+    model.set_export_backlog(true);
     let out = model
         .analyze(&TimingInputs {
             reads: &g.reads,

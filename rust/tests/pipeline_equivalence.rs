@@ -42,6 +42,11 @@ fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
     assert_eq!(a.cong_delay_ns, b.cong_delay_ns, "{ctx}: cong");
     assert_eq!(a.bwd_delay_ns, b.bwd_delay_ns, "{ctx}: bwd");
     assert_eq!(a.simulated_ns, b.simulated_ns, "{ctx}: simulated_ns");
+    // tracer counters: the pool_of call sequence and the number of
+    // staged samples don't depend on batch grouping (the number of
+    // bulk flushes legitimately does, so it is not compared)
+    assert_eq!(a.pool_mru_hits, b.pool_mru_hits, "{ctx}: mru hits");
+    assert_eq!(a.bins_staged, b.bins_staged, "{ctx}: staged samples");
 }
 
 fn run_with_batch(wl: &str, event_batch: usize, mutate: impl Fn(&mut SimConfig)) -> SimReport {
@@ -93,6 +98,103 @@ fn batched_pipeline_identical_under_max_epochs() {
     assert_reports_identical(&per_event, &batched, "max_epochs");
 }
 
+// ------------------------------------------- bulk bins accounting
+
+/// Property-style differential: staging samples as `(pool, rw, bin,
+/// weight)` deltas and scattering them in arbitrary batch groupings
+/// must be bit-identical to calling the scalar `record` per sample —
+/// including clamped edges (negative times, past-the-end times, the
+/// exact epoch boundary).
+#[test]
+fn record_bulk_matches_per_event_record() {
+    use cxlmemsim::trace::binning::{BinDelta, EpochBins};
+    use cxlmemsim::util::rng::Rng;
+
+    let (pools, nbins, epoch_ns) = (8usize, 64usize, 1e5f64);
+    let mut scalar = EpochBins::new(pools, nbins, epoch_ns);
+    let mut bulk = EpochBins::new(pools, nbins, epoch_ns);
+    let mut staged: Vec<BinDelta> = Vec::new();
+    let mut rng = Rng::new(0xb1f5);
+    for _ in 0..50_000u64 {
+        let pool = rng.below(pools as u64) as usize;
+        let is_write = rng.below(2) == 1;
+        let t = match rng.below(20) {
+            0 => -rng.range_f64(0.0, 50.0),             // clamps low
+            1 => epoch_ns + rng.range_f64(0.0, 50.0),   // clamps high
+            2 => epoch_ns,                              // boundary
+            _ => rng.range_f64(0.0, epoch_ns),
+        };
+        let weight = if rng.below(4) == 0 { rng.below(4096) as f32 } else { 1.0 };
+        scalar.record(pool, is_write, t, weight);
+        bulk.stage(pool, is_write, t, weight, &mut staged);
+        // scatter at random points so flush grouping is exercised
+        if rng.below(97) == 0 {
+            bulk.record_bulk(&staged);
+            staged.clear();
+        }
+    }
+    bulk.record_bulk(&staged); // tail
+    assert_eq!(scalar.reads, bulk.reads, "read tensors diverged");
+    assert_eq!(scalar.writes, bulk.writes, "write tensors diverged");
+    assert_eq!(scalar.total_events, bulk.total_events);
+    assert_eq!(scalar.clamped, bulk.clamped);
+}
+
+// ------------------------------------------- fused batch analyzer
+
+/// The fused-scan batched kernel must equal the scalar per-epoch
+/// analyzer bit-exactly, including sparse epochs (whole pools empty —
+/// the skipped matmul columns) and a fully empty epoch (the early-exit
+/// path), with scratch reused across the E-epoch loop.
+#[test]
+fn fused_batch_analyzer_matches_scalar_bit_exactly() {
+    use cxlmemsim::runtime::native::{NativeAnalyzer, NativeBatchAnalyzer};
+    use cxlmemsim::runtime::shapes;
+    use cxlmemsim::runtime::{BatchTimingModel, TimingModel};
+    use cxlmemsim::topology::TopoTensors;
+    use cxlmemsim::util::rng::Rng;
+
+    let topo = builtin::fig2();
+    let t = TopoTensors::build(&topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES).unwrap();
+    let (p, s, b, e) = (shapes::NUM_POOLS, shapes::NUM_SWITCHES, 32usize, 6usize);
+    let n = p * b;
+    let mut rng = Rng::new(0xfa57);
+    let mut reads = vec![0.0f32; e * n];
+    let mut writes = vec![0.0f32; e * n];
+    for ep in 0..e {
+        for pool in 0..p {
+            // sparse epochs: leave whole pools empty; epoch 3 fully so
+            if ep == 3 || rng.below(3) == 0 {
+                continue;
+            }
+            for i in 0..b {
+                reads[ep * n + pool * b + i] = rng.below(50) as f32;
+                writes[ep * n + pool * b + i] = rng.below(25) as f32;
+            }
+        }
+    }
+    let mut single = NativeAnalyzer::new(&t, b);
+    let mut batch = NativeBatchAnalyzer::new(&t, b, e);
+    let out = batch.analyze_batch(&reads, &writes, 250.0, 64.0).unwrap();
+    assert_eq!(out.total.len(), e);
+    for ep in 0..e {
+        let sr = single
+            .analyze(&TimingInputs {
+                reads: &reads[ep * n..(ep + 1) * n],
+                writes: &writes[ep * n..(ep + 1) * n],
+                bin_width: 250.0,
+                bytes_per_ev: 64.0,
+            })
+            .unwrap();
+        assert_eq!(out.total[ep], sr.total, "epoch {ep}: total");
+        let one = out.epoch(ep, p, s);
+        assert_eq!(one.lat, sr.lat, "epoch {ep}: lat");
+        assert_eq!(one.cong, sr.cong, "epoch {ep}: cong");
+        assert_eq!(one.bwd, sr.bwd, "epoch {ep}: bwd");
+    }
+    assert_eq!(out.total[3], 0.0, "empty epoch must be exactly free");
+}
+
 // ---------------------------------------------------------- multihost
 
 fn assert_multihost_identical(a: &MultiHostReport, b: &MultiHostReport) {
@@ -124,6 +226,26 @@ fn multihost_threaded_matches_single_thread_bit_exactly() {
                 run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), threads).unwrap();
             assert_multihost_identical(&one, &many);
         }
+    }
+}
+
+#[test]
+fn multihost_persistent_pool_uneven_shards_bit_exact() {
+    // 5 hosts never split evenly over 2 or 3 workers: the persistent
+    // pool's once-per-run shard split must still merge in host order
+    // and match the inline single-thread run bit-for-bit, including
+    // coherence traffic ("shared" hosts write-share lines)
+    let mk_hosts = || -> Vec<Box<dyn Workload>> {
+        (0..5)
+            .map(|i| workload::by_name("shared", 0.002, i as u64).unwrap())
+            .collect()
+    };
+    let one = run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), 1).unwrap();
+    assert!(one.invalidations > 0);
+    for threads in [2usize, 3, 64] {
+        let many =
+            run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), threads).unwrap();
+        assert_multihost_identical(&one, &many);
     }
 }
 
