@@ -6,7 +6,7 @@
 //!     cargo run --release --offline --example policy_compare
 
 use cxlmemsim::alloctrack::PolicyKind;
-use cxlmemsim::policy::HotnessMigration;
+use cxlmemsim::policy::PolicySpec;
 use cxlmemsim::prelude::*;
 use cxlmemsim::util::benchutil::markdown_table;
 use cxlmemsim::util::cli::Args;
@@ -59,32 +59,59 @@ fn main() -> anyhow::Result<()> {
         )
     );
 
-    // migration: cxl-only placement + hotness promotion to local DRAM
-    println!("\nhotness migration on cxl-only placement:");
+    // two-phase policy stacks: cxl-only placement + epoch policies
+    // with cost-modeled migration (copy traffic + per-byte stall)
+    println!("\nepoch-policy stacks on cxl-only placement (migration is cost-modeled):");
     let mut rows = Vec::new();
-    for (label, patience) in [("off", None), ("patience=2", Some(2)), ("patience=8", Some(8))] {
+    for (label, spec) in [
+        ("off", None),
+        ("hotness:2", Some("hotness:2")),
+        ("hotness:8", Some("hotness:8")),
+        ("prefetch:0.5", Some("prefetch:0.5")),
+        ("hotness:2+prefetch", Some("hotness:2,prefetch:0.5")),
+        ("full stack", Some("hotness:2,prefetch:0.5,rebalance")),
+    ] {
         let mut cfg = base.clone();
         cfg.policy = PolicyKind::CxlOnly;
-        let mut sim = Coordinator::new(topo.clone(), cfg)?;
-        if let Some(p) = patience {
-            sim.set_epoch_policy(Box::new(HotnessMigration::new(p, u64::MAX)));
+        if let Some(s) = spec {
+            cfg.epoch_policy = Some(PolicySpec::parse(s)?);
         }
+        let mut sim = Coordinator::new(topo.clone(), cfg)?;
         let rep = sim.run_workload(&wl)?;
         rows.push(vec![
             label.to_string(),
             format!("{:.3}", rep.simulated_ns / 1e6),
             format!("{:.3}x", rep.sim_slowdown()),
+            format!("{}", rep.migrations),
+            format!("{:.1}", rep.migrated_bytes as f64 / 1024.0),
+            format!("{:.3}", rep.mig_delay_ns / 1e6),
         ]);
     }
-    println!("{}", markdown_table(&["Migration", "Sim(ms)", "Slowdown"], &rows));
+    println!(
+        "{}",
+        markdown_table(
+            &["Stack", "Sim(ms)", "Slowdown", "Migrations", "Moved(KB)", "MigStall(ms)"],
+            &rows
+        )
+    );
 
-    // hardware vs software prefetch (paper §1's promised comparison)
+    // hardware vs software prefetch (paper §1's promised comparison —
+    // hw is a cache-level prefetcher model, sw is a phase-1 bin shaper)
     println!("\nhardware vs software prefetch on a streaming workload:");
     let mut rows = Vec::new();
-    for (label, pf) in [("none", None), ("hw-nextline", Some("nextline")), ("hw-stride", Some("stride"))] {
+    for (label, pf, sw) in [
+        ("none", None, None),
+        ("hw-nextline", Some("nextline"), None),
+        ("hw-stride", Some("stride"), None),
+        ("sw-prefetch:0.5", None, Some("prefetch:0.5")),
+        ("sw-prefetch:1.0", None, Some("prefetch:1.0")),
+    ] {
         let mut cfg = base.clone();
         cfg.policy = PolicyKind::CxlOnly;
-        cfg.prefetcher = pf.map(|s| s.to_string());
+        cfg.prefetcher = pf.map(|s: &str| s.to_string());
+        if let Some(s) = sw {
+            cfg.epoch_policy = Some(PolicySpec::parse(s)?);
+        }
         let mut sim = Coordinator::new(topo.clone(), cfg)?;
         let rep = sim.run_workload("stream")?;
         rows.push(vec![

@@ -183,6 +183,20 @@ fn main() {
     });
     let record_rate = samples.len() as f64 / s.mean_s;
     let mut staged: Vec<BinDelta> = Vec::with_capacity(4096);
+    // unpartitioned scatter (the PR-2 path, kept as `record_bulk_seq`)
+    let s = bench("bins stage+record_bulk_seq", 2, it(10), || {
+        bins.clear();
+        for chunk in samples.chunks(4096) {
+            staged.clear();
+            for &(p, w, t, wt) in chunk {
+                bins.stage(p, w, t, wt, &mut staged);
+            }
+            bins.record_bulk_seq(&staged);
+        }
+    });
+    let bulk_seq_rate = samples.len() as f64 / s.mean_s;
+    // pool-partitioned scatter (the current `record_bulk`): the
+    // counting sort turns the scatter into contiguous bin runs
     let s = bench("bins stage+record_bulk", 2, it(10), || {
         bins.clear();
         for chunk in samples.chunks(4096) {
@@ -196,18 +210,23 @@ fn main() {
     std::hint::black_box(bins.total_events);
     let bulk_rate = samples.len() as f64 / s.mean_s;
     println!(
-        "bins record:          scalar {:>7.1} M rec/s | bulk {:>7.1} M rec/s ({:.2}x)",
+        "bins record:          scalar {:>7.1} M rec/s | bulk-seq {:>7.1} M rec/s | \
+         bulk-part {:>7.1} M rec/s ({:.2}x vs scalar, {:.2}x vs seq)",
         record_rate / 1e6,
+        bulk_seq_rate / 1e6,
         bulk_rate / 1e6,
-        bulk_rate / record_rate
+        bulk_rate / record_rate,
+        bulk_rate / bulk_seq_rate
     );
     results.push((
         "bins_record",
         json::obj(vec![
             ("samples", json::num(samples.len() as f64)),
             ("scalar_recs_per_s", json::num(record_rate)),
+            ("bulk_seq_recs_per_s", json::num(bulk_seq_rate)),
             ("bulk_recs_per_s", json::num(bulk_rate)),
             ("speedup", json::num(bulk_rate / record_rate)),
+            ("partition_speedup", json::num(bulk_rate / bulk_seq_rate)),
         ]),
     ));
 
@@ -262,6 +281,52 @@ fn main() {
             ("speedup", json::num(fused_rate / scalar_rate)),
         ]),
     ));
+
+    // --- policy engine overhead per epoch ------------------------
+    // the zero-cost guarantee, measured: an installed-but-empty
+    // PolicyStack must cost ~nothing per epoch vs no stack at all;
+    // a full hotness+prefetch+rebalance stack is the reference point
+    {
+        use cxlmemsim::policy::{PolicySpec, PolicyStack};
+        let mut pbins = EpochBins::new(shapes::NUM_POOLS, nbins, 1e6);
+        for i in 0..nbins {
+            pbins.record(1, false, i as f64 * (1e6 / nbins as f64), 10.0);
+        }
+        let mut ptracker =
+            AllocTracker::new(&topo, cxlmemsim::alloctrack::PolicyKind::CxlOnly.build(&topo));
+        ptracker.on_alloc_event(&AllocEvent {
+            kind: AllocKind::Mmap,
+            addr: 0x1000,
+            len: 1 << 20,
+            t_ns: 0.0,
+        });
+        let out = NativeAnalyzer::new(&tensors, nbins).analyze(&inp()).unwrap();
+        let mut empty = PolicyStack::new(0.0625);
+        let s = bench("policy empty stack", it(1000), it(100_000), || {
+            empty.before_analysis(&mut pbins, &mut ptracker, 64.0);
+            std::hint::black_box(empty.after_analysis(&pbins, &out, &mut ptracker, 64.0));
+        });
+        let empty_ns = s.mean_s * 1e9;
+        let mut full = PolicySpec::parse("hotness:3,prefetch:0.5,rebalance")
+            .unwrap()
+            .build(0.0625);
+        let s = bench("policy full stack", it(100), it(10_000), || {
+            full.before_analysis(&mut pbins, &mut ptracker, 64.0);
+            std::hint::black_box(full.after_analysis(&pbins, &out, &mut ptracker, 64.0));
+        });
+        let full_ns = s.mean_s * 1e9;
+        println!(
+            "policy epoch:         empty stack {empty_ns:>8.1} ns/epoch | \
+             hotness+prefetch+rebalance {full_ns:>8.1} ns/epoch"
+        );
+        results.push((
+            "policy_epoch",
+            json::obj(vec![
+                ("empty_stack_ns_per_epoch", json::num(empty_ns)),
+                ("full_stack_ns_per_epoch", json::num(full_ns)),
+            ]),
+        ));
+    }
 
     #[cfg(feature = "pjrt")]
     {

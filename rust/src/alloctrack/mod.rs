@@ -7,6 +7,12 @@
 //! addresses to pools according to a pluggable *placement policy*
 //! (page- or region-granular, matching the paper's "cache-line vs page
 //! memory management" research agenda).
+//!
+//! Each region also carries a cheap *heat* counter, bumped on the
+//! `pool_of` lookup fast path (one increment per answered lookup) and
+//! folded back into the region map lazily (`sync_heat`). The two-phase
+//! policy engine (`crate::policy`) uses it so migration policies
+//! promote the hottest region, not merely the largest.
 
 pub mod policy;
 
@@ -22,6 +28,19 @@ pub struct Region {
     pub start: u64,
     pub len: u64,
     pub placement: Placement,
+    /// Access-heat counter: +1 per `pool_of` lookup answered by this
+    /// region. Bumps land on the flat-index copy (the lookup hot path)
+    /// and are folded back into the source of truth lazily — call
+    /// [`AllocTracker::sync_heat`] before reading via `live_regions`.
+    /// Migration policies use it to pick the hottest victim. Reset on
+    /// split (partial unmap) and on reallocation; carried across
+    /// migration.
+    pub heat: u64,
+    /// Allocation generation: fresh per allocate/split, kept across
+    /// migration. Heat folding matches on it so a freed-and-
+    /// reallocated slot (same start+len, no lookup in between) can
+    /// never inherit the dead region's pending heat deltas.
+    pub(crate) id: u64,
 }
 
 impl Region {
@@ -38,6 +57,24 @@ impl Region {
             Placement::Interleaved { pools, page_bytes } => {
                 let page = (addr - self.start) / page_bytes;
                 pools[(page % pools.len() as u64) as usize]
+            }
+        }
+    }
+
+    /// Visit each `(pool, bytes)` span of the region — one call for a
+    /// `Single` placement, one per page for an interleaved one. The
+    /// single source of truth for how the region's bytes map to pools;
+    /// used by the tracker's byte accounting and by the policy
+    /// engine's migration cost attribution.
+    pub fn for_each_span(&self, mut f: impl FnMut(PoolId, u64)) {
+        match &self.placement {
+            Placement::Single(p) => f(*p, self.len),
+            Placement::Interleaved { pools, page_bytes } => {
+                let pages = self.len.div_ceil(*page_bytes);
+                for page in 0..pages {
+                    let p = pools[(page % pools.len() as u64) as usize];
+                    f(p, (*page_bytes).min(self.len - page * page_bytes));
+                }
             }
         }
     }
@@ -78,6 +115,8 @@ pub struct AllocTracker {
     policy: Box<dyn PlacementPolicy>,
     pub stats: TrackerStats,
     num_pools: usize,
+    /// Next allocation generation for `Region::id`.
+    next_id: u64,
 }
 
 impl AllocTracker {
@@ -91,7 +130,13 @@ impl AllocTracker {
             policy,
             stats: TrackerStats { pool_bytes: vec![0; num_pools], ..Default::default() },
             num_pools,
+            next_id: 0,
         }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
     }
 
     pub fn num_pools(&self) -> usize {
@@ -117,7 +162,8 @@ impl AllocTracker {
         // interval map consistent for malformed traces).
         self.release(ev.addr, ev.len);
         let placement = self.policy.place(ev, &self.stats);
-        let region = Region { start: ev.addr, len: ev.len, placement };
+        let region =
+            Region { start: ev.addr, len: ev.len, placement, heat: 0, id: self.fresh_id() };
         self.account(&region, true);
         self.stats.allocs += 1;
         self.regions.insert(ev.addr, region);
@@ -145,6 +191,8 @@ impl AllocTracker {
                             start: r.start,
                             len: addr - r.start,
                             placement: r.placement.clone(),
+                            heat: 0,
+                            id: self.fresh_id(),
                         };
                         self.account(&head, true);
                         self.regions.insert(head.start, head);
@@ -154,6 +202,8 @@ impl AllocTracker {
                             start: end,
                             len: r.end() - end,
                             placement: r.placement.clone(),
+                            heat: 0,
+                            id: self.fresh_id(),
                         };
                         self.account(&tail, true);
                         self.regions.insert(tail.start, tail);
@@ -167,32 +217,16 @@ impl AllocTracker {
 
     fn account(&mut self, region: &Region, add: bool) {
         // distribute bytes across pools per placement
-        match &region.placement {
-            Placement::Single(p) => {
-                if add {
-                    self.stats.pool_bytes[*p] += region.len;
-                    self.stats.live_bytes += region.len;
-                } else {
-                    self.stats.pool_bytes[*p] =
-                        self.stats.pool_bytes[*p].saturating_sub(region.len);
-                    self.stats.live_bytes = self.stats.live_bytes.saturating_sub(region.len);
-                }
+        let stats = &mut self.stats;
+        region.for_each_span(|p, sz| {
+            if add {
+                stats.pool_bytes[p] += sz;
+                stats.live_bytes += sz;
+            } else {
+                stats.pool_bytes[p] = stats.pool_bytes[p].saturating_sub(sz);
+                stats.live_bytes = stats.live_bytes.saturating_sub(sz);
             }
-            Placement::Interleaved { pools, page_bytes } => {
-                let pages = region.len.div_ceil(*page_bytes);
-                for page in 0..pages {
-                    let p = pools[(page % pools.len() as u64) as usize];
-                    let sz = (*page_bytes).min(region.len - page * page_bytes);
-                    if add {
-                        self.stats.pool_bytes[p] += sz;
-                        self.stats.live_bytes += sz;
-                    } else {
-                        self.stats.pool_bytes[p] = self.stats.pool_bytes[p].saturating_sub(sz);
-                        self.stats.live_bytes = self.stats.live_bytes.saturating_sub(sz);
-                    }
-                }
-            }
-        }
+        });
     }
 
     /// Pool owning an address. Unknown addresses (stack, code, ...) are
@@ -206,9 +240,10 @@ impl AllocTracker {
         if self.index_dirty {
             self.rebuild_index();
         }
-        if let Some(r) = self.index.get(self.mru) {
+        if let Some(r) = self.index.get_mut(self.mru) {
             if addr >= r.start && addr < r.end() {
                 self.stats.mru_hits += 1;
+                r.heat += 1;
                 return r.pool_of(addr);
             }
         }
@@ -216,8 +251,9 @@ impl AllocTracker {
         // the last region whose start is <= addr
         let i = self.index.partition_point(|r| r.start <= addr);
         if i > 0 {
-            let r = &self.index[i - 1];
+            let r = &mut self.index[i - 1];
             if addr < r.end() {
+                r.heat += 1;
                 self.mru = i - 1;
                 return r.pool_of(addr);
             }
@@ -241,11 +277,46 @@ impl AllocTracker {
 
     #[cold]
     fn rebuild_index(&mut self) {
+        // fold heat deltas accumulated on the flat copies back into the
+        // source of truth before discarding them; the copies restart at
+        // zero so deltas are never double-counted. Matching is by
+        // allocation generation (`Region::id`) — a freed-and-
+        // reallocated slot has a fresh id, so it can never inherit the
+        // dead region's heat, while migration keeps the id (heat
+        // survives a pool move).
+        self.fold_heat();
         self.index.clear();
-        self.index.extend(self.regions.values().cloned());
+        self.index.extend(self.regions.values().map(|r| Region { heat: 0, ..r.clone() }));
         self.index_dirty = false;
         self.mru = usize::MAX;
         self.stats.index_rebuilds += 1;
+    }
+
+    fn fold_heat(&mut self) {
+        for r in &mut self.index {
+            if r.heat == 0 {
+                continue;
+            }
+            if let Some(m) = self.regions.get_mut(&r.start) {
+                if m.id == r.id {
+                    m.heat += r.heat;
+                }
+            }
+            r.heat = 0;
+        }
+    }
+
+    /// Fold heat deltas from the lookup fast path into the live
+    /// regions so [`AllocTracker::live_regions`] sees up-to-date
+    /// counters. Migration policies call this once per epoch before
+    /// picking a victim — O(live regions), off the hot path.
+    pub fn sync_heat(&mut self) {
+        self.fold_heat();
+    }
+
+    /// The live region starting exactly at `start`, if any.
+    pub fn region_at(&self, start: u64) -> Option<&Region> {
+        self.regions.get(&start)
     }
 
     /// Move a whole region (page-set) to another pool — the migration
@@ -424,6 +495,65 @@ mod tests {
         // first lookup warms the MRU; the rest must hit it
         assert_eq!(t.stats.mru_hits, 999);
         assert_eq!(t.stats.lookup_misses, 0);
+    }
+
+    #[test]
+    fn heat_accumulates_and_syncs() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x10000, 1 << 20));
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x200000, 1 << 20));
+        for i in 0..50u64 {
+            t.pool_of(0x10000 + i * 64); // MRU-hit path
+        }
+        t.pool_of(0x200000); // binary-search path
+        // deltas live on the flat index until synced
+        assert!(t.region_at(0x10000).unwrap().heat == 0);
+        t.sync_heat();
+        assert_eq!(t.region_at(0x10000).unwrap().heat, 50);
+        assert_eq!(t.region_at(0x200000).unwrap().heat, 1);
+        // sync is idempotent (deltas are zeroed once folded)
+        t.sync_heat();
+        assert_eq!(t.region_at(0x10000).unwrap().heat, 50);
+    }
+
+    #[test]
+    fn heat_survives_migration_but_not_reallocation() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x1000));
+        for _ in 0..10 {
+            t.pool_of(0x1800);
+        }
+        t.migrate_region(0x1000, LOCAL_POOL);
+        t.sync_heat();
+        assert_eq!(t.region_at(0x1000).unwrap().heat, 10, "migration keeps heat");
+        // free + re-allocate the same slot: fresh region, fresh heat
+        t.on_alloc_event(&ev(AllocKind::Munmap, 0x1000, 0x1000));
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x1000));
+        t.sync_heat();
+        assert_eq!(t.region_at(0x1000).unwrap().heat, 0, "realloc must reset heat");
+    }
+
+    #[test]
+    fn realloc_without_sync_does_not_inherit_stale_heat() {
+        // regression: with UNSYNCED heat deltas still parked on the
+        // flat index (no rebuild between free and realloc — the
+        // classic allocator block-reuse pattern), the fold after the
+        // next lookup must not credit the dead region's heat to the
+        // fresh same-start-same-len allocation
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x1000));
+        for _ in 0..25 {
+            t.pool_of(0x1800); // heat parks on the index copy
+        }
+        t.on_alloc_event(&ev(AllocKind::Munmap, 0x1000, 0x1000));
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x1000, 0x1000));
+        t.pool_of(0x1800); // rebuild folds the stale deltas
+        t.sync_heat();
+        assert_eq!(
+            t.region_at(0x1000).unwrap().heat,
+            1, // only the post-realloc lookup
+            "reused slot must not inherit the dead region's heat"
+        );
     }
 
     #[test]

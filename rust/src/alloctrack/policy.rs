@@ -163,11 +163,11 @@ impl PlacementPolicy for SizeClass {
         "sizeclass"
     }
     fn place(&mut self, ev: &AllocEvent, _stats: &TrackerStats) -> Placement {
-        // glibc-style heuristic: brk/sbrk (heap growth) and small blocks
-        // stay local; big mmap/calloc regions go to CXL.
+        // glibc-style heuristic: brk/sbrk (heap growth) stays local
+        // regardless of size — the heap is hot and short-lived; only
+        // big mmap/calloc regions go to CXL.
         let heapish = matches!(ev.kind, AllocKind::Sbrk | AllocKind::Brk);
-        if (heapish && ev.len < self.threshold) || ev.len < self.threshold || self.pools.is_empty()
-        {
+        if heapish || ev.len < self.threshold || self.pools.is_empty() {
             Placement::Single(LOCAL_POOL)
         } else {
             let p = self.pools[self.next % self.pools.len()];
@@ -272,6 +272,28 @@ mod tests {
             p.place(&ev(4096, AllocKind::Malloc), &s),
             Placement::Single(LOCAL_POOL)
         );
+        match p.place(&ev(16 << 20, AllocKind::Mmap), &s) {
+            Placement::Single(pool) => assert!(pool >= 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn size_class_keeps_heap_growth_local_regardless_of_size() {
+        // regression: the `heapish && len < threshold` clause was dead
+        // (subsumed by `len < threshold`), so a huge sbrk spilled to
+        // CXL against the doc comment's intent
+        let topo = builtin::fig2();
+        let mut p = PolicyKind::SizeClass { threshold_bytes: 1 << 20 }.build(&topo);
+        let s = stats(4);
+        for kind in [AllocKind::Sbrk, AllocKind::Brk] {
+            assert_eq!(
+                p.place(&ev(16 << 20, kind), &s),
+                Placement::Single(LOCAL_POOL),
+                "{kind:?} above the threshold must still stay local"
+            );
+        }
+        // non-heap allocations above the threshold still spill
         match p.place(&ev(16 << 20, AllocKind::Mmap), &s) {
             Placement::Single(pool) => assert!(pool >= 1),
             other => panic!("unexpected {other:?}"),

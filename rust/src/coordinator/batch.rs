@@ -13,13 +13,15 @@
 //!
 //! Event accounting runs through the shared [`super::EpochDriver`], so
 //! this mode has full parity with the sequential coordinator —
-//! prefetcher traffic, write-backs, sampling, and (via
-//! [`run_batched_with`]) epoch policies, whose tracker mutations apply
-//! at group-flush time, i.e. up to E−1 epochs late. The pre-driver
-//! implementation silently dropped prefetcher traffic and never invoked
-//! policies; `tests/pipeline_equivalence.rs` keeps that fixed.
+//! prefetcher traffic, write-backs, sampling, and the two-phase policy
+//! engine. Phase-1 (bin shaping) hooks run at every epoch boundary on
+//! the live bins; phase-2 (migration) hooks run per epoch at
+//! group-flush time, i.e. their tracker mutations and injected
+//! migration traffic apply up to E−1 epochs late — the documented
+//! fidelity trade of batched replay. An empty stack remains
+//! bit-identical to no stack (`tests/pipeline_equivalence.rs`).
 
-use crate::policy::EpochPolicy;
+use crate::policy::PolicyStack;
 use crate::runtime::{self, shapes};
 use crate::topology::{TopoTensors, Topology};
 use crate::workload::Workload;
@@ -28,22 +30,30 @@ use super::driver::{BatchedFlush, EpochDriver};
 use super::report::SimReport;
 use super::SimConfig;
 
-/// Run a workload through the grouped analyzer (no epoch policy).
+/// Run a workload through the grouped analyzer. A policy stack is
+/// built from `SimConfig::epoch_policy` when set.
 pub fn run_batched(
     topo: &Topology,
     cfg: &SimConfig,
     wl: &mut dyn Workload,
 ) -> anyhow::Result<SimReport> {
-    run_batched_with(topo, cfg, wl, None)
+    let mut own = cfg
+        .epoch_policy
+        .as_ref()
+        .map(|spec| spec.build(cfg.mig_stall_ns_per_byte));
+    run_batched_with(topo, cfg, wl, own.as_mut())
 }
 
-/// Run a workload through the grouped analyzer, optionally applying an
-/// epoch policy (invoked per epoch at group-flush time).
+/// Run a workload through the grouped analyzer with an explicit policy
+/// stack (ignores `SimConfig::epoch_policy`; pass None for no engine).
+/// The caller keeps the stack, so its counters can be inspected after
+/// the run — `tests/pipeline_equivalence.rs` uses this for the
+/// migration-traffic conservation property.
 pub fn run_batched_with(
     topo: &Topology,
     cfg: &SimConfig,
     wl: &mut dyn Workload,
-    policy: Option<&mut dyn EpochPolicy>,
+    stack: Option<&mut PolicyStack>,
 ) -> anyhow::Result<SimReport> {
     let wall_start = std::time::Instant::now();
     let tensors = TopoTensors::build(topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES)?;
@@ -60,8 +70,14 @@ pub fn run_batched_with(
         cfg.nbins,
         cfg.epoch_ns(),
     );
-    flush.policy = policy;
+    flush.stack = stack;
+    if let Some(st) = flush.stack.as_deref_mut() {
+        st.begin_run(); // per-run accounting, even for caller-owned stacks
+    }
     driver.run(wl, &mut flush, &mut report, cfg.max_epochs)?;
     report.finish(&driver.cache.stats, driver.tracer_run_stats(), wall_start.elapsed());
+    if let Some(stack) = flush.stack.as_deref() {
+        report.record_policy_stats(stack);
+    }
     Ok(report)
 }

@@ -24,7 +24,7 @@
 
 use crate::alloctrack::AllocTracker;
 use crate::cache::{AccessOutcome, CacheHierarchy, Prefetcher};
-use crate::policy::EpochPolicy;
+use crate::policy::PolicyStack;
 use crate::runtime::{BatchTimingModel, TimingInputs, TimingModel};
 use crate::topology::Topology;
 use crate::trace::binning::{BinDelta, EpochBins};
@@ -38,13 +38,14 @@ use super::SimConfig;
 pub const DEFAULT_EVENT_BATCH: usize = 4096;
 
 /// What happens when an epoch boundary fires. The driver hands over the
-/// filled bins, the epoch's native virtual time, and the tracker (epoch
+/// filled bins (mutably — phase-1 policies reshape them before
+/// analysis), the epoch's native virtual time, and the tracker (epoch
 /// policies migrate regions through it); the strategy is responsible
 /// for calling `report.push_epoch` once per epoch, in order.
 pub trait EpochFlush {
     fn on_epoch(
         &mut self,
-        bins: &EpochBins,
+        bins: &mut EpochBins,
         native_ns: f64,
         tracker: &mut AllocTracker,
         report: &mut SimReport,
@@ -250,7 +251,7 @@ impl EpochDriver {
         // the boundary can fire mid-batch: scatter pending deltas so
         // the strategy sees the complete epoch
         self.scatter_staged();
-        flush.on_epoch(&self.bins, self.epoch_vtime, &mut self.tracker, report)?;
+        flush.on_epoch(&mut self.bins, self.epoch_vtime, &mut self.tracker, report)?;
         self.bins.clear();
         self.epoch_vtime = 0.0;
         Ok(())
@@ -312,11 +313,14 @@ impl EpochDriver {
 }
 
 /// Per-epoch analyze strategy: the classic coordinator mode. Runs the
-/// timing model on every epoch boundary and lets the installed epoch
-/// policy act on the fresh outputs before the next epoch starts.
+/// policy stack's phase-1 (bin shaping + migration-traffic injection)
+/// hooks, the timing model, then the stack's phase-2
+/// (migration/rebalance) hooks — all on every epoch boundary, so
+/// placement actions see fresh analyzer outputs and their modeled cost
+/// lands in the very next epoch.
 pub struct PerEpochAnalyze<'m, 'p> {
     pub model: &'m mut dyn TimingModel,
-    pub policy: Option<&'p mut dyn EpochPolicy>,
+    pub stack: Option<&'p mut PolicyStack>,
     pub bytes_per_ev: f32,
     pub keep_epoch_records: bool,
 }
@@ -324,21 +328,25 @@ pub struct PerEpochAnalyze<'m, 'p> {
 impl EpochFlush for PerEpochAnalyze<'_, '_> {
     fn on_epoch(
         &mut self,
-        bins: &EpochBins,
+        bins: &mut EpochBins,
         native_ns: f64,
         tracker: &mut AllocTracker,
         report: &mut SimReport,
     ) -> anyhow::Result<()> {
+        if let Some(stack) = &mut self.stack {
+            stack.before_analysis(bins, tracker, self.bytes_per_ev);
+        }
         let out = self.model.analyze(&TimingInputs {
             reads: &bins.reads,
             writes: &bins.writes,
             bin_width: bins.bin_width_ns() as f32,
             bytes_per_ev: self.bytes_per_ev,
         })?;
-        if let Some(policy) = &mut self.policy {
-            policy.on_epoch(tracker, bins, &out);
-        }
-        report.push_epoch(native_ns, &out, bins.total_events, self.keep_epoch_records);
+        let mig_ns = match &mut self.stack {
+            Some(stack) => stack.after_analysis(bins, &out, tracker, self.bytes_per_ev),
+            None => 0.0,
+        };
+        report.push_epoch(native_ns, &out, mig_ns, bins.total_events, self.keep_epoch_records);
         Ok(())
     }
 }
@@ -349,18 +357,30 @@ struct PendingEpoch {
     writes: Vec<f32>,
     native_ns: f64,
     events: u64,
+    /// Snapshot of the stack's injected-events vector taken when this
+    /// epoch's phase-1 ran — restored before its phase-2 at flush time
+    /// so the anti-cascade demand subtraction sees the right epoch's
+    /// copy traffic (empty when no stack is installed).
+    injected: Vec<f64>,
+    /// Stall accrued by this epoch's phase-1 hooks (migrations in
+    /// `before_analysis`), parked here and re-credited before the
+    /// epoch's phase 2 so it lands in the right epoch's record.
+    phase1_stall_ns: f64,
 }
 
 /// Grouped-analyze strategy: accumulates E epochs of histograms and
 /// flushes them through one [`BatchTimingModel`] call (PJRT dispatch
 /// amortization for offline replay; a plain loop on the native
-/// backend). Epoch policies still run — per epoch, at group-flush time,
-/// so their tracker mutations take effect up to E−1 epochs late; that
-/// is the documented fidelity trade of batched replay (delays never
-/// feed back into the event stream either way).
+/// backend). The policy stack still runs both phases: phase-1 (bin
+/// shaping + migration-traffic injection) at epoch-boundary time, on
+/// the live bins, *before* they are parked in the group; phase-2
+/// (migration/rebalance) per epoch at group-flush time, so placement
+/// actions take effect up to E−1 epochs late — the documented fidelity
+/// trade of batched replay (delays never feed back into the event
+/// stream either way).
 pub struct BatchedFlush<'m, 'p> {
     pub model: &'m mut dyn BatchTimingModel,
-    pub policy: Option<&'p mut dyn EpochPolicy>,
+    pub stack: Option<&'p mut PolicyStack>,
     pub bytes_per_ev: f32,
     pub keep_epoch_records: bool,
     pending: Vec<PendingEpoch>,
@@ -389,7 +409,7 @@ impl<'m, 'p> BatchedFlush<'m, 'p> {
         let cap = model.batch();
         BatchedFlush {
             model,
-            policy: None,
+            stack: None,
             bytes_per_ev,
             keep_epoch_records,
             pending: Vec::with_capacity(cap),
@@ -437,17 +457,24 @@ impl<'m, 'p> BatchedFlush<'m, 'p> {
         for i in 0..filled {
             let one = out.epoch(i, p, s);
             let ep = &self.pending[i];
-            if let Some(policy) = &mut self.policy {
-                // rebuild this epoch's bins view for the policy
+            let mig_ns = if let Some(stack) = &mut self.stack {
+                // rebuild this epoch's bins view for the phase-2 hooks
                 let bins = self
                     .policy_bins
                     .get_or_insert_with(|| EpochBins::new(p, self.nbins, self.epoch_ns));
                 bins.reads.copy_from_slice(&ep.reads);
                 bins.writes.copy_from_slice(&ep.writes);
                 bins.total_events = ep.events;
-                policy.on_epoch(tracker, bins, &one);
-            }
-            report.push_epoch(ep.native_ns, &one, ep.events, self.keep_epoch_records);
+                // restore THIS epoch's injected-copy vector and
+                // phase-1 stall (the live ones belong to the most
+                // recent boundary, not epoch i)
+                stack.set_injected_events(&ep.injected);
+                stack.credit_accrued_stall_ns(ep.phase1_stall_ns);
+                stack.after_analysis(bins, &one, tracker, self.bytes_per_ev)
+            } else {
+                0.0
+            };
+            report.push_epoch(ep.native_ns, &one, mig_ns, ep.events, self.keep_epoch_records);
         }
         self.spare.append(&mut self.pending);
         Ok(())
@@ -457,16 +484,24 @@ impl<'m, 'p> BatchedFlush<'m, 'p> {
 impl EpochFlush for BatchedFlush<'_, '_> {
     fn on_epoch(
         &mut self,
-        bins: &EpochBins,
+        bins: &mut EpochBins,
         native_ns: f64,
         tracker: &mut AllocTracker,
         report: &mut SimReport,
     ) -> anyhow::Result<()> {
+        // phase 1 runs on the live bins, before they are parked — bin
+        // shaping must happen before analysis, and this keeps the
+        // shaped histograms in the group the analyzer will see
+        if let Some(stack) = &mut self.stack {
+            stack.before_analysis(bins, tracker, self.bytes_per_ev);
+        }
         let mut ep = self.spare.pop().unwrap_or_else(|| PendingEpoch {
             reads: Vec::with_capacity(bins.reads.len()),
             writes: Vec::with_capacity(bins.writes.len()),
             native_ns: 0.0,
             events: 0,
+            injected: Vec::new(),
+            phase1_stall_ns: 0.0,
         });
         ep.reads.clear();
         ep.reads.extend_from_slice(&bins.reads);
@@ -474,6 +509,12 @@ impl EpochFlush for BatchedFlush<'_, '_> {
         ep.writes.extend_from_slice(&bins.writes);
         ep.native_ns = native_ns;
         ep.events = bins.total_events;
+        ep.injected.clear();
+        ep.phase1_stall_ns = 0.0;
+        if let Some(stack) = &mut self.stack {
+            ep.injected.extend_from_slice(stack.injected_events());
+            ep.phase1_stall_ns = stack.take_accrued_stall_ns();
+        }
         self.pending.push(ep);
         if self.pending.len() == self.model.batch() {
             self.flush_group(tracker, report)?;

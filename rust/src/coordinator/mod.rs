@@ -23,10 +23,10 @@ pub mod report;
 
 pub use batch::{run_batched, run_batched_with};
 pub use driver::{BatchedFlush, EpochDriver, EpochFlush, PerEpochAnalyze, DEFAULT_EVENT_BATCH};
-pub use report::{EpochRecord, SimReport, TracerRunStats};
+pub use report::{EpochRecord, PolicyReport, SimReport, TracerRunStats};
 
 use crate::alloctrack::{AllocTracker, PolicyKind};
-use crate::policy::EpochPolicy;
+use crate::policy::{PolicySpec, PolicyStack};
 use crate::runtime::{self, AnalyzerBackend, TimingModel};
 use crate::topology::{TopoTensors, Topology};
 use crate::workload::{self, Workload};
@@ -76,6 +76,16 @@ pub struct SimConfig {
     /// loop monomorphic. Simulation output is identical for any value
     /// (`tests/pipeline_equivalence.rs`).
     pub event_batch: usize,
+    /// Epoch-policy stack spec (`--epoch-policy
+    /// hotness:3,prefetch:0.5,rebalance`). Every driver — sequential
+    /// coordinator, batched replay, multihost (per host) — builds its
+    /// stack(s) from this. None = no policy engine installed.
+    pub epoch_policy: Option<PolicySpec>,
+    /// Modeled migration cost: stall charged per migrated byte, ns
+    /// (`crate::policy`). Default 0.0625 ns/B ≈ a 16 GB/s page-copy
+    /// engine; the copy *traffic* is injected into the next epoch's
+    /// bins regardless of this knob.
+    pub mig_stall_ns_per_byte: f64,
 }
 
 impl Default for SimConfig {
@@ -97,6 +107,8 @@ impl Default for SimConfig {
             keep_epoch_records: false,
             prefetcher: None,
             event_batch: driver::DEFAULT_EVENT_BATCH,
+            epoch_policy: None,
+            mig_stall_ns_per_byte: 0.0625,
         }
     }
 }
@@ -113,7 +125,7 @@ pub struct Coordinator {
     pub cfg: SimConfig,
     model: Box<dyn TimingModel>,
     driver: EpochDriver,
-    epoch_policy: Option<Box<dyn EpochPolicy>>,
+    stack: Option<PolicyStack>,
 }
 
 impl Coordinator {
@@ -124,17 +136,44 @@ impl Coordinator {
             runtime::shapes::NUM_SWITCHES,
         )?;
         // backlog export defaults off everywhere (hot path stays
-        // allocation-light); set_epoch_policy re-enables it
+        // allocation-light); nothing in the built-in policy engine
+        // needs it — opt in through `TimingModel::set_export_backlog`
         let model =
             runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
         let driver = EpochDriver::new(&topo, &cfg)?;
-        Ok(Coordinator { topo, cfg, model, driver, epoch_policy: None })
+        let stack = cfg
+            .epoch_policy
+            .as_ref()
+            .map(|spec| spec.build(cfg.mig_stall_ns_per_byte));
+        let mut coord = Coordinator { topo, cfg, model, driver, stack: None };
+        if let Some(stack) = stack {
+            coord.set_policy_stack(stack);
+        }
+        Ok(coord)
     }
 
-    /// Install a per-epoch research policy (migration / prefetch).
-    pub fn set_epoch_policy(&mut self, p: Box<dyn EpochPolicy>) {
-        self.model.set_export_backlog(true); // policies read the profile
-        self.epoch_policy = Some(p);
+    /// Install a two-phase policy stack (migration / prefetch /
+    /// rebalance — see `crate::policy`). Replaces any stack built from
+    /// `SimConfig::epoch_policy`. No analyzer mode changes: the
+    /// built-in policies read the always-exported per-switch
+    /// congestion totals, not the backlog profile, so the same stack
+    /// runs the same analyzer path on every driver (a policy that
+    /// needs the `[S, B]` profile can enable
+    /// `TimingModel::set_export_backlog` itself).
+    pub fn set_policy_stack(&mut self, stack: PolicyStack) {
+        self.stack = Some(stack);
+    }
+
+    /// Opt into the analyzer's per-switch `[S, B]` backlog-profile
+    /// export (`TimingOutputs::cong_backlog`) — costs an extra store +
+    /// copy per epoch, so it is off unless a custom policy reads it.
+    pub fn set_export_backlog(&mut self, on: bool) {
+        self.model.set_export_backlog(on);
+    }
+
+    /// The installed stack, if any (inspection after a run).
+    pub fn policy_stack(&self) -> Option<&PolicyStack> {
+        self.stack.as_ref()
     }
 
     pub fn tracker(&self) -> &AllocTracker {
@@ -163,9 +202,12 @@ impl Coordinator {
             self.topo.num_pools(),
         );
         self.driver.reset();
+        if let Some(stack) = &mut self.stack {
+            stack.begin_run(); // per-run policy accounting, like the tracker
+        }
         let mut flush = PerEpochAnalyze {
             model: self.model.as_mut(),
-            policy: self.epoch_policy.as_deref_mut(),
+            stack: self.stack.as_mut(),
             bytes_per_ev: self.topo.host.cacheline_bytes as f32,
             keep_epoch_records: self.cfg.keep_epoch_records,
         };
@@ -175,6 +217,9 @@ impl Coordinator {
             self.driver.tracer_run_stats(),
             wall_start.elapsed(),
         );
+        if let Some(stack) = &self.stack {
+            report.record_policy_stats(stack);
+        }
         Ok(report)
     }
 }
@@ -278,12 +323,53 @@ mod tests {
     fn report_breakdown_sums_to_delay() {
         let mut sim = Coordinator::new(builtin::fig2(), cfg_fast()).unwrap();
         let rep = sim.run_workload("zipfian").unwrap();
-        let sum = rep.lat_delay_ns + rep.cong_delay_ns + rep.bwd_delay_ns;
+        let sum = rep.lat_delay_ns + rep.cong_delay_ns + rep.bwd_delay_ns + rep.mig_delay_ns;
         assert!(
             (sum - rep.delay_ns).abs() <= 1e-6 * rep.delay_ns.max(1.0),
             "breakdown {sum} != total {}",
             rep.delay_ns
         );
+    }
+
+    #[test]
+    fn report_breakdown_sums_to_delay_with_migrations() {
+        // the 4-component breakdown must hold when the policy engine
+        // charges migration stall
+        let mut cfg = cfg_fast();
+        cfg.scale = 0.004;
+        cfg.epoch_policy = Some(crate::policy::PolicySpec::parse("hotness:1").unwrap());
+        cfg.mig_stall_ns_per_byte = 0.25;
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        let rep = sim.run_workload("zipfian").unwrap();
+        assert!(rep.migrations > 0, "hotness:1 on zipfian must migrate");
+        assert!(rep.mig_delay_ns > 0.0);
+        let sum = rep.lat_delay_ns + rep.cong_delay_ns + rep.bwd_delay_ns + rep.mig_delay_ns;
+        assert!(
+            (sum - rep.delay_ns).abs() <= 1e-6 * rep.delay_ns.max(1.0),
+            "breakdown {sum} != total {}",
+            rep.delay_ns
+        );
+    }
+
+    #[test]
+    fn stack_built_from_config_reports_per_policy_stats() {
+        let mut cfg = cfg_fast();
+        cfg.scale = 0.004;
+        cfg.epoch_policy =
+            Some(crate::policy::PolicySpec::parse("hotness:1,prefetch:0.5").unwrap());
+        let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+        let rep = sim.run_workload("zipfian").unwrap();
+        assert_eq!(rep.policies.len(), 2);
+        assert_eq!(rep.policies[0].name, "hotness-migration");
+        assert_eq!(rep.policies[1].name, "software-prefetch");
+        assert!(rep.migrations > 0);
+        assert!(rep.migrated_bytes > 0);
+        // cost model: migrated bytes either already injected as link
+        // traffic or still pending the next epoch — never lost
+        let accounted = rep.mig_injected_read_bytes + rep.mig_pending_bytes;
+        assert_eq!(accounted, rep.migrated_bytes as f64, "read-side conservation");
+        let accounted_w = rep.mig_injected_write_bytes + rep.mig_pending_bytes;
+        assert_eq!(accounted_w, rep.migrated_bytes as f64, "write-side conservation");
     }
 
     #[test]

@@ -3,8 +3,17 @@
 //! benches print.
 
 use crate::cache::CacheStats;
+use crate::policy::PolicyStack;
 use crate::runtime::TimingOutputs;
 use crate::util::json::{self, Json};
+
+/// Per-policy outcome of a run (one row per [`PolicyStack`] member).
+#[derive(Clone, Debug)]
+pub struct PolicyReport {
+    pub name: String,
+    pub migrations: u64,
+    pub moved_bytes: u64,
+}
 
 /// Tracer fast-path counters for ONE run. The allocation tracker
 /// deliberately persists across `Coordinator::run` calls, so its
@@ -29,6 +38,8 @@ pub struct EpochRecord {
     pub lat_ns: f64,
     pub cong_ns: f64,
     pub bwd_ns: f64,
+    /// Migration stall charged to this epoch by the policy stack.
+    pub mig_ns: f64,
     pub events: u64,
 }
 
@@ -42,11 +53,16 @@ pub struct SimReport {
     pub native_ns: f64,
     /// Simulated execution time on the CXL topology, ns.
     pub simulated_ns: f64,
-    /// Injected delay total and breakdown, ns.
+    /// Injected delay total and breakdown, ns. The total is the sum of
+    /// the latency/congestion/bandwidth analyzer components plus the
+    /// policy engine's modeled migration stall.
     pub delay_ns: f64,
     pub lat_delay_ns: f64,
     pub cong_delay_ns: f64,
     pub bwd_delay_ns: f64,
+    /// Migration stall charged by the policy stack (bytes moved ×
+    /// per-byte stall), ns.
+    pub mig_delay_ns: f64,
     /// Tool wall-clock (Table 1's metric), seconds.
     pub wall_s: f64,
     pub epochs_run: u64,
@@ -73,6 +89,17 @@ pub struct SimReport {
     /// (`bins_staged / bins_bulk_flushes` ≈ achieved amortization).
     pub bins_staged: u64,
     pub bins_bulk_flushes: u64,
+    /// Policy engine (empty without an installed stack): per-policy
+    /// outcomes plus the migration cost model's conservation counters
+    /// — every migrated byte becomes read traffic on the source pool
+    /// and write traffic on the destination in the next epoch
+    /// (`injected`), or is still awaiting a next epoch (`pending`).
+    pub policies: Vec<PolicyReport>,
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+    pub mig_injected_read_bytes: f64,
+    pub mig_injected_write_bytes: f64,
+    pub mig_pending_bytes: f64,
     pub epochs: Vec<EpochRecord>,
 }
 
@@ -102,6 +129,12 @@ impl SimReport {
             pool_index_rebuilds: 0,
             bins_staged: 0,
             bins_bulk_flushes: 0,
+            policies: Vec::new(),
+            migrations: 0,
+            migrated_bytes: 0,
+            mig_injected_read_bytes: 0.0,
+            mig_injected_write_bytes: 0.0,
+            mig_pending_bytes: 0.0,
             epochs: Vec::new(),
         }
     }
@@ -124,26 +157,50 @@ impl SimReport {
         &mut self,
         native_ns: f64,
         out: &TimingOutputs,
+        mig_ns: f64,
         events: u64,
         keep: bool,
     ) {
         self.epochs_run += 1;
         self.native_ns += native_ns;
-        self.delay_ns += out.total;
+        self.delay_ns += out.total + mig_ns;
         self.lat_delay_ns += out.lat_total();
         self.cong_delay_ns += out.cong_total();
         self.bwd_delay_ns += out.bwd_total();
-        self.simulated_ns += native_ns + out.total;
+        self.mig_delay_ns += mig_ns;
+        self.simulated_ns += native_ns + out.total + mig_ns;
         if keep {
             self.epochs.push(EpochRecord {
                 native_ns,
-                delay_ns: out.total,
+                delay_ns: out.total + mig_ns,
                 lat_ns: out.lat_total(),
                 cong_ns: out.cong_total(),
                 bwd_ns: out.bwd_total(),
+                mig_ns,
                 events,
             });
         }
+    }
+
+    /// Copy the policy stack's end-of-run stats into the report. All
+    /// values are THIS run's (the stack's counters reset at
+    /// `PolicyStack::begin_run`, and the per-policy rows are deltas
+    /// against run-start snapshots), mirroring `TracerRunStats`.
+    pub(crate) fn record_policy_stats(&mut self, stack: &PolicyStack) {
+        self.migrations = stack.migrations();
+        self.migrated_bytes = stack.moved_bytes();
+        self.mig_injected_read_bytes = stack.injected_read_bytes();
+        self.mig_injected_write_bytes = stack.injected_write_bytes();
+        self.mig_pending_bytes = stack.pending_bytes();
+        self.policies = stack
+            .per_policy_stats()
+            .into_iter()
+            .map(|(name, migrations, moved_bytes)| PolicyReport {
+                name: name.to_string(),
+                migrations,
+                moved_bytes,
+            })
+            .collect();
     }
 
     pub(crate) fn finish(
@@ -200,12 +257,31 @@ impl SimReport {
             self.sim_slowdown()
         ));
         s.push_str(&format!(
-            "  delay   {:>10.3} ms = latency {:.3} + congestion {:.3} + bandwidth {:.3}\n",
+            "  delay   {:>10.3} ms = latency {:.3} + congestion {:.3} + bandwidth {:.3} + migration {:.3}\n",
             self.delay_ns / 1e6,
             self.lat_delay_ns / 1e6,
             self.cong_delay_ns / 1e6,
-            self.bwd_delay_ns / 1e6
+            self.bwd_delay_ns / 1e6,
+            self.mig_delay_ns / 1e6
         ));
+        if !self.policies.is_empty() {
+            let parts: Vec<String> = self
+                .policies
+                .iter()
+                .map(|p| {
+                    format!("{} ({} migrations, {:.1} KB moved)", p.name, p.migrations, p.moved_bytes as f64 / 1024.0)
+                })
+                .collect();
+            s.push_str(&format!("  policies: {}\n", parts.join("; ")));
+            s.push_str(&format!(
+                "  migration traffic: {:.1} KB injected reads, {:.1} KB injected writes, \
+                 {:.1} KB pending, {:.3} ms stall\n",
+                self.mig_injected_read_bytes / 1024.0,
+                self.mig_injected_write_bytes / 1024.0,
+                self.mig_pending_bytes / 1024.0,
+                self.mig_delay_ns / 1e6
+            ));
+        }
         s.push_str(&format!(
             "  {} epochs, {} accesses, {} LLC misses ({:.3}% miss rate), {} writebacks\n",
             self.epochs_run,
@@ -249,6 +325,27 @@ impl SimReport {
             ("lat_delay_ms", json::num(self.lat_delay_ns / 1e6)),
             ("cong_delay_ms", json::num(self.cong_delay_ns / 1e6)),
             ("bwd_delay_ms", json::num(self.bwd_delay_ns / 1e6)),
+            ("mig_delay_ms", json::num(self.mig_delay_ns / 1e6)),
+            ("migrations", json::num(self.migrations as f64)),
+            ("migrated_bytes", json::num(self.migrated_bytes as f64)),
+            ("mig_injected_read_bytes", json::num(self.mig_injected_read_bytes)),
+            ("mig_injected_write_bytes", json::num(self.mig_injected_write_bytes)),
+            ("mig_pending_bytes", json::num(self.mig_pending_bytes)),
+            (
+                "policies",
+                Json::Arr(
+                    self.policies
+                        .iter()
+                        .map(|p| {
+                            json::obj(vec![
+                                ("name", json::s(&p.name)),
+                                ("migrations", json::num(p.migrations as f64)),
+                                ("moved_bytes", json::num(p.moved_bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("wall_s", json::num(self.wall_s)),
             ("epochs", json::num(self.epochs_run as f64)),
             ("accesses", json::num(self.total_accesses as f64)),
@@ -289,13 +386,26 @@ mod tests {
     #[test]
     fn epoch_accumulation() {
         let mut r = SimReport::new("w", "t", "native", 2);
-        r.push_epoch(1000.0, &outputs(500.0), 10, false);
-        r.push_epoch(1000.0, &outputs(300.0), 5, false);
+        r.push_epoch(1000.0, &outputs(500.0), 0.0, 10, false);
+        r.push_epoch(1000.0, &outputs(300.0), 0.0, 5, false);
         assert_eq!(r.epochs_run, 2);
         assert!((r.native_ns - 2000.0).abs() < 1e-9);
         assert!((r.delay_ns - 800.0).abs() < 1e-9);
         assert!((r.simulated_ns - 2800.0).abs() < 1e-9);
         assert!((r.sim_slowdown() - 1.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn migration_stall_lands_in_delay_and_breakdown() {
+        let mut r = SimReport::new("w", "t", "native", 2);
+        r.push_epoch(1000.0, &outputs(400.0), 100.0, 10, true);
+        assert!((r.delay_ns - 500.0).abs() < 1e-9);
+        assert!((r.mig_delay_ns - 100.0).abs() < 1e-9);
+        assert!((r.simulated_ns - 1500.0).abs() < 1e-9);
+        let sum = r.lat_delay_ns + r.cong_delay_ns + r.bwd_delay_ns + r.mig_delay_ns;
+        assert!((sum - r.delay_ns).abs() < 1e-6);
+        assert!((r.epochs[0].mig_ns - 100.0).abs() < 1e-9);
+        assert!((r.epochs[0].delay_ns - 500.0).abs() < 1e-9);
     }
 
     #[test]
@@ -314,7 +424,7 @@ mod tests {
     #[test]
     fn json_roundtrips() {
         let mut r = SimReport::new("w", "t", "pjrt", 2);
-        r.push_epoch(100.0, &outputs(10.0), 3, false);
+        r.push_epoch(100.0, &outputs(10.0), 0.0, 3, false);
         let j = r.to_json().to_string();
         let v = Json::parse(&j).unwrap();
         assert_eq!(v.get("workload").unwrap().as_str(), Some("w"));
@@ -324,7 +434,7 @@ mod tests {
     #[test]
     fn summary_contains_key_numbers() {
         let mut r = SimReport::new("mmap_read", "fig2", "native", 2);
-        r.push_epoch(1e6, &outputs(5e5), 100, false);
+        r.push_epoch(1e6, &outputs(5e5), 0.0, 100, false);
         let s = r.summary();
         assert!(s.contains("mmap_read"));
         assert!(s.contains("fig2"));

@@ -64,6 +64,26 @@
 //!   (replacing a fresh thread scope per epoch); per-host bins still
 //!   merge deterministically, in host order, at the epoch barrier.
 //!
+//! ## The two-phase policy engine
+//!
+//! Research policies (`policy` module) compose in a `PolicyStack`
+//! installed on any driver — sequential coordinator, batched replay,
+//! multihost (one stack per host) — or built from the CLI
+//! (`--epoch-policy hotness:3,prefetch:0.5,rebalance`). Each epoch
+//! boundary runs two phases around the timing analyzer:
+//! `before_analysis` reshapes the epoch's `[P, B]` histograms
+//! (software prefetch lives here), `after_analysis` acts on the
+//! analyzer's outputs (hotness migration, congestion rebalance —
+//! picking victims by the alloc tracker's per-region heat counters,
+//! bumped on the `pool_of` fast path). Migration is cost-modeled:
+//! moved bytes become read traffic on the source pool and write
+//! traffic on the destination pool injected into the next epoch's
+//! bins, plus a configurable per-byte stall in the delay total — so
+//! tiering experiments pay for their copies. An empty stack is
+//! bit-identical to no stack on every driver
+//! (`tests/pipeline_equivalence.rs`), and its per-epoch overhead is
+//! measured at ~0 in `benches/hotpath.rs` (`policy_epoch`).
+//!
 //! ## Hot path anatomy
 //!
 //! One `Access` event costs, in order: the cache walk
@@ -108,6 +128,7 @@ pub mod workload;
 pub mod prelude {
     pub use crate::alloctrack::{AllocTracker, PolicyKind};
     pub use crate::coordinator::{Coordinator, SimConfig, SimReport};
+    pub use crate::policy::{EpochPolicy, PolicySpec, PolicyStack};
     pub use crate::runtime::{AnalyzerBackend, TimingInputs, TimingOutputs};
     pub use crate::topology::{builtin, Topology, TopoTensors};
     pub use crate::workload::{by_name as workload_by_name, Workload, TABLE1_WORKLOADS};

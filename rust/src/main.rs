@@ -13,9 +13,10 @@
 //! Run `cxlmemsim <cmd> --help-args` for flags; all flags have defaults.
 
 use cxlmemsim::alloctrack::PolicyKind;
-use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::coordinator::{run_batched, Coordinator, SimConfig};
 use cxlmemsim::gem5like::DetailedSim;
 use cxlmemsim::multihost;
+use cxlmemsim::policy::{PolicySpec, POLICY_REGISTRY};
 use cxlmemsim::runtime::AnalyzerBackend;
 use cxlmemsim::topology::{builtin, Topology};
 use cxlmemsim::trace::io as trace_io;
@@ -62,7 +63,10 @@ fn usage() {
          usage: cxlmemsim <run|table1|sweep|multihost|record|replay|topo|list> [--flags]\n\
          common flags: --workload W --topo T --policy P --backend pjrt|native\n\
                        --epoch-ms F --scale F --seed N --sample-period N\n\
-                       --cache-scale N --max-epochs N --event-batch N --json"
+                       --cache-scale N --max-epochs N --event-batch N --json\n\
+                       --epoch-policy hotness:3,prefetch:0.5,rebalance (policy stack)\n\
+                       --mig-stall-ns-per-byte F (modeled migration cost)\n\
+                       --batched (run: grouped-analyzer replay driver)"
     );
 }
 
@@ -92,6 +96,11 @@ fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
     cfg.prefetcher = args.opt_str("prefetch");
     cfg.keep_epoch_records = args.bool("epoch-records");
     cfg.event_batch = args.usize("event-batch", cfg.event_batch).max(1);
+    if let Some(spec) = args.opt_str("epoch-policy") {
+        cfg.epoch_policy = Some(PolicySpec::parse(&spec)?);
+    }
+    cfg.mig_stall_ns_per_byte =
+        args.f64("mig-stall-ns-per-byte", cfg.mig_stall_ns_per_byte);
     Ok(cfg)
 }
 
@@ -104,8 +113,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let topo = topo_from(args)?;
     let cfg = config_from(args)?;
     let wl = args.str("workload", "mmap_read");
-    let mut sim = Coordinator::new(topo, cfg)?;
-    let rep = sim.run_workload(&wl)?;
+    // --batched: the grouped-analyzer replay driver (policy stacks run
+    // with phase-2 applied at group-flush time)
+    let rep = if args.bool("batched") {
+        let mut workload = cxlmemsim::workload::by_name(&wl, cfg.scale, cfg.seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload `{wl}`"))?;
+        run_batched(&topo, &cfg, workload.as_mut())?
+    } else {
+        let mut sim = Coordinator::new(topo, cfg)?;
+        sim.run_workload(&wl)?
+    };
     if args.bool("json") {
         println!("{}", rep.to_json().to_string());
     } else {
@@ -257,12 +274,21 @@ fn cmd_multihost(args: &Args) -> anyhow::Result<()> {
             rep.invalidations, rep.coherence_msgs
         );
     }
+    if rep.migrations > 0 {
+        println!(
+            "  policy engine: {} migrations, {:.1} KB moved, {:.3} ms modeled stall",
+            rep.migrations,
+            rep.migrated_bytes as f64 / 1024.0,
+            rep.mig_stall_ns / 1e6
+        );
+    }
     for (i, h) in rep.hosts.iter().enumerate() {
         println!(
-            "  host{i}: native {:.3} ms -> sim {:.3} ms ({} misses)",
+            "  host{i}: native {:.3} ms -> sim {:.3} ms ({} misses, {} migrations)",
             h.native_ns / 1e6,
             h.simulated_ns / 1e6,
-            h.misses
+            h.misses,
+            h.migrations
         );
     }
     Ok(())
@@ -327,5 +353,12 @@ fn cmd_list() -> anyhow::Result<()> {
     println!("policies:   local, cxl, localfirst, interleave, sizeclass, leastloaded");
     println!("backends:   pjrt (AOT HLO via PJRT), native (pure-rust mirror)");
     println!("prefetch:   nextline, stride (hardware prefetcher models, --prefetch)");
+    println!("epoch-policy stack (--epoch-policy name[:arg],... — two-phase engine):");
+    for p in POLICY_REGISTRY {
+        println!(
+            "  {:10} [{}, default {}]  {}",
+            p.name, p.arg, p.default_arg, p.help
+        );
+    }
     Ok(())
 }

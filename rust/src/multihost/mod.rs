@@ -24,6 +24,23 @@
 //! and transits the topology as a write message. Deferring delivery to
 //! the barrier (epoch granularity, the simulator's native resolution)
 //! is what makes the host phase embarrassingly parallel.
+//!
+//! The two-phase policy engine (`crate::policy`) runs here too: each
+//! host carries its own [`PolicyStack`] (built per host from
+//! `SimConfig::epoch_policy`, or passed explicitly to
+//! [`run_shared_threads_with`]). Both phases execute on the
+//! coordinator thread at the epoch barrier, always in host order —
+//! phase 1 (bin shaping + migration-traffic injection) on the host's
+//! own bins *before* they merge into the shared switch view, phase 2
+//! (migration) after the shared analyze — so results stay bit-identical
+//! for any worker-thread count. Modeled migration stall is charged to
+//! the migrating host's delay (and the run total).
+//!
+//! Miss accounting in the host phase uses the same
+//! `EpochBins::stage`/`record_bulk` bulk path as the epoch driver when
+//! `event_batch > 1`; `event_batch == 1` keeps the scalar per-miss
+//! `record` baseline, asserted bit-identical in
+//! `tests/pipeline_equivalence.rs`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Barrier, Mutex};
@@ -31,9 +48,10 @@ use std::sync::{Barrier, Mutex};
 use crate::alloctrack::AllocTracker;
 use crate::cache::{AccessOutcome, CacheHierarchy};
 use crate::coordinator::SimConfig;
+use crate::policy::PolicyStack;
 use crate::runtime::{self, TimingInputs};
 use crate::topology::{PoolId, TopoTensors, Topology};
-use crate::trace::binning::EpochBins;
+use crate::trace::binning::{BinDelta, EpochBins};
 use crate::trace::WlEvent;
 use crate::workload::Workload;
 
@@ -45,6 +63,9 @@ pub struct HostReport {
     pub simulated_ns: f64,
     pub delay_ns: f64,
     pub misses: u64,
+    /// Migrations performed by this host's policy stack.
+    pub migrations: u64,
+    pub migrated_bytes: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -60,6 +81,12 @@ pub struct MultiHostReport {
     /// Coherence messages that transited the topology (charged to the
     /// shared line's pool path as write traffic).
     pub coherence_msgs: u64,
+    /// Policy engine totals across all host stacks.
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+    /// Modeled migration stall charged to host delays (included in
+    /// `total_delay_ns`), ns.
+    pub mig_stall_ns: f64,
     pub wall_s: f64,
 }
 
@@ -92,6 +119,13 @@ struct Host {
     tracker: AllocTracker,
     /// This host's slice of the epoch's traffic; merged at the barrier.
     bins: EpochBins,
+    /// Staged `(pool, rw, bin, weight)` deltas awaiting the bulk
+    /// scatter into `bins` (`event_batch > 1`; scalar `record` is kept
+    /// at `event_batch == 1` as the bit-identical baseline).
+    staged: Vec<BinDelta>,
+    /// This host's policy stack; both phases run at the epoch barrier,
+    /// coordinator thread, host order.
+    stack: Option<PolicyStack>,
     /// Carry-over event buffer (events pulled past the epoch boundary
     /// stay queued for the next epoch).
     buf: Vec<WlEvent>,
@@ -122,11 +156,21 @@ fn advance_host_epoch(
     if h.done {
         return;
     }
+    // bulk miss accounting mirrors the epoch driver: stage pre-binned
+    // deltas, scatter once per pulled batch; `event_batch == 1` keeps
+    // the scalar per-miss path as the measurable (and bit-identical)
+    // baseline
+    let staging = batch > 1;
     loop {
         if h.epoch_vtime >= epoch_ns {
             break;
         }
         if h.cursor >= h.buf.len() {
+            // drain staged deltas before pulling the next batch
+            if !h.staged.is_empty() {
+                h.bins.record_bulk(&h.staged);
+                h.staged.clear();
+            }
             if h.src_done {
                 h.done = true;
                 break;
@@ -163,10 +207,18 @@ fn advance_host_epoch(
                     h.misses += 1;
                     h.epoch_misses += 1.0;
                     let t = h.epoch_vtime;
-                    h.bins.record(pool, a.is_write, t, 1.0);
+                    if staging {
+                        h.bins.stage(pool, a.is_write, t, 1.0, &mut h.staged);
+                    } else {
+                        h.bins.record(pool, a.is_write, t, 1.0);
+                    }
                     if let Some(wb) = writeback {
                         let wb_pool = h.tracker.pool_of(wb);
-                        h.bins.record(wb_pool, true, t, 1.0);
+                        if staging {
+                            h.bins.stage(wb_pool, true, t, 1.0, &mut h.staged);
+                        } else {
+                            h.bins.record(wb_pool, true, t, 1.0);
+                        }
                     }
                 }
                 h.epoch_vtime += cost;
@@ -180,6 +232,11 @@ fn advance_host_epoch(
                 }
             }
         }
+    }
+    // tail scatter: the barrier merge must see the complete epoch
+    if !h.staged.is_empty() {
+        h.bins.record_bulk(&h.staged);
+        h.staged.clear();
     }
 }
 
@@ -198,10 +255,29 @@ pub fn run_shared(
 /// [`run_shared`] with an explicit host-phase thread count. The result
 /// is bit-identical for every `threads` value (deterministic barrier
 /// merge); `threads == 1` runs everything inline, with no worker pool.
+/// Per-host policy stacks are built from `SimConfig::epoch_policy`.
 pub fn run_shared_threads(
     topo: &Topology,
     cfg: &SimConfig,
     workloads: Vec<Box<dyn Workload>>,
+    threads: usize,
+) -> anyhow::Result<MultiHostReport> {
+    let stacks = cfg.epoch_policy.as_ref().map(|spec| {
+        (0..workloads.len())
+            .map(|_| spec.build(cfg.mig_stall_ns_per_byte))
+            .collect()
+    });
+    run_shared_threads_with(topo, cfg, workloads, stacks, threads)
+}
+
+/// [`run_shared_threads`] with explicit per-host policy stacks (None =
+/// no policy engine; Some requires one stack per host, applied in host
+/// order at the epoch barrier). Ignores `SimConfig::epoch_policy`.
+pub fn run_shared_threads_with(
+    topo: &Topology,
+    cfg: &SimConfig,
+    workloads: Vec<Box<dyn Workload>>,
+    stacks: Option<Vec<PolicyStack>>,
     threads: usize,
 ) -> anyhow::Result<MultiHostReport> {
     let wall = std::time::Instant::now();
@@ -215,31 +291,53 @@ pub fn run_shared_threads(
 
     let batch = cfg.event_batch.max(1);
     let nhosts = workloads.len();
+    let stacks: Vec<Option<PolicyStack>> = match stacks {
+        Some(v) => {
+            anyhow::ensure!(
+                v.len() == nhosts,
+                "run_shared_threads_with: {} stacks for {} hosts",
+                v.len(),
+                nhosts
+            );
+            v.into_iter().map(Some).collect()
+        }
+        None => (0..nhosts).map(|_| None).collect(),
+    };
     let hosts: Vec<Host> = workloads
         .into_iter()
-        .map(|wl| Host {
-            wl,
-            cache: CacheHierarchy::scaled(cfg.cache_scale),
-            tracker: AllocTracker::new(topo, cfg.policy.build(topo)),
-            bins: EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns()),
-            buf: Vec::with_capacity(batch),
-            cursor: 0,
-            shared_writes: Vec::new(),
-            native_ns: 0.0,
-            epoch_vtime: 0.0,
-            epoch_misses: 0.0,
-            misses: 0,
-            delay_ns: 0.0,
-            src_done: false,
-            done: false,
+        .zip(stacks)
+        .map(|(wl, mut stack)| {
+            if let Some(st) = &mut stack {
+                st.begin_run(); // per-run accounting, even for caller-owned stacks
+            }
+            Host {
+                wl,
+                cache: CacheHierarchy::scaled(cfg.cache_scale),
+                tracker: AllocTracker::new(topo, cfg.policy.build(topo)),
+                bins: EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns()),
+                staged: Vec::with_capacity(if batch > 1 { batch } else { 0 }),
+                stack,
+                buf: Vec::with_capacity(batch),
+                cursor: 0,
+                shared_writes: Vec::new(),
+                native_ns: 0.0,
+                epoch_vtime: 0.0,
+                epoch_misses: 0.0,
+                misses: 0,
+                delay_ns: 0.0,
+                src_done: false,
+                done: false,
+            }
         })
         .collect();
 
     let epoch_ns = cfg.epoch_ns();
+    let bytes_per_ev = topo.host.cacheline_bytes as f32;
     let mut epochs = 0u64;
     let mut total_delay = 0.0;
     let mut cong_total = 0.0;
     let mut bwd_total = 0.0;
+    let mut mig_stall_total = 0.0;
     let mut invalidations = 0u64;
     let mut coherence_msgs = 0u64;
     let shared_base = crate::workload::patterns::SHARED_BASE;
@@ -345,10 +443,21 @@ pub fn run_shared_threads(
 
             // ---- epoch barrier (coordinator thread, host order =>
             // deterministic for any worker count)
-            // 1. merge per-host traffic into the shared switch view
+            // 1a. policy phase 1, per host in host order: inject the
+            //     previous epoch's migration traffic and run bin
+            //     shaping on the host's OWN bins, before they merge
+            //     into the shared switch view
+            for h in all.iter_mut() {
+                let Host { stack, bins: hbins, tracker, .. } = &mut **h;
+                if let Some(st) = stack {
+                    st.before_analysis(hbins, tracker, bytes_per_ev);
+                }
+            }
+            // 1b. merge per-host traffic into the shared switch view
+            //     (host bins survive until after phase 2 — migration
+            //     policies read them to find the dominant pool)
             for h in all.iter_mut() {
                 bins.merge_from(&h.bins);
-                h.bins.clear();
             }
             // 2. deliver coherence back-invalidations for shared writes
             for hi in 0..all.len() {
@@ -394,14 +503,34 @@ pub fn run_shared_threads(
             cong_total += out.cong_total();
             bwd_total += out.bwd_total();
 
-            // 4. attribute delay to hosts by their miss share this epoch
-            let epoch_misses: f64 = all.iter().map(|h| h.epoch_misses).sum();
+            // 4. policy phase 2, per host in host order: migrations
+            //    against the shared analyzer outputs; the modeled
+            //    stall is charged to the migrating host AND the run
+            //    total (attribution stays conservative)
             for h in all.iter_mut() {
-                let share = if epoch_misses > 0.0 { h.epoch_misses / epoch_misses } else { 0.0 };
+                let Host { stack, bins: hbins, tracker, delay_ns, .. } = &mut **h;
+                if let Some(st) = stack {
+                    let stall = st.after_analysis(hbins, &out, tracker, bytes_per_ev);
+                    *delay_ns += stall;
+                    total_delay += stall;
+                    mig_stall_total += stall;
+                }
+            }
+
+            // 5. attribute delay to hosts by their miss share this
+            //    epoch. A zero-miss epoch can still carry delay (the
+            //    policy engine's injected copy traffic); split it
+            //    evenly so attribution always sums to the total.
+            let epoch_misses: f64 = all.iter().map(|h| h.epoch_misses).sum();
+            let even_share = 1.0 / all.len().max(1) as f64;
+            for h in all.iter_mut() {
+                let share =
+                    if epoch_misses > 0.0 { h.epoch_misses / epoch_misses } else { even_share };
                 h.delay_ns += out.total * share;
                 h.native_ns += h.epoch_vtime;
                 h.epoch_vtime = 0.0;
                 h.epoch_misses = 0.0;
+                h.bins.clear();
             }
             bins.clear();
             if let Some(max) = cfg.max_epochs {
@@ -423,14 +552,25 @@ pub fn run_shared_threads(
     }
 
     let mut hosts_out = Vec::with_capacity(nhosts);
+    let mut migrations_total = 0u64;
+    let mut migrated_bytes_total = 0u64;
     for sh in shards {
         for h in sh.into_inner().unwrap() {
+            let (migs, moved) = h
+                .stack
+                .as_ref()
+                .map(|s| (s.migrations(), s.moved_bytes()))
+                .unwrap_or((0, 0));
+            migrations_total += migs;
+            migrated_bytes_total += moved;
             hosts_out.push(HostReport {
                 workload: h.wl.name().to_string(),
                 native_ns: h.native_ns,
                 simulated_ns: h.native_ns + h.delay_ns,
                 delay_ns: h.delay_ns,
                 misses: h.misses,
+                migrations: migs,
+                migrated_bytes: moved,
             });
         }
     }
@@ -442,6 +582,9 @@ pub fn run_shared_threads(
         bwd_delay_ns: bwd_total,
         invalidations,
         coherence_msgs,
+        migrations: migrations_total,
+        migrated_bytes: migrated_bytes_total,
+        mig_stall_ns: mig_stall_total,
         wall_s: wall.elapsed().as_secs_f64(),
     })
 }
@@ -571,6 +714,50 @@ mod tests {
             for (i, h) in rep.hosts.iter().enumerate() {
                 assert_eq!(h.workload, "stream", "host {i} out of place");
                 assert!(h.misses > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn per_host_policy_stacks_migrate_and_charge_stall() {
+        let mut c = cfg();
+        c.scale = 0.004;
+        c.epoch_policy =
+            Some(crate::policy::PolicySpec::parse("hotness:1").unwrap());
+        c.mig_stall_ns_per_byte = 0.25;
+        let rep = run_shared(&builtin::fig2(), &c, mk_hosts(3)).unwrap();
+        assert!(rep.migrations > 0, "hotness:1 must migrate on a CXL-heavy run");
+        assert!(rep.migrated_bytes > 0);
+        assert!(rep.mig_stall_ns > 0.0);
+        // stall is charged to hosts and to the run total consistently
+        let attributed: f64 = rep.hosts.iter().map(|h| h.delay_ns).sum();
+        assert!(
+            (attributed - rep.total_delay_ns).abs() < 1e-6 * rep.total_delay_ns.max(1.0),
+            "attribution {attributed} != total {} with stall",
+            rep.total_delay_ns
+        );
+        let per_host: u64 = rep.hosts.iter().map(|h| h.migrations).sum();
+        assert_eq!(per_host, rep.migrations);
+    }
+
+    #[test]
+    fn policy_stacks_deterministic_across_thread_counts() {
+        let mut c = cfg();
+        c.scale = 0.004;
+        c.epoch_policy =
+            Some(crate::policy::PolicySpec::parse("hotness:1,prefetch:0.5").unwrap());
+        let run = |threads| run_shared_threads(&builtin::fig2(), &c, mk_hosts(4), threads).unwrap();
+        let one = run(1);
+        assert!(one.migrations > 0);
+        for threads in [2usize, 4] {
+            let many = run(threads);
+            assert_eq!(one.migrations, many.migrations, "{threads} threads");
+            assert_eq!(one.migrated_bytes, many.migrated_bytes);
+            assert_eq!(one.mig_stall_ns, many.mig_stall_ns);
+            assert_eq!(one.total_delay_ns, many.total_delay_ns);
+            for (a, b) in one.hosts.iter().zip(&many.hosts) {
+                assert_eq!(a.delay_ns, b.delay_ns);
+                assert_eq!(a.migrations, b.migrations);
             }
         }
     }

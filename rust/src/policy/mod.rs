@@ -1,30 +1,582 @@
-//! Research-enablement policies (paper §1: "memory scheduling for
-//! complex applications", software vs hardware prefetching/migration,
-//! cache-line vs page management).
+//! The composable two-phase policy engine (paper §1: "memory
+//! scheduling for complex applications", software vs hardware
+//! prefetching/migration, cache-line vs page management).
 //!
-//! An [`EpochPolicy`] observes each epoch's binned traffic and the
-//! timing analyzer's outputs (including the per-switch congestion
-//! backlog profile) and may act on the allocation tracker — e.g.
-//! migrate hot regions toward local DRAM or rebalance away from
-//! congested switches.
+//! Research policies are stacked in a [`PolicyStack`] and run at every
+//! epoch boundary in two phases around the timing analyzer:
+//!
+//! * **`before_analysis`** — bin shaping: the policy may rewrite the
+//!   epoch's `[P, B]` histograms before the analyzer sees them
+//!   ([`SoftwarePrefetch`] lives here: it converts a fraction of read
+//!   misses into earlier, overlap-friendly traffic);
+//! * **`after_analysis`** — placement action: the policy observes the
+//!   analyzer's outputs (per-pool latency, per-switch
+//!   congestion/bandwidth totals; the `[S, B]` backlog profile too if
+//!   the caller opted into its export) and may migrate regions through
+//!   the shared [`PolicyCtx`] ([`HotnessMigration`],
+//!   [`CongestionRebalance`] live here).
+//!
+//! Migration is **cost-modeled**, not free: every byte moved through
+//! [`PolicyCtx::migrate`] is converted by the stack into read traffic
+//! on the source pool and write traffic on the destination pool,
+//! injected into the *next* epoch's bins (spread evenly over the
+//! epoch's time bins — the migration DMA competes with demand traffic
+//! for link bandwidth), plus a configurable per-byte stall charged to
+//! the epoch's delay total. The injected copy traffic is input to the
+//! timing analyzer only: policies rank pools by *demand* traffic
+//! ([`PolicyCtx::injected_events`] is subtracted), so one promotion's
+//! copy can't read as demand heat and cascade into the next. Tiering
+//! is therefore a genuine tradeoff: a promotion pays for itself only
+//! if the saved CXL latency outruns the one-time copy traffic.
+//! Conservation (injected bytes + pending bytes == migrated bytes) is
+//! asserted in `tests/pipeline_equivalence.rs`.
+//!
+//! Victim selection uses the allocation tracker's per-region *heat*
+//! counters (bumped on the `pool_of` fast path, one increment per
+//! lookup — see `alloctrack`): migration policies promote the hottest
+//! region on the offending pool, not merely the largest.
+//!
+//! Stacks are buildable from a CLI spec (`--epoch-policy
+//! hotness:3,prefetch:0.5,rebalance`) via [`PolicySpec::parse`] and the
+//! [`POLICY_REGISTRY`]. An empty stack is bit-identical to running with
+//! no stack installed, on every driver (sequential, batched replay,
+//! multihost) — the engine's zero-cost guarantee, asserted in
+//! `tests/pipeline_equivalence.rs` and measured in
+//! `benches/hotpath.rs` (`policy_epoch`).
 
 use crate::alloctrack::AllocTracker;
 use crate::runtime::TimingOutputs;
 use crate::topology::{PoolId, LOCAL_POOL};
 use crate::trace::binning::EpochBins;
 
-/// Called once per epoch, after the timing analyzer has run.
+/// One region move performed through [`PolicyCtx::migrate`], recorded
+/// so the stack can charge its modeled cost. `bytes` counts only bytes
+/// that actually copied (pages already resident on `to` are free), and
+/// `from` carries the per-source-pool byte shares — one entry for a
+/// `Single` placement, several for an interleaved region whose pages
+/// span pools.
+#[derive(Clone, Debug)]
+pub struct Migration {
+    pub start: u64,
+    pub bytes: u64,
+    pub to: PoolId,
+    pub from: Vec<(PoolId, u64)>,
+}
+
+/// Shared per-epoch context handed to both policy phases. Owns the
+/// migration log for the epoch: policies move regions through
+/// [`PolicyCtx::migrate`] (never `AllocTracker::migrate_region`
+/// directly) so every move is cost-modeled by the stack.
+pub struct PolicyCtx<'a> {
+    pub tracker: &'a mut AllocTracker,
+    /// Epoch index within the run (0-based).
+    pub epoch: u64,
+    /// Bytes represented by one binned event (the cacheline size).
+    pub bytes_per_ev: f32,
+    /// Per-pool event counts (reads + writes) the migration cost model
+    /// injected into THIS epoch's bins. Policies ranking pools by bin
+    /// traffic must subtract these — the copy traffic is real input to
+    /// the timing analyzer, but letting it feed a policy's own
+    /// dominance/load signal makes one migration's copy look like
+    /// demand heat and cascade into the next (a self-sustaining loop).
+    pub injected_events: &'a [f64],
+    migrations: Vec<Migration>,
+}
+
+impl PolicyCtx<'_> {
+    /// Migrate the region starting at `start` to pool `to`, recording
+    /// the move for cost modeling. Returns false (and records nothing)
+    /// if the region is unknown, already entirely on `to`, or the move
+    /// fails. Copy traffic is charged per *source* pool: an
+    /// interleaved region's pages are attributed to the pools they
+    /// actually live on, and pages already resident on `to` copy
+    /// nothing.
+    pub fn migrate(&mut self, start: u64, to: PoolId) -> bool {
+        let Some(r) = self.tracker.region_at(start) else {
+            return false;
+        };
+        let mut from: Vec<(PoolId, u64)> = Vec::new();
+        // the tracker's span walk is the one source of truth for where
+        // the region's bytes live; pages already on `to` copy nothing
+        r.for_each_span(|pool, sz| {
+            if pool == to || sz == 0 {
+                return;
+            }
+            match from.iter_mut().find(|(p, _)| *p == pool) {
+                Some(e) => e.1 += sz,
+                None => from.push((pool, sz)),
+            }
+        });
+        if from.is_empty() {
+            return false; // nothing would actually move
+        }
+        if self.tracker.migrate_region(start, to) {
+            let bytes = from.iter().map(|(_, b)| *b).sum();
+            self.migrations.push(Migration { start, bytes, to, from });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Moves recorded so far this epoch (all policies, both phases).
+    pub fn migrations(&self) -> &[Migration] {
+        &self.migrations
+    }
+}
+
+/// A composable epoch policy: either hook (or both) may be implemented;
+/// the defaults are no-ops so pure bin-shapers and pure migrators stay
+/// small. Policies run in stack order within each phase.
 pub trait EpochPolicy: Send {
     fn name(&self) -> &'static str;
-    fn on_epoch(&mut self, tracker: &mut AllocTracker, bins: &EpochBins, out: &TimingOutputs);
+    /// Phase 1 — bin shaping, before the timing analyzer runs. The
+    /// bins may be rewritten in place (traffic must be conserved if the
+    /// policy models scheduling rather than elimination).
+    fn before_analysis(&mut self, _bins: &mut EpochBins, _ctx: &mut PolicyCtx) {}
+    /// Phase 2 — placement action, after the timing analyzer ran.
+    /// Migrations go through [`PolicyCtx::migrate`].
+    fn after_analysis(&mut self, _bins: &EpochBins, _out: &TimingOutputs, _ctx: &mut PolicyCtx) {}
     /// Total migrations performed (reporting).
-    fn migrations(&self) -> u64;
+    fn migrations(&self) -> u64 {
+        0
+    }
+    /// Total bytes moved (reporting).
+    fn moved_bytes(&self) -> u64 {
+        0
+    }
 }
+
+/// An ordered stack of [`EpochPolicy`]s plus the migration cost model.
+///
+/// The epoch drivers call [`PolicyStack::before_analysis`] with the
+/// epoch's completed bins (which first injects the previous epoch's
+/// migration traffic, then runs each policy's phase-1 hook) and
+/// [`PolicyStack::after_analysis`] with the analyzer outputs (phase-2
+/// hooks, then converts the epoch's migrations into pending traffic
+/// and returns the stall to charge to the epoch's delay).
+pub struct PolicyStack {
+    policies: Vec<Box<dyn EpochPolicy>>,
+    /// Stall charged per migrated byte, ns (models the page-copy
+    /// machinery blocking the app: TLB shootdowns + copy bandwidth).
+    pub stall_ns_per_byte: f64,
+    epoch: u64,
+    /// Per-pool migrated bytes awaiting injection as read traffic
+    /// (source pools) and write traffic (destination pools).
+    pending_reads: Vec<f64>,
+    pending_writes: Vec<f64>,
+    /// Reused migration-log allocation for [`PolicyCtx`].
+    mig_scratch: Vec<Migration>,
+    /// Per-pool events (reads + writes) injected into the CURRENT
+    /// epoch's bins — exposed to policies via
+    /// [`PolicyCtx::injected_events`] so copy traffic never feeds
+    /// their own trigger metrics.
+    last_injected: Vec<f64>,
+    /// Stall accrued since the last `after_analysis` return (phase-1
+    /// migrations land here too).
+    accrued_stall_ns: f64,
+    migrations: u64,
+    moved_bytes: u64,
+    injected_read_bytes: f64,
+    injected_write_bytes: f64,
+    stall_ns: f64,
+    /// Per-policy (migrations, moved_bytes) snapshots from
+    /// [`PolicyStack::begin_run`]; [`PolicyStack::per_policy_stats`]
+    /// reports deltas against them.
+    per_policy_base: Vec<(u64, u64)>,
+}
+
+impl PolicyStack {
+    pub fn new(stall_ns_per_byte: f64) -> PolicyStack {
+        PolicyStack {
+            policies: Vec::new(),
+            stall_ns_per_byte,
+            epoch: 0,
+            pending_reads: Vec::new(),
+            pending_writes: Vec::new(),
+            mig_scratch: Vec::new(),
+            last_injected: Vec::new(),
+            accrued_stall_ns: 0.0,
+            migrations: 0,
+            moved_bytes: 0,
+            injected_read_bytes: 0.0,
+            injected_write_bytes: 0.0,
+            stall_ns: 0.0,
+            per_policy_base: Vec::new(),
+        }
+    }
+
+    /// Reset per-run accounting: counters, pending copy traffic, and
+    /// the epoch index. The epoch drivers call this at run start so a
+    /// stack reused across `Coordinator::run` calls reports THIS run's
+    /// numbers — the same persistence split as the alloc tracker,
+    /// whose placements survive runs while its counters are reported
+    /// as per-run deltas (`TracerRunStats`). Pending (not-yet-
+    /// injected) copy traffic from a previous run is dropped: the run
+    /// boundary quantizes in-flight DMA away, which keeps the per-run
+    /// conservation invariant (injected + pending == migrated) exact.
+    /// Policy-internal state (hotness streaks, local-DRAM budgets)
+    /// deliberately persists, like the tracker placements it reasons
+    /// about.
+    pub fn begin_run(&mut self) {
+        self.epoch = 0;
+        self.pending_reads.fill(0.0);
+        self.pending_writes.fill(0.0);
+        self.last_injected.fill(0.0);
+        self.mig_scratch.clear();
+        self.accrued_stall_ns = 0.0;
+        self.migrations = 0;
+        self.moved_bytes = 0;
+        self.injected_read_bytes = 0.0;
+        self.injected_write_bytes = 0.0;
+        self.stall_ns = 0.0;
+        self.per_policy_base =
+            self.policies.iter().map(|p| (p.migrations(), p.moved_bytes())).collect();
+    }
+
+    /// The per-pool event counts injected into the current epoch's
+    /// bins by the last [`PolicyStack::before_analysis`] call (what
+    /// [`PolicyCtx::injected_events`] exposes to hooks).
+    pub fn injected_events(&self) -> &[f64] {
+        &self.last_injected
+    }
+
+    /// Override the injected-events vector before running phase-2
+    /// hooks for an epoch whose bins were filled earlier. Batched
+    /// replay needs this: it runs `before_analysis` per epoch at
+    /// boundary time but `after_analysis` at group-flush time, so it
+    /// snapshots `injected_events()` per epoch and restores it here —
+    /// otherwise every epoch in the group would see the *last*
+    /// boundary's vector and the anti-cascade demand subtraction
+    /// would silently miss.
+    pub fn set_injected_events(&mut self, v: &[f64]) {
+        self.last_injected.clear();
+        self.last_injected.extend_from_slice(v);
+    }
+
+    /// Drain the stall accrued so far (phase-1 migrations). Batched
+    /// replay parks this with each epoch at boundary time and
+    /// re-credits it via [`PolicyStack::credit_accrued_stall_ns`] just
+    /// before that epoch's phase 2 — otherwise several boundaries'
+    /// phase-1 stall would all land on the first epoch flushed in the
+    /// group (run totals would survive, per-epoch records would not).
+    pub fn take_accrued_stall_ns(&mut self) -> f64 {
+        std::mem::take(&mut self.accrued_stall_ns)
+    }
+
+    /// Re-credit stall previously drained by
+    /// [`PolicyStack::take_accrued_stall_ns`].
+    pub fn credit_accrued_stall_ns(&mut self, ns: f64) {
+        self.accrued_stall_ns += ns;
+    }
+
+    /// Per-policy `(name, migrations, moved_bytes)` for this run —
+    /// deltas since [`PolicyStack::begin_run`] (policies keep lifetime
+    /// counters internally).
+    pub fn per_policy_stats(&self) -> Vec<(&'static str, u64, u64)> {
+        self.policies
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let (mb, bb) = self.per_policy_base.get(i).copied().unwrap_or((0, 0));
+                (p.name(), p.migrations() - mb, p.moved_bytes() - bb)
+            })
+            .collect()
+    }
+
+    /// Builder-style push.
+    pub fn with(mut self, p: Box<dyn EpochPolicy>) -> PolicyStack {
+        self.policies.push(p);
+        self
+    }
+
+    pub fn add(&mut self, p: Box<dyn EpochPolicy>) {
+        self.policies.push(p);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.policies.len()
+    }
+
+    /// The installed policies, for reporting.
+    pub fn policies(&self) -> impl Iterator<Item = &dyn EpochPolicy> {
+        self.policies.iter().map(|p| p.as_ref())
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    pub fn moved_bytes(&self) -> u64 {
+        self.moved_bytes
+    }
+
+    pub fn injected_read_bytes(&self) -> f64 {
+        self.injected_read_bytes
+    }
+
+    pub fn injected_write_bytes(&self) -> f64 {
+        self.injected_write_bytes
+    }
+
+    /// Migrated bytes staged but not yet injected (end-of-run
+    /// migrations have no next epoch to land in). Read- and write-side
+    /// pending totals are always equal.
+    pub fn pending_bytes(&self) -> f64 {
+        self.pending_reads.iter().sum()
+    }
+
+    pub fn stall_ns(&self) -> f64 {
+        self.stall_ns
+    }
+
+    fn ensure_pools(&mut self, pools: usize) {
+        if self.pending_reads.len() < pools {
+            self.pending_reads.resize(pools, 0.0);
+            self.pending_writes.resize(pools, 0.0);
+        }
+        // sized separately: `set_injected_events` may have restored a
+        // snapshot of a different length
+        if self.last_injected.len() < pools {
+            self.last_injected.resize(pools, 0.0);
+        }
+    }
+
+    /// Spread `events` evenly over one pool row (the migration DMA
+    /// streams through the whole epoch, not one instant).
+    fn inject_row(row: &mut [f32], events: f64) {
+        let per_bin = (events / row.len() as f64) as f32;
+        for x in row.iter_mut() {
+            *x += per_bin;
+        }
+    }
+
+    /// Absorb an epoch's migration log into the cost model: pending
+    /// traffic for the next epoch plus the per-byte stall. Read
+    /// traffic lands on each source pool in proportion to the bytes it
+    /// actually held; write traffic lands on the destination.
+    fn absorb_migrations(&mut self, mut migs: Vec<Migration>, pools: usize) {
+        self.ensure_pools(pools);
+        for m in migs.drain(..) {
+            self.migrations += 1;
+            self.moved_bytes += m.bytes;
+            for (pool, bytes) in &m.from {
+                self.pending_reads[*pool] += *bytes as f64;
+            }
+            self.pending_writes[m.to] += m.bytes as f64;
+            self.accrued_stall_ns += m.bytes as f64 * self.stall_ns_per_byte;
+        }
+        self.mig_scratch = migs;
+    }
+
+    /// Phase 1: inject the previous epoch's migration traffic into the
+    /// bins (reads on source pools, writes on destinations), then run
+    /// each policy's `before_analysis` hook in stack order. With an
+    /// empty stack and no pending traffic this touches nothing — the
+    /// bit-identical-to-no-policy guarantee.
+    pub fn before_analysis(
+        &mut self,
+        bins: &mut EpochBins,
+        tracker: &mut AllocTracker,
+        bytes_per_ev: f32,
+    ) {
+        self.ensure_pools(bins.pools);
+        let b = bins.nbins;
+        for pool in 0..bins.pools {
+            self.last_injected[pool] = 0.0;
+            let rb = std::mem::take(&mut self.pending_reads[pool]);
+            if rb > 0.0 {
+                let ev = rb / bytes_per_ev as f64;
+                Self::inject_row(&mut bins.reads[pool * b..(pool + 1) * b], ev);
+                self.injected_read_bytes += rb;
+                self.last_injected[pool] += ev;
+            }
+            let wb = std::mem::take(&mut self.pending_writes[pool]);
+            if wb > 0.0 {
+                let ev = wb / bytes_per_ev as f64;
+                Self::inject_row(&mut bins.writes[pool * b..(pool + 1) * b], ev);
+                self.injected_write_bytes += wb;
+                self.last_injected[pool] += ev;
+            }
+        }
+        if self.policies.is_empty() {
+            return;
+        }
+        let mut ctx = PolicyCtx {
+            tracker,
+            epoch: self.epoch,
+            bytes_per_ev,
+            injected_events: &self.last_injected,
+            migrations: std::mem::take(&mut self.mig_scratch),
+        };
+        for p in &mut self.policies {
+            p.before_analysis(bins, &mut ctx);
+        }
+        let migs = ctx.migrations;
+        self.absorb_migrations(migs, bins.pools);
+    }
+
+    /// Phase 2: run each policy's `after_analysis` hook in stack order,
+    /// absorb the epoch's migrations into the cost model, and return
+    /// the migration stall (ns) to charge to this epoch's delay.
+    pub fn after_analysis(
+        &mut self,
+        bins: &EpochBins,
+        out: &TimingOutputs,
+        tracker: &mut AllocTracker,
+        bytes_per_ev: f32,
+    ) -> f64 {
+        if !self.policies.is_empty() {
+            self.ensure_pools(bins.pools);
+            let mut ctx = PolicyCtx {
+                tracker,
+                epoch: self.epoch,
+                bytes_per_ev,
+                injected_events: &self.last_injected,
+                migrations: std::mem::take(&mut self.mig_scratch),
+            };
+            for p in &mut self.policies {
+                p.after_analysis(bins, out, &mut ctx);
+            }
+            let migs = ctx.migrations;
+            self.absorb_migrations(migs, bins.pools);
+        }
+        self.epoch += 1;
+        let stall = std::mem::take(&mut self.accrued_stall_ns);
+        self.stall_ns += stall;
+        stall
+    }
+}
+
+// ------------------------------------------------------------------
+// Spec parsing + registry (CLI: --epoch-policy hotness:3,prefetch:0.5)
+// ------------------------------------------------------------------
+
+/// One entry of a parsed `--epoch-policy` spec.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicySpecEntry {
+    Hotness { patience: u32 },
+    Prefetch { coverage: f32 },
+    Rebalance { threshold: f64 },
+}
+
+/// A parsed, cloneable policy-stack spec. Lives in `SimConfig` so every
+/// driver (sequential coordinator, batched replay, multihost) builds
+/// its own stack(s) from the same CLI flag.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PolicySpec {
+    pub entries: Vec<PolicySpecEntry>,
+}
+
+/// Registry row: spec name, optional-argument doc, default argument.
+pub struct PolicyInfo {
+    pub name: &'static str,
+    pub arg: &'static str,
+    pub default_arg: f64,
+    pub help: &'static str,
+}
+
+/// Every spec-constructible policy. `cxlmemsim list` prints this.
+pub const POLICY_REGISTRY: &[PolicyInfo] = &[
+    PolicyInfo {
+        name: "hotness",
+        arg: "patience",
+        default_arg: 3.0,
+        help: "promote the hottest region of the dominant CXL pool to local DRAM \
+               after <patience> consecutive dominant epochs",
+    },
+    PolicyInfo {
+        name: "prefetch",
+        arg: "coverage",
+        default_arg: 0.5,
+        help: "software next-line prefetch: shift <coverage> of each bin's read \
+               misses one bin earlier (bin shaping, phase 1)",
+    },
+    PolicyInfo {
+        name: "rebalance",
+        arg: "backlog-threshold",
+        default_arg: 1e6,
+        help: "when the switch backlog integral crosses <threshold>, move the \
+               hottest region off the most-loaded pool to the least-loaded one",
+    },
+];
+
+impl PolicySpec {
+    /// Parse a comma-separated stack spec: `name[:arg],name[:arg],...`
+    /// in stack order. Unknown names list the registry.
+    pub fn parse(s: &str) -> anyhow::Result<PolicySpec> {
+        let mut entries = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, arg) = match part.split_once(':') {
+                Some((n, a)) => (n.trim(), Some(a.trim())),
+                None => (part, None),
+            };
+            let info = POLICY_REGISTRY
+                .iter()
+                .find(|i| i.name == name)
+                .ok_or_else(|| {
+                    let known: Vec<&str> = POLICY_REGISTRY.iter().map(|i| i.name).collect();
+                    anyhow::anyhow!(
+                        "unknown epoch policy `{name}` (known: {})",
+                        known.join(", ")
+                    )
+                })?;
+            let val = match arg {
+                Some(a) => a
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad {} for `{name}`: `{a}`", info.arg))?,
+                None => info.default_arg,
+            };
+            entries.push(match name {
+                "hotness" => PolicySpecEntry::Hotness { patience: val.max(1.0) as u32 },
+                "prefetch" => PolicySpecEntry::Prefetch { coverage: val as f32 },
+                "rebalance" => PolicySpecEntry::Rebalance { threshold: val },
+                _ => unreachable!("registry and match must stay in sync"),
+            });
+        }
+        if entries.is_empty() {
+            anyhow::bail!("empty --epoch-policy spec (see `cxlmemsim list` for policies)");
+        }
+        Ok(PolicySpec { entries })
+    }
+
+    /// Build a runnable stack from the spec, in spec order.
+    pub fn build(&self, stall_ns_per_byte: f64) -> PolicyStack {
+        let mut stack = PolicyStack::new(stall_ns_per_byte);
+        for e in &self.entries {
+            stack.add(match e {
+                PolicySpecEntry::Hotness { patience } => {
+                    Box::new(HotnessMigration::new(*patience, u64::MAX))
+                }
+                PolicySpecEntry::Prefetch { coverage } => {
+                    Box::new(SoftwarePrefetch::new(*coverage))
+                }
+                PolicySpecEntry::Rebalance { threshold } => {
+                    Box::new(CongestionRebalance::new(*threshold))
+                }
+            });
+        }
+        stack
+    }
+}
+
+// ------------------------------------------------------------------
+// Built-in policies
+// ------------------------------------------------------------------
 
 /// Hotness-based promotion: if a CXL pool dominates the epoch's miss
 /// traffic for `patience` consecutive epochs, migrate that pool's
-/// hottest region to local DRAM (a page-granular what-if of HeMem-style
-/// tiering).
+/// *hottest* region (tracker heat counters; ties broken by size, then
+/// lowest start for determinism) to local DRAM — a page-granular
+/// what-if of HeMem-style tiering, now paying modeled migration cost.
 pub struct HotnessMigration {
     pub patience: u32,
     pub local_budget_bytes: u64,
@@ -44,12 +596,35 @@ impl HotnessMigration {
         }
     }
 
-    fn hottest_pool(bins: &EpochBins) -> Option<(PoolId, f64)> {
+    /// Dominant CXL pool by *demand* traffic: the stack's injected
+    /// migration copy traffic is subtracted so one promotion's copy
+    /// can't read as demand heat and cascade into the next.
+    fn hottest_pool(bins: &EpochBins, injected: &[f64]) -> Option<(PoolId, f64)> {
         (1..bins.pools)
-            .map(|p| (p, bins.read_count(p) + bins.write_count(p)))
-            .filter(|(_, c)| *c > 0.0)
+            .map(|p| (p, demand_count(bins, injected, p)))
+            // half an event: below that is f32 rounding residue from
+            // the injection spread, not demand
+            .filter(|(_, c)| *c > 0.5)
             .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     }
+}
+
+/// Pool traffic minus the cost model's injected copy events (clamped
+/// at zero: the spread-over-bins injection is f32-rounded).
+fn demand_count(bins: &EpochBins, injected: &[f64], pool: PoolId) -> f64 {
+    let inj = injected.get(pool).copied().unwrap_or(0.0);
+    (bins.read_count(pool) + bins.write_count(pool) - inj).max(0.0)
+}
+
+/// Hottest live region on `pool`: max heat, then max size, then lowest
+/// start (deterministic). Callers must `sync_heat` first.
+fn hottest_region_on(tracker: &AllocTracker, pool: PoolId) -> Option<(u64, u64)> {
+    tracker
+        .live_regions()
+        .filter(|r| r.pool_of(r.start) == pool)
+        .map(|r| (r.start, r.len, r.heat))
+        .max_by_key(|&(start, len, heat)| (heat, len, std::cmp::Reverse(start)))
+        .map(|(start, len, _)| (start, len))
 }
 
 impl EpochPolicy for HotnessMigration {
@@ -57,11 +632,11 @@ impl EpochPolicy for HotnessMigration {
         "hotness-migration"
     }
 
-    fn on_epoch(&mut self, tracker: &mut AllocTracker, bins: &EpochBins, _out: &TimingOutputs) {
+    fn after_analysis(&mut self, bins: &EpochBins, _out: &TimingOutputs, ctx: &mut PolicyCtx) {
         if self.streak.len() < bins.pools {
             self.streak.resize(bins.pools, 0);
         }
-        let Some((hot, _count)) = Self::hottest_pool(bins) else {
+        let Some((hot, _count)) = Self::hottest_pool(bins, ctx.injected_events) else {
             self.streak.iter_mut().for_each(|s| *s = 0);
             return;
         };
@@ -75,17 +650,17 @@ impl EpochPolicy for HotnessMigration {
         if self.streak[hot] < self.patience || self.moved_bytes >= self.local_budget_bytes {
             return;
         }
-        // migrate the largest region currently on the hot pool
-        let candidate = tracker
-            .live_regions()
-            .filter(|r| r.pool_of(r.start) == hot)
-            .map(|r| (r.start, r.len))
-            .max_by_key(|(_, len)| *len);
-        if let Some((start, len)) = candidate {
+        ctx.tracker.sync_heat();
+        if let Some((start, len)) = hottest_region_on(ctx.tracker, hot) {
             if self.moved_bytes + len <= self.local_budget_bytes
-                && tracker.migrate_region(start, LOCAL_POOL)
+                && ctx.migrate(start, LOCAL_POOL)
             {
-                self.moved_bytes += len;
+                // count the bytes that actually copied (pages already
+                // local are free) so per-policy rows match the stack's
+                // totals; the budget pre-check above uses `len` as a
+                // conservative upper bound
+                let copied = ctx.migrations().last().map(|m| m.bytes).unwrap_or(len);
+                self.moved_bytes += copied;
                 self.migrations += 1;
                 self.streak[hot] = 0;
             }
@@ -95,22 +670,27 @@ impl EpochPolicy for HotnessMigration {
     fn migrations(&self) -> u64 {
         self.migrations
     }
+
+    fn moved_bytes(&self) -> u64 {
+        self.moved_bytes
+    }
 }
 
 /// Congestion-aware rebalancing: when a switch's backlog integral
-/// crosses a threshold, move one region off its most-loaded descendant
-/// pool to the least-loaded pool (or local DRAM). Uses the analyzer's
-/// `cong_backlog` output — only available because the timing model
-/// exports it (DESIGN.md §3 L2 outputs).
+/// crosses a threshold, move the *hottest* region (tracker heat) off
+/// the most-loaded pool to the least-loaded pool (or local DRAM). Uses
+/// the analyzer's congestion outputs — available because the timing
+/// model exports them (DESIGN.md §3 L2 outputs).
 pub struct CongestionRebalance {
     /// Backlog-integral threshold (ns-work · bins) per epoch.
     pub threshold: f64,
     migrations: u64,
+    moved_bytes: u64,
 }
 
 impl CongestionRebalance {
     pub fn new(threshold: f64) -> CongestionRebalance {
-        CongestionRebalance { threshold, migrations: 0 }
+        CongestionRebalance { threshold, migrations: 0, moved_bytes: 0 }
     }
 }
 
@@ -119,15 +699,22 @@ impl EpochPolicy for CongestionRebalance {
         "congestion-rebalance"
     }
 
-    fn on_epoch(&mut self, tracker: &mut AllocTracker, bins: &EpochBins, out: &TimingOutputs) {
+    fn after_analysis(&mut self, bins: &EpochBins, out: &TimingOutputs, ctx: &mut PolicyCtx) {
         // total backlog integral over all switches this epoch
         let backlog: f64 = out.cong.iter().map(|x| *x as f64).sum();
         if backlog < self.threshold {
             return;
         }
-        // most-loaded CXL pool by epoch traffic
+        // most-loaded CXL pool by *demand* traffic (the cost model's
+        // injected copy events are excluded, like HotnessMigration).
+        // The >0.5-event demand gate also guards the trigger: the
+        // backlog integral necessarily includes congestion caused by
+        // our own injected copy traffic, so without demand on any CXL
+        // pool a migration could only be chasing its own copies —
+        // ping-ponging regions and charging stall forever.
         let Some((hot, _)) = (1..bins.pools)
-            .map(|p| (p, bins.read_count(p) + bins.write_count(p)))
+            .map(|p| (p, demand_count(bins, ctx.injected_events, p)))
+            .filter(|(_, c)| *c > 0.5)
             .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         else {
             return;
@@ -136,19 +723,19 @@ impl EpochPolicy for CongestionRebalance {
         let dest = (0..bins.pools)
             .filter(|p| *p != hot)
             .min_by(|&a, &b| {
-                let ca = bins.read_count(a) + bins.write_count(a);
-                let cb = bins.read_count(b) + bins.write_count(b);
+                let ca = demand_count(bins, ctx.injected_events, a);
+                let cb = demand_count(bins, ctx.injected_events, b);
                 ca.partial_cmp(&cb).unwrap()
             })
             .unwrap_or(LOCAL_POOL);
-        let candidate = tracker
-            .live_regions()
-            .filter(|r| r.pool_of(r.start) == hot)
-            .map(|r| (r.start, r.len))
-            .max_by_key(|(_, len)| *len);
-        if let Some((start, _)) = candidate {
-            if tracker.migrate_region(start, dest) {
+        ctx.tracker.sync_heat();
+        if let Some((start, len)) = hottest_region_on(ctx.tracker, hot) {
+            if ctx.migrate(start, dest) {
                 self.migrations += 1;
+                // actually-copied bytes, so per-policy rows match the
+                // stack totals (resident pages on `dest` are free)
+                self.moved_bytes +=
+                    ctx.migrations().last().map(|m| m.bytes).unwrap_or(len);
             }
         }
     }
@@ -156,13 +743,19 @@ impl EpochPolicy for CongestionRebalance {
     fn migrations(&self) -> u64 {
         self.migrations
     }
+
+    fn moved_bytes(&self) -> u64 {
+        self.moved_bytes
+    }
 }
 
 /// Software next-line prefetching modelled as traffic shaping: a
 /// fraction of read misses is converted into earlier, overlap-friendly
 /// accesses. In epoch terms: read counts are moved one bin earlier and
-/// de-rated by `coverage` (prefetched lines don't stall the core). This
-/// is a *model-side* policy: it rewrites the bins before analysis.
+/// de-rated by `coverage` (prefetched lines don't stall the core). A
+/// phase-1 (bin shaping) stack member: it rewrites the bins before the
+/// analyzer runs — traffic is conserved (prefetched lines still
+/// transit the link), only its timing moves.
 pub struct SoftwarePrefetch {
     /// Fraction of sequential read misses covered by prefetch [0, 1].
     pub coverage: f32,
@@ -173,8 +766,7 @@ impl SoftwarePrefetch {
         SoftwarePrefetch { coverage: coverage.clamp(0.0, 1.0) }
     }
 
-    /// Apply to an epoch's bins in place (called by experiments before
-    /// the analyzer; not an EpochPolicy since it edits inputs).
+    /// Shift `coverage` of each bin's reads one bin earlier, in place.
     pub fn apply(&self, bins: &mut EpochBins) {
         let (p, b) = (bins.pools, bins.nbins);
         for pool in 0..p {
@@ -188,6 +780,16 @@ impl SoftwarePrefetch {
                 bins.reads[idx - 1] += moved;
             }
         }
+    }
+}
+
+impl EpochPolicy for SoftwarePrefetch {
+    fn name(&self) -> &'static str {
+        "software-prefetch"
+    }
+
+    fn before_analysis(&mut self, bins: &mut EpochBins, _ctx: &mut PolicyCtx) {
+        self.apply(bins);
     }
 }
 
@@ -228,17 +830,31 @@ mod tests {
         }
     }
 
+    fn ctx<'a>(t: &'a mut AllocTracker) -> PolicyCtx<'a> {
+        PolicyCtx {
+            tracker: t,
+            epoch: 0,
+            bytes_per_ev: 64.0,
+            injected_events: &[],
+            migrations: Vec::new(),
+        }
+    }
+
     #[test]
     fn hotness_migration_waits_for_patience() {
         let mut t = tracker_with_region(PolicyKind::CxlOnly);
         let hot = t.pool_of(0x1000);
         let bins = bins_hot_on(hot);
         let mut pol = HotnessMigration::new(3, u64::MAX);
-        pol.on_epoch(&mut t, &bins, &outputs());
-        pol.on_epoch(&mut t, &bins, &outputs());
-        assert_eq!(pol.migrations(), 0, "must wait for patience");
-        pol.on_epoch(&mut t, &bins, &outputs());
-        assert_eq!(pol.migrations(), 1);
+        {
+            let mut c = ctx(&mut t);
+            pol.after_analysis(&bins, &outputs(), &mut c);
+            pol.after_analysis(&bins, &outputs(), &mut c);
+            assert_eq!(pol.migrations(), 0, "must wait for patience");
+            pol.after_analysis(&bins, &outputs(), &mut c);
+            assert_eq!(pol.migrations(), 1);
+            assert_eq!(c.migrations().len(), 1, "move must be cost-recorded");
+        }
         assert_eq!(t.pool_of(0x1000), LOCAL_POOL);
     }
 
@@ -248,10 +864,35 @@ mod tests {
         let hot = t.pool_of(0x1000);
         let bins = bins_hot_on(hot);
         let mut pol = HotnessMigration::new(1, 100); // budget < region size
+        let mut c = ctx(&mut t);
         for _ in 0..5 {
-            pol.on_epoch(&mut t, &bins, &outputs());
+            pol.after_analysis(&bins, &outputs(), &mut c);
         }
         assert_eq!(pol.migrations(), 0);
+    }
+
+    #[test]
+    fn hotness_migration_picks_hottest_not_largest() {
+        let topo = builtin::fig2();
+        let mut t = AllocTracker::new(&topo, PolicyKind::CxlOnly.build(&topo));
+        let (big, small) = (0x10_0000u64, 0x80_0000u64);
+        t.on_alloc_event(&AllocEvent { kind: AllocKind::Mmap, addr: big, len: 1 << 20, t_ns: 0.0 });
+        t.on_alloc_event(&AllocEvent { kind: AllocKind::Mmap, addr: small, len: 1 << 16, t_ns: 0.0 });
+        // force both regions onto the same pool
+        assert!(t.migrate_region(big, 2));
+        assert!(t.migrate_region(small, 2));
+        // the small region is the hot one
+        for i in 0..200u64 {
+            t.pool_of(small + (i % 1024) * 64);
+        }
+        let bins = bins_hot_on(2);
+        let mut pol = HotnessMigration::new(1, u64::MAX);
+        let mut c = ctx(&mut t);
+        pol.after_analysis(&bins, &outputs(), &mut c);
+        assert_eq!(pol.migrations(), 1);
+        drop(c);
+        assert_eq!(t.pool_of(small), LOCAL_POOL, "hotter region must move first");
+        assert_eq!(t.pool_of(big), 2, "colder (bigger) region must stay");
     }
 
     #[test]
@@ -260,7 +901,10 @@ mod tests {
         let hot = t.pool_of(0x1000);
         let bins = bins_hot_on(hot);
         let mut pol = CongestionRebalance::new(1.0);
-        pol.on_epoch(&mut t, &bins, &outputs());
+        {
+            let mut c = ctx(&mut t);
+            pol.after_analysis(&bins, &outputs(), &mut c);
+        }
         assert_eq!(pol.migrations(), 1);
         assert_ne!(t.pool_of(0x1000), hot);
     }
@@ -270,7 +914,8 @@ mod tests {
         let mut t = tracker_with_region(PolicyKind::CxlOnly);
         let bins = bins_hot_on(1);
         let mut pol = CongestionRebalance::new(f64::INFINITY);
-        pol.on_epoch(&mut t, &bins, &outputs());
+        let mut c = ctx(&mut t);
+        pol.after_analysis(&bins, &outputs(), &mut c);
         assert_eq!(pol.migrations(), 0);
     }
 
@@ -290,5 +935,206 @@ mod tests {
         SoftwarePrefetch::new(1.0).apply(&mut bins);
         assert_eq!(bins.reads[1 * 4 + 3], 0.0);
         assert_eq!(bins.reads[1 * 4 + 2], 100.0);
+    }
+
+    #[test]
+    fn prefetch_runs_as_phase_one_stack_member() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let mut bins = EpochBins::new(8, 4, 400.0);
+        bins.record(1, false, 350.0, 100.0);
+        let mut stack = PolicyStack::new(0.0).with(Box::new(SoftwarePrefetch::new(1.0)));
+        stack.before_analysis(&mut bins, &mut t, 64.0);
+        assert_eq!(bins.reads[1 * 4 + 3], 0.0, "stack must apply bin shaping");
+        assert_eq!(bins.reads[1 * 4 + 2], 100.0);
+    }
+
+    #[test]
+    fn empty_stack_is_a_noop() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let mut bins = bins_hot_on(2);
+        let snapshot = bins.clone();
+        let mut stack = PolicyStack::new(0.5);
+        stack.before_analysis(&mut bins, &mut t, 64.0);
+        let stall = stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        assert_eq!(stall, 0.0);
+        assert_eq!(bins.reads, snapshot.reads, "empty stack must not touch bins");
+        assert_eq!(bins.writes, snapshot.writes);
+        assert_eq!(stack.migrations(), 0);
+    }
+
+    #[test]
+    fn stack_models_migration_cost() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let hot = t.pool_of(0x1000);
+        let region_bytes = 1u64 << 20;
+        let mut stack =
+            PolicyStack::new(0.25).with(Box::new(HotnessMigration::new(1, u64::MAX)));
+        let mut bins = bins_hot_on(hot);
+        stack.before_analysis(&mut bins, &mut t, 64.0);
+        let stall = stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        assert_eq!(stack.migrations(), 1);
+        assert_eq!(stack.moved_bytes(), region_bytes);
+        // stall charged in the migrating epoch
+        assert_eq!(stall, region_bytes as f64 * 0.25);
+        // traffic pending until the next epoch's bins exist
+        assert_eq!(stack.pending_bytes(), region_bytes as f64);
+        assert_eq!(stack.injected_read_bytes(), 0.0);
+
+        // next epoch: the copy traffic lands — reads on the source
+        // pool, writes on the destination (LOCAL) — spread over bins
+        let mut next = EpochBins::new(8, 16, 1600.0);
+        stack.before_analysis(&mut next, &mut t, 64.0);
+        assert_eq!(stack.pending_bytes(), 0.0);
+        assert_eq!(stack.injected_read_bytes(), region_bytes as f64);
+        assert_eq!(stack.injected_write_bytes(), region_bytes as f64);
+        let events = region_bytes as f64 / 64.0;
+        let rd: f64 = next.read_count(hot);
+        let wr: f64 = next.write_count(LOCAL_POOL);
+        assert!((rd - events).abs() / events < 1e-3, "read traffic on source: {rd} vs {events}");
+        assert!((wr - events).abs() / events < 1e-3, "write traffic on dest: {wr} vs {events}");
+    }
+
+    #[test]
+    fn injected_copy_traffic_does_not_retrigger_migration() {
+        // one promotion's copy traffic must not read as demand heat on
+        // the source pool and cascade into migrating the next region
+        let topo = builtin::fig2();
+        let mut t = AllocTracker::new(&topo, PolicyKind::CxlOnly.build(&topo));
+        for (addr, len) in [(0x10_0000u64, 1u64 << 20), (0x80_0000, 1 << 20)] {
+            t.on_alloc_event(&AllocEvent { kind: AllocKind::Mmap, addr, len, t_ns: 0.0 });
+            assert!(t.migrate_region(addr, 2)); // both on pool 2
+        }
+        let mut stack =
+            PolicyStack::new(0.0).with(Box::new(HotnessMigration::new(1, u64::MAX)));
+        let mut bins = bins_hot_on(2);
+        stack.before_analysis(&mut bins, &mut t, 64.0);
+        stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        assert_eq!(stack.migrations(), 1, "demand heat must trigger the first move");
+        // epoch 2: NO demand traffic — only the injected copy lands
+        let mut bins2 = EpochBins::new(8, 16, 1600.0);
+        stack.before_analysis(&mut bins2, &mut t, 64.0);
+        assert!(bins2.read_count(2) > 0.0, "copy traffic must reach the analyzer input");
+        stack.after_analysis(&bins2, &outputs(), &mut t, 64.0);
+        assert_eq!(stack.migrations(), 1, "copy traffic alone must not cascade");
+    }
+
+    #[test]
+    fn interleaved_migration_charges_each_source_pool() {
+        let topo = builtin::fig2(); // 3 CXL pools
+        let mk = || {
+            let mut t = AllocTracker::new(
+                &topo,
+                PolicyKind::Interleave { page_bytes: 4096 }.build(&topo),
+            );
+            t.on_alloc_event(&AllocEvent {
+                kind: AllocKind::Mmap,
+                addr: 0x0,
+                len: 4096 * 6,
+                t_ns: 0.0,
+            });
+            t
+        };
+        // to LOCAL: every page copies; reads split across the 3 pools
+        let mut t = mk();
+        {
+            let mut c = ctx(&mut t);
+            assert!(c.migrate(0x0, LOCAL_POOL));
+            let m = &c.migrations()[0];
+            assert_eq!(m.bytes, 4096 * 6);
+            assert_eq!(m.from.len(), 3, "each striped pool held pages");
+            assert!(m.from.iter().all(|(_, b)| *b == 4096 * 2));
+        }
+        // to a pool already holding part of the stripe: those pages
+        // are free, only the other pools' pages copy
+        let mut t = mk();
+        let dest = t.pool_of(64);
+        let mut c = ctx(&mut t);
+        assert!(c.migrate(0x0, dest));
+        let m = &c.migrations()[0];
+        assert_eq!(m.bytes, 4096 * 4, "resident pages must not be charged");
+        assert!(m.from.iter().all(|(p, _)| *p != dest));
+    }
+
+    #[test]
+    fn rebalance_is_demand_gated_against_its_own_copy_traffic() {
+        // backlog above threshold but ALL pool traffic is our own
+        // injected copy: rebalance must not ping-pong
+        let topo = builtin::fig2();
+        let mut t = AllocTracker::new(&topo, PolicyKind::CxlOnly.build(&topo));
+        for (addr, len) in [(0x10_0000u64, 1u64 << 20), (0x80_0000, 1 << 20)] {
+            t.on_alloc_event(&AllocEvent { kind: AllocKind::Mmap, addr, len, t_ns: 0.0 });
+            assert!(t.migrate_region(addr, 2));
+        }
+        let mut stack =
+            PolicyStack::new(0.0).with(Box::new(CongestionRebalance::new(1.0)));
+        let mut bins = bins_hot_on(2);
+        stack.before_analysis(&mut bins, &mut t, 64.0);
+        stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        assert_eq!(stack.migrations(), 1, "demand + backlog must trigger the move");
+        // next epoch: zero demand, only the injected copy traffic
+        let mut bins2 = EpochBins::new(8, 16, 1600.0);
+        stack.before_analysis(&mut bins2, &mut t, 64.0);
+        stack.after_analysis(&bins2, &outputs(), &mut t, 64.0);
+        assert_eq!(stack.migrations(), 1, "copy traffic alone must not rebalance");
+    }
+
+    #[test]
+    fn begin_run_resets_accounting_but_keeps_policy_state() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let hot = t.pool_of(0x1000);
+        let mut stack =
+            PolicyStack::new(0.25).with(Box::new(HotnessMigration::new(1, u64::MAX)));
+        let mut bins = bins_hot_on(hot);
+        stack.before_analysis(&mut bins, &mut t, 64.0);
+        stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        assert_eq!(stack.migrations(), 1);
+        assert!(stack.pending_bytes() > 0.0);
+
+        stack.begin_run();
+        assert_eq!(stack.migrations(), 0, "per-run counters must reset");
+        assert_eq!(stack.moved_bytes(), 0);
+        assert_eq!(stack.pending_bytes(), 0.0, "pending copy traffic must drop");
+        assert_eq!(stack.injected_read_bytes(), 0.0);
+        assert_eq!(stack.stall_ns(), 0.0);
+        // the dropped pending must NOT inject into the next run
+        let mut next = EpochBins::new(8, 16, 1600.0);
+        stack.before_analysis(&mut next, &mut t, 64.0);
+        assert!(
+            next.reads.iter().all(|x| *x == 0.0),
+            "run-1 pending must not leak into run 2"
+        );
+        // per-policy rows are per-run deltas over persisting lifetime
+        // counters
+        let stats = stack.per_policy_stats();
+        assert_eq!(stats[0], ("hotness-migration", 0, 0));
+    }
+
+    #[test]
+    fn spec_parses_stack_in_order() {
+        let spec = PolicySpec::parse("hotness:2,prefetch:0.25,rebalance").unwrap();
+        assert_eq!(
+            spec.entries,
+            vec![
+                PolicySpecEntry::Hotness { patience: 2 },
+                PolicySpecEntry::Prefetch { coverage: 0.25 },
+                PolicySpecEntry::Rebalance { threshold: 1e6 },
+            ]
+        );
+        let stack = spec.build(0.0625);
+        assert_eq!(stack.len(), 3);
+        let names: Vec<&str> = stack.policies().map(|p| p.name()).collect();
+        assert_eq!(
+            names,
+            ["hotness-migration", "software-prefetch", "congestion-rebalance"]
+        );
+    }
+
+    #[test]
+    fn spec_defaults_and_errors() {
+        let spec = PolicySpec::parse("hotness").unwrap();
+        assert_eq!(spec.entries, vec![PolicySpecEntry::Hotness { patience: 3 }]);
+        assert!(PolicySpec::parse("").is_err(), "empty spec must error");
+        assert!(PolicySpec::parse("oracle").is_err(), "unknown name must error");
+        assert!(PolicySpec::parse("hotness:fast").is_err(), "bad arg must error");
     }
 }

@@ -14,8 +14,15 @@
 //!   the `EpochDriver` uses: samples are resolved to `(pool, rw, bin,
 //!   weight)` deltas up front (clamp branches run once, here) and
 //!   scattered into the tensors in one branch-light pass per event
-//!   batch. Both paths bin through the same precomputed
-//!   `inv_bin_width` multiply, so grouping never changes results.
+//!   batch. Large batches are first stably partitioned by pool
+//!   (counting sort) so the scatter walks contiguous bin runs per
+//!   `[P, B]` row instead of bouncing across rows; within one
+//!   `(pool, rw, bin)` cell the staging order is preserved, so every
+//!   cell accumulates in event order and results stay bit-identical
+//!   to the scalar path (and to the unpartitioned
+//!   [`EpochBins::record_bulk_seq`] baseline). Both paths bin through
+//!   the same precomputed `inv_bin_width` multiply, so grouping never
+//!   changes results.
 
 use crate::topology::PoolId;
 
@@ -47,7 +54,17 @@ pub struct EpochBins {
     /// Precomputed `1.0 / bin_width_ns()`: both recording paths multiply
     /// by this instead of dividing per sample.
     inv_bin_width: f64,
+    /// Scratch for [`EpochBins::record_bulk`]'s stable counting-sort
+    /// partition (reused across scatters; empty until first use).
+    scratch: Vec<BinDelta>,
+    /// Per-pool cursor/offset table for the partition.
+    offsets: Vec<usize>,
 }
+
+/// Below this batch size the partition bookkeeping costs more than the
+/// cache misses it saves; `record_bulk` falls through to the
+/// sequential scatter.
+const PARTITION_MIN: usize = 64;
 
 impl EpochBins {
     pub fn new(pools: usize, nbins: usize, epoch_ns: f64) -> EpochBins {
@@ -61,6 +78,8 @@ impl EpochBins {
             total_events: 0,
             clamped: 0,
             inv_bin_width: nbins as f64 / epoch_ns,
+            scratch: Vec::new(),
+            offsets: Vec::new(),
         }
     }
 
@@ -123,11 +142,59 @@ impl EpochBins {
         out.push(BinDelta { pool: pool as u32, bin: bin as u32, is_write, weight });
     }
 
-    /// Scatter a staged batch into the `[P, B]` tensors. Branch-light:
-    /// binning and clamping already happened at stage time, so this
-    /// loop is index + select + add. Accumulation order == staging
-    /// order, so results are bit-identical to the per-sample path.
+    /// Scatter a staged batch into the `[P, B]` tensors. Batches of
+    /// `PARTITION_MIN` or more are stably partitioned by pool first
+    /// (one counting-sort pass into reused scratch) so the accumulate
+    /// loop walks each pool's bin row contiguously instead of bouncing
+    /// across `[P, B]` rows with the event stream's pool mixing.
+    ///
+    /// Bit-exactness: all deltas hitting one `(pool, rw, bin)` cell
+    /// share a pool, and the partition is stable, so every cell
+    /// accumulates in staging (== event) order — identical results to
+    /// the per-sample `record` path and to
+    /// [`EpochBins::record_bulk_seq`] (differential tests in
+    /// `tests/pipeline_equivalence.rs` and below).
     pub fn record_bulk(&mut self, deltas: &[BinDelta]) {
+        if deltas.len() < PARTITION_MIN {
+            self.record_bulk_seq(deltas);
+            return;
+        }
+        self.offsets.clear();
+        self.offsets.resize(self.pools + 1, 0);
+        for d in deltas {
+            self.offsets[d.pool as usize + 1] += 1;
+        }
+        for p in 0..self.pools {
+            self.offsets[p + 1] += self.offsets[p];
+        }
+        // no clear(): the placement loop overwrites every slot (the
+        // offsets partition covers 0..len exactly), so stale contents
+        // are never read and the resize only default-fills growth
+        self.scratch.resize(
+            deltas.len(),
+            BinDelta { pool: 0, bin: 0, is_write: false, weight: 0.0 },
+        );
+        for d in deltas {
+            let slot = &mut self.offsets[d.pool as usize];
+            self.scratch[*slot] = *d;
+            *slot += 1;
+        }
+        for d in &self.scratch {
+            let idx = d.pool as usize * self.nbins + d.bin as usize;
+            if d.is_write {
+                self.writes[idx] += d.weight;
+            } else {
+                self.reads[idx] += d.weight;
+            }
+        }
+    }
+
+    /// The unpartitioned scatter (accumulation order == staging order,
+    /// pools interleaved as the event stream produced them). Kept
+    /// runnable as the differential baseline and the
+    /// `benches/hotpath.rs` comparison point, like `record` and
+    /// `pool_of_btree`.
+    pub fn record_bulk_seq(&mut self, deltas: &[BinDelta]) {
         for d in deltas {
             let idx = d.pool as usize * self.nbins + d.bin as usize;
             if d.is_write {
@@ -282,6 +349,35 @@ mod tests {
         b.record_bulk(&staged);
         assert_eq!(b.reads[0], 1.0);
         assert_eq!(b.reads[3], 1.0);
+    }
+
+    #[test]
+    fn partitioned_scatter_matches_seq_and_scalar() {
+        // well past PARTITION_MIN, pools interleaved, repeated cells
+        // (f32 accumulation-order sensitivity) — all three paths must
+        // be bit-identical
+        let (pools, nbins, epoch_ns) = (4usize, 8usize, 800.0f64);
+        let mut scalar = EpochBins::new(pools, nbins, epoch_ns);
+        let mut seq = EpochBins::new(pools, nbins, epoch_ns);
+        let mut part = EpochBins::new(pools, nbins, epoch_ns);
+        let mut staged = Vec::new();
+        for i in 0..500usize {
+            let pool = i % pools;
+            let is_write = i % 3 == 0;
+            let t = ((i * 37) % 800) as f64;
+            // varied magnitudes so reordering across cells would show
+            let w = 0.1 + (i % 7) as f32 * 1000.5;
+            scalar.record(pool, is_write, t, w);
+            seq.stage(pool, is_write, t, w, &mut staged);
+        }
+        // the same staged list drives both scatter flavours (the
+        // scatter itself only touches the tensors)
+        seq.record_bulk_seq(&staged);
+        part.record_bulk(&staged);
+        assert_eq!(scalar.reads, seq.reads);
+        assert_eq!(scalar.writes, seq.writes);
+        assert_eq!(seq.reads, part.reads, "partition must not change sums");
+        assert_eq!(seq.writes, part.writes);
     }
 
     #[test]

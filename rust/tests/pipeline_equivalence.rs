@@ -12,8 +12,8 @@
 //!   silently dropped.
 
 use cxlmemsim::coordinator::{run_batched, run_batched_with, Coordinator, SimConfig, SimReport};
-use cxlmemsim::multihost::{run_shared_threads, MultiHostReport};
-use cxlmemsim::policy::EpochPolicy;
+use cxlmemsim::multihost::{run_shared_threads, run_shared_threads_with, MultiHostReport};
+use cxlmemsim::policy::{EpochPolicy, HotnessMigration, PolicySpec, PolicyStack};
 use cxlmemsim::prelude::*;
 use cxlmemsim::workload;
 
@@ -47,6 +47,10 @@ fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
     // bulk flushes legitimately does, so it is not compared)
     assert_eq!(a.pool_mru_hits, b.pool_mru_hits, "{ctx}: mru hits");
     assert_eq!(a.bins_staged, b.bins_staged, "{ctx}: staged samples");
+    // policy engine: empty/no stack must agree exactly here too
+    assert_eq!(a.mig_delay_ns, b.mig_delay_ns, "{ctx}: mig stall");
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migrations");
+    assert_eq!(a.migrated_bytes, b.migrated_bytes, "{ctx}: migrated bytes");
 }
 
 fn run_with_batch(wl: &str, event_batch: usize, mutate: impl Fn(&mut SimConfig)) -> SimReport {
@@ -204,11 +208,15 @@ fn assert_multihost_identical(a: &MultiHostReport, b: &MultiHostReport) {
     assert_eq!(a.total_delay_ns, b.total_delay_ns);
     assert_eq!(a.cong_delay_ns, b.cong_delay_ns);
     assert_eq!(a.bwd_delay_ns, b.bwd_delay_ns);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.migrated_bytes, b.migrated_bytes);
+    assert_eq!(a.mig_stall_ns, b.mig_stall_ns);
     assert_eq!(a.hosts.len(), b.hosts.len());
     for (x, y) in a.hosts.iter().zip(&b.hosts) {
         assert_eq!(x.misses, y.misses);
         assert_eq!(x.native_ns, y.native_ns);
         assert_eq!(x.delay_ns, y.delay_ns);
+        assert_eq!(x.migrations, y.migrations);
     }
 }
 
@@ -308,39 +316,186 @@ fn run_batched_carries_prefetcher_traffic() {
     assert_eq!(seq_rep.delay_ns, bat_rep.delay_ns);
 }
 
-/// Counts invocations; proves batched replay drives installed policies.
+/// Counts invocations per phase; proves batched replay drives both
+/// hooks of installed policy stacks.
 struct ProbePolicy {
-    calls: u64,
+    before: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    after: std::sync::Arc<std::sync::atomic::AtomicU64>,
 }
 
 impl EpochPolicy for ProbePolicy {
     fn name(&self) -> &'static str {
         "probe"
     }
-    fn on_epoch(
+    fn before_analysis(
         &mut self,
-        _tracker: &mut cxlmemsim::alloctrack::AllocTracker,
+        _bins: &mut cxlmemsim::trace::binning::EpochBins,
+        _ctx: &mut cxlmemsim::policy::PolicyCtx,
+    ) {
+        self.before.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    }
+    fn after_analysis(
+        &mut self,
         _bins: &cxlmemsim::trace::binning::EpochBins,
         _out: &cxlmemsim::runtime::TimingOutputs,
+        _ctx: &mut cxlmemsim::policy::PolicyCtx,
     ) {
-        self.calls += 1;
-    }
-    fn migrations(&self) -> u64 {
-        0
+        self.after.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
     }
 }
 
 #[test]
-fn run_batched_invokes_epoch_policy() {
+fn run_batched_invokes_both_policy_phases() {
     // regression: the pre-EpochDriver run_batched never called policies
+    // at all, and the pre-stack engine never called phase-1 hooks
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
     let cfg = fast_cfg();
     let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
-    let mut probe = ProbePolicy { calls: 0 };
+    let (before, after) = (Arc::new(AtomicU64::new(0)), Arc::new(AtomicU64::new(0)));
+    let mut stack = PolicyStack::new(0.0);
+    stack.add(Box::new(ProbePolicy { before: before.clone(), after: after.clone() }));
     let rep =
-        run_batched_with(&builtin::fig2(), &cfg, wl.as_mut(), Some(&mut probe)).unwrap();
+        run_batched_with(&builtin::fig2(), &cfg, wl.as_mut(), Some(&mut stack)).unwrap();
     assert!(rep.epochs_run > 0);
     assert_eq!(
-        probe.calls, rep.epochs_run,
-        "policy must be invoked once per epoch at group-flush time"
+        before.load(Ordering::SeqCst),
+        rep.epochs_run,
+        "phase-1 must run once per epoch, at epoch-boundary time"
     );
+    assert_eq!(
+        after.load(Ordering::SeqCst),
+        rep.epochs_run,
+        "phase-2 must run once per epoch, at group-flush time"
+    );
+}
+
+// ------------------------------------------- two-phase policy engine
+
+/// The engine's zero-cost guarantee: an installed-but-empty stack must
+/// be bit-identical to no stack at all, on every driver.
+#[test]
+fn empty_policy_stack_bit_identical_on_all_drivers() {
+    let cfg = fast_cfg();
+    // sequential
+    let mut plain = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let plain_rep = plain.run_workload("zipfian").unwrap();
+    let mut stacked = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    stacked.set_policy_stack(PolicyStack::new(0.0625));
+    let stacked_rep = stacked.run_workload("zipfian").unwrap();
+    assert_reports_identical(&plain_rep, &stacked_rep, "sequential empty stack");
+
+    // batched replay
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let plain_bat = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let mut empty = PolicyStack::new(0.0625);
+    let stacked_bat =
+        run_batched_with(&builtin::fig2(), &cfg, wl.as_mut(), Some(&mut empty)).unwrap();
+    assert_reports_identical(&plain_bat, &stacked_bat, "batched empty stack");
+
+    // multihost (per-host empty stacks)
+    let mk_hosts = || -> Vec<Box<dyn Workload>> {
+        (0..3)
+            .map(|i| workload::by_name("stream", 0.002, i as u64).unwrap())
+            .collect()
+    };
+    let plain_mh = run_shared_threads(&builtin::fig2(), &cfg, mk_hosts(), 2).unwrap();
+    let stacks: Vec<PolicyStack> = (0..3).map(|_| PolicyStack::new(0.0625)).collect();
+    let stacked_mh =
+        run_shared_threads_with(&builtin::fig2(), &cfg, mk_hosts(), Some(stacks), 2).unwrap();
+    assert_multihost_identical(&plain_mh, &stacked_mh);
+    assert_eq!(stacked_mh.migrations, 0);
+    assert_eq!(stacked_mh.mig_stall_ns, 0.0);
+}
+
+/// Migration cost conservation: every migrated byte must show up as
+/// injected link traffic (read on the source pool + write on the
+/// destination) or still be pending a next epoch — never vanish.
+#[test]
+fn migration_traffic_conservation() {
+    let mut cfg = fast_cfg();
+    cfg.scale = 0.004;
+    let mut stack = PolicyStack::new(0.1).with(Box::new(HotnessMigration::new(1, u64::MAX)));
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let rep = run_batched_with(&builtin::fig2(), &cfg, wl.as_mut(), Some(&mut stack)).unwrap();
+    assert!(stack.migrations() > 0, "hotness:1 on zipfian must migrate");
+    let moved = stack.moved_bytes() as f64;
+    assert!(moved > 0.0);
+    assert_eq!(
+        stack.injected_read_bytes() + stack.pending_bytes(),
+        moved,
+        "read-side: injected + pending must equal migrated"
+    );
+    assert_eq!(
+        stack.injected_write_bytes() + stack.pending_bytes(),
+        moved,
+        "write-side: injected + pending must equal migrated"
+    );
+    // the stall reached the report: moved bytes x 0.1 ns/B (summed
+    // per-migration, so compare with an ulp-scale tolerance)
+    assert!(
+        (rep.mig_delay_ns - moved * 0.1).abs() <= 1e-9 * moved.max(1.0),
+        "stall {} != bytes*rate {}",
+        rep.mig_delay_ns,
+        moved * 0.1
+    );
+    assert_eq!(rep.migrated_bytes as f64, moved);
+}
+
+/// Acceptance: a hotness+prefetch stack runs end-to-end on all three
+/// drivers, with migrations and injected migration traffic visible in
+/// the reports.
+#[test]
+fn hotness_prefetch_stack_runs_on_all_drivers() {
+    let spec = PolicySpec::parse("hotness:1,prefetch:0.5").unwrap();
+    let mut cfg = fast_cfg();
+    cfg.scale = 0.004;
+    cfg.epoch_policy = Some(spec);
+
+    // sequential: stack built from the config (the CLI path)
+    let mut sim = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let rep = sim.run_workload("zipfian").unwrap();
+    assert!(rep.migrations > 0, "sequential: must migrate");
+    assert!(rep.mig_injected_read_bytes > 0.0, "sequential: traffic must inject");
+    assert!(rep.mig_delay_ns > 0.0, "sequential: stall must be charged");
+    assert_eq!(rep.policies.len(), 2);
+
+    // batched replay, same config
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let bat = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    assert!(bat.migrations > 0, "batched: must migrate");
+    assert!(bat.mig_delay_ns > 0.0);
+
+    // multihost, same config (per-host stacks)
+    let hosts: Vec<Box<dyn Workload>> = (0..3)
+        .map(|i| workload::by_name("zipfian", cfg.scale, i as u64).unwrap())
+        .collect();
+    let mh = run_shared_threads(&builtin::fig2(), &cfg, hosts, 2).unwrap();
+    assert!(mh.migrations > 0, "multihost: must migrate");
+    assert!(mh.mig_stall_ns > 0.0);
+}
+
+// ---------------------------------------- multihost bulk accounting
+
+#[test]
+fn multihost_staged_bins_match_scalar_record() {
+    // event_batch == 1 keeps the scalar per-miss `record` baseline in
+    // `advance_host_epoch`; larger batches stage + bulk-scatter — the
+    // two accounting paths must be bit-identical (incl. coherence
+    // traffic, which records into the *shared* bins either way)
+    for wl in ["stream", "shared"] {
+        let mk_hosts = || -> Vec<Box<dyn Workload>> {
+            (0..3)
+                .map(|i| workload::by_name(wl, 0.002, i as u64).unwrap())
+                .collect()
+        };
+        let mut scalar_cfg = fast_cfg();
+        scalar_cfg.event_batch = 1;
+        let mut staged_cfg = fast_cfg();
+        staged_cfg.event_batch = 4096;
+        let scalar = run_shared_threads(&builtin::fig2(), &scalar_cfg, mk_hosts(), 1).unwrap();
+        let staged = run_shared_threads(&builtin::fig2(), &staged_cfg, mk_hosts(), 1).unwrap();
+        assert_multihost_identical(&scalar, &staged);
+    }
 }
