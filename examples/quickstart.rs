@@ -26,8 +26,17 @@ fn main() -> anyhow::Result<()> {
     print!("{}", report.summary());
 
     println!("\ndelay breakdown:");
-    println!("  latency    {:>10.3} ms  (paper: #ops x (pool latency - local latency))", report.lat_delay_ns / 1e6);
-    println!("  congestion {:>10.3} ms  (events within a switch STT window)", report.cong_delay_ns / 1e6);
-    println!("  bandwidth  {:>10.3} ms  (observed bandwidth above switch capacity)", report.bwd_delay_ns / 1e6);
+    println!(
+        "  latency    {:>10.3} ms  (paper: #ops x (pool latency - local latency))",
+        report.lat_delay_ns / 1e6
+    );
+    println!(
+        "  congestion {:>10.3} ms  (events within a switch STT window)",
+        report.cong_delay_ns / 1e6
+    );
+    println!(
+        "  bandwidth  {:>10.3} ms  (observed bandwidth above switch capacity)",
+        report.bwd_delay_ns / 1e6
+    );
     Ok(())
 }

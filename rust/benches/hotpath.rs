@@ -11,8 +11,10 @@
 //!   * `EpochBins` recording: scalar per-sample `record` vs the staged
 //!     `stage` + `record_bulk` scatter the epoch driver uses;
 //!   * batched timing analysis: the fused `NativeBatchAnalyzer` kernel
-//!     vs E scalar `analyze` calls;
-//!   * multihost epochs/s: persistent worker pool, 1 thread vs N;
+//!     vs E scalar `analyze` calls, plus the sharded E-epoch loop at
+//!     1/2/4 worker threads (per-thread-count speedups);
+//!   * multihost epochs/s: work-stealing persistent worker pool at
+//!     1/2/4 threads (with the steal count);
 //!   * end-to-end coordinator accesses/s, per-event vs batched pump —
 //!     the headline number for the paper's "orders of magnitude faster
 //!     than cycle-accurate" claim.
@@ -102,7 +104,8 @@ fn main() {
 
     // --- pool_of lookup cost -------------------------------------
     // a tracker with a realistically fragmented address space
-    let mut tracker = AllocTracker::new(&topo, cxlmemsim::alloctrack::PolicyKind::CxlOnly.build(&topo));
+    let mut tracker =
+        AllocTracker::new(&topo, cxlmemsim::alloctrack::PolicyKind::CxlOnly.build(&topo));
     let regions = 512u64;
     let region_len = 1u64 << 20;
     for i in 0..regions {
@@ -282,6 +285,52 @@ fn main() {
         ]),
     ));
 
+    // --- sharded batch analysis: per-thread-count speedups ---------
+    // the offline-replay regime (long traces => a big E per call, so
+    // the per-call shard fan-out amortizes); outputs stay bit-identical
+    // for every thread count — only epochs/s moves
+    {
+        let se = if smoke { 64usize } else { 256 };
+        let mut r = Rng::new(6);
+        let sreads: Vec<f32> = (0..se * n).map(|_| r.below(20) as f32).collect();
+        let swrites: Vec<f32> = (0..se * n).map(|_| r.below(10) as f32).collect();
+        let mut per_thread: Vec<(usize, f64)> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let mut an = NativeBatchAnalyzer::with_threads(&tensors, nbins, se, threads);
+            let s = bench(&format!("sharded batch x{threads}"), it(10), it(100), || {
+                an.analyze_batch(&sreads, &swrites, 3906.25, 64.0).unwrap();
+            });
+            per_thread.push((threads, se as f64 / s.mean_s));
+        }
+        let base = per_thread[0].1;
+        let parts: Vec<String> = per_thread
+            .iter()
+            .map(|(t, rate)| format!("{t}T {rate:>8.0} ep/s ({:.2}x)", rate / base))
+            .collect();
+        println!("batch shard ({se:>3}/call): {}", parts.join(" | "));
+        results.push((
+            "batch_analyze_sharded",
+            json::obj(vec![
+                ("batch", json::num(se as f64)),
+                (
+                    "per_thread",
+                    Json::Arr(
+                        per_thread
+                            .iter()
+                            .map(|(t, rate)| {
+                                json::obj(vec![
+                                    ("threads", json::num(*t as f64)),
+                                    ("epochs_per_s", json::num(*rate)),
+                                    ("speedup", json::num(*rate / base)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+
     // --- policy engine overhead per epoch ------------------------
     // the zero-cost guarantee, measured: an installed-but-empty
     // PolicyStack must cost ~nothing per epoch vs no stack at all;
@@ -385,10 +434,10 @@ fn main() {
         hot.len() as f64 / s.mean_s / 1e6
     );
 
-    // --- multihost epochs/s: persistent pool, 1 thread vs N ------
+    // --- multihost epochs/s: work-stealing pool, per thread count --
     // short epochs make the per-epoch coordination cost visible — this
-    // is exactly the regime the persistent worker pool (vs a fresh
-    // thread scope per epoch) is for
+    // is exactly the regime the persistent work-stealing pool (vs a
+    // fresh thread scope per epoch) is for
     let mh_hosts = if smoke { 4usize } else { 8usize };
     let mh = |threads: usize| {
         let mut c = SimConfig::default();
@@ -401,25 +450,52 @@ fn main() {
             .collect();
         run_shared_threads(&topo, &c, hosts, threads).unwrap()
     };
-    let one = mh(1);
-    let par_threads = mh_hosts.min(4);
-    let many = mh(par_threads);
-    assert_eq!(one.epochs, many.epochs, "multihost pipelines diverged");
-    let one_rate = one.epochs as f64 / one.wall_s;
-    let many_rate = many.epochs as f64 / many.wall_s;
-    println!(
-        "multihost[{mh_hosts} hosts]:    1-thread {:>7.0} ep/s | {par_threads}-thread {:>7.0} ep/s ({:.2}x)",
-        one_rate, many_rate, many_rate / one_rate
-    );
+    // per-thread-count sweep: the work-stealing pool must scale with
+    // workers while every run stays bit-identical (same epoch count)
+    let mut mh_runs: Vec<(usize, f64, u64)> = Vec::new();
+    let mut mh_epochs = 0u64;
+    for threads in [1usize, 2, 4] {
+        let rep = mh(threads);
+        if threads == 1 {
+            mh_epochs = rep.epochs;
+        } else {
+            assert_eq!(rep.epochs, mh_epochs, "multihost pipelines diverged");
+        }
+        mh_runs.push((threads, rep.epochs as f64 / rep.wall_s, rep.steals));
+    }
+    let one_rate = mh_runs[0].1;
+    let (par_threads, many_rate, steals) = *mh_runs.last().unwrap();
+    let parts: Vec<String> = mh_runs
+        .iter()
+        .map(|(t, rate, _)| format!("{t}T {rate:>7.0} ep/s ({:.2}x)", rate / one_rate))
+        .collect();
+    println!("multihost[{mh_hosts} hosts]:    {} | {steals} steals", parts.join(" | "));
     results.push((
         "multihost_epoch",
         json::obj(vec![
             ("hosts", json::num(mh_hosts as f64)),
             ("threads", json::num(par_threads as f64)),
-            ("epochs", json::num(one.epochs as f64)),
+            ("epochs", json::num(mh_epochs as f64)),
             ("single_epochs_per_s", json::num(one_rate)),
             ("pooled_epochs_per_s", json::num(many_rate)),
             ("speedup", json::num(many_rate / one_rate)),
+            ("steals", json::num(steals as f64)),
+            (
+                "per_thread",
+                Json::Arr(
+                    mh_runs
+                        .iter()
+                        .map(|(t, rate, st)| {
+                            json::obj(vec![
+                                ("threads", json::num(*t as f64)),
+                                ("epochs_per_s", json::num(*rate)),
+                                ("speedup", json::num(*rate / one_rate)),
+                                ("steals", json::num(*st as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]),
     ));
 

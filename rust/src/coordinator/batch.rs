@@ -57,11 +57,17 @@ pub fn run_batched_with(
 ) -> anyhow::Result<SimReport> {
     let wall_start = std::time::Instant::now();
     let tensors = TopoTensors::build(topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES)?;
-    let mut model =
-        runtime::make_batch_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
+    let mut model = runtime::make_batch_analyzer(
+        cfg.backend,
+        &tensors,
+        cfg.nbins,
+        &cfg.artifacts_dir,
+        cfg.analyzer_threads,
+    )?;
     let mut driver = EpochDriver::new(topo, cfg)?;
 
     let mut report = SimReport::new(wl.name(), &topo.name, model.backend_name(), topo.num_pools());
+    report.analyzer_threads_used = model.threads() as u64;
     let mut flush = BatchedFlush::new(
         model.as_mut(),
         topo.host.cacheline_bytes as f32,

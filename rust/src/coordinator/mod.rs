@@ -86,6 +86,13 @@ pub struct SimConfig {
     /// engine; the copy *traffic* is injected into the next epoch's
     /// bins regardless of this knob.
     pub mig_stall_ns_per_byte: f64,
+    /// Worker threads the batched replay drivers shard the native
+    /// analyzer's E-epoch loop across (`run --batched`, `replay
+    /// --batched`): `0` = one per core (auto), `1` = sequential.
+    /// Epochs are independent and each worker writes disjoint `[E, ·]`
+    /// output rows, so results are bit-identical for every value
+    /// (`tests/pipeline_equivalence.rs`); only wall-clock changes.
+    pub analyzer_threads: usize,
 }
 
 impl Default for SimConfig {
@@ -109,6 +116,7 @@ impl Default for SimConfig {
             event_batch: driver::DEFAULT_EVENT_BATCH,
             epoch_policy: None,
             mig_stall_ns_per_byte: 0.0625,
+            analyzer_threads: 0,
         }
     }
 }

@@ -89,6 +89,11 @@ pub struct SimReport {
     /// (`bins_staged / bins_bulk_flushes` ≈ achieved amortization).
     pub bins_staged: u64,
     pub bins_bulk_flushes: u64,
+    /// Shard workers the batched analyzer fanned its E-epoch loop
+    /// across (work-conservation observability; `0` = the run used the
+    /// per-epoch analyzer, `1` = batched but sequential). Results are
+    /// identical for every value — this only records the parallelism.
+    pub analyzer_threads_used: u64,
     /// Policy engine (empty without an installed stack): per-policy
     /// outcomes plus the migration cost model's conservation counters
     /// — every migrated byte becomes read traffic on the source pool
@@ -129,6 +134,7 @@ impl SimReport {
             pool_index_rebuilds: 0,
             bins_staged: 0,
             bins_bulk_flushes: 0,
+            analyzer_threads_used: 0,
             policies: Vec::new(),
             migrations: 0,
             migrated_bytes: 0,
@@ -257,7 +263,8 @@ impl SimReport {
             self.sim_slowdown()
         ));
         s.push_str(&format!(
-            "  delay   {:>10.3} ms = latency {:.3} + congestion {:.3} + bandwidth {:.3} + migration {:.3}\n",
+            "  delay   {:>10.3} ms = latency {:.3} + congestion {:.3} + bandwidth {:.3} \
+             + migration {:.3}\n",
             self.delay_ns / 1e6,
             self.lat_delay_ns / 1e6,
             self.cong_delay_ns / 1e6,
@@ -269,7 +276,12 @@ impl SimReport {
                 .policies
                 .iter()
                 .map(|p| {
-                    format!("{} ({} migrations, {:.1} KB moved)", p.name, p.migrations, p.moved_bytes as f64 / 1024.0)
+                    format!(
+                        "{} ({} migrations, {:.1} KB moved)",
+                        p.name,
+                        p.migrations,
+                        p.moved_bytes as f64 / 1024.0
+                    )
                 })
                 .collect();
             s.push_str(&format!("  policies: {}\n", parts.join("; ")));
@@ -357,13 +369,16 @@ impl SimReport {
             ("pool_index_rebuilds", json::num(self.pool_index_rebuilds as f64)),
             ("bins_staged", json::num(self.bins_staged as f64)),
             ("bins_bulk_flushes", json::num(self.bins_bulk_flushes as f64)),
+            ("analyzer_threads_used", json::num(self.analyzer_threads_used as f64)),
             (
                 "pool_read_misses",
                 json::arr_f64(&self.pool_read_misses.iter().map(|x| *x as f64).collect::<Vec<_>>()),
             ),
             (
                 "pool_write_misses",
-                json::arr_f64(&self.pool_write_misses.iter().map(|x| *x as f64).collect::<Vec<_>>()),
+                json::arr_f64(
+                    &self.pool_write_misses.iter().map(|x| *x as f64).collect::<Vec<_>>(),
+                ),
             ),
         ])
     }

@@ -154,7 +154,11 @@ pub struct DetailedSim {
 }
 
 impl DetailedSim {
-    pub fn new(topo: Topology, cache_scale: u64, policy: crate::alloctrack::PolicyKind) -> DetailedSim {
+    pub fn new(
+        topo: Topology,
+        cache_scale: u64,
+        policy: crate::alloctrack::PolicyKind,
+    ) -> DetailedSim {
         let tracker = AllocTracker::new(&topo, policy.build(&topo));
         let n = topo.nodes().len();
         let line = topo.host.cacheline_bytes;

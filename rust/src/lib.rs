@@ -58,11 +58,45 @@
 //!   policy asked for it; `NativeBatchAnalyzer` drives the same core
 //!   over E epochs with outputs written straight into pre-sized
 //!   `[E, ·]` tensors (no per-epoch allocation).
-//! * **Persistent multihost workers** — the multihost runner splits
-//!   hosts into per-worker shards once per run and keeps the worker
-//!   threads alive across epochs behind a `std::sync::Barrier`
-//!   (replacing a fresh thread scope per epoch); per-host bins still
+//! * **Work-conserving multihost workers** — the multihost runner
+//!   keeps a persistent worker pool alive across epochs behind a
+//!   `std::sync::Barrier`; each epoch the workers drain a shared
+//!   atomic host-index queue (work stealing), so early finishers help
+//!   with the remaining hosts instead of idling; per-host bins still
 //!   merge deterministically, in host order, at the epoch barrier.
+//!
+//! ## Threading model
+//!
+//! Every parallel loop in the simulator is over *independent* work,
+//! and every reduction of that work happens on one thread in a fixed
+//! order — which is why reports are bit-identical for any thread
+//! count (asserted in `tests/pipeline_equivalence.rs` and re-run by
+//! CI's determinism matrix at 1/2/8 workers):
+//!
+//! * **Sharded batched analyzer** (`runtime::native::
+//!   NativeBatchAnalyzer`, used by `coordinator::run_batched` and
+//!   `replay --batched`): the E epochs of one `analyze_batch` call
+//!   share no state, so the loop splits into contiguous chunks, one
+//!   per worker (`SimConfig::analyzer_threads` /
+//!   `--analyzer-threads`; 0 = one per core). Each worker owns a
+//!   private scratch analyzer and writes a disjoint `[E, ·]` output
+//!   row range; the same `analyze_core` call produces the same bits
+//!   into the same row no matter which worker runs it. The worker
+//!   count used is reported as `SimReport::analyzer_threads_used`.
+//! * **Work-stealing multihost host phase** (`multihost`): within an
+//!   epoch each host advances independently (coherence delivery is
+//!   deferred to the barrier), so workers claim host indices from a
+//!   shared atomic queue until it drains — a giant host pins one
+//!   worker while the rest absorb the remaining hosts
+//!   (`MultiHostReport::{steals, shard_rebalances,
+//!   worker_busy_fracs}` make the work conservation observable). The
+//!   epoch barrier then merges bins, delivers coherence, analyzes,
+//!   and runs policy phases on the coordinator thread in host order,
+//!   which pins the result for any worker count.
+//! * **Everything else is single-threaded by design** — the epoch
+//!   driver's event pump is a sequential accounting loop (virtual
+//!   time is inherently serial), and policy stacks always run on the
+//!   driving thread.
 //!
 //! ## The two-phase policy engine
 //!

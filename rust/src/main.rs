@@ -66,7 +66,10 @@ fn usage() {
                        --cache-scale N --max-epochs N --event-batch N --json\n\
                        --epoch-policy hotness:3,prefetch:0.5,rebalance (policy stack)\n\
                        --mig-stall-ns-per-byte F (modeled migration cost)\n\
-                       --batched (run: grouped-analyzer replay driver)"
+                       --batched (run/replay: grouped-analyzer replay driver)\n\
+                       --analyzer-threads N (batched: shard the E-epoch analyzer\n\
+                         loop; 0 = one per core, results identical for any N)\n\
+                       --threads N (multihost: work-stealing host-phase workers)"
     );
 }
 
@@ -96,6 +99,7 @@ fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
     cfg.prefetcher = args.opt_str("prefetch");
     cfg.keep_epoch_records = args.bool("epoch-records");
     cfg.event_batch = args.usize("event-batch", cfg.event_batch).max(1);
+    cfg.analyzer_threads = args.usize("analyzer-threads", cfg.analyzer_threads);
     if let Some(spec) = args.opt_str("epoch-policy") {
         cfg.epoch_policy = Some(PolicySpec::parse(&spec)?);
     }
@@ -233,7 +237,16 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     println!(
         "{}",
         markdown_table(
-            &["Topology", "Workload", "Native(ms)", "Sim(ms)", "Slowdown", "Lat(ms)", "Cong(ms)", "BW(ms)"],
+            &[
+                "Topology",
+                "Workload",
+                "Native(ms)",
+                "Sim(ms)",
+                "Slowdown",
+                "Lat(ms)",
+                "Cong(ms)",
+                "BW(ms)"
+            ],
             &rows
         )
     );
@@ -282,6 +295,21 @@ fn cmd_multihost(args: &Args) -> anyhow::Result<()> {
             rep.mig_stall_ns / 1e6
         );
     }
+    if rep.host_workers > 1 {
+        let busy: Vec<String> = rep
+            .worker_busy_fracs
+            .iter()
+            .map(|f| format!("{:.0}%", f * 100.0))
+            .collect();
+        println!(
+            "  work conservation: {} workers, {} steals over {} rebalanced epochs, \
+             busy [{}]",
+            rep.host_workers,
+            rep.steals,
+            rep.shard_rebalances,
+            busy.join(" ")
+        );
+    }
     for (i, h) in rep.hosts.iter().enumerate() {
         println!(
             "  host{i}: native {:.3} ms -> sim {:.3} ms ({} misses, {} migrations)",
@@ -327,8 +355,17 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
         trace_io::read_binary(&bytes).map_err(|e| anyhow::anyhow!(e))?
     };
     let mut replay = TraceReplay::new(&format!("replay:{path}"), events);
-    let mut sim = Coordinator::new(topo, cfg)?;
-    let rep = sim.run(&mut replay)?;
+    // --batched: offline replay through the grouped analyzer, with the
+    // E-epoch loop sharded across --analyzer-threads workers — the
+    // work-conserving path for long recorded traces (output is
+    // bit-identical to the sequential coordinator on the native
+    // backend)
+    let rep = if args.bool("batched") {
+        run_batched(&topo, &cfg, &mut replay)?
+    } else {
+        let mut sim = Coordinator::new(topo, cfg)?;
+        sim.run(&mut replay)?
+    };
     if args.bool("json") {
         println!("{}", rep.to_json().to_string());
     } else {

@@ -7,16 +7,21 @@
 //! Each host has its own cache hierarchy, allocation tracker (its own
 //! address space), and per-epoch bins. Within an epoch every host
 //! advances independently — which is why the host phase parallelizes:
-//! hosts are split into per-worker shards ONCE for the whole run and
-//! driven by a persistent worker pool (one OS thread per shard, kept
-//! alive across epochs and synchronized with a `std::sync::Barrier` —
-//! spawning a fresh thread scope per epoch was measurable for short
-//! epochs). Per-host bins are merged into the shared bins at the epoch
-//! barrier, always in host order, so the result is bit-identical for
-//! any thread count (`tests/pipeline_equivalence.rs`). The shared
-//! switches then see the union of the traffic and the
-//! congestion/bandwidth scans charge everyone; the computed epoch
-//! delay is attributed to hosts proportionally to their traffic.
+//! a persistent worker pool (threads kept alive across epochs behind a
+//! `std::sync::Barrier`) drains a shared atomic host-index queue each
+//! epoch, so the host phase is *work-conserving*: a worker that
+//! finishes its nominal share claims the next unclaimed host instead
+//! of idling at the barrier, and one giant host can no longer
+//! serialize the epoch behind idle peers (claims outside a worker's
+//! nominal static shard are counted as `steals` in the report). Which
+//! worker advances a host never changes what the host computes, and
+//! per-host bins are merged into the shared bins at the epoch barrier,
+//! always in host order, so the result is bit-identical for any
+//! thread count (`tests/pipeline_equivalence.rs` and the CI
+//! determinism matrix). The shared switches then see the union of the
+//! traffic and the congestion/bandwidth scans charge everyone; the
+//! computed epoch delay is attributed to hosts proportionally to
+//! their traffic.
 //!
 //! CXL.mem pool coherency (paper §2): writes to the shared range are
 //! logged during the host phase and applied at the barrier — each
@@ -42,7 +47,7 @@
 //! `record` baseline, asserted bit-identical in
 //! `tests/pipeline_equivalence.rs`.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
 
 use crate::alloctrack::AllocTracker;
@@ -87,6 +92,20 @@ pub struct MultiHostReport {
     /// Modeled migration stall charged to host delays (included in
     /// `total_delay_ns`), ns.
     pub mig_stall_ns: f64,
+    /// Host-phase workers actually used (1 = inline, no pool).
+    pub host_workers: usize,
+    /// Work-conservation observability: hosts a worker advanced
+    /// outside its nominal static shard (0 on inline runs). The value
+    /// depends on scheduling — only the *simulation* outputs are
+    /// thread-count-invariant.
+    pub steals: u64,
+    /// Epochs whose effective host→worker assignment deviated from
+    /// the static partition (i.e. epochs with at least one steal).
+    pub shard_rebalances: u64,
+    /// Per-worker fraction of the total host-phase wall time spent
+    /// advancing hosts (empty on inline runs). Near-equal fractions
+    /// mean the queue kept every worker busy.
+    pub worker_busy_fracs: Vec<f64>,
     pub wall_s: f64,
 }
 
@@ -341,86 +360,106 @@ pub fn run_shared_threads_with(
     let mut invalidations = 0u64;
     let mut coherence_msgs = 0u64;
     let shared_base = crate::workload::patterns::SHARED_BASE;
-    let nthreads = threads.max(1).min(nhosts.max(1));
-    let use_pool = nthreads > 1 && nhosts > 1;
+    let nworkers = threads.clamp(1, nhosts.max(1));
+    let use_pool = nworkers > 1 && nhosts > 1;
 
-    // ---- persistent worker pool: hosts are split into per-worker
-    // shards ONCE for the whole run. Each shard lives behind its own
-    // Mutex, but the locks are never contended — the Barrier alternates
-    // exclusive phases (workers advance their shard while the
-    // coordinator is parked; the coordinator merges at the epoch
-    // barrier while the workers are parked), so the Mutex only carries
-    // ownership across the phase boundary for the borrow checker.
-    // Replaces the fresh `std::thread::scope` per epoch, whose
-    // spawn/join cost was measurable for short epochs (ROADMAP item).
-    let shard_len = nhosts.div_ceil(nthreads).max(1);
-    let mut shards: Vec<Mutex<Vec<Host>>> = Vec::new();
-    {
-        let mut it = hosts.into_iter();
-        loop {
-            let shard: Vec<Host> = it.by_ref().take(shard_len).collect();
-            if shard.is_empty() {
-                break;
-            }
-            shards.push(Mutex::new(shard));
-        }
-    }
-    if shards.is_empty() {
-        shards.push(Mutex::new(Vec::new())); // zero hosts: empty run
-    }
+    // ---- work-conserving persistent worker pool. Hosts live behind
+    // individual Mutexes; each epoch the workers drain a shared atomic
+    // host-index queue (claim-by-`fetch_add`), so a worker that runs
+    // out of work steals the next unclaimed host instead of idling at
+    // the barrier — one giant host can no longer serialize the epoch
+    // behind idle peers (ROADMAP item; replaces the static per-worker
+    // shards, whose early finishers sat at the barrier). The per-host
+    // locks are never contended: the queue hands every index to
+    // exactly one worker, and the Barrier alternates exclusive phases
+    // (workers advance hosts while the coordinator is parked; the
+    // coordinator merges while the workers are parked), so the Mutex
+    // only carries ownership across threads for the borrow checker.
+    // Which worker advances a host cannot change what the host
+    // computes, and the coordinator still merges in host order, so
+    // reports stay bit-identical for any worker count.
+    //
+    // `steals` counts claims outside a worker's nominal static shard
+    // (a balanced partition: every worker gets floor(H/W) consecutive
+    // hosts, the first H mod W workers one extra — never an empty
+    // home, so a homeless worker can't inflate the count) —
+    // observability for the work-conservation claim, not simulation
+    // state. `busy_ns` accumulates per-worker host-phase time for the
+    // report's busy fractions.
+    let hosts: Vec<Mutex<Host>> = hosts.into_iter().map(Mutex::new).collect();
+    let (shard_base, shard_rem) = (nhosts / nworkers, nhosts % nworkers);
+    let home_of = |w: usize| {
+        let start = w * shard_base + w.min(shard_rem);
+        start..start + shard_base + usize::from(w < shard_rem)
+    };
+    let next_host = AtomicUsize::new(0);
+    let steals = AtomicU64::new(0);
+    let busy_ns: Vec<AtomicU64> = (0..nworkers).map(|_| AtomicU64::new(0)).collect();
+    let mut shard_rebalances = 0u64;
+    let mut phase_ns = 0u64;
     // two rendezvous per epoch: open the host phase, then collect it
-    let barrier = Barrier::new(shards.len() + 1);
+    let barrier = Barrier::new(nworkers + 1);
     let stop = AtomicBool::new(false);
     let panicked = AtomicBool::new(false);
     let mut run_err: Option<anyhow::Error> = None;
 
     std::thread::scope(|s| {
         if use_pool {
-            for shard in &shards {
-                let barrier = &barrier;
-                let stop = &stop;
-                let panicked = &panicked;
+            for w in 0..nworkers {
+                let (hosts, barrier, stop, panicked, next_host, steals) =
+                    (&hosts, &barrier, &stop, &panicked, &next_host, &steals);
+                let busy = &busy_ns[w];
+                let home = home_of(w);
                 s.spawn(move || loop {
                     barrier.wait(); // parked until the epoch opens
                     if stop.load(Ordering::Acquire) {
                         break;
                     }
+                    let t0 = std::time::Instant::now();
                     // a panic here must not strand the coordinator at
                     // the end-of-phase barrier (std Barrier has no
                     // poisoning): catch it, flag it, make the
                     // rendezvous anyway; the coordinator turns the flag
                     // into an error after the phase.
-                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        let mut hs = shard.lock().unwrap();
-                        for h in hs.iter_mut() {
-                            advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+                        let i = next_host.fetch_add(1, Ordering::Relaxed);
+                        if i >= nhosts {
+                            break; // queue drained: this epoch is done
                         }
+                        let mut h = hosts[i].lock().unwrap();
+                        if !h.done && !home.contains(&i) {
+                            steals.fetch_add(1, Ordering::Relaxed);
+                        }
+                        advance_host_epoch(&mut h, topo, cfg, epoch_ns, shared_base, batch);
                     }));
                     if result.is_err() {
                         panicked.store(true, Ordering::Release);
                     }
-                    barrier.wait(); // shard advanced one epoch
+                    busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    barrier.wait(); // every claimed host advanced
                 });
             }
         }
 
         loop {
-            let mut guards: Vec<std::sync::MutexGuard<'_, Vec<Host>>> =
-                shards.iter().map(|sh| sh.lock().unwrap()).collect();
-            let live = guards.iter().flat_map(|g| g.iter()).filter(|h| !h.done).count();
+            let live = hosts.iter().filter(|h| !h.lock().unwrap().done).count();
             if live == 0 {
                 break;
             }
 
             // ---- host phase: every live host advances one epoch
+            let steals_before = steals.load(Ordering::Relaxed);
             if use_pool {
-                drop(guards);
+                next_host.store(0, Ordering::Relaxed); // published by the barrier
+                let t0 = std::time::Instant::now();
                 barrier.wait(); // open the host phase
-                barrier.wait(); // every shard done
-                // check BEFORE re-locking: a worker panic poisons its
-                // shard Mutex, so surface the error instead of a
-                // PoisonError unwrap (or, worse, a silent hang at the
-                // barrier, which is what a stranded rendezvous gave)
+                barrier.wait(); // queue drained
+                phase_ns += t0.elapsed().as_nanos() as u64;
+                // check BEFORE locking hosts: a worker panic poisons
+                // the host Mutex it held, so surface the error instead
+                // of a PoisonError unwrap (or, worse, a silent hang at
+                // the barrier, which is what a stranded rendezvous
+                // gave)
                 if panicked.load(Ordering::Acquire) {
                     run_err = Some(anyhow::anyhow!(
                         "multihost worker panicked during the host phase \
@@ -428,18 +467,20 @@ pub fn run_shared_threads_with(
                     ));
                     break;
                 }
-                guards = shards.iter().map(|sh| sh.lock().unwrap()).collect();
             } else {
-                for g in guards.iter_mut() {
-                    for h in g.iter_mut() {
-                        advance_host_epoch(h, topo, cfg, epoch_ns, shared_base, batch);
-                    }
+                for h in &hosts {
+                    let mut h = h.lock().unwrap();
+                    advance_host_epoch(&mut h, topo, cfg, epoch_ns, shared_base, batch);
                 }
             }
-            // flatten the shards back into host order for the barrier
-            // phase (shards partition the original order, so this view
-            // is exactly the pre-pool `Vec<Host>` iteration order)
-            let mut all: Vec<&mut Host> = guards.iter_mut().flat_map(|g| g.iter_mut()).collect();
+            if steals.load(Ordering::Relaxed) > steals_before {
+                shard_rebalances += 1;
+            }
+            // lock every host, in host order, for the barrier phase
+            // (uncontended: the workers are parked at the barrier)
+            let mut guards: Vec<std::sync::MutexGuard<'_, Host>> =
+                hosts.iter().map(|h| h.lock().unwrap()).collect();
+            let mut all: Vec<&mut Host> = guards.iter_mut().map(|g| &mut **g).collect();
 
             // ---- epoch barrier (coordinator thread, host order =>
             // deterministic for any worker count)
@@ -551,28 +592,35 @@ pub fn run_shared_threads_with(
         return Err(e);
     }
 
+    let worker_busy_fracs: Vec<f64> = if use_pool && phase_ns > 0 {
+        busy_ns
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed) as f64 / phase_ns as f64)
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut hosts_out = Vec::with_capacity(nhosts);
     let mut migrations_total = 0u64;
     let mut migrated_bytes_total = 0u64;
-    for sh in shards {
-        for h in sh.into_inner().unwrap() {
-            let (migs, moved) = h
-                .stack
-                .as_ref()
-                .map(|s| (s.migrations(), s.moved_bytes()))
-                .unwrap_or((0, 0));
-            migrations_total += migs;
-            migrated_bytes_total += moved;
-            hosts_out.push(HostReport {
-                workload: h.wl.name().to_string(),
-                native_ns: h.native_ns,
-                simulated_ns: h.native_ns + h.delay_ns,
-                delay_ns: h.delay_ns,
-                misses: h.misses,
-                migrations: migs,
-                migrated_bytes: moved,
-            });
-        }
+    for m in hosts {
+        let h = m.into_inner().unwrap();
+        let (migs, moved) = h
+            .stack
+            .as_ref()
+            .map(|s| (s.migrations(), s.moved_bytes()))
+            .unwrap_or((0, 0));
+        migrations_total += migs;
+        migrated_bytes_total += moved;
+        hosts_out.push(HostReport {
+            workload: h.wl.name().to_string(),
+            native_ns: h.native_ns,
+            simulated_ns: h.native_ns + h.delay_ns,
+            delay_ns: h.delay_ns,
+            misses: h.misses,
+            migrations: migs,
+            migrated_bytes: moved,
+        });
     }
     Ok(MultiHostReport {
         hosts: hosts_out,
@@ -585,6 +633,10 @@ pub fn run_shared_threads_with(
         migrations: migrations_total,
         migrated_bytes: migrated_bytes_total,
         mig_stall_ns: mig_stall_total,
+        host_workers: if use_pool { nworkers } else { 1 },
+        steals: steals.load(Ordering::Relaxed),
+        shard_rebalances,
+        worker_busy_fracs,
         wall_s: wall.elapsed().as_secs_f64(),
     })
 }
@@ -760,6 +812,30 @@ mod tests {
                 assert_eq!(a.migrations, b.migrations);
             }
         }
+    }
+
+    #[test]
+    fn inline_run_reports_no_stealing() {
+        let rep = run_shared_threads(&builtin::fig2(), &cfg(), mk_hosts(3), 1).unwrap();
+        assert_eq!(rep.host_workers, 1);
+        assert_eq!(rep.steals, 0, "inline runs have nothing to steal from");
+        assert_eq!(rep.shard_rebalances, 0);
+        assert!(rep.worker_busy_fracs.is_empty());
+    }
+
+    #[test]
+    fn pooled_run_reports_worker_accounting() {
+        let rep = run_shared_threads(&builtin::fig2(), &cfg(), mk_hosts(4), 2).unwrap();
+        assert_eq!(rep.host_workers, 2);
+        assert_eq!(rep.worker_busy_fracs.len(), 2);
+        // every worker's busy time is measured strictly inside the
+        // coordinator's host-phase window, so fractions are in [0, 1]
+        // (small slack for clock-read jitter)
+        for f in &rep.worker_busy_fracs {
+            assert!((0.0..=1.01).contains(f), "busy fraction {f} out of range");
+        }
+        assert!(rep.shard_rebalances <= rep.epochs);
+        assert!(rep.steals <= rep.epochs * rep.hosts.len() as u64);
     }
 
     #[test]

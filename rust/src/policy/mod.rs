@@ -877,7 +877,12 @@ mod tests {
         let mut t = AllocTracker::new(&topo, PolicyKind::CxlOnly.build(&topo));
         let (big, small) = (0x10_0000u64, 0x80_0000u64);
         t.on_alloc_event(&AllocEvent { kind: AllocKind::Mmap, addr: big, len: 1 << 20, t_ns: 0.0 });
-        t.on_alloc_event(&AllocEvent { kind: AllocKind::Mmap, addr: small, len: 1 << 16, t_ns: 0.0 });
+        t.on_alloc_event(&AllocEvent {
+            kind: AllocKind::Mmap,
+            addr: small,
+            len: 1 << 16,
+            t_ns: 0.0,
+        });
         // force both regions onto the same pool
         assert!(t.migrate_region(big, 2));
         assert!(t.migrate_region(small, 2));

@@ -128,6 +128,14 @@ pub trait BatchTimingModel {
     fn nbins(&self) -> usize;
     /// Epochs per call; callers zero-pad the tail of a shorter run.
     fn batch(&self) -> usize;
+    /// Shard workers `analyze_batch` fans the E-epoch loop across
+    /// (1 = sequential). Outputs are required to be bit-identical for
+    /// every value; the count is surfaced in reports
+    /// (`SimReport::analyzer_threads_used`) so work conservation is
+    /// observable. Default: no sharding.
+    fn threads(&self) -> usize {
+        1
+    }
     fn backend_name(&self) -> &'static str;
     /// `reads`/`writes` are [E, P, B] flattened with E == `batch()`.
     fn analyze_batch(
@@ -164,17 +172,27 @@ pub fn make_analyzer(
     }
 }
 
-/// Construct a batched analyzer (E epochs per call) for offline replay.
+/// Construct a batched analyzer (E epochs per call) for offline
+/// replay. `threads` shards the native backend's E-epoch loop
+/// (`0` = one worker per core, `1` = sequential); results are
+/// bit-identical for every value. PJRT manages its own intra-op
+/// parallelism and ignores the knob.
 pub fn make_batch_analyzer(
     backend: AnalyzerBackend,
     tensors: &TopoTensors,
     nbins: usize,
     artifacts_dir: &str,
+    threads: usize,
 ) -> anyhow::Result<Box<dyn BatchTimingModel>> {
     match backend {
         AnalyzerBackend::Native => {
             let _ = artifacts_dir;
-            Ok(Box::new(native::NativeBatchAnalyzer::new(tensors, nbins, shapes::BATCH)))
+            Ok(Box::new(native::NativeBatchAnalyzer::with_threads(
+                tensors,
+                nbins,
+                shapes::BATCH,
+                threads,
+            )))
         }
         #[cfg(feature = "pjrt")]
         AnalyzerBackend::Pjrt => {

@@ -16,6 +16,7 @@ use crate::topology::TopoTensors;
 
 use super::{BatchOutputs, BatchTimingModel, TimingInputs, TimingModel, TimingOutputs};
 
+#[derive(Clone)]
 pub struct NativeAnalyzer {
     pools: usize,
     switches: usize,
@@ -262,14 +263,91 @@ impl TimingModel for NativeAnalyzer {
 /// ([`crate::coordinator::run_batched`]) has a backend that needs no
 /// AOT artifacts and is bit-identical to the per-epoch native analyzer
 /// — the PJRT batch module is the dispatch-amortizing counterpart.
+///
+/// The E epochs of one call are *independent* (no state flows between
+/// them — `analyze_core` fully rewrites its scratch per epoch), so the
+/// loop shards across worker threads (`with_threads`, below): each
+/// worker owns a private [`NativeAnalyzer`]
+/// scratch clone (created once at construction, reused for every
+/// call) and writes a contiguous, disjoint range of output rows.
+/// Results are bit-identical for **any** thread count by construction
+/// — the same `analyze_core` invocation produces the same bits into
+/// the same row regardless of which worker runs it (asserted in
+/// `tests/pipeline_equivalence.rs` and the CI determinism matrix).
 pub struct NativeBatchAnalyzer {
     inner: NativeAnalyzer,
+    /// Scratch analyzers for workers 1..N (worker 0 reuses `inner`).
+    /// Allocated once here so per-call sharding allocates nothing.
+    workers: Vec<NativeAnalyzer>,
     batch: usize,
+    threads: usize,
 }
 
+/// Auto thread resolution (`threads == 0`) refuses to slice the batch
+/// thinner than this many epochs per worker — spawning a worker for a
+/// couple of microsecond-scale epochs costs more than it saves. An
+/// explicit thread count is honored as given (clamped to the batch).
+const MIN_AUTO_EPOCHS_PER_WORKER: usize = 4;
+
 impl NativeBatchAnalyzer {
+    /// Sequential batched analyzer (one worker, the baseline).
     pub fn new(t: &TopoTensors, nbins: usize, batch: usize) -> NativeBatchAnalyzer {
-        NativeBatchAnalyzer { inner: NativeAnalyzer::new(t, nbins), batch: batch.max(1) }
+        NativeBatchAnalyzer::with_threads(t, nbins, batch, 1)
+    }
+
+    /// [`NativeBatchAnalyzer::new`] with an explicit shard-worker count
+    /// (`0` = one per core, capped so each auto worker gets at least
+    /// [`MIN_AUTO_EPOCHS_PER_WORKER`] epochs). Outputs are bit-identical
+    /// for every value; only wall-clock changes.
+    pub fn with_threads(
+        t: &TopoTensors,
+        nbins: usize,
+        batch: usize,
+        threads: usize,
+    ) -> NativeBatchAnalyzer {
+        let batch = batch.max(1);
+        let threads = match threads {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min((batch / MIN_AUTO_EPOCHS_PER_WORKER).max(1)),
+            n => n,
+        }
+        .clamp(1, batch);
+        let inner = NativeAnalyzer::new(t, nbins);
+        let workers = (1..threads).map(|_| inner.clone()).collect();
+        NativeBatchAnalyzer { inner, workers, batch, threads }
+    }
+}
+
+/// Run `analyze_core` over a contiguous range of epochs, writing each
+/// epoch's outputs into its own row of the (sub)slices. This is the
+/// whole per-worker loop: the 1-thread path and every shard run the
+/// exact same code, which is what makes sharding bit-exact.
+fn analyze_epoch_range(
+    an: &mut NativeAnalyzer,
+    reads: &[f32],
+    writes: &[f32],
+    bin_width: f32,
+    bytes_per_ev: f32,
+    total: &mut [f64],
+    lat: &mut [f32],
+    cong: &mut [f32],
+    bwd: &mut [f32],
+) {
+    let (p, s, b) = (an.pools, an.switches, an.nbins);
+    let n = p * b;
+    for i in 0..total.len() {
+        total[i] = an.analyze_core(
+            &reads[i * n..(i + 1) * n],
+            &writes[i * n..(i + 1) * n],
+            bin_width,
+            bytes_per_ev,
+            &mut lat[i * p..(i + 1) * p],
+            &mut cong[i * s..(i + 1) * s],
+            &mut bwd[i * s..(i + 1) * s],
+            false,
+        );
     }
 }
 
@@ -286,6 +364,9 @@ impl BatchTimingModel for NativeBatchAnalyzer {
     fn batch(&self) -> usize {
         self.batch
     }
+    fn threads(&self) -> usize {
+        self.threads
+    }
     fn backend_name(&self) -> &'static str {
         "native-batch"
     }
@@ -301,24 +382,72 @@ impl BatchTimingModel for NativeBatchAnalyzer {
         anyhow::ensure!(reads.len() == e * p * b, "reads shape");
         anyhow::ensure!(writes.len() == e * p * b, "writes shape");
         let mut out = BatchOutputs {
-            total: Vec::with_capacity(e),
+            total: vec![0.0; e],
             lat: vec![0.0; e * p],
             cong: vec![0.0; e * s],
             bwd: vec![0.0; e * s],
         };
-        for i in 0..e {
-            let total = self.inner.analyze_core(
-                &reads[i * p * b..(i + 1) * p * b],
-                &writes[i * p * b..(i + 1) * p * b],
+        let threads = self.threads.clamp(1, e);
+        if threads == 1 {
+            analyze_epoch_range(
+                &mut self.inner,
+                reads,
+                writes,
                 bin_width,
                 bytes_per_ev,
-                &mut out.lat[i * p..(i + 1) * p],
-                &mut out.cong[i * s..(i + 1) * s],
-                &mut out.bwd[i * s..(i + 1) * s],
-                false,
+                &mut out.total,
+                &mut out.lat,
+                &mut out.cong,
+                &mut out.bwd,
             );
-            out.total.push(total);
+            return Ok(out);
         }
+        // Shard the E independent epochs into contiguous chunks, one
+        // per worker. Every worker gets disjoint output row ranges and
+        // its own scratch analyzer, so the bits written are identical
+        // to the 1-thread loop for any worker count. The calling
+        // thread runs the first chunk itself (on `inner`) instead of
+        // idling at the scope join — one fewer spawn per call and no
+        // oversubscription at `threads == cores`.
+        let chunk = e.div_ceil(threads);
+        let inner = &mut self.inner;
+        let extra = &mut self.workers;
+        std::thread::scope(|sc| {
+            let mut scratch: Vec<&mut NativeAnalyzer> =
+                std::iter::once(inner).chain(extra.iter_mut()).collect();
+            let (mut tot, mut lat, mut cong, mut bwd) =
+                (&mut out.total[..], &mut out.lat[..], &mut out.cong[..], &mut out.bwd[..]);
+            let (mut rd, mut wr) = (reads, writes);
+            let mut first = None;
+            for (w, an) in scratch.drain(..).enumerate() {
+                let take = chunk.min(tot.len());
+                if take == 0 {
+                    break;
+                }
+                let (t0, rest) = std::mem::take(&mut tot).split_at_mut(take);
+                tot = rest;
+                let (l0, rest) = std::mem::take(&mut lat).split_at_mut(take * p);
+                lat = rest;
+                let (c0, rest) = std::mem::take(&mut cong).split_at_mut(take * s);
+                cong = rest;
+                let (w0, rest) = std::mem::take(&mut bwd).split_at_mut(take * s);
+                bwd = rest;
+                let (r0, r1) = rd.split_at(take * p * b);
+                rd = r1;
+                let (x0, x1) = wr.split_at(take * p * b);
+                wr = x1;
+                if w == 0 {
+                    first = Some((an, r0, x0, t0, l0, c0, w0));
+                } else {
+                    sc.spawn(move || {
+                        analyze_epoch_range(an, r0, x0, bin_width, bytes_per_ev, t0, l0, c0, w0)
+                    });
+                }
+            }
+            if let Some((an, r0, x0, t0, l0, c0, w0)) = first {
+                analyze_epoch_range(an, r0, x0, bin_width, bytes_per_ev, t0, l0, c0, w0);
+            }
+        });
         Ok(out)
     }
 }
@@ -340,7 +469,12 @@ mod tests {
         let reads = vec![0.0; 8 * 16];
         let writes = vec![0.0; 8 * 16];
         let out = a
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 100.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert_eq!(out.total, 0.0);
     }
@@ -353,7 +487,12 @@ mod tests {
         reads[1 * 4] = 10.0;
         let writes = vec![0.0; 8 * 4];
         let out = a
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 1e9, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 1e9,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         let topo = builtin::fig2();
         let expect = 10.0 * topo.extra_read_latency(1);
@@ -373,10 +512,20 @@ mod tests {
         };
         let writes = vec![0.0; 8 * 8];
         let small = a
-            .analyze(&TimingInputs { reads: &mk(2.0), writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &mk(2.0),
+                writes: &writes,
+                bin_width: 100.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         let big = a
-            .analyze(&TimingInputs { reads: &mk(200.0), writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &mk(200.0),
+                writes: &writes,
+                bin_width: 100.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert!(big.cong_total() > small.cong_total());
         assert!(big.total > big.lat_total(), "congestion must add delay");
@@ -391,7 +540,12 @@ mod tests {
         }
         let writes = vec![0.0; 8 * 8];
         let out = a
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 100.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 100.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert_eq!(out.total, 0.0, "local traffic must cost nothing");
     }
@@ -403,7 +557,12 @@ mod tests {
         let writes = vec![1.0; 8 * 32];
         // default: hot path, no backlog export
         let out = a
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 50.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 50.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert_eq!(out.lat.len(), 8);
         assert_eq!(out.cong.len(), 8);
@@ -412,7 +571,12 @@ mod tests {
         // policies opt in and get the full [S, B] profile
         a.set_export_backlog(true);
         let out = a
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 50.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 50.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert_eq!(out.cong_backlog.len(), 8 * 32);
     }
@@ -427,12 +591,22 @@ mod tests {
         reads[1 * 8] = 500.0;
         let writes = vec![0.0; 8 * 8];
         let busy = a
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 10.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 10.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert!(busy.cong_backlog.iter().any(|x| *x > 0.0));
         let zeros = vec![0.0f32; 8 * 8];
         let idle = a
-            .analyze(&TimingInputs { reads: &zeros, writes: &zeros, bin_width: 10.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &zeros,
+                writes: &zeros,
+                bin_width: 10.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert!(idle.cong_backlog.iter().all(|x| *x == 0.0));
         assert_eq!(idle.total, 0.0);
@@ -492,12 +666,59 @@ mod tests {
     }
 
     #[test]
+    fn sharded_batch_matches_single_thread_bit_exactly() {
+        // the E epochs are independent and every worker runs the same
+        // analyze_core into disjoint rows, so ANY thread count —
+        // uneven splits, more workers than epochs — must reproduce
+        // the 1-thread outputs bit-for-bit
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        let e = 7usize; // prime: never splits evenly
+        let n = 8 * 16;
+        let mut rng = crate::util::rng::Rng::new(77);
+        let reads: Vec<f32> = (0..e * n).map(|_| rng.below(30) as f32).collect();
+        let writes: Vec<f32> = (0..e * n).map(|_| rng.below(12) as f32).collect();
+        let mut base = NativeBatchAnalyzer::new(&t, 16, e);
+        let expect = base.analyze_batch(&reads, &writes, 50.0, 64.0).unwrap();
+        for threads in [2usize, 3, 5, 64] {
+            let mut sharded = NativeBatchAnalyzer::with_threads(&t, 16, e, threads);
+            let got = sharded.analyze_batch(&reads, &writes, 50.0, 64.0).unwrap();
+            assert_eq!(got.total, expect.total, "{threads} threads: totals");
+            assert_eq!(got.lat, expect.lat, "{threads} threads: lat");
+            assert_eq!(got.cong, expect.cong, "{threads} threads: cong");
+            assert_eq!(got.bwd, expect.bwd, "{threads} threads: bwd");
+        }
+    }
+
+    #[test]
+    fn sharded_batch_thread_resolution() {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        // explicit counts clamp to the epoch count
+        let a = NativeBatchAnalyzer::with_threads(&t, 16, 4, 16);
+        assert_eq!(a.threads(), 4);
+        // 0 = auto: at least one worker, never thinner than the
+        // minimum epochs-per-worker slice
+        let b = NativeBatchAnalyzer::with_threads(&t, 16, 8, 0);
+        assert!(b.threads() >= 1);
+        assert!(b.threads() <= 8 / MIN_AUTO_EPOCHS_PER_WORKER);
+        // the sequential constructor stays sequential
+        let c = NativeBatchAnalyzer::new(&t, 16, 32);
+        assert_eq!(c.threads(), 1);
+    }
+
+    #[test]
     fn shape_mismatch_rejected() {
         let mut a = analyzer(8);
         let reads = vec![0.0; 3];
         let writes = vec![0.0; 8 * 8];
         assert!(a
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 1.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 1.0,
+                bytes_per_ev: 64.0,
+            })
             .is_err());
     }
 }

@@ -134,7 +134,8 @@ impl Topology {
     pub fn to_toml(&self) -> String {
         let mut out = format!("name = \"{}\"\n\n[host]\n", self.name);
         out.push_str(&format!(
-            "local_latency_ns = {}\nlocal_write_latency_ns = {}\nlocal_bandwidth_gbps = {}\nlocal_capacity_gb = {}\ncacheline_bytes = {}\n",
+            "local_latency_ns = {}\nlocal_write_latency_ns = {}\nlocal_bandwidth_gbps = {}\n\
+             local_capacity_gb = {}\ncacheline_bytes = {}\n",
             self.host.local_read_latency_ns,
             self.host.local_write_latency_ns,
             self.host.local_bandwidth,

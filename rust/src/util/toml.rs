@@ -145,7 +145,8 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
         if inner.is_empty() {
             return Ok(TomlValue::Arr(vec![]));
         }
-        let items: Result<Vec<_>, _> = split_top_level(inner).iter().map(|x| parse_value(x)).collect();
+        let items: Result<Vec<_>, _> =
+            split_top_level(inner).iter().map(|x| parse_value(x)).collect();
         return Ok(TomlValue::Arr(items?));
     }
     // numbers, allowing underscores per TOML

@@ -59,7 +59,13 @@ pub struct MicroBench {
 }
 
 impl MicroBench {
-    fn new(name: &'static str, mode: Mode, total_bytes: u64, chunk: u64, alloc_cost_ns: f64) -> Self {
+    fn new(
+        name: &'static str,
+        mode: Mode,
+        total_bytes: u64,
+        chunk: u64,
+        alloc_cost_ns: f64,
+    ) -> Self {
         let chunk = chunk.min(total_bytes).max(LINE);
         let total = (total_bytes / chunk).max(1) * chunk;
         MicroBench {
@@ -234,7 +240,10 @@ impl Workload for MicroBench {
                     let run = (lines - line).min(left);
                     let base = self.base() + line * LINE;
                     for i in 0..run {
-                        sink.push(WlEvent::Access(Access { addr: base + i * LINE, is_write: true }));
+                        sink.push(WlEvent::Access(Access {
+                            addr: base + i * LINE,
+                            is_write: true,
+                        }));
                     }
                     self.phase = Phase::FinalSweep { line: line + run };
                     left -= run;

@@ -115,13 +115,23 @@ fn analyzer_monotone_in_traffic() {
         let reads: Vec<f32> = (0..n).map(|_| rng.below(30) as f32).collect();
         let writes: Vec<f32> = (0..n).map(|_| rng.below(15) as f32).collect();
         let base = model
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 500.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 500.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         let mut more = reads.clone();
         let idx = (1 + rng.below(3)) as usize * 64 + rng.below(64) as usize; // a CXL pool row
         more[idx] += 10.0;
         let bumped = model
-            .analyze(&TimingInputs { reads: &more, writes: &writes, bin_width: 500.0, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &more,
+                writes: &writes,
+                bin_width: 500.0,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         assert!(
             bumped.total >= base.total - 1e-3,
@@ -144,11 +154,21 @@ fn analyzer_scale_invariance_of_latency_term() {
         let reads: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
         let writes = vec![0.0f32; n];
         let one = model
-            .analyze(&TimingInputs { reads: &reads, writes: &writes, bin_width: 1e9, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 1e9,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         let doubled: Vec<f32> = reads.iter().map(|x| x * 2.0).collect();
         let two = model
-            .analyze(&TimingInputs { reads: &doubled, writes: &writes, bin_width: 1e9, bytes_per_ev: 64.0 })
+            .analyze(&TimingInputs {
+                reads: &doubled,
+                writes: &writes,
+                bin_width: 1e9,
+                bytes_per_ev: 64.0,
+            })
             .unwrap();
         let rel = (two.total - 2.0 * one.total).abs() / (one.total.max(1.0) * 2.0);
         assert!(rel < 1e-5, "seed {seed}: latency term not linear ({rel})");

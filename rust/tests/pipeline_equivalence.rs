@@ -26,6 +26,21 @@ fn fast_cfg() -> SimConfig {
     }
 }
 
+/// Worker counts the determinism tests exercise against the 1-thread
+/// baseline. CI's determinism matrix pins this via
+/// `CXLMEMSIM_TEST_THREADS` (1 / 2 / 8) so every knob value runs on a
+/// real multi-core runner; locally (unset) a spread of counts runs in
+/// one pass.
+fn knob_threads(defaults: &[usize]) -> Vec<usize> {
+    match std::env::var("CXLMEMSIM_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(n) => vec![n],
+        None => defaults.to_vec(),
+    }
+}
+
 fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
     assert_eq!(a.total_accesses, b.total_accesses, "{ctx}: accesses");
     assert_eq!(a.total_misses, b.total_misses, "{ctx}: misses");
@@ -229,7 +244,7 @@ fn multihost_threaded_matches_single_thread_bit_exactly() {
                 .collect()
         };
         let one = run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), 1).unwrap();
-        for threads in [2usize, 4, 16] {
+        for threads in knob_threads(&[2, 4, 16]) {
             let many =
                 run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), threads).unwrap();
             assert_multihost_identical(&one, &many);
@@ -250,10 +265,115 @@ fn multihost_persistent_pool_uneven_shards_bit_exact() {
     };
     let one = run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), 1).unwrap();
     assert!(one.invalidations > 0);
-    for threads in [2usize, 3, 64] {
+    for threads in knob_threads(&[2, 3, 64]) {
         let many =
             run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_hosts(), threads).unwrap();
         assert_multihost_identical(&one, &many);
+    }
+}
+
+// ------------------------------------- work-stealing host phase
+
+/// One huge host + tiny peers: per epoch the huge host dominates, so
+/// whichever worker claims it is pinned there and the others MUST
+/// claim hosts outside their nominal shard to drain the queue (the
+/// zipfian host is cache-friendly and does ~10x the events per epoch
+/// of the miss-bound tiny streams).
+fn mk_skewed_hosts() -> Vec<Box<dyn Workload>> {
+    let mut v: Vec<Box<dyn Workload>> = vec![workload::by_name("zipfian", 0.01, 0).unwrap()];
+    for i in 1..5 {
+        v.push(workload::by_name("stream", 0.0005, i as u64).unwrap());
+    }
+    v
+}
+
+#[test]
+fn work_stealing_pathological_skew_bit_exact_and_steals() {
+    let one = run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_skewed_hosts(), 1).unwrap();
+    assert_eq!(one.steals, 0, "inline runs cannot steal");
+    for threads in knob_threads(&[2, 4]) {
+        let many =
+            run_shared_threads(&builtin::fig2(), &fast_cfg(), mk_skewed_hosts(), threads)
+                .unwrap();
+        assert_multihost_identical(&one, &many);
+        if threads > 1 {
+            assert!(
+                many.steals > 0,
+                "{threads} workers on one-huge-host skew must steal to stay busy"
+            );
+            assert!(many.shard_rebalances > 0);
+            assert_eq!(many.worker_busy_fracs.len(), many.host_workers);
+        }
+    }
+}
+
+#[test]
+fn work_stealing_hosts_fewer_than_workers_bit_exact() {
+    // 2 hosts under 8/64 requested workers: the pool clamps to one
+    // worker per host and the claim queue must not run past the end
+    let mk = || -> Vec<Box<dyn Workload>> {
+        (0..2)
+            .map(|i| workload::by_name("shared", 0.002, i as u64).unwrap())
+            .collect()
+    };
+    let one = run_shared_threads(&builtin::fig2(), &fast_cfg(), mk(), 1).unwrap();
+    assert!(one.invalidations > 0);
+    for threads in knob_threads(&[8, 64]) {
+        let many = run_shared_threads(&builtin::fig2(), &fast_cfg(), mk(), threads).unwrap();
+        assert_multihost_identical(&one, &many);
+        assert!(many.host_workers <= 2, "workers must clamp to the host count");
+    }
+}
+
+// ------------------------------------- sharded batched analyzer
+
+/// The sharded E-epoch analyzer loop must be an optimization, never a
+/// semantic change: `run --batched` with any `analyzer_threads` value
+/// produces a bit-identical `SimReport` to the sequential (1-thread)
+/// batched run — epochs are independent and each worker writes
+/// disjoint `[E, ·]` output rows with its own scratch.
+#[test]
+fn run_batched_sharded_analyzer_bit_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let mut cfg = fast_cfg();
+        cfg.analyzer_threads = threads;
+        let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap()
+    };
+    let base = run(1);
+    assert_eq!(base.analyzer_threads_used, 1);
+    for threads in knob_threads(&[2, 8]) {
+        let sharded = run(threads);
+        assert_reports_identical(&base, &sharded, &format!("analyzer_threads={threads}"));
+        assert!(sharded.analyzer_threads_used >= 1);
+    }
+    // 0 = auto (one per core, capped): still identical
+    let auto = run(0);
+    assert_reports_identical(&base, &auto, "analyzer_threads=auto");
+}
+
+/// Same bit-exactness with a live policy stack: both policy phases run
+/// on the coordinator thread (phase-2 at group-flush time), so
+/// sharding the analyzer cannot reorder any policy effect.
+#[test]
+fn run_batched_sharded_analyzer_identical_with_policy_stack() {
+    let run = |threads: usize| {
+        let mut cfg = fast_cfg();
+        cfg.scale = 0.004;
+        cfg.analyzer_threads = threads;
+        cfg.epoch_policy = Some(PolicySpec::parse("hotness:1,prefetch:0.5").unwrap());
+        let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap()
+    };
+    let base = run(1);
+    assert!(base.migrations > 0, "hotness:1 on zipfian must migrate");
+    for threads in knob_threads(&[2, 8]) {
+        let sharded = run(threads);
+        assert_reports_identical(
+            &base,
+            &sharded,
+            &format!("policy stack, analyzer_threads={threads}"),
+        );
     }
 }
 

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the hotpath perf trajectory.
+
+Diffs a fresh smoke-mode ``BENCH_hotpath.json`` (written by
+``cargo bench --bench hotpath`` with ``HOTPATH_SMOKE=1``) against the
+committed ``rust/BENCH_baseline.json`` and fails (exit 1) when any
+gated metric regressed by more than ``--tolerance`` (default 25%).
+
+Gated entries / metrics (the hot paths named in ROADMAP):
+
+  bins_record      bulk_recs_per_s            higher is better
+  batch_analyze    fused_epochs_per_s         higher is better
+  multihost_epoch  pooled_epochs_per_s        higher is better
+  policy_epoch     empty_stack_ns_per_epoch   lower is better
+  policy_epoch     full_stack_ns_per_epoch    lower is better
+
+A missing gated entry or metric in either file is a hard failure:
+schema drift must be an explicit decision (refresh the baseline with
+``--update``), never a silently skipped gate.
+
+Refreshing the baseline from a CI run:
+
+  HOTPATH_SMOKE=1 cargo bench --bench hotpath       # in rust/
+  python3 ../tools/bench_gate.py --baseline BENCH_baseline.json \
+      --fresh BENCH_hotpath.json --update
+
+and commit the rewritten ``rust/BENCH_baseline.json``. The initial
+committed baseline is seeded with deliberately conservative numbers
+(marked ``"seeded_conservative": true``) so the gate passes on any
+healthy runner until a real CI run replaces it.
+"""
+
+import argparse
+import json
+import shutil
+import sys
+
+# entry name -> [(metric, direction)]
+GATES = {
+    "bins_record": [("bulk_recs_per_s", "higher")],
+    "batch_analyze": [("fused_epochs_per_s", "higher")],
+    "multihost_epoch": [("pooled_epochs_per_s", "higher")],
+    "policy_epoch": [
+        ("empty_stack_ns_per_epoch", "lower"),
+        ("full_stack_ns_per_epoch", "lower"),
+    ],
+}
+
+
+def load_entries(path):
+    with open(path) as f:
+        doc = json.load(f)
+    entries = {}
+    for item in doc.get("results", []):
+        name = item.get("name")
+        if name not in entries:  # first occurrence wins (names are unique today)
+            entries[name] = item.get("data", {})
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed BENCH_baseline.json")
+    ap.add_argument("--fresh", required=True, help="freshly produced BENCH_hotpath.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed fractional slowdown before failing (default 0.25 = 25%%)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy the fresh file over the baseline instead of gating",
+    )
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated: {args.fresh} -> {args.baseline}")
+        return 0
+
+    base = load_entries(args.baseline)
+    fresh = load_entries(args.fresh)
+    failures = []
+    rows = []
+    for name, metrics in GATES.items():
+        for metric, direction in metrics:
+            if name not in base or metric not in base[name]:
+                failures.append(f"{name}.{metric}: missing from baseline")
+                continue
+            if name not in fresh or metric not in fresh[name]:
+                failures.append(f"{name}.{metric}: missing from fresh results")
+                continue
+            b, f = float(base[name][metric]), float(fresh[name][metric])
+            if b <= 0 or f <= 0:
+                failures.append(f"{name}.{metric}: non-positive value (base={b}, fresh={f})")
+                continue
+            # slowdown > 1.0 means the fresh run is worse than baseline
+            slowdown = (b / f) if direction == "higher" else (f / b)
+            ok = slowdown <= 1.0 + args.tolerance
+            rows.append((name, metric, direction, b, f, slowdown, ok))
+            if not ok:
+                failures.append(
+                    f"{name}.{metric}: {slowdown:.2f}x slowdown "
+                    f"(baseline {b:.4g}, fresh {f:.4g}, direction {direction})"
+                )
+
+    width = max((len(f"{n}.{m}") for n, m, *_ in rows), default=20)
+    print(f"bench gate (tolerance: {args.tolerance:.0%} slowdown)")
+    for name, metric, direction, b, f, slowdown, ok in rows:
+        verdict = "ok  " if ok else "FAIL"
+        print(
+            f"  {verdict} {f'{name}.{metric}':<{width}}  "
+            f"baseline {b:>12.4g}  fresh {f:>12.4g}  slowdown {slowdown:5.2f}x ({direction})"
+        )
+    if failures:
+        print("\nbench gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
