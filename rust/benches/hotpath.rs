@@ -29,12 +29,12 @@
 
 use cxlmemsim::alloctrack::AllocTracker;
 use cxlmemsim::cache::CacheHierarchy;
-use cxlmemsim::coordinator::{Coordinator, SimConfig};
+use cxlmemsim::coordinator::{run_batched, Coordinator, SimConfig};
 use cxlmemsim::multihost::run_shared_threads;
 use cxlmemsim::prelude::*;
 use cxlmemsim::runtime::native::{NativeAnalyzer, NativeBatchAnalyzer};
 use cxlmemsim::runtime::shapes;
-use cxlmemsim::runtime::{BatchTimingModel, TimingInputs, TimingModel};
+use cxlmemsim::runtime::{BatchTimingModel, ScanKernel, TimingInputs, TimingModel};
 use cxlmemsim::trace::binning::{BinDelta, EpochBins};
 use cxlmemsim::trace::{AllocEvent, AllocKind};
 use cxlmemsim::util::benchutil::{bench, fmt_secs};
@@ -248,6 +248,38 @@ fn main() {
         json::obj(vec![("mean_s", json::num(s.mean_s))]),
     ));
 
+    // --- scan kernels: exact reference vs blocked max-plus ---------
+    // same inputs at the full NUM_BINS=256 shape; `exact` is the
+    // golden-pinned scalar recurrence, `blocked` the SIMD-friendly
+    // max-plus block scan (tolerance-equal, see native.rs)
+    {
+        let mut exact = NativeAnalyzer::with_kernel(&tensors, nbins, ScanKernel::Exact);
+        let s = bench("scan exact", it(50), it(500), || {
+            exact.analyze(&inp()).unwrap();
+        });
+        let exact_rate = 1.0 / s.mean_s;
+        let mut blocked = NativeAnalyzer::with_kernel(&tensors, nbins, ScanKernel::Blocked);
+        let s = bench("scan blocked", it(50), it(500), || {
+            blocked.analyze(&inp()).unwrap();
+        });
+        let blocked_rate = 1.0 / s.mean_s;
+        println!(
+            "scan kernel (B={nbins}):  exact {:>8.0} calls/s | blocked {:>8.0} calls/s ({:.2}x)",
+            exact_rate,
+            blocked_rate,
+            blocked_rate / exact_rate
+        );
+        results.push((
+            "scan_kernel",
+            json::obj(vec![
+                ("nbins", json::num(nbins as f64)),
+                ("exact_calls_per_s", json::num(exact_rate)),
+                ("blocked_calls_per_s", json::num(blocked_rate)),
+                ("speedup", json::num(blocked_rate / exact_rate)),
+            ]),
+        ));
+    }
+
     // --- batched analysis: fused kernel vs E scalar calls --------
     let e = shapes::BATCH;
     let mut batcher = NativeBatchAnalyzer::new(&tensors, nbins, e);
@@ -271,9 +303,21 @@ fn main() {
         }
     });
     let scalar_rate = e as f64 / s.mean_s;
+    // same batch through the blocked kernel (the shipping default)
+    let mut blocked_batcher =
+        NativeBatchAnalyzer::with_kernel(&tensors, nbins, e, 1, ScanKernel::Blocked);
+    let s = bench("native batch blocked", it(20), it(200), || {
+        blocked_batcher.analyze_batch(&breads, &bwrites, 3906.25, 64.0).unwrap();
+    });
+    let blocked_rate = e as f64 / s.mean_s;
     println!(
-        "batch analyze ({e:>2}/call): scalar {:>8.0} ep/s | fused {:>8.0} ep/s ({:.2}x)",
-        scalar_rate, fused_rate, fused_rate / scalar_rate
+        "batch analyze ({e:>2}/call): scalar {:>8.0} ep/s | fused {:>8.0} ep/s ({:.2}x) | \
+         blocked {:>8.0} ep/s ({:.2}x vs exact)",
+        scalar_rate,
+        fused_rate,
+        fused_rate / scalar_rate,
+        blocked_rate,
+        blocked_rate / fused_rate
     );
     results.push((
         "batch_analyze",
@@ -282,6 +326,8 @@ fn main() {
             ("scalar_epochs_per_s", json::num(scalar_rate)),
             ("fused_epochs_per_s", json::num(fused_rate)),
             ("speedup", json::num(fused_rate / scalar_rate)),
+            ("blocked_epochs_per_s", json::num(blocked_rate)),
+            ("kernel_speedup", json::num(blocked_rate / fused_rate)),
         ]),
     ));
 
@@ -294,39 +340,103 @@ fn main() {
         let mut r = Rng::new(6);
         let sreads: Vec<f32> = (0..se * n).map(|_| r.below(20) as f32).collect();
         let swrites: Vec<f32> = (0..se * n).map(|_| r.below(10) as f32).collect();
-        let mut per_thread: Vec<(usize, f64)> = Vec::new();
+        // both kernels per thread count: the sharding speedup and the
+        // blocked-kernel speedup compound (per-epoch work shrinks)
+        let mut per_thread: Vec<(usize, f64, f64)> = Vec::new();
         for threads in [1usize, 2, 4] {
             let mut an = NativeBatchAnalyzer::with_threads(&tensors, nbins, se, threads);
             let s = bench(&format!("sharded batch x{threads}"), it(10), it(100), || {
                 an.analyze_batch(&sreads, &swrites, 3906.25, 64.0).unwrap();
             });
-            per_thread.push((threads, se as f64 / s.mean_s));
+            let exact_rate = se as f64 / s.mean_s;
+            let mut an = NativeBatchAnalyzer::with_kernel(
+                &tensors,
+                nbins,
+                se,
+                threads,
+                ScanKernel::Blocked,
+            );
+            let s = bench(&format!("sharded blocked x{threads}"), it(10), it(100), || {
+                an.analyze_batch(&sreads, &swrites, 3906.25, 64.0).unwrap();
+            });
+            per_thread.push((threads, exact_rate, se as f64 / s.mean_s));
         }
         let base = per_thread[0].1;
         let parts: Vec<String> = per_thread
             .iter()
-            .map(|(t, rate)| format!("{t}T {rate:>8.0} ep/s ({:.2}x)", rate / base))
+            .map(|(t, rate, brate)| {
+                format!("{t}T {rate:>8.0}/{brate:>8.0} ep/s ({:.2}x)", brate / base)
+            })
             .collect();
-        println!("batch shard ({se:>3}/call): {}", parts.join(" | "));
+        println!("batch shard ({se:>3}/call, exact/blocked): {}", parts.join(" | "));
         results.push((
             "batch_analyze_sharded",
             json::obj(vec![
                 ("batch", json::num(se as f64)),
+                ("kernel_speedup", json::num(per_thread[0].2 / per_thread[0].1)),
                 (
                     "per_thread",
                     Json::Arr(
                         per_thread
                             .iter()
-                            .map(|(t, rate)| {
+                            .map(|(t, rate, brate)| {
                                 json::obj(vec![
                                     ("threads", json::num(*t as f64)),
                                     ("epochs_per_s", json::num(*rate)),
                                     ("speedup", json::num(*rate / base)),
+                                    ("blocked_epochs_per_s", json::num(*brate)),
+                                    ("blocked_speedup", json::num(*brate / base)),
                                 ])
                             })
                             .collect(),
                     ),
                 ),
+            ]),
+        ));
+    }
+
+    // --- batched replay: native group size 16 vs 256 --------------
+    // the offline-replay regime the `--batch-group` knob exists for:
+    // a larger native group hands the sharded analyzer more epochs per
+    // fan-out, amortizing the per-call worker spawn; identical results
+    // (epochs are independent), only epochs/s moves
+    {
+        let run_group = |group: usize| {
+            let mut c = SimConfig::default();
+            c.scale = wl_scale;
+            c.cache_scale = 64;
+            c.backend = AnalyzerBackend::Native;
+            c.epoch_ms = 0.05;
+            c.analyzer_threads = 4;
+            c.batch_group = group;
+            let mut wl = workload::by_name("mcf_like", c.scale, 7).unwrap();
+            run_batched(&topo, &c, wl.as_mut()).unwrap()
+        };
+        let measure = |group: usize| {
+            let mut best = 0.0f64;
+            let mut epochs = 0u64;
+            for _ in 0..it(10).max(3) {
+                let rep = run_group(group);
+                epochs = rep.epochs_run;
+                best = best.max(rep.epochs_run as f64 / rep.wall_s);
+            }
+            (best, epochs)
+        };
+        let (rate16, epochs16) = measure(16);
+        let (rate256, epochs256) = measure(256);
+        assert_eq!(epochs16, epochs256, "group size must not change the simulation");
+        println!(
+            "replay group:         16/call {rate16:>8.0} ep/s | 256/call {rate256:>8.0} ep/s \
+             ({:.2}x)",
+            rate256 / rate16
+        );
+        results.push((
+            "replay_group",
+            json::obj(vec![
+                ("epochs", json::num(epochs16 as f64)),
+                ("group16_epochs_per_s", json::num(rate16)),
+                ("group256_epochs_per_s", json::num(rate256)),
+                ("speedup", json::num(rate256 / rate16)),
             ]),
         ));
     }

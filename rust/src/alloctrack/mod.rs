@@ -117,6 +117,10 @@ pub struct AllocTracker {
     num_pools: usize,
     /// Next allocation generation for `Region::id`.
     next_id: u64,
+    /// Per-epoch multiplicative heat decay in [0, 1]; 1.0 (default)
+    /// keeps counters lifetime-cumulative. Applied by
+    /// [`AllocTracker::decay_heat`], which drivers call once per epoch.
+    heat_decay: f64,
 }
 
 impl AllocTracker {
@@ -131,7 +135,14 @@ impl AllocTracker {
             stats: TrackerStats { pool_bytes: vec![0; num_pools], ..Default::default() },
             num_pools,
             next_id: 0,
+            heat_decay: 1.0,
         }
+    }
+
+    /// Set the per-epoch multiplicative heat decay (clamped to
+    /// [0, 1]; 1.0 = no decay, the lifetime-cumulative default).
+    pub fn set_heat_decay(&mut self, decay: f64) {
+        self.heat_decay = decay.clamp(0.0, 1.0);
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -312,6 +323,26 @@ impl AllocTracker {
     /// picking a victim — O(live regions), off the hot path.
     pub fn sync_heat(&mut self) {
         self.fold_heat();
+    }
+
+    /// Age region heat by one epoch: fold the pending fast-path deltas
+    /// (the sync_heat step — decay rides the same fold), then scale
+    /// every live region's counter by the configured per-epoch decay.
+    /// A no-op at `heat_decay == 1.0`, so default runs stay
+    /// bit-identical to the lifetime-cumulative behavior. Drivers call
+    /// this once per epoch *after* the epoch's policy hooks: the
+    /// current epoch's lookups enter victim selection at full weight,
+    /// and heat from k epochs ago is worth `decay^k` — a formerly-hot,
+    /// now-cold region stops outranking currently-hot ones
+    /// (`crate::policy` tests).
+    pub fn decay_heat(&mut self) {
+        if self.heat_decay >= 1.0 {
+            return;
+        }
+        self.fold_heat();
+        for r in self.regions.values_mut() {
+            r.heat = (r.heat as f64 * self.heat_decay) as u64;
+        }
     }
 
     /// The live region starting exactly at `start`, if any.
@@ -514,6 +545,31 @@ mod tests {
         // sync is idempotent (deltas are zeroed once folded)
         t.sync_heat();
         assert_eq!(t.region_at(0x10000).unwrap().heat, 50);
+    }
+
+    #[test]
+    fn heat_decay_ages_counters_and_default_is_noop() {
+        let mut t = tracker(PolicyKind::CxlOnly);
+        t.on_alloc_event(&ev(AllocKind::Mmap, 0x10000, 1 << 20));
+        for _ in 0..100u64 {
+            t.pool_of(0x10000);
+        }
+        // default (1.0): decay_heat never touches the counters
+        t.decay_heat();
+        t.sync_heat();
+        assert_eq!(t.region_at(0x10000).unwrap().heat, 100, "decay 1.0 must be a no-op");
+        // 0.5 per epoch: halves each call, folding pending deltas first
+        t.set_heat_decay(0.5);
+        t.decay_heat();
+        assert_eq!(t.region_at(0x10000).unwrap().heat, 50);
+        t.pool_of(0x10000); // a fresh delta parked on the flat index
+        t.decay_heat(); // fold (50 + 1 = 51) then decay -> 25
+        assert_eq!(t.region_at(0x10000).unwrap().heat, 25);
+        // decay drives ancient heat all the way to zero
+        for _ in 0..10 {
+            t.decay_heat();
+        }
+        assert_eq!(t.region_at(0x10000).unwrap().heat, 0);
     }
 
     #[test]

@@ -20,6 +20,16 @@
 //! migration traffic apply up to E−1 epochs late — the documented
 //! fidelity trade of batched replay. An empty stack remains
 //! bit-identical to no stack (`tests/pipeline_equivalence.rs`).
+//!
+//! The native group size E is `SimConfig::batch_group`
+//! (`--batch-group`; 0 = `shapes::BATCH` = 16). Without a policy
+//! stack, any group size is bit-identical to any other (epochs are
+//! independent; only the flush cadence changes), so long replays
+//! should run large groups — `--batch-group 256` hands the sharded
+//! analyzer (`--analyzer-threads`) 16× more epochs per fan-out. With a
+//! stack, larger groups stretch the phase-2 lateness window to
+//! E−1 epochs (asserted as the group-size bound in
+//! [`super::driver::BatchedFlush`]); pick the group size accordingly.
 
 use crate::policy::PolicyStack;
 use crate::runtime::{self, shapes};
@@ -63,11 +73,15 @@ pub fn run_batched_with(
         cfg.nbins,
         &cfg.artifacts_dir,
         cfg.analyzer_threads,
+        cfg.scan_kernel,
+        cfg.batch_group,
     )?;
     let mut driver = EpochDriver::new(topo, cfg)?;
 
     let mut report = SimReport::new(wl.name(), &topo.name, model.backend_name(), topo.num_pools());
     report.analyzer_threads_used = model.threads() as u64;
+    report.scan_kernel = model.scan_kernel().name().to_string();
+    report.batch_group = model.batch() as u64;
     let mut flush = BatchedFlush::new(
         model.as_mut(),
         topo.host.cacheline_bytes as f32,

@@ -111,9 +111,13 @@ impl EpochDriver {
             ),
             None => None,
         };
+        let mut tracker = AllocTracker::new(topo, cfg.policy.build(topo));
+        // per-epoch multiplicative heat decay (1.0 = off); applied by
+        // `flush_epoch` after the epoch's policy hooks ran
+        tracker.set_heat_decay(cfg.heat_decay);
         Ok(EpochDriver {
             cache: CacheHierarchy::scaled(cfg.cache_scale),
-            tracker: AllocTracker::new(topo, cfg.policy.build(topo)),
+            tracker,
             bins: EpochBins::new(
                 crate::runtime::shapes::NUM_POOLS,
                 cfg.nbins,
@@ -252,6 +256,13 @@ impl EpochDriver {
         // the strategy sees the complete epoch
         self.scatter_staged();
         flush.on_epoch(&mut self.bins, self.epoch_vtime, &mut self.tracker, report)?;
+        // age region heat by one epoch AFTER the epoch's hooks, so
+        // this epoch's lookups enter victim selection undecayed and
+        // older heat fades exponentially (no-op at heat_decay = 1.0).
+        // Under a grouped flush the phase-2 hooks run at group-flush
+        // time and therefore see heat decayed up to group−1 epochs
+        // further — part of batched replay's documented lateness.
+        self.tracker.decay_heat();
         self.bins.clear();
         self.epoch_vtime = 0.0;
         Ok(())
@@ -516,6 +527,15 @@ impl EpochFlush for BatchedFlush<'_, '_> {
             ep.phase1_stall_ns = stack.take_accrued_stall_ns();
         }
         self.pending.push(ep);
+        // the policy-lateness bound: phase-2 hooks of a parked epoch
+        // run at most group−1 epochs after its boundary, because the
+        // group can never hold more than `batch()` epochs
+        debug_assert!(
+            self.pending.len() <= self.model.batch(),
+            "pending group overflow: {} > {}",
+            self.pending.len(),
+            self.model.batch()
+        );
         if self.pending.len() == self.model.batch() {
             self.flush_group(tracker, report)?;
         }

@@ -93,6 +93,24 @@ pub struct SimConfig {
     /// output rows, so results are bit-identical for every value
     /// (`tests/pipeline_equivalence.rs`); only wall-clock changes.
     pub analyzer_threads: usize,
+    /// Native queueing-scan kernel (`--scan-kernel exact|blocked`).
+    /// `blocked` (default) runs the max-plus block scans — fastest,
+    /// tolerance-equal to the reference; `exact` runs the scalar
+    /// reference recurrences, bit-identical to `artifacts/golden.json`
+    /// (the golden tests and the CI determinism matrix pin it).
+    pub scan_kernel: runtime::ScanKernel,
+    /// Native batched-analyzer group size E (`--batch-group`; `0` =
+    /// `shapes::BATCH` = 16). Long offline replays profit from larger
+    /// groups (the sharded analyzer gets more epochs per fan-out — the
+    /// bench measures 256); the trade is policy phase-2 hooks running
+    /// up to E−1 epochs late at group-flush time (`coordinator::batch`).
+    pub batch_group: usize,
+    /// Per-epoch multiplicative decay applied to region heat counters
+    /// at the epoch boundary (1.0 = no decay, today's lifetime-
+    /// cumulative behavior). Below 1.0, old heat fades exponentially so
+    /// migration policies chase *current* hot regions instead of
+    /// regions that were hot long ago (`AllocTracker::decay_heat`).
+    pub heat_decay: f64,
 }
 
 impl Default for SimConfig {
@@ -117,6 +135,9 @@ impl Default for SimConfig {
             epoch_policy: None,
             mig_stall_ns_per_byte: 0.0625,
             analyzer_threads: 0,
+            scan_kernel: runtime::ScanKernel::default(),
+            batch_group: 0,
+            heat_decay: 1.0,
         }
     }
 }
@@ -146,8 +167,13 @@ impl Coordinator {
         // backlog export defaults off everywhere (hot path stays
         // allocation-light); nothing in the built-in policy engine
         // needs it — opt in through `TimingModel::set_export_backlog`
-        let model =
-            runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
+        let model = runtime::make_analyzer(
+            cfg.backend,
+            &tensors,
+            cfg.nbins,
+            &cfg.artifacts_dir,
+            cfg.scan_kernel,
+        )?;
         let driver = EpochDriver::new(&topo, &cfg)?;
         let stack = cfg
             .epoch_policy
@@ -209,6 +235,7 @@ impl Coordinator {
             self.model.backend_name(),
             self.topo.num_pools(),
         );
+        report.scan_kernel = self.model.scan_kernel().name().to_string();
         self.driver.reset();
         if let Some(stack) = &mut self.stack {
             stack.begin_run(); // per-run policy accounting, like the tracker
@@ -438,6 +465,49 @@ mod tests {
             second.pool_mru_hits,
             lookups
         );
+    }
+
+    #[test]
+    fn scan_kernels_agree_end_to_end_and_are_reported() {
+        // same workload through both kernels: identical event
+        // accounting, delay totals within the blocked kernel's
+        // tolerance, and the kernel name lands in the report
+        let run = |kernel| {
+            let mut cfg = cfg_fast();
+            cfg.scan_kernel = kernel;
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload("zipfian").unwrap()
+        };
+        let exact = run(crate::runtime::ScanKernel::Exact);
+        let blocked = run(crate::runtime::ScanKernel::Blocked);
+        assert_eq!(exact.scan_kernel, "exact");
+        assert_eq!(blocked.scan_kernel, "blocked");
+        assert_eq!(exact.total_misses, blocked.total_misses, "substrate is kernel-blind");
+        assert!(exact.delay_ns > 0.0);
+        let rel = (exact.delay_ns - blocked.delay_ns).abs() / exact.delay_ns;
+        assert!(
+            rel < 1e-5,
+            "kernels drifted: exact {} blocked {} (rel {rel})",
+            exact.delay_ns,
+            blocked.delay_ns
+        );
+    }
+
+    #[test]
+    fn heat_decay_without_policies_changes_nothing() {
+        // heat is only read by migration policies; with no stack
+        // installed a decaying run must match the default bit-for-bit
+        let run = |decay: f64| {
+            let mut cfg = cfg_fast();
+            cfg.heat_decay = decay;
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload("stream").unwrap()
+        };
+        let plain = run(1.0);
+        let decayed = run(0.5);
+        assert_eq!(plain.delay_ns, decayed.delay_ns);
+        assert_eq!(plain.total_misses, decayed.total_misses);
+        assert_eq!(plain.simulated_ns, decayed.simulated_ns);
     }
 
     #[test]

@@ -94,6 +94,14 @@ pub struct SimReport {
     /// per-epoch analyzer, `1` = batched but sequential). Results are
     /// identical for every value — this only records the parallelism.
     pub analyzer_threads_used: u64,
+    /// Queueing-scan kernel the analyzer ran (`"exact"` = golden
+    /// reference order, `"blocked"` = max-plus block scans; empty on
+    /// reports produced without an analyzer).
+    pub scan_kernel: String,
+    /// Native batched-analyzer group size E (`0` = per-epoch run).
+    /// With a policy stack installed, phase-2 hooks ran up to E−1
+    /// epochs late.
+    pub batch_group: u64,
     /// Policy engine (empty without an installed stack): per-policy
     /// outcomes plus the migration cost model's conservation counters
     /// — every migrated byte becomes read traffic on the source pool
@@ -135,6 +143,8 @@ impl SimReport {
             bins_staged: 0,
             bins_bulk_flushes: 0,
             analyzer_threads_used: 0,
+            scan_kernel: String::new(),
+            batch_group: 0,
             policies: Vec::new(),
             migrations: 0,
             migrated_bytes: 0,
@@ -370,6 +380,8 @@ impl SimReport {
             ("bins_staged", json::num(self.bins_staged as f64)),
             ("bins_bulk_flushes", json::num(self.bins_bulk_flushes as f64)),
             ("analyzer_threads_used", json::num(self.analyzer_threads_used as f64)),
+            ("scan_kernel", json::s(&self.scan_kernel)),
+            ("batch_group", json::num(self.batch_group as f64)),
             (
                 "pool_read_misses",
                 json::arr_f64(&self.pool_read_misses.iter().map(|x| *x as f64).collect::<Vec<_>>()),

@@ -51,13 +51,15 @@
 //!   once for both. The `gem5like` detailed baseline keeps its own
 //!   event-accounting loop by design (it models a different machine)
 //!   but adopts the same batched pump.
-//! * **Fused batched analysis** — `NativeAnalyzer` runs its congestion
-//!   and bandwidth queueing scans fused into one pass per active
-//!   switch row, skips all-zero pool columns in the descendant-mask
-//!   matmul, and only stores/exports the backlog profile when an epoch
-//!   policy asked for it; `NativeBatchAnalyzer` drives the same core
-//!   over E epochs with outputs written straight into pre-sized
-//!   `[E, ·]` tensors (no per-epoch allocation).
+//! * **Vectorized analysis** — `NativeAnalyzer` runs its queueing
+//!   scans through one of two kernels (`SimConfig::scan_kernel`): the
+//!   default `blocked` max-plus block scans (SIMD-friendly, see "Hot
+//!   path anatomy") or the `exact` scalar reference; both skip
+//!   all-zero pool columns and only store/export the backlog profile
+//!   when an epoch policy asked for it. `NativeBatchAnalyzer` drives
+//!   the same core over E epochs (`SimConfig::batch_group`; default
+//!   16, 256 profitable for long replays) into pre-sized `[E, ·]`
+//!   tensors (no per-epoch allocation).
 //! * **Work-conserving multihost workers** — the multihost runner
 //!   keeps a persistent worker pool alive across epochs behind a
 //!   `std::sync::Barrier`; each epoch the workers drain a shared
@@ -125,12 +127,36 @@
 //! (MRU hit in the common case) plus a staged bin delta, and the
 //! epoch-boundary check. Everything else — the bulk scatter, the
 //! analyzer call, policy hooks — is amortized per batch or per epoch.
+//!
+//! Inside the analyzer, the last serial structure was the two queueing
+//! recurrences `q_i = max(q_{i-1} + d_i, 0)` — a loop-carried max per
+//! time bin that defeats autovectorization. The default `blocked`
+//! kernel (`runtime::native`, `SimConfig::scan_kernel`) removes it:
+//! per [`runtime::native::SCAN_BLOCK`]-lane block the backlog is
+//! computed branch-free as `q_i = max(P_i − min_{t≤i} P_t, carry +
+//! P_i)` from a log-step prefix sum `P` and prefix min — valid
+//! because the carry (the previous block's last backlog) is always
+//! ≥ 0, which is the **block-boundary invariant**: one scalar f32 is
+//! the only state crossing blocks, so the 4-round shifted-op networks
+//! inside a block vectorize freely. The descendant-mask matmul is
+//! folded into the same block loop, so `ev`, the served stream, and
+//! byte demand stay in registers instead of round-tripping an `[S, B]`
+//! scratch array. The reformulation is associative in exact
+//! arithmetic but *reassociates f32 adds*, so the scalar `exact`
+//! kernel remains in the tree as the reference: it reproduces
+//! `artifacts/golden.json` (and the HLO) bit-for-bit, anchors the CI
+//! determinism matrix, and bounds `blocked` through ULP/relative
+//! differential property tests (`runtime::native` tests,
+//! `tests/pipeline_equivalence.rs`).
+//!
 //! `benches/hotpath.rs` measures each stage against its kept-runnable
 //! baseline (per-event pump vs batched, `pool_of_btree` vs fast path,
-//! `record` vs `record_bulk`, scalar vs fused batch analyze, 1-thread
-//! vs pooled multihost) and writes `BENCH_hotpath.json` so the perf
-//! trajectory is tracked across PRs (CI uploads it per run, in
-//! `HOTPATH_SMOKE` mode).
+//! `record` vs `record_bulk`, scalar vs fused batch analyze, `exact`
+//! vs `blocked` scan kernels, group-16 vs group-256 batched replay,
+//! 1-thread vs pooled multihost) and writes `BENCH_hotpath.json` so
+//! the perf trajectory is tracked across PRs (CI uploads it per run,
+//! in `HOTPATH_SMOKE` mode, and `tools/bench_gate.py` fails >25%
+//! regressions against `rust/BENCH_baseline.json`).
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //!
@@ -163,7 +189,7 @@ pub mod prelude {
     pub use crate::alloctrack::{AllocTracker, PolicyKind};
     pub use crate::coordinator::{Coordinator, SimConfig, SimReport};
     pub use crate::policy::{EpochPolicy, PolicySpec, PolicyStack};
-    pub use crate::runtime::{AnalyzerBackend, TimingInputs, TimingOutputs};
+    pub use crate::runtime::{AnalyzerBackend, ScanKernel, TimingInputs, TimingOutputs};
     pub use crate::topology::{builtin, Topology, TopoTensors};
     pub use crate::workload::{by_name as workload_by_name, Workload, TABLE1_WORKLOADS};
 }

@@ -17,7 +17,7 @@ use cxlmemsim::coordinator::{run_batched, Coordinator, SimConfig};
 use cxlmemsim::gem5like::DetailedSim;
 use cxlmemsim::multihost;
 use cxlmemsim::policy::{PolicySpec, POLICY_REGISTRY};
-use cxlmemsim::runtime::AnalyzerBackend;
+use cxlmemsim::runtime::{AnalyzerBackend, ScanKernel};
 use cxlmemsim::topology::{builtin, Topology};
 use cxlmemsim::trace::io as trace_io;
 use cxlmemsim::util::benchutil::{markdown_table, time_once};
@@ -69,6 +69,12 @@ fn usage() {
                        --batched (run/replay: grouped-analyzer replay driver)\n\
                        --analyzer-threads N (batched: shard the E-epoch analyzer\n\
                          loop; 0 = one per core, results identical for any N)\n\
+                       --batch-group N (batched: epochs per analyzer call;\n\
+                         0 = default 16; policy phase-2 runs up to N-1 epochs late)\n\
+                       --scan-kernel blocked|exact (native queueing scans:\n\
+                         blocked = max-plus SIMD blocks, exact = golden reference)\n\
+                       --heat-decay F (per-epoch region-heat decay in [0,1];\n\
+                         1.0 = lifetime-cumulative)\n\
                        --threads N (multihost: work-stealing host-phase workers)"
     );
 }
@@ -100,6 +106,17 @@ fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
     cfg.keep_epoch_records = args.bool("epoch-records");
     cfg.event_batch = args.usize("event-batch", cfg.event_batch).max(1);
     cfg.analyzer_threads = args.usize("analyzer-threads", cfg.analyzer_threads);
+    cfg.batch_group = args.usize("batch-group", cfg.batch_group);
+    if let Some(k) = args.opt_str("scan-kernel") {
+        cfg.scan_kernel = ScanKernel::parse(&k)
+            .ok_or_else(|| anyhow::anyhow!("bad --scan-kernel `{k}` (blocked|exact)"))?;
+    }
+    cfg.heat_decay = args.f64("heat-decay", cfg.heat_decay);
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.heat_decay),
+        "--heat-decay must be in [0, 1], got {}",
+        cfg.heat_decay
+    );
     if let Some(spec) = args.opt_str("epoch-policy") {
         cfg.epoch_policy = Some(PolicySpec::parse(&spec)?);
     }
@@ -389,6 +406,10 @@ fn cmd_list() -> anyhow::Result<()> {
     println!("topologies: {} (or a path to a .toml)", builtin::BUILTIN_NAMES.join(", "));
     println!("policies:   local, cxl, localfirst, interleave, sizeclass, leastloaded");
     println!("backends:   pjrt (AOT HLO via PJRT), native (pure-rust mirror)");
+    println!(
+        "scan-kernel: blocked (max-plus SIMD blocks, default), exact (golden \
+         reference, bit-identical)"
+    );
     println!("prefetch:   nextline, stride (hardware prefetcher models, --prefetch)");
     println!("epoch-policy stack (--epoch-policy name[:arg],... — two-phase engine):");
     for p in POLICY_REGISTRY {

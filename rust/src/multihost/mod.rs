@@ -305,7 +305,13 @@ pub fn run_shared_threads_with(
         runtime::shapes::NUM_POOLS,
         runtime::shapes::NUM_SWITCHES,
     )?;
-    let mut model = runtime::make_analyzer(cfg.backend, &tensors, cfg.nbins, &cfg.artifacts_dir)?;
+    let mut model = runtime::make_analyzer(
+        cfg.backend,
+        &tensors,
+        cfg.nbins,
+        &cfg.artifacts_dir,
+        cfg.scan_kernel,
+    )?;
     let mut bins = EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns());
 
     let batch = cfg.event_batch.max(1);
@@ -329,10 +335,12 @@ pub fn run_shared_threads_with(
             if let Some(st) = &mut stack {
                 st.begin_run(); // per-run accounting, even for caller-owned stacks
             }
+            let mut tracker = AllocTracker::new(topo, cfg.policy.build(topo));
+            tracker.set_heat_decay(cfg.heat_decay);
             Host {
                 wl,
                 cache: CacheHierarchy::scaled(cfg.cache_scale),
-                tracker: AllocTracker::new(topo, cfg.policy.build(topo)),
+                tracker,
                 bins: EpochBins::new(runtime::shapes::NUM_POOLS, cfg.nbins, cfg.epoch_ns()),
                 staged: Vec::with_capacity(if batch > 1 { batch } else { 0 }),
                 stack,
@@ -572,6 +580,10 @@ pub fn run_shared_threads_with(
                 h.epoch_vtime = 0.0;
                 h.epoch_misses = 0.0;
                 h.bins.clear();
+                // age region heat one epoch after the host's policy
+                // phases (no-op at heat_decay = 1.0), mirroring the
+                // epoch driver's boundary decay
+                h.tracker.decay_heat();
             }
             bins.clear();
             if let Some(max) = cfg.max_epochs {

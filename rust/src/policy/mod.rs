@@ -459,9 +459,31 @@ impl PolicyStack {
 /// One entry of a parsed `--epoch-policy` spec.
 #[derive(Clone, Debug, PartialEq)]
 pub enum PolicySpecEntry {
-    Hotness { patience: u32 },
+    Hotness { patience: u32, budget_bytes: u64 },
     Prefetch { coverage: f32 },
     Rebalance { threshold: f64 },
+}
+
+/// Parse a byte-size spec argument: a plain integer, optionally
+/// suffixed with `K`/`M`/`G` (case-insensitive, powers of 1024) —
+/// `64M` = 64 MiB. Used by the `hotness:<patience>:<budget>` spec.
+pub fn parse_byte_size(s: &str) -> anyhow::Result<u64> {
+    let t = s.trim();
+    let (digits, mult) = match t.chars().last() {
+        Some('K') | Some('k') => (&t[..t.len() - 1], 1u64 << 10),
+        Some('M') | Some('m') => (&t[..t.len() - 1], 1u64 << 20),
+        Some('G') | Some('g') => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t, 1u64),
+    };
+    let v: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad byte size `{s}` (use e.g. 65536, 64K, 64M, 2G)"))?;
+    let bytes = v
+        .checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("byte size `{s}` overflows u64"))?;
+    anyhow::ensure!(bytes > 0, "byte size `{s}` must be > 0");
+    Ok(bytes)
 }
 
 /// A parsed, cloneable policy-stack spec. Lives in `SimConfig` so every
@@ -484,10 +506,12 @@ pub struct PolicyInfo {
 pub const POLICY_REGISTRY: &[PolicyInfo] = &[
     PolicyInfo {
         name: "hotness",
-        arg: "patience",
+        arg: "patience[:budget]",
         default_arg: 3.0,
         help: "promote the hottest region of the dominant CXL pool to local DRAM \
-               after <patience> consecutive dominant epochs",
+               after <patience> consecutive dominant epochs, moving at most \
+               <budget> bytes per run (K/M/G suffixes, e.g. hotness:3:64M; \
+               default unlimited)",
     },
     PolicyInfo {
         name: "prefetch",
@@ -506,8 +530,11 @@ pub const POLICY_REGISTRY: &[PolicyInfo] = &[
 ];
 
 impl PolicySpec {
-    /// Parse a comma-separated stack spec: `name[:arg],name[:arg],...`
-    /// in stack order. Unknown names list the registry.
+    /// Parse a comma-separated stack spec: `name[:arg...],...` in
+    /// stack order. `hotness` takes up to two arguments —
+    /// `hotness:<patience>[:<budget>]`, the budget a byte size with
+    /// optional K/M/G suffix (`hotness:3:64M`). Unknown names list the
+    /// registry.
     pub fn parse(s: &str) -> anyhow::Result<PolicySpec> {
         let mut entries = Vec::new();
         for part in s.split(',') {
@@ -515,10 +542,9 @@ impl PolicySpec {
             if part.is_empty() {
                 continue;
             }
-            let (name, arg) = match part.split_once(':') {
-                Some((n, a)) => (n.trim(), Some(a.trim())),
-                None => (part, None),
-            };
+            let mut it = part.split(':');
+            let name = it.next().unwrap_or("").trim();
+            let args: Vec<&str> = it.map(|a| a.trim()).collect();
             let info = POLICY_REGISTRY
                 .iter()
                 .find(|i| i.name == name)
@@ -529,16 +555,41 @@ impl PolicySpec {
                         known.join(", ")
                     )
                 })?;
-            let val = match arg {
-                Some(a) => a
-                    .parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("bad {} for `{name}`: `{a}`", info.arg))?,
-                None => info.default_arg,
+            let numeric = |a: Option<&&str>| -> anyhow::Result<f64> {
+                match a {
+                    Some(a) => a
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("bad {} for `{name}`: `{a}`", info.arg)),
+                    None => Ok(info.default_arg),
+                }
             };
             entries.push(match name {
-                "hotness" => PolicySpecEntry::Hotness { patience: val.max(1.0) as u32 },
-                "prefetch" => PolicySpecEntry::Prefetch { coverage: val as f32 },
-                "rebalance" => PolicySpecEntry::Rebalance { threshold: val },
+                "hotness" => {
+                    anyhow::ensure!(
+                        args.len() <= 2,
+                        "`hotness` takes at most patience and budget (hotness:3:64M), \
+                         got `{part}`"
+                    );
+                    let patience = numeric(args.first())?.max(1.0) as u32;
+                    let budget_bytes = match args.get(1) {
+                        Some(b) => parse_byte_size(b)?,
+                        None => u64::MAX,
+                    };
+                    PolicySpecEntry::Hotness { patience, budget_bytes }
+                }
+                "prefetch" | "rebalance" => {
+                    anyhow::ensure!(
+                        args.len() <= 1,
+                        "`{name}` takes a single {} argument, got `{part}`",
+                        info.arg
+                    );
+                    let val = numeric(args.first())?;
+                    if name == "prefetch" {
+                        PolicySpecEntry::Prefetch { coverage: val as f32 }
+                    } else {
+                        PolicySpecEntry::Rebalance { threshold: val }
+                    }
+                }
                 _ => unreachable!("registry and match must stay in sync"),
             });
         }
@@ -553,8 +604,8 @@ impl PolicySpec {
         let mut stack = PolicyStack::new(stall_ns_per_byte);
         for e in &self.entries {
             stack.add(match e {
-                PolicySpecEntry::Hotness { patience } => {
-                    Box::new(HotnessMigration::new(*patience, u64::MAX))
+                PolicySpecEntry::Hotness { patience, budget_bytes } => {
+                    Box::new(HotnessMigration::new(*patience, *budget_bytes))
                 }
                 PolicySpecEntry::Prefetch { coverage } => {
                     Box::new(SoftwarePrefetch::new(*coverage))
@@ -1120,7 +1171,7 @@ mod tests {
         assert_eq!(
             spec.entries,
             vec![
-                PolicySpecEntry::Hotness { patience: 2 },
+                PolicySpecEntry::Hotness { patience: 2, budget_bytes: u64::MAX },
                 PolicySpecEntry::Prefetch { coverage: 0.25 },
                 PolicySpecEntry::Rebalance { threshold: 1e6 },
             ]
@@ -1137,9 +1188,133 @@ mod tests {
     #[test]
     fn spec_defaults_and_errors() {
         let spec = PolicySpec::parse("hotness").unwrap();
-        assert_eq!(spec.entries, vec![PolicySpecEntry::Hotness { patience: 3 }]);
+        assert_eq!(
+            spec.entries,
+            vec![PolicySpecEntry::Hotness { patience: 3, budget_bytes: u64::MAX }]
+        );
         assert!(PolicySpec::parse("").is_err(), "empty spec must error");
         assert!(PolicySpec::parse("oracle").is_err(), "unknown name must error");
         assert!(PolicySpec::parse("hotness:fast").is_err(), "bad arg must error");
+    }
+
+    #[test]
+    fn spec_hotness_budget_round_trips() {
+        // the per-run byte budget rides as a third `:` field with
+        // K/M/G units (powers of 1024)
+        let spec = PolicySpec::parse("hotness:3:64M").unwrap();
+        assert_eq!(
+            spec.entries,
+            vec![PolicySpecEntry::Hotness { patience: 3, budget_bytes: 64 << 20 }]
+        );
+        let spec = PolicySpec::parse("hotness:1:2G,prefetch:0.5").unwrap();
+        assert_eq!(
+            spec.entries[0],
+            PolicySpecEntry::Hotness { patience: 1, budget_bytes: 2 << 30 }
+        );
+        let spec = PolicySpec::parse("hotness:5:128k").unwrap();
+        assert_eq!(
+            spec.entries,
+            vec![PolicySpecEntry::Hotness { patience: 5, budget_bytes: 128 << 10 }]
+        );
+        // plain byte counts work too
+        let spec = PolicySpec::parse("hotness:2:4096").unwrap();
+        assert_eq!(
+            spec.entries,
+            vec![PolicySpecEntry::Hotness { patience: 2, budget_bytes: 4096 }]
+        );
+        // errors: bad unit, zero budget, too many fields, non-hotness
+        // policies reject extra fields
+        assert!(PolicySpec::parse("hotness:3:64Q").is_err());
+        assert!(PolicySpec::parse("hotness:3:0").is_err());
+        assert!(PolicySpec::parse("hotness:3:64M:9").is_err());
+        assert!(PolicySpec::parse("prefetch:0.5:64M").is_err());
+        assert!(PolicySpec::parse("rebalance:1e6:2").is_err());
+    }
+
+    #[test]
+    fn parse_byte_size_units() {
+        assert_eq!(parse_byte_size("4096").unwrap(), 4096);
+        assert_eq!(parse_byte_size("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_byte_size("64M").unwrap(), 64 << 20);
+        assert_eq!(parse_byte_size("2g").unwrap(), 2 << 30);
+        assert!(parse_byte_size("").is_err());
+        assert!(parse_byte_size("M").is_err());
+        assert!(parse_byte_size("-1K").is_err());
+        assert!(parse_byte_size("999999999999G").is_err(), "overflow must error");
+    }
+
+    #[test]
+    fn spec_budget_limits_migrated_bytes() {
+        // behavioral round-trip: a parsed 4K budget must stop the
+        // built stack from moving a 1 MB region
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let hot = t.pool_of(0x1000);
+        let bins = bins_hot_on(hot);
+        let mut stack = PolicySpec::parse("hotness:1:4K").unwrap().build(0.0);
+        for _ in 0..5 {
+            stack.before_analysis(&mut bins.clone(), &mut t, 64.0);
+            stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        }
+        assert_eq!(stack.migrations(), 0, "4K budget must block a 1MB move");
+        // and an ample parsed budget allows it
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let hot = t.pool_of(0x1000);
+        let bins = bins_hot_on(hot);
+        let mut stack = PolicySpec::parse("hotness:1:64M").unwrap().build(0.0);
+        stack.before_analysis(&mut bins.clone(), &mut t, 64.0);
+        stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        assert_eq!(stack.migrations(), 1);
+    }
+
+    #[test]
+    fn heat_decay_retires_formerly_hot_victims() {
+        // two regions on the same pool: OLD was hammered long ago,
+        // RECENT is modestly hot right now. With lifetime-cumulative
+        // heat (decay 1.0) the stale counter wins victimhood; with
+        // per-epoch decay the faded region must lose it.
+        let topo = builtin::fig2();
+        let (old_r, recent) = (0x10_0000u64, 0x80_0000u64);
+        let setup = |decay: f64| {
+            let mut t = AllocTracker::new(&topo, PolicyKind::CxlOnly.build(&topo));
+            t.set_heat_decay(decay);
+            for addr in [old_r, recent] {
+                t.on_alloc_event(&AllocEvent {
+                    kind: AllocKind::Mmap,
+                    addr,
+                    len: 1 << 20,
+                    t_ns: 0.0,
+                });
+                assert!(t.migrate_region(addr, 2)); // same pool
+            }
+            // epoch history: OLD is hammered, then many idle epochs
+            for i in 0..400u64 {
+                t.pool_of(old_r + (i % 512) * 64);
+            }
+            for _ in 0..12 {
+                t.decay_heat(); // idle epoch boundaries
+            }
+            // now RECENT warms up
+            for i in 0..30u64 {
+                t.pool_of(recent + (i % 512) * 64);
+            }
+            t
+        };
+        let run_policy = |t: &mut AllocTracker| {
+            let bins = bins_hot_on(2);
+            let mut pol = HotnessMigration::new(1, u64::MAX);
+            let mut c = ctx(t);
+            pol.after_analysis(&bins, &outputs(), &mut c);
+            assert_eq!(pol.migrations(), 1);
+        };
+        // lifetime-cumulative: the stale 400-lookup counter wins
+        let mut t = setup(1.0);
+        run_policy(&mut t);
+        assert_eq!(t.pool_of(old_r), LOCAL_POOL, "without decay old heat wins");
+        assert_eq!(t.pool_of(recent), 2);
+        // decayed: 400 * 0.5^12 rounds to 0, the warm region wins
+        let mut t = setup(0.5);
+        run_policy(&mut t);
+        assert_eq!(t.pool_of(recent), LOCAL_POOL, "decay must retire stale heat");
+        assert_eq!(t.pool_of(old_r), 2, "formerly-hot region must stay put");
     }
 }

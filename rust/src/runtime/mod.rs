@@ -71,6 +71,12 @@ pub trait TimingModel {
     fn switches(&self) -> usize;
     fn nbins(&self) -> usize;
     fn backend_name(&self) -> &'static str;
+    /// Which queueing-scan kernel this model runs (reported in
+    /// `SimReport::scan_kernel`). The default is `Exact` because every
+    /// non-native backend (the AOT HLO) *is* the exact computation.
+    fn scan_kernel(&self) -> ScanKernel {
+        ScanKernel::Exact
+    }
     fn analyze(&mut self, inp: &TimingInputs) -> anyhow::Result<TimingOutputs>;
     /// Whether `analyze` must copy the congestion-backlog profile into
     /// its outputs (epoch policies need it; skipping it saves an 8 KB
@@ -93,6 +99,40 @@ impl AnalyzerBackend {
             "pjrt" => Some(AnalyzerBackend::Pjrt),
             "native" => Some(AnalyzerBackend::Native),
             _ => None,
+        }
+    }
+}
+
+/// Which queueing-scan kernel the native analyzer runs (CLI
+/// `--scan-kernel`). The two kernels compute the same recurrences —
+/// `Exact` with the reference operation order (bit-identical to
+/// `artifacts/golden.json` and the HLO), `Blocked` as max-plus prefix
+/// scans over fixed-width f32 blocks (SIMD-friendly, reassociates
+/// float adds, so outputs agree to ULP/relative tolerance only — see
+/// `NativeAnalyzer::matmul_and_scan_blocked` and the differential
+/// property tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScanKernel {
+    /// Scalar reference recurrences; the golden/bit-identity kernel.
+    Exact,
+    /// Blocked max-plus scans; the default performance kernel.
+    #[default]
+    Blocked,
+}
+
+impl ScanKernel {
+    pub fn parse(s: &str) -> Option<ScanKernel> {
+        match s {
+            "exact" => Some(ScanKernel::Exact),
+            "blocked" => Some(ScanKernel::Blocked),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScanKernel::Exact => "exact",
+            ScanKernel::Blocked => "blocked",
         }
     }
 }
@@ -136,6 +176,11 @@ pub trait BatchTimingModel {
     fn threads(&self) -> usize {
         1
     }
+    /// Which queueing-scan kernel this model runs (see
+    /// [`TimingModel::scan_kernel`]).
+    fn scan_kernel(&self) -> ScanKernel {
+        ScanKernel::Exact
+    }
     fn backend_name(&self) -> &'static str;
     /// `reads`/`writes` are [E, P, B] flattened with E == `batch()`.
     fn analyze_batch(
@@ -148,17 +193,20 @@ pub trait BatchTimingModel {
 }
 
 /// Construct a timing model for `tensors` with `nbins` time bins.
-/// `artifacts_dir` is only read for the PJRT backend.
+/// `artifacts_dir` is only read for the PJRT backend. `kernel` selects
+/// the native queueing-scan kernel; the PJRT backend ignores it (the
+/// AOT HLO *is* the exact reference computation).
 pub fn make_analyzer(
     backend: AnalyzerBackend,
     tensors: &TopoTensors,
     nbins: usize,
     artifacts_dir: &str,
+    kernel: ScanKernel,
 ) -> anyhow::Result<Box<dyn TimingModel>> {
     match backend {
         AnalyzerBackend::Native => {
             let _ = artifacts_dir;
-            Ok(Box::new(native::NativeAnalyzer::new(tensors, nbins)))
+            Ok(Box::new(native::NativeAnalyzer::with_kernel(tensors, nbins, kernel)))
         }
         #[cfg(feature = "pjrt")]
         AnalyzerBackend::Pjrt => {
@@ -175,23 +223,31 @@ pub fn make_analyzer(
 /// Construct a batched analyzer (E epochs per call) for offline
 /// replay. `threads` shards the native backend's E-epoch loop
 /// (`0` = one worker per core, `1` = sequential); results are
-/// bit-identical for every value. PJRT manages its own intra-op
-/// parallelism and ignores the knob.
+/// bit-identical for every value. `group` is the native group size E
+/// (`0` = [`shapes::BATCH`]); larger groups hand the sharded analyzer
+/// more epochs per call, at the cost of policy phase-2 hooks running
+/// up to `group − 1` epochs late (see `coordinator::batch`). PJRT
+/// manages its own intra-op parallelism, uses its artifact's fixed
+/// batch, and runs the exact HLO computation — it ignores `threads`,
+/// `group`, and `kernel`.
 pub fn make_batch_analyzer(
     backend: AnalyzerBackend,
     tensors: &TopoTensors,
     nbins: usize,
     artifacts_dir: &str,
     threads: usize,
+    kernel: ScanKernel,
+    group: usize,
 ) -> anyhow::Result<Box<dyn BatchTimingModel>> {
     match backend {
         AnalyzerBackend::Native => {
             let _ = artifacts_dir;
-            Ok(Box::new(native::NativeBatchAnalyzer::with_threads(
+            Ok(Box::new(native::NativeBatchAnalyzer::with_kernel(
                 tensors,
                 nbins,
-                shapes::BATCH,
+                shapes::resolve_batch(group),
                 threads,
+                kernel,
             )))
         }
         #[cfg(feature = "pjrt")]
@@ -215,5 +271,17 @@ mod tests {
         assert_eq!(AnalyzerBackend::parse("pjrt"), Some(AnalyzerBackend::Pjrt));
         assert_eq!(AnalyzerBackend::parse("native"), Some(AnalyzerBackend::Native));
         assert_eq!(AnalyzerBackend::parse("tpu"), None);
+    }
+
+    #[test]
+    fn scan_kernel_parse_and_default() {
+        assert_eq!(ScanKernel::parse("exact"), Some(ScanKernel::Exact));
+        assert_eq!(ScanKernel::parse("blocked"), Some(ScanKernel::Blocked));
+        assert_eq!(ScanKernel::parse("simd"), None);
+        // the performance kernel is the default; `exact` stays the
+        // opt-in golden reference
+        assert_eq!(ScanKernel::default(), ScanKernel::Blocked);
+        assert_eq!(ScanKernel::Exact.name(), "exact");
+        assert_eq!(ScanKernel::Blocked.name(), "blocked");
     }
 }

@@ -1,12 +1,26 @@
 //! Pure-rust mirror of the AOT timing analyzer.
 //!
-//! Implements exactly the math of `python/compile/model.py` (and its
-//! oracle `kernels/ref.py`): latency dot products, the descendant-mask
-//! matmul, and the two queueing scans — fused here into a single pass
-//! per switch row, with all-zero pool columns skipped. f32 arithmetic
-//! produces every value with the same operations in the same order as
-//! the HLO so results agree to float tolerance — verified against
-//! `artifacts/golden.json` in `rust/tests/golden.rs`.
+//! Implements the math of `python/compile/model.py` (and its oracle
+//! `kernels/ref.py`): latency dot products, the descendant-mask
+//! matmul, and the two queueing scans. Two scan kernels are available
+//! ([`super::ScanKernel`]):
+//!
+//! * **`exact`** — the scalar reference: scans fused into a single
+//!   pass per switch row, every f32 value produced by the same
+//!   operations in the same order as the HLO, so results agree with
+//!   `artifacts/golden.json` bit-for-bit (`rust/tests/golden.rs`).
+//!   This is the golden/bit-identity kernel and the differential
+//!   baseline.
+//! * **`blocked`** (default) — the same recurrences reformulated as
+//!   max-plus prefix scans over fixed-width f32 blocks
+//!   ([`SCAN_BLOCK`] lanes): within a block the backlog is computed
+//!   branch-free from a log-step prefix sum + prefix min, with one
+//!   scalar carry across block boundaries; the descendant-mask matmul
+//!   is folded into the same block loop so `ev`, `served`, and byte
+//!   demand never round-trip through the `[S, B]` scratch array.
+//!   Reassociates float adds, so outputs match `exact` only to ULP /
+//!   relative tolerance (property-tested below and in
+//!   `tests/pipeline_equivalence.rs`).
 //!
 //! This backend is also the performance fast path: for the default
 //! (P=8, S=8, B=256) shapes one invocation is a few microseconds, so
@@ -14,13 +28,20 @@
 
 use crate::topology::TopoTensors;
 
-use super::{BatchOutputs, BatchTimingModel, TimingInputs, TimingModel, TimingOutputs};
+use super::{BatchOutputs, BatchTimingModel, ScanKernel, TimingInputs, TimingModel, TimingOutputs};
+
+/// Lane width of the blocked max-plus scan kernel: 16 f32 = one
+/// AVX-512 vector (two AVX2 vectors); the log-step prefix networks are
+/// 4 shifted-op rounds. Any nbins works — a short tail block runs the
+/// same code with inert zero padding.
+pub const SCAN_BLOCK: usize = 16;
 
 #[derive(Clone)]
 pub struct NativeAnalyzer {
     pools: usize,
     switches: usize,
     nbins: usize,
+    kernel: ScanKernel,
     extra_rd: Vec<f32>,
     extra_wr: Vec<f32>,
     desc_mask: Vec<f32>,
@@ -36,6 +57,9 @@ pub struct NativeAnalyzer {
     /// masked matmul skips their columns (histograms are event counts,
     /// so a zero sum means a zero row and skipping is bit-exact).
     pool_zero: Vec<bool>,
+    /// Per-row live `(mask, pool)` columns for the blocked kernel
+    /// (rebuilt per row; reused so the hot loop allocates nothing).
+    live_cols: Vec<(f32, usize)>,
     /// Copy the backlog profile into the outputs. Off by default to
     /// keep the hot path allocation-light; `Coordinator` turns it on
     /// when an epoch policy is installed (policies read the profile).
@@ -43,7 +67,14 @@ pub struct NativeAnalyzer {
 }
 
 impl NativeAnalyzer {
+    /// Reference analyzer: the `exact` scalar kernel, bit-identical to
+    /// the golden vectors. Drivers construct the default `blocked`
+    /// performance kernel through [`NativeAnalyzer::with_kernel`].
     pub fn new(t: &TopoTensors, nbins: usize) -> NativeAnalyzer {
+        NativeAnalyzer::with_kernel(t, nbins, ScanKernel::Exact)
+    }
+
+    pub fn with_kernel(t: &TopoTensors, nbins: usize, kernel: ScanKernel) -> NativeAnalyzer {
         let active_rows: Vec<usize> = (0..t.switches)
             .filter(|&s| {
                 (0..t.pools).any(|p| t.desc_mask[s * t.pools + p] != 0.0)
@@ -56,6 +87,7 @@ impl NativeAnalyzer {
             pools: t.pools,
             switches: t.switches,
             nbins,
+            kernel,
             extra_rd: t.extra_read_lat.clone(),
             extra_wr: t.extra_write_lat.clone(),
             desc_mask: t.desc_mask.clone(),
@@ -64,8 +96,14 @@ impl NativeAnalyzer {
             ev: vec![0.0; t.switches * nbins],
             cong_backlog: vec![0.0; t.switches * nbins],
             pool_zero: vec![false; t.pools],
+            live_cols: Vec::with_capacity(t.pools),
             export_backlog: false,
         }
+    }
+
+    /// The scan kernel this analyzer runs.
+    pub fn kernel(&self) -> ScanKernel {
+        self.kernel
     }
 
     /// Borrow the last epoch's backlog profile without copying. Only
@@ -79,19 +117,20 @@ impl NativeAnalyzer {
     /// slices — shared by the per-epoch [`TimingModel::analyze`] and
     /// the batched kernel so both are bit-identical by construction:
     ///
-    /// 1. latency dot products (also yields the sparse-pool mask);
+    /// 1. latency dot products (also yields the sparse-pool mask) —
+    ///    kernel-independent, always the reference operation order;
     /// 2. descendant-mask matmul `ev[s,b]`, active rows × live pools;
-    /// 3. congestion + bandwidth queueing scans, fused into ONE pass
-    ///    over each active switch row (the bandwidth scan needs only
-    ///    the current and previous backlog values, which the fused
-    ///    loop carries in registers instead of re-reading an [S, B]
-    ///    scratch array).
+    /// 3. congestion + bandwidth queueing scans.
     ///
-    /// Every f32 value is produced by the same operations in the same
-    /// order as the unfused reference (`kernels/ref.py`), so outputs
-    /// stay bit-identical — asserted against `artifacts/golden.json`
-    /// in `rust/tests/golden.rs` and across paths in
-    /// `tests/pipeline_equivalence.rs`.
+    /// Stages 2 + 3 dispatch on the configured [`ScanKernel`]: the
+    /// `exact` kernel fuses both scans into one reference-ordered pass
+    /// per active row (every f32 produced by the same operations in
+    /// the same order as `kernels/ref.py`, so outputs are bit-identical
+    /// to `artifacts/golden.json` — `rust/tests/golden.rs`); the
+    /// `blocked` kernel runs the max-plus block formulation
+    /// (tolerance-equal, see [`NativeAnalyzer::matmul_and_scan_blocked`]).
+    /// For a fixed kernel, per-epoch and batched paths agree
+    /// bit-for-bit (`tests/pipeline_equivalence.rs`).
     fn analyze_core(
         &mut self,
         reads: &[f32],
@@ -130,6 +169,47 @@ impl NativeAnalyzer {
             return 0.0;
         }
 
+        match self.kernel {
+            ScanKernel::Exact => self.matmul_and_scan_exact(
+                reads,
+                writes,
+                bin_width,
+                bytes_per_ev,
+                cong,
+                bwd,
+                store_backlog,
+            ),
+            ScanKernel::Blocked => self.matmul_and_scan_blocked(
+                reads,
+                writes,
+                bin_width,
+                bytes_per_ev,
+                cong,
+                bwd,
+                store_backlog,
+            ),
+        }
+
+        // three partial sums added together, matching the reference's
+        // reduction order exactly
+        lat.iter().map(|x| *x as f64).sum::<f64>()
+            + cong.iter().map(|x| *x as f64).sum::<f64>()
+            + bwd.iter().map(|x| *x as f64).sum::<f64>()
+    }
+
+    /// Stages 2 + 3, `exact` kernel: the reference operation order.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_and_scan_exact(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        bin_width: f32,
+        bytes_per_ev: f32,
+        cong: &mut [f32],
+        bwd: &mut [f32],
+        store_backlog: bool,
+    ) {
+        let (p, b) = (self.pools, self.nbins);
         // 2. ev[s, b] = desc_mask @ (reads + writes), active rows ×
         // pools with traffic only
         self.ev.fill(0.0);
@@ -201,12 +281,169 @@ impl NativeAnalyzer {
                 0.0
             };
         }
+    }
 
-        // three partial sums added together, matching the reference's
-        // reduction order exactly
-        lat.iter().map(|x| *x as f64).sum::<f64>()
-            + cong.iter().map(|x| *x as f64).sum::<f64>()
-            + bwd.iter().map(|x| *x as f64).sum::<f64>()
+    /// Stages 2 + 3, `blocked` kernel: per active row, the matmul and
+    /// both queueing scans run block-by-block ([`SCAN_BLOCK`] f32
+    /// lanes) so `ev`, `served`, and byte demand stay in registers —
+    /// the `[S, B]` `ev` scratch array is never touched. The backlog
+    /// recurrence `q_i = max(q_{i-1} + d_i, 0)` is evaluated per block
+    /// as the max-plus scan identity
+    ///
+    /// ```text
+    /// q_i = max(P_i − min_{t ≤ i} P_t,  carry + P_i)
+    /// ```
+    ///
+    /// with `P` the block's inclusive prefix sum of the deltas
+    /// (computed by a log-step network, like the prefix min). The
+    /// identity requires `carry ≥ 0`, which holds because backlogs are
+    /// clamped at zero; the carry out of a block is its last lane's
+    /// backlog — the only value that crosses a block boundary, and the
+    /// invariant that makes the blocks independent. Associative in
+    /// exact arithmetic; in f32 the reassociated adds make this kernel
+    /// tolerance-equal (not bit-equal) to `exact`.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_and_scan_blocked(
+        &mut self,
+        reads: &[f32],
+        writes: &[f32],
+        bin_width: f32,
+        bytes_per_ev: f32,
+        cong: &mut [f32],
+        bwd: &mut [f32],
+        store_backlog: bool,
+    ) {
+        let (p, b) = (self.pools, self.nbins);
+        let epoch_len = bin_width * b as f32;
+        for &sw in &self.active_rows {
+            let stt = self.stt[sw];
+            let bw = self.bw[sw];
+            let cap = bw * bin_width;
+            // live (mask, pool) columns for this row — mask zeros and
+            // all-zero pools contribute nothing, exactly like `exact`
+            self.live_cols.clear();
+            for pool in 0..p {
+                let m = self.desc_mask[sw * p + pool];
+                if m != 0.0 && !self.pool_zero[pool] {
+                    self.live_cols.push((m, pool));
+                }
+            }
+            let mut qc_carry = 0.0f32; // congestion backlog across blocks
+            let mut qb_carry = 0.0f32; // bandwidth backlog across blocks
+            let mut qcsum = 0.0f32;
+            let mut qbsum = 0.0f32;
+            let mut start = 0usize;
+            while start < b {
+                let w = SCAN_BLOCK.min(b - start);
+                // matmul block: ev over the live columns only
+                let mut evb = [0.0f32; SCAN_BLOCK];
+                for &(m, pool) in &self.live_cols {
+                    let r = &reads[pool * b + start..pool * b + start + w];
+                    let wv = &writes[pool * b + start..pool * b + start + w];
+                    for i in 0..w {
+                        evb[i] += m * (r[i] + wv[i]);
+                    }
+                }
+                // congestion deltas + max-plus block scan
+                let mut d = [0.0f32; SCAN_BLOCK];
+                for i in 0..w {
+                    d[i] = evb[i] * stt - bin_width;
+                }
+                let mut qc = [0.0f32; SCAN_BLOCK];
+                maxplus_block(&d, qc_carry, &mut qc);
+                let mut bsum = 0.0f32;
+                for i in 0..w {
+                    bsum += qc[i];
+                }
+                qcsum += bsum;
+                if store_backlog {
+                    self.cong_backlog[sw * b + start..sw * b + start + w]
+                        .copy_from_slice(&qc[..w]);
+                }
+                // served stream + byte-demand deltas (the previous
+                // lane's backlog is a shift, not a recurrence)
+                let mut d2 = [0.0f32; SCAN_BLOCK];
+                if stt > 0.0 {
+                    for i in 0..w {
+                        let prev = if i == 0 { qc_carry } else { qc[i - 1] };
+                        let served = (evb[i] * stt + prev - qc[i]) / stt;
+                        d2[i] = served * bytes_per_ev - cap;
+                    }
+                } else {
+                    for i in 0..w {
+                        d2[i] = evb[i] * bytes_per_ev - cap;
+                    }
+                }
+                let mut qb = [0.0f32; SCAN_BLOCK];
+                maxplus_block(&d2, qb_carry, &mut qb);
+                let mut bsum = 0.0f32;
+                for i in 0..w {
+                    bsum += qb[i];
+                }
+                qbsum += bsum;
+                qc_carry = qc[w - 1];
+                qb_carry = qb[w - 1];
+                start += w;
+            }
+            cong[sw] = if stt > 0.0 {
+                qc_carry + (qcsum * (bin_width / stt)).min(epoch_len)
+            } else {
+                0.0
+            };
+            bwd[sw] = if bw > 0.0 {
+                qb_carry / bw + (qbsum * (bin_width / bytes_per_ev)).min(epoch_len)
+            } else {
+                0.0
+            };
+        }
+    }
+}
+
+/// In-place inclusive prefix sum over one scan block, as a log-step
+/// (Hillis–Steele) network: each round adds a lane shifted by `off`,
+/// doubling `off` — 4 rounds for 16 lanes, each round a contiguous,
+/// dependency-free lane range (the downward walk reads only
+/// not-yet-updated lanes), which is what lets the compiler keep the
+/// whole block in vector registers.
+#[inline(always)]
+fn prefix_sum_block(v: &mut [f32; SCAN_BLOCK]) {
+    let mut off = 1;
+    while off < SCAN_BLOCK {
+        for i in (off..SCAN_BLOCK).rev() {
+            v[i] += v[i - off];
+        }
+        off <<= 1;
+    }
+}
+
+/// In-place inclusive prefix **min** over one scan block (same
+/// log-step network as [`prefix_sum_block`], with `min` as the
+/// combiner).
+#[inline(always)]
+fn prefix_min_block(v: &mut [f32; SCAN_BLOCK]) {
+    let mut off = 1;
+    while off < SCAN_BLOCK {
+        for i in (off..SCAN_BLOCK).rev() {
+            v[i] = v[i].min(v[i - off]);
+        }
+        off <<= 1;
+    }
+}
+
+/// One max-plus block step: given per-lane deltas `d` and the carry-in
+/// backlog (which must be ≥ 0 — true for zero-clamped queue
+/// backlogs), produce per-lane backlogs `q_i = max(q_{i-1} + d_i, 0)`
+/// branch-free via `q_i = max(P_i − min_{t≤i} P_t, carry + P_i)`.
+/// Unused tail lanes (short final block) compute garbage that callers
+/// must ignore; pad `d` with zeros so the values stay finite.
+#[inline(always)]
+fn maxplus_block(d: &[f32; SCAN_BLOCK], carry: f32, q: &mut [f32; SCAN_BLOCK]) {
+    let mut p = *d;
+    prefix_sum_block(&mut p);
+    let mut m = p;
+    prefix_min_block(&mut m);
+    for i in 0..SCAN_BLOCK {
+        q[i] = (p[i] - m[i]).max(carry + p[i]);
     }
 }
 
@@ -222,6 +459,10 @@ impl TimingModel for NativeAnalyzer {
     }
     fn backend_name(&self) -> &'static str {
         "native"
+    }
+
+    fn scan_kernel(&self) -> ScanKernel {
+        self.kernel
     }
 
     fn set_export_backlog(&mut self, on: bool) {
@@ -290,7 +531,8 @@ pub struct NativeBatchAnalyzer {
 const MIN_AUTO_EPOCHS_PER_WORKER: usize = 4;
 
 impl NativeBatchAnalyzer {
-    /// Sequential batched analyzer (one worker, the baseline).
+    /// Sequential batched analyzer (one worker, `exact` kernel — the
+    /// bit-identity baseline).
     pub fn new(t: &TopoTensors, nbins: usize, batch: usize) -> NativeBatchAnalyzer {
         NativeBatchAnalyzer::with_threads(t, nbins, batch, 1)
     }
@@ -298,12 +540,27 @@ impl NativeBatchAnalyzer {
     /// [`NativeBatchAnalyzer::new`] with an explicit shard-worker count
     /// (`0` = one per core, capped so each auto worker gets at least
     /// [`MIN_AUTO_EPOCHS_PER_WORKER`] epochs). Outputs are bit-identical
-    /// for every value; only wall-clock changes.
+    /// for every value; only wall-clock changes. `exact` kernel.
     pub fn with_threads(
         t: &TopoTensors,
         nbins: usize,
         batch: usize,
         threads: usize,
+    ) -> NativeBatchAnalyzer {
+        NativeBatchAnalyzer::with_kernel(t, nbins, batch, threads, ScanKernel::Exact)
+    }
+
+    /// Fully parameterized constructor: group size (`batch`), shard
+    /// workers, and scan kernel. The bit-identical-across-threads
+    /// guarantee holds for *either* kernel (every worker runs the same
+    /// kernel into disjoint rows); only `exact` is additionally
+    /// bit-identical to the golden reference.
+    pub fn with_kernel(
+        t: &TopoTensors,
+        nbins: usize,
+        batch: usize,
+        threads: usize,
+        kernel: ScanKernel,
     ) -> NativeBatchAnalyzer {
         let batch = batch.max(1);
         let threads = match threads {
@@ -314,7 +571,7 @@ impl NativeBatchAnalyzer {
             n => n,
         }
         .clamp(1, batch);
-        let inner = NativeAnalyzer::new(t, nbins);
+        let inner = NativeAnalyzer::with_kernel(t, nbins, kernel);
         let workers = (1..threads).map(|_| inner.clone()).collect();
         NativeBatchAnalyzer { inner, workers, batch, threads }
     }
@@ -366,6 +623,9 @@ impl BatchTimingModel for NativeBatchAnalyzer {
     }
     fn threads(&self) -> usize {
         self.threads
+    }
+    fn scan_kernel(&self) -> ScanKernel {
+        self.inner.kernel
     }
     fn backend_name(&self) -> &'static str {
         "native-batch"
@@ -705,6 +965,281 @@ mod tests {
         // the sequential constructor stays sequential
         let c = NativeBatchAnalyzer::new(&t, 16, 32);
         assert_eq!(c.threads(), 1);
+    }
+
+    // ---------------- blocked-kernel differential property tests ----
+    //
+    // `blocked` reassociates float adds (prefix-sum trees, blockwise
+    // partial sums), so it is tolerance-equal to `exact`, not
+    // bit-equal: each f32 output must be within 4 ULP of the exact
+    // kernel, OR within 1e-5 relative (two correctly-rounded
+    // association orders of hundreds of terms can legitimately drift a
+    // few more ULP), OR within a scenario-scaled absolute floor: when
+    // the exact recurrence drains a backlog to exactly 0.0, the
+    // max-plus identity can leave an eps-level residue of the block's
+    // *prefix-sum magnitude* (|P| ·  f32::EPSILON), which is neither a
+    // small ULP count nor a small relative error against 0. The floor
+    // is 1e-4 × an over-approximation of any prefix magnitude the
+    // scenario can produce — ~3 orders above the eps residue, far
+    // below any real kernel divergence.
+
+    fn ulp_key(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7fff_ffff) as i64)
+        } else {
+            (b & 0x7fff_ffff) as i64
+        }
+    }
+
+    fn ulp_diff(a: f32, b: f32) -> u64 {
+        (ulp_key(a) - ulp_key(b)).unsigned_abs()
+    }
+
+    /// Absolute floor for one scenario: bounds every prefix-sum /
+    /// backlog magnitude either scan can reach (events × the largest
+    /// per-event cost in ns or bytes, plus a full epoch of drain
+    /// capacity on the busiest link), scaled by 1e-4.
+    fn kernel_atol(
+        t: &TopoTensors,
+        reads: &[f32],
+        writes: &[f32],
+        nbins: usize,
+        bin_width: f32,
+        bytes_per_ev: f32,
+    ) -> f32 {
+        let events: f32 = reads.iter().sum::<f32>() + writes.iter().sum::<f32>();
+        let stt_max = t.stt.iter().cloned().fold(0.0f32, f32::max);
+        let bw_max = t.bw.iter().cloned().fold(0.0f32, f32::max);
+        let scale =
+            events * (stt_max + bytes_per_ev) + nbins as f32 * bin_width * (1.0 + bw_max);
+        1e-4 * scale.max(1.0)
+    }
+
+    fn assert_kernels_close(name: &str, got: &[f32], want: &[f32], atol: f32) {
+        assert_eq!(got.len(), want.len(), "{name} length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            let ulp = ulp_diff(*a, *b);
+            let rel = (a - b).abs() / b.abs().max(f32::MIN_POSITIVE);
+            assert!(
+                ulp <= 4 || rel <= 1e-5 || (a - b).abs() <= atol,
+                "{name}[{i}]: blocked {a} vs exact {b} ({ulp} ULP, rel {rel}, atol {atol})"
+            );
+        }
+    }
+
+    fn assert_outputs_close(
+        blocked: &TimingOutputs,
+        exact: &TimingOutputs,
+        atol: f32,
+        ctx: &str,
+    ) {
+        assert_eq!(blocked.lat, exact.lat, "{ctx}: lat is kernel-independent");
+        assert_kernels_close(&format!("{ctx}: cong"), &blocked.cong, &exact.cong, atol);
+        assert_kernels_close(&format!("{ctx}: bwd"), &blocked.bwd, &exact.bwd, atol);
+        let diff = (blocked.total - exact.total).abs();
+        let rel = diff / exact.total.abs().max(1e-30);
+        assert!(
+            rel <= 1e-5 || diff <= atol as f64,
+            "{ctx}: total {} vs {} (rel {rel})",
+            blocked.total,
+            exact.total
+        );
+    }
+
+    /// Scalar reference for the max-plus block identity, with exactly
+    /// representable integer deltas so tree and sequential sums agree
+    /// bit-for-bit.
+    #[test]
+    fn maxplus_block_matches_scalar_recurrence_on_integers() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for round in 0..200 {
+            let mut d = [0.0f32; SCAN_BLOCK];
+            for x in d.iter_mut() {
+                *x = rng.below(41) as f32 - 20.0; // integers in [-20, 20]
+            }
+            let carry = rng.below(30) as f32;
+            let mut q = [0.0f32; SCAN_BLOCK];
+            maxplus_block(&d, carry, &mut q);
+            let mut scalar = carry;
+            for i in 0..SCAN_BLOCK {
+                scalar = (scalar + d[i]).max(0.0);
+                assert_eq!(q[i], scalar, "round {round} lane {i}");
+            }
+        }
+    }
+
+    /// Property sweep: random epochs — sparse pools (all-zero rows),
+    /// saturated backlogs (tiny bin width), varied byte sizes — must
+    /// agree between kernels within the ULP/relative tolerance, for
+    /// nbins both a multiple of the block width and not.
+    #[test]
+    fn blocked_matches_exact_property_sweep() {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        let mut rng = crate::util::rng::Rng::new(0xb10c);
+        for &nbins in &[16usize, 24, 256] {
+            let mut exact = NativeAnalyzer::with_kernel(&t, nbins, ScanKernel::Exact);
+            let mut blocked = NativeAnalyzer::with_kernel(&t, nbins, ScanKernel::Blocked);
+            let n = 8 * nbins;
+            for round in 0..40u64 {
+                // round style: light, bursty, or saturating traffic
+                let cap = match round % 3 {
+                    0 => 8,
+                    1 => 200,
+                    _ => 5000, // saturated: backlog never drains
+                };
+                let mut reads = vec![0.0f32; n];
+                let mut writes = vec![0.0f32; n];
+                for pool in 0..8 {
+                    if rng.below(4) == 0 {
+                        continue; // all-zero pool row
+                    }
+                    for i in 0..nbins {
+                        reads[pool * nbins + i] = rng.below(cap) as f32;
+                        writes[pool * nbins + i] = rng.below(cap / 2 + 1) as f32;
+                    }
+                }
+                let bin_width = match round % 4 {
+                    0 => 1.0,
+                    1 => 100.0,
+                    2 => 3906.25,
+                    _ => 1e6,
+                };
+                let inp = TimingInputs {
+                    reads: &reads,
+                    writes: &writes,
+                    bin_width,
+                    bytes_per_ev: if round % 2 == 0 { 64.0 } else { 256.0 },
+                };
+                let atol = kernel_atol(&t, &reads, &writes, nbins, bin_width, inp.bytes_per_ev);
+                let e = exact.analyze(&inp).unwrap();
+                let b = blocked.analyze(&inp).unwrap();
+                let ctx = format!("nbins {nbins} round {round}");
+                assert_outputs_close(&b, &e, atol, &ctx);
+            }
+        }
+    }
+
+    /// Degenerate switch parameters: stt == 0 rows (no congestion,
+    /// served = raw events) and bw == 0 rows (no bandwidth delay) must
+    /// take the same guarded paths in both kernels.
+    #[test]
+    fn blocked_matches_exact_with_zero_stt_and_zero_bw_rows() {
+        // rows: 0 normal, 1 stt == 0, 2 bw == 0, 3 fully inert
+        let desc_mask = vec![
+            0.0, 1.0, 1.0, 1.0, //
+            0.0, 1.0, 0.0, 0.0, //
+            0.0, 0.0, 1.0, 0.0, //
+            0.0, 0.0, 0.0, 0.0, //
+        ];
+        let t = TopoTensors {
+            pools: 4,
+            switches: 4,
+            extra_read_lat: vec![0.0, 50.0, 80.0, 120.0],
+            extra_write_lat: vec![0.0, 60.0, 90.0, 140.0],
+            desc_mask,
+            stt: vec![5.0, 0.0, 3.0, 0.0],
+            bw: vec![16.0, 8.0, 0.0, 0.0],
+        };
+        let nbins = 32;
+        let n = 4 * nbins;
+        let mut exact = NativeAnalyzer::with_kernel(&t, nbins, ScanKernel::Exact);
+        let mut blocked = NativeAnalyzer::with_kernel(&t, nbins, ScanKernel::Blocked);
+        let mut rng = crate::util::rng::Rng::new(0x57);
+        for round in 0..50u64 {
+            let reads: Vec<f32> = (0..n).map(|_| rng.below(300) as f32).collect();
+            let writes: Vec<f32> = (0..n).map(|_| rng.below(150) as f32).collect();
+            let inp = TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 20.0,
+                bytes_per_ev: 64.0,
+            };
+            let atol = kernel_atol(&t, &reads, &writes, nbins, 20.0, 64.0);
+            let e = exact.analyze(&inp).unwrap();
+            let b = blocked.analyze(&inp).unwrap();
+            assert_eq!(e.cong[1], 0.0, "stt == 0 row must have no congestion");
+            assert_eq!(b.cong[1], 0.0);
+            assert_eq!(e.bwd[2], 0.0, "bw == 0 row must have no bandwidth delay");
+            assert_eq!(b.bwd[2], 0.0);
+            assert_eq!(b.cong[3], 0.0, "inert row stays zero");
+            assert_outputs_close(&b, &e, atol, &format!("degenerate round {round}"));
+        }
+    }
+
+    /// The exported backlog profile (policy input) must agree between
+    /// kernels lane-for-lane within tolerance, and all-local traffic
+    /// must still cost exactly zero under `blocked` (the max-plus
+    /// identity yields exact zeros for empty rows).
+    #[test]
+    fn blocked_backlog_export_and_exact_zeros() {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        let mut exact = NativeAnalyzer::with_kernel(&t, 32, ScanKernel::Exact);
+        let mut blocked = NativeAnalyzer::with_kernel(&t, 32, ScanKernel::Blocked);
+        exact.set_export_backlog(true);
+        blocked.set_export_backlog(true);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let n = 8 * 32;
+        let reads: Vec<f32> = (0..n).map(|_| rng.below(500) as f32).collect();
+        let writes: Vec<f32> = (0..n).map(|_| rng.below(200) as f32).collect();
+        let inp = TimingInputs {
+            reads: &reads,
+            writes: &writes,
+            bin_width: 10.0,
+            bytes_per_ev: 64.0,
+        };
+        let atol = kernel_atol(&t, &reads, &writes, 32, 10.0, 64.0);
+        let e = exact.analyze(&inp).unwrap();
+        let b = blocked.analyze(&inp).unwrap();
+        assert!(e.cong_backlog.iter().any(|x| *x > 0.0));
+        assert_kernels_close("backlog", &b.cong_backlog, &e.cong_backlog, atol);
+
+        // all-local traffic: blocked must produce exact zeros, like
+        // the local_pool_free contract for the exact kernel
+        let mut local = vec![0.0f32; n];
+        for i in 0..32 {
+            local[i] = 1000.0; // pool 0 = local
+        }
+        let zeros = vec![0.0f32; n];
+        let out = blocked
+            .analyze(&TimingInputs {
+                reads: &local,
+                writes: &zeros,
+                bin_width: 10.0,
+                bytes_per_ev: 64.0,
+            })
+            .unwrap();
+        assert_eq!(out.total, 0.0, "local traffic must cost exactly nothing");
+        assert!(out.cong_backlog.iter().all(|x| *x == 0.0));
+    }
+
+    /// Sharding is kernel-independent: the blocked kernel at any
+    /// thread count reproduces the 1-thread blocked outputs
+    /// bit-for-bit (every worker runs the same kernel into disjoint
+    /// rows).
+    #[test]
+    fn blocked_sharded_batch_bit_identical_across_threads() {
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        let e = 11usize;
+        let n = 8 * 16;
+        let mut rng = crate::util::rng::Rng::new(0x5eed);
+        let reads: Vec<f32> = (0..e * n).map(|_| rng.below(30) as f32).collect();
+        let writes: Vec<f32> = (0..e * n).map(|_| rng.below(12) as f32).collect();
+        let mut base = NativeBatchAnalyzer::with_kernel(&t, 16, e, 1, ScanKernel::Blocked);
+        let expect = base.analyze_batch(&reads, &writes, 50.0, 64.0).unwrap();
+        for threads in [2usize, 5, 64] {
+            let mut sharded =
+                NativeBatchAnalyzer::with_kernel(&t, 16, e, threads, ScanKernel::Blocked);
+            let got = sharded.analyze_batch(&reads, &writes, 50.0, 64.0).unwrap();
+            assert_eq!(got.total, expect.total, "{threads} threads: totals");
+            assert_eq!(got.lat, expect.lat, "{threads} threads: lat");
+            assert_eq!(got.cong, expect.cong, "{threads} threads: cong");
+            assert_eq!(got.bwd, expect.bwd, "{threads} threads: bwd");
+        }
+        assert_eq!(base.scan_kernel(), ScanKernel::Blocked);
     }
 
     #[test]

@@ -10,7 +10,23 @@ use crate::util::json::Json;
 pub const NUM_POOLS: usize = 8;
 pub const NUM_SWITCHES: usize = 8;
 pub const NUM_BINS: usize = 256;
+/// Default batched-analyzer group size (epochs per `analyze_batch`
+/// call). The PJRT artifact is compiled at exactly this E; the native
+/// batch analyzer defaults to it but accepts any group via
+/// `SimConfig::batch_group` / [`resolve_batch`] — long offline replays
+/// profit from much larger groups (the sharded bench measures E = 256).
 pub const BATCH: usize = 16;
+
+/// Resolve a `SimConfig::batch_group` knob value to a concrete native
+/// group size: `0` means "the default [`BATCH`]", anything else is
+/// honored as given.
+pub fn resolve_batch(group: usize) -> usize {
+    if group == 0 {
+        BATCH
+    } else {
+        group
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -82,6 +98,13 @@ mod tests {
         assert_eq!(m.batch, BATCH);
         assert!(std::path::Path::new(&format!("{dir}/{}", m.single)).exists());
         assert!(std::path::Path::new(&format!("{dir}/{}", m.batch_module)).exists());
+    }
+
+    #[test]
+    fn resolve_batch_defaults_and_passthrough() {
+        assert_eq!(resolve_batch(0), BATCH);
+        assert_eq!(resolve_batch(1), 1);
+        assert_eq!(resolve_batch(256), 256);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use cxlmemsim::runtime::native::NativeAnalyzer;
 #[cfg(feature = "pjrt")]
 use cxlmemsim::runtime::pjrt::PjrtAnalyzer;
 use cxlmemsim::runtime::shapes;
-use cxlmemsim::runtime::{TimingInputs, TimingModel};
+use cxlmemsim::runtime::{ScanKernel, TimingInputs, TimingModel};
 use cxlmemsim::topology::TopoTensors;
 use cxlmemsim::util::json::Json;
 
@@ -125,7 +125,21 @@ fn check_model(model: &mut dyn TimingModel, g: &Golden) {
 #[test]
 fn native_matches_python_golden() {
     let Some(g) = load_golden() else { return };
-    let mut m = NativeAnalyzer::new(&tensors_of(&g), g.nbins);
+    // pinned to the `exact` kernel: this is the bit-identity anchor —
+    // the blocked kernel is validated separately, to tolerance only
+    let mut m = NativeAnalyzer::with_kernel(&tensors_of(&g), g.nbins, ScanKernel::Exact);
+    assert_eq!(m.kernel(), ScanKernel::Exact);
+    check_model(&mut m, &g);
+}
+
+#[test]
+fn blocked_kernel_matches_python_golden_within_tolerance() {
+    // the max-plus blocked kernel reassociates float adds, so it is
+    // checked against the golden vectors with the same tolerances the
+    // cross-language (HLO vs rust) comparison already uses — NOT the
+    // exact kernel's bit-identity contract
+    let Some(g) = load_golden() else { return };
+    let mut m = NativeAnalyzer::with_kernel(&tensors_of(&g), g.nbins, ScanKernel::Blocked);
     check_model(&mut m, &g);
 }
 

@@ -18,12 +18,24 @@ use cxlmemsim::prelude::*;
 use cxlmemsim::workload;
 
 fn fast_cfg() -> SimConfig {
-    SimConfig {
+    let mut cfg = SimConfig {
         scale: 0.002,
         cache_scale: 64,
         epoch_ms: 0.1,
         ..SimConfig::default()
+    };
+    // CI's determinism matrix adds a scan-kernel leg: every
+    // equivalence test here compares like against like, so both
+    // kernels must hold every bit-exactness claim (`exact` is
+    // additionally golden-pinned; `blocked` vs `exact` is covered by
+    // the tolerance tests below)
+    if let Some(k) = std::env::var("CXLMEMSIM_TEST_KERNEL")
+        .ok()
+        .and_then(|v| cxlmemsim::runtime::ScanKernel::parse(&v))
+    {
+        cfg.scan_kernel = k;
     }
+    cfg
 }
 
 /// Worker counts the determinism tests exercise against the 1-thread
@@ -375,6 +387,108 @@ fn run_batched_sharded_analyzer_identical_with_policy_stack() {
             &format!("policy stack, analyzer_threads={threads}"),
         );
     }
+}
+
+// --------------------------------------------- scan kernel tolerance
+
+/// The blocked max-plus kernel reassociates float adds, so it is held
+/// to a tolerance contract instead of bit-identity: end-to-end delay
+/// within 1e-5 relative of the exact reference on every driver, with
+/// identical event accounting.
+#[test]
+fn blocked_kernel_within_tolerance_of_exact_end_to_end() {
+    use cxlmemsim::runtime::ScanKernel;
+    let run = |kernel: ScanKernel| {
+        let mut cfg = fast_cfg();
+        cfg.scan_kernel = kernel;
+        let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap()
+    };
+    let exact = run(ScanKernel::Exact);
+    let blocked = run(ScanKernel::Blocked);
+    assert_eq!(exact.scan_kernel, "exact");
+    assert_eq!(blocked.scan_kernel, "blocked");
+    assert_eq!(exact.total_misses, blocked.total_misses, "substrate is kernel-blind");
+    assert_eq!(exact.epochs_run, blocked.epochs_run);
+    assert!(exact.delay_ns > 0.0);
+    for (name, a, b) in [
+        ("delay", exact.delay_ns, blocked.delay_ns),
+        ("cong", exact.cong_delay_ns, blocked.cong_delay_ns),
+        ("bwd", exact.bwd_delay_ns, blocked.bwd_delay_ns),
+    ] {
+        let rel = (a - b).abs() / a.abs().max(1e-9);
+        assert!(rel < 1e-5, "{name}: exact {a} vs blocked {b} (rel {rel})");
+    }
+    // the latency term never goes through a scan: bit-identical
+    assert_eq!(exact.lat_delay_ns, blocked.lat_delay_ns);
+}
+
+// ------------------------------------------------- batch group size
+
+/// Without a policy stack, the native group size only changes the
+/// flush cadence — epochs are independent, so any `batch_group` must
+/// be bit-identical to any other (and to the sequential coordinator,
+/// under the same kernel).
+#[test]
+fn batch_group_sizes_bit_identical_without_policy() {
+    let run = |group: usize| {
+        let mut cfg = fast_cfg();
+        cfg.batch_group = group;
+        let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap()
+    };
+    let base = run(0); // default = 16
+    assert_eq!(base.batch_group, 16);
+    for group in [1usize, 7, 256] {
+        let rep = run(group);
+        assert_eq!(rep.batch_group, group as u64);
+        assert_reports_identical(&base, &rep, &format!("batch_group={group}"));
+    }
+    // and large groups still honor max_epochs exactly
+    let mut cfg = fast_cfg();
+    cfg.scale = 0.05;
+    cfg.batch_group = 256;
+    cfg.max_epochs = Some(3);
+    let mut wl = workload::by_name("uniform", cfg.scale, cfg.seed).unwrap();
+    let capped = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    assert_eq!(capped.epochs_run, 3);
+}
+
+/// With a policy stack, a big group defers phase-2 up to group−1
+/// epochs (the documented lateness trade) — both phases still run
+/// exactly once per epoch, and the migration cost model still
+/// conserves traffic.
+#[test]
+fn batch_group_256_policy_phases_and_conservation() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    let mut cfg = fast_cfg();
+    cfg.scale = 0.004;
+    cfg.batch_group = 256;
+    let (before, after) = (Arc::new(AtomicU64::new(0)), Arc::new(AtomicU64::new(0)));
+    let mut stack = PolicyStack::new(0.1).with(Box::new(HotnessMigration::new(1, u64::MAX)));
+    stack.add(Box::new(ProbePolicy { before: before.clone(), after: after.clone() }));
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let rep = run_batched_with(&builtin::fig2(), &cfg, wl.as_mut(), Some(&mut stack)).unwrap();
+    assert!(rep.epochs_run > 0);
+    assert_eq!(before.load(Ordering::SeqCst), rep.epochs_run, "phase-1 per epoch");
+    assert_eq!(
+        after.load(Ordering::SeqCst),
+        rep.epochs_run,
+        "phase-2 per epoch, deferred to group flush"
+    );
+    assert!(stack.migrations() > 0, "hotness:1 on zipfian must migrate");
+    let moved = stack.moved_bytes() as f64;
+    assert_eq!(
+        stack.injected_read_bytes() + stack.pending_bytes(),
+        moved,
+        "read-side conservation under a 256-epoch group"
+    );
+    assert_eq!(
+        stack.injected_write_bytes() + stack.pending_bytes(),
+        moved,
+        "write-side conservation under a 256-epoch group"
+    );
 }
 
 // ------------------------------------------------- batched replay mode

@@ -10,6 +10,9 @@ Gated entries / metrics (the hot paths named in ROADMAP):
 
   bins_record      bulk_recs_per_s            higher is better
   batch_analyze    fused_epochs_per_s         higher is better
+  batch_analyze    blocked_epochs_per_s       higher is better
+  scan_kernel      blocked_calls_per_s        higher is better
+  replay_group     group256_epochs_per_s      higher is better
   multihost_epoch  pooled_epochs_per_s        higher is better
   policy_epoch     empty_stack_ns_per_epoch   lower is better
   policy_epoch     full_stack_ns_per_epoch    lower is better
@@ -24,10 +27,7 @@ Refreshing the baseline from a CI run:
   python3 ../tools/bench_gate.py --baseline BENCH_baseline.json \
       --fresh BENCH_hotpath.json --update
 
-and commit the rewritten ``rust/BENCH_baseline.json``. The initial
-committed baseline is seeded with deliberately conservative numbers
-(marked ``"seeded_conservative": true``) so the gate passes on any
-healthy runner until a real CI run replaces it.
+and commit the rewritten ``rust/BENCH_baseline.json``.
 """
 
 import argparse
@@ -38,7 +38,12 @@ import sys
 # entry name -> [(metric, direction)]
 GATES = {
     "bins_record": [("bulk_recs_per_s", "higher")],
-    "batch_analyze": [("fused_epochs_per_s", "higher")],
+    "batch_analyze": [
+        ("fused_epochs_per_s", "higher"),
+        ("blocked_epochs_per_s", "higher"),
+    ],
+    "scan_kernel": [("blocked_calls_per_s", "higher")],
+    "replay_group": [("group256_epochs_per_s", "higher")],
     "multihost_epoch": [("pooled_epochs_per_s", "higher")],
     "policy_epoch": [
         ("empty_stack_ns_per_epoch", "lower"),
