@@ -30,6 +30,7 @@
 use cxlmemsim::alloctrack::AllocTracker;
 use cxlmemsim::cache::CacheHierarchy;
 use cxlmemsim::coordinator::{run_batched, Coordinator, SimConfig};
+use cxlmemsim::fault::FaultPlan;
 use cxlmemsim::multihost::run_shared_threads;
 use cxlmemsim::prelude::*;
 use cxlmemsim::runtime::native::{NativeAnalyzer, NativeBatchAnalyzer};
@@ -437,6 +438,71 @@ fn main() {
                 ("group16_epochs_per_s", json::num(rate16)),
                 ("group256_epochs_per_s", json::num(rate256)),
                 ("speedup", json::num(rate256 / rate16)),
+            ]),
+        ));
+    }
+
+    // --- fault injection: the fault-free path must stay free -------
+    // the RAS fault subsystem rides the epoch barrier; with no plan
+    // configured none of it is even constructed, so fault-free replay
+    // must run at full speed (gated as fault_epoch.faultfree_epochs_per_s).
+    // armed-but-idle (plan resolved, no window ever opens) and full
+    // chaos (storms + a mid-run pool-offline failover) are reported
+    // alongside for the trajectory file.
+    {
+        let run_fault = |plan: Option<FaultPlan>| {
+            let mut c = SimConfig::default();
+            c.scale = wl_scale;
+            c.cache_scale = 64;
+            c.backend = AnalyzerBackend::Native;
+            c.epoch_ms = 0.05;
+            c.analyzer_threads = 4;
+            c.faults = plan;
+            let mut wl = workload::by_name("mcf_like", c.scale, 7).unwrap();
+            run_batched(&topo, &c, wl.as_mut()).unwrap()
+        };
+        let measure = |plan: Option<FaultPlan>| {
+            let mut best = 0.0f64;
+            let mut last = None;
+            for _ in 0..it(10).max(3) {
+                let rep = run_fault(plan.clone());
+                best = best.max(rep.epochs_run as f64 / rep.wall_s);
+                last = Some(rep);
+            }
+            (best, last.unwrap())
+        };
+        let (free_rate, free_rep) = measure(None);
+        let e = free_rep.epochs_run;
+        let armed =
+            FaultPlan::parse_inline(&format!("storm:pool1@{}+4:rd=250", e * 1000)).unwrap();
+        let (armed_rate, armed_rep) = measure(Some(armed));
+        let chaos = FaultPlan::parse_inline(&format!(
+            "storm:pool0@1+{}:rd=250,wr=125;offline:pool0@{}",
+            (e / 4).max(1),
+            (e / 2).max(1)
+        ))
+        .unwrap();
+        let (chaos_rate, chaos_rep) = measure(Some(chaos));
+        assert_eq!(armed_rep.faults_injected, 0, "armed plan must stay idle");
+        assert_eq!(free_rep.epochs_run, chaos_rep.epochs_run, "faults changed the event stream");
+        if e >= 4 {
+            assert_eq!(chaos_rep.pools_offline, 1, "offline event must fire");
+        }
+        println!(
+            "fault epoch:          fault-free {free_rate:>8.0} ep/s | armed {armed_rate:>8.0} \
+             ep/s ({:.2}x) | chaos {chaos_rate:>8.0} ep/s ({:.2}x)",
+            free_rate / armed_rate,
+            free_rate / chaos_rate
+        );
+        results.push((
+            "fault_epoch",
+            json::obj(vec![
+                ("epochs", json::num(e as f64)),
+                ("faultfree_epochs_per_s", json::num(free_rate)),
+                ("armed_epochs_per_s", json::num(armed_rate)),
+                ("chaos_epochs_per_s", json::num(chaos_rate)),
+                ("armed_overhead", json::num(free_rate / armed_rate)),
+                ("failover_migrated_bytes", json::num(chaos_rep.failover_migrated_bytes as f64)),
             ]),
         ));
     }

@@ -66,6 +66,7 @@ pub fn run_batched_with(
     stack: Option<&mut PolicyStack>,
 ) -> anyhow::Result<SimReport> {
     let wall_start = std::time::Instant::now();
+    super::ensure_fault_backend(cfg)?;
     let tensors = TopoTensors::build(topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES)?;
     let mut model = runtime::make_batch_analyzer(
         cfg.backend,
@@ -77,6 +78,18 @@ pub fn run_batched_with(
         cfg.batch_group,
     )?;
     let mut driver = EpochDriver::new(topo, cfg)?;
+    let mut fault = match &cfg.faults {
+        Some(plan) => Some(plan.resolve(topo)?),
+        None => None,
+    };
+    // pool-offline failover needs the migration machinery; when faults
+    // are configured and the caller brought no stack, install an empty
+    // one (bit-identical to no stack — `tests/pipeline_equivalence.rs`)
+    let mut fallback_stack = match (&fault, &stack) {
+        (Some(_), None) => Some(PolicyStack::new(cfg.mig_stall_ns_per_byte)),
+        _ => None,
+    };
+    let stack = stack.or(fallback_stack.as_mut());
 
     let mut report = SimReport::new(wl.name(), &topo.name, model.backend_name(), topo.num_pools());
     report.analyzer_threads_used = model.threads() as u64;
@@ -91,6 +104,7 @@ pub fn run_batched_with(
         cfg.epoch_ns(),
     );
     flush.stack = stack;
+    flush.fault = fault.as_mut();
     if let Some(st) = flush.stack.as_deref_mut() {
         st.begin_run(); // per-run accounting, even for caller-owned stacks
     }
@@ -98,6 +112,9 @@ pub fn run_batched_with(
     report.finish(&driver.cache.stats, driver.tracer_run_stats(), wall_start.elapsed());
     if let Some(stack) = flush.stack.as_deref() {
         report.record_policy_stats(stack);
+    }
+    if let Some(f) = &fault {
+        report.record_fault_stats(f);
     }
     Ok(report)
 }

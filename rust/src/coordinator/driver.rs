@@ -24,6 +24,7 @@
 
 use crate::alloctrack::AllocTracker;
 use crate::cache::{AccessOutcome, CacheHierarchy, Prefetcher};
+use crate::fault::{FaultOverlay, FaultState};
 use crate::policy::PolicyStack;
 use crate::runtime::{BatchTimingModel, TimingInputs, TimingModel};
 use crate::topology::Topology;
@@ -323,17 +324,65 @@ impl EpochDriver {
     }
 }
 
+/// The shared epoch-barrier fault step, run identically by every
+/// driver *before* the stack's phase-1 hooks:
+///
+/// 1. advance the schedule ([`FaultState::epoch_begin`], plan order);
+/// 2. on an overlay-revision edge, mirror the offline mask into the
+///    stack so hooks (and failover itself) refuse dead destinations;
+/// 3. sweep offline pools that still hold live bytes — each fails over
+///    to the fallback pool through the stack's cost-modeled migration
+///    machinery (copy traffic + stall charged like any policy move),
+///    or the run ends with the structured no-reachable-pool error.
+///
+/// Returns whether the overlay revision changed (the batched driver's
+/// early-flush signal).
+pub(crate) fn fault_epoch_barrier(
+    fault: &mut FaultState,
+    stack: &mut PolicyStack,
+    tracker: &mut AllocTracker,
+    epoch: u64,
+    bytes_per_ev: f32,
+) -> anyhow::Result<bool> {
+    let changed = fault.epoch_begin(epoch);
+    if changed {
+        stack.set_offline_pools(&fault.offline);
+    }
+    if fault.any_offline() {
+        // cheap byte check per pool; regions allocated onto an offline
+        // pool later (placement policies are topology-static) are
+        // caught by the same sweep at the next barrier
+        for from in 0..fault.offline.len() {
+            if fault.offline[from]
+                && tracker.stats.pool_bytes.get(from).copied().unwrap_or(0) > 0
+            {
+                let to = fault.fallback_pool(from)?;
+                fault.failover_migrated_bytes +=
+                    stack.failover_pool(tracker, from, to, bytes_per_ev);
+            }
+        }
+    }
+    Ok(changed)
+}
+
 /// Per-epoch analyze strategy: the classic coordinator mode. Runs the
-/// policy stack's phase-1 (bin shaping + migration-traffic injection)
-/// hooks, the timing model, then the stack's phase-2
+/// fault barrier (schedule + failover), the policy stack's phase-1
+/// (bin shaping + migration-traffic injection) hooks, the timing model
+/// (under the epoch's fault overlay, if any), then the stack's phase-2
 /// (migration/rebalance) hooks — all on every epoch boundary, so
 /// placement actions see fresh analyzer outputs and their modeled cost
 /// lands in the very next epoch.
 pub struct PerEpochAnalyze<'m, 'p> {
     pub model: &'m mut dyn TimingModel,
     pub stack: Option<&'p mut PolicyStack>,
+    /// Fault schedule; drivers guarantee a stack is installed whenever
+    /// this is set (failover needs the migration machinery).
+    pub fault: Option<&'p mut FaultState>,
     pub bytes_per_ev: f32,
     pub keep_epoch_records: bool,
+    /// Epoch counter for the fault schedule (0-based; callers start
+    /// runs at 0).
+    pub epoch: u64,
 }
 
 impl EpochFlush for PerEpochAnalyze<'_, '_> {
@@ -344,8 +393,24 @@ impl EpochFlush for PerEpochAnalyze<'_, '_> {
         tracker: &mut AllocTracker,
         report: &mut SimReport,
     ) -> anyhow::Result<()> {
+        if let Some(fault) = &mut self.fault {
+            if let Some(stack) = &mut self.stack {
+                fault_epoch_barrier(fault, stack, tracker, self.epoch, self.bytes_per_ev)?;
+            } else {
+                fault.epoch_begin(self.epoch);
+            }
+        }
         if let Some(stack) = &mut self.stack {
             stack.before_analysis(bins, tracker, self.bytes_per_ev);
+        }
+        if let Some(fault) = &mut self.fault {
+            self.model.set_fault_overlay(fault.overlay());
+            // exact storm attribution: stage 1 is a linear dot product
+            // over post-injection bins, so the storm's share of `lat`
+            // is recoverable in closed form (a sub-component of
+            // lat_delay_ns, not an addition to the total)
+            fault.retry_delay_ns +=
+                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
         }
         let out = self.model.analyze(&TimingInputs {
             reads: &bins.reads,
@@ -358,6 +423,7 @@ impl EpochFlush for PerEpochAnalyze<'_, '_> {
             None => 0.0,
         };
         report.push_epoch(native_ns, &out, mig_ns, bins.total_events, self.keep_epoch_records);
+        self.epoch += 1;
         Ok(())
     }
 }
@@ -392,8 +458,21 @@ struct PendingEpoch {
 pub struct BatchedFlush<'m, 'p> {
     pub model: &'m mut dyn BatchTimingModel,
     pub stack: Option<&'p mut PolicyStack>,
+    /// Fault schedule; drivers guarantee a stack is installed whenever
+    /// this is set. Overlays are piecewise-constant over fault windows,
+    /// so the pending group is flushed early on every overlay-revision
+    /// edge and one `analyze_batch` call never spans two overlays —
+    /// which is what keeps group-1 and group-256 runs bit-identical
+    /// under faults.
+    pub fault: Option<&'p mut FaultState>,
     pub bytes_per_ev: f32,
     pub keep_epoch_records: bool,
+    /// Epoch counter for the fault schedule (0-based).
+    epoch: u64,
+    /// Snapshot of the overlay the *pending* group's epochs ran under
+    /// (the live [`FaultState`] may already have advanced past it when
+    /// a revision edge triggers the early flush).
+    group_overlay: Option<FaultOverlay>,
     pending: Vec<PendingEpoch>,
     /// Recycled `PendingEpoch`s: after a group flush their buffers are
     /// reused, so steady state allocates nothing per epoch.
@@ -421,8 +500,11 @@ impl<'m, 'p> BatchedFlush<'m, 'p> {
         BatchedFlush {
             model,
             stack: None,
+            fault: None,
             bytes_per_ev,
             keep_epoch_records,
+            epoch: 0,
+            group_overlay: None,
             pending: Vec::with_capacity(cap),
             spare: Vec::with_capacity(cap),
             scratch_reads: Vec::new(),
@@ -458,6 +540,11 @@ impl<'m, 'p> BatchedFlush<'m, 'p> {
                 .copy_from_slice(&ep.reads);
             self.scratch_writes[i * p * b..i * p * b + ep.writes.len()]
                 .copy_from_slice(&ep.writes);
+        }
+        if self.fault.is_some() {
+            // every epoch in the group ran under this one overlay (the
+            // revision-edge early flush guarantees it)
+            self.model.set_fault_overlay(self.group_overlay.as_ref());
         }
         let out = self.model.analyze_batch(
             &self.scratch_reads,
@@ -500,11 +587,48 @@ impl EpochFlush for BatchedFlush<'_, '_> {
         tracker: &mut AllocTracker,
         report: &mut SimReport,
     ) -> anyhow::Result<()> {
+        if self.fault.is_some() {
+            let changed = {
+                let fault = self.fault.as_mut().unwrap();
+                if let Some(stack) = &mut self.stack {
+                    fault_epoch_barrier(fault, stack, tracker, self.epoch, self.bytes_per_ev)?
+                } else {
+                    fault.epoch_begin(self.epoch)
+                }
+            };
+            // the barrier's failover stall belongs to THIS epoch: park
+            // it across the early flush below, or the first *parked*
+            // epoch's phase-2 would take it — a different stall
+            // placement than the sequential driver, which would break
+            // group-1 vs group-256 bit-identity
+            let barrier_stall = match &mut self.stack {
+                Some(stack) => stack.take_accrued_stall_ns(),
+                None => 0.0,
+            };
+            if changed {
+                // flush the parked epochs under the overlay they ran
+                // under, then re-snapshot for the new window
+                if !self.pending.is_empty() {
+                    self.flush_group(tracker, report)?;
+                }
+                self.group_overlay = self.fault.as_ref().unwrap().overlay().cloned();
+            }
+            if let Some(stack) = &mut self.stack {
+                stack.credit_accrued_stall_ns(barrier_stall);
+            }
+        }
         // phase 1 runs on the live bins, before they are parked — bin
         // shaping must happen before analysis, and this keeps the
         // shaped histograms in the group the analyzer will see
         if let Some(stack) = &mut self.stack {
             stack.before_analysis(bins, tracker, self.bytes_per_ev);
+        }
+        if let Some(fault) = &mut self.fault {
+            // storm attribution happens at boundary time, on the live
+            // post-injection bins — identical to the sequential driver
+            // regardless of when the group flushes
+            fault.retry_delay_ns +=
+                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
         }
         let mut ep = self.spare.pop().unwrap_or_else(|| PendingEpoch {
             reads: Vec::with_capacity(bins.reads.len()),
@@ -539,6 +663,7 @@ impl EpochFlush for BatchedFlush<'_, '_> {
         if self.pending.len() == self.model.batch() {
             self.flush_group(tracker, report)?;
         }
+        self.epoch += 1;
         Ok(())
     }
 

@@ -111,6 +111,12 @@ pub struct SimConfig {
     /// migration policies chase *current* hot regions instead of
     /// regions that were hot long ago (`AllocTracker::decay_heat`).
     pub heat_decay: f64,
+    /// Deterministic RAS fault schedule (`--faults file.toml` /
+    /// `--fault inline-spec`, see `crate::fault`). Pool references are
+    /// resolved against the run's topology at run start; None (the
+    /// default) leaves the fault machinery entirely unconstructed.
+    /// Requires the native backend (the AOT HLO has no overlay inputs).
+    pub faults: Option<crate::fault::FaultPlan>,
 }
 
 impl Default for SimConfig {
@@ -138,6 +144,7 @@ impl Default for SimConfig {
             scan_kernel: runtime::ScanKernel::default(),
             batch_group: 0,
             heat_decay: 1.0,
+            faults: None,
         }
     }
 }
@@ -159,6 +166,7 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(topo: Topology, cfg: SimConfig) -> anyhow::Result<Coordinator> {
+        ensure_fault_backend(&cfg)?;
         let tensors = TopoTensors::build(
             &topo,
             runtime::shapes::NUM_POOLS,
@@ -237,16 +245,34 @@ impl Coordinator {
         );
         report.scan_kernel = self.model.scan_kernel().name().to_string();
         self.driver.reset();
+        // resolve the fault plan against this run's topology (names →
+        // pool ids, validation, seeded jitter); fault-free runs never
+        // construct any of this
+        let mut fault = match &self.cfg.faults {
+            Some(plan) => Some(plan.resolve(&self.topo)?),
+            None => None,
+        };
+        if fault.is_some() && self.stack.is_none() {
+            // pool-offline failover routes through the policy stack's
+            // cost-modeled migration machinery; an empty stack is
+            // bit-identical to no stack (tests/pipeline_equivalence.rs)
+            self.stack = Some(PolicyStack::new(self.cfg.mig_stall_ns_per_byte));
+        }
         if let Some(stack) = &mut self.stack {
             stack.begin_run(); // per-run policy accounting, like the tracker
         }
         let mut flush = PerEpochAnalyze {
             model: self.model.as_mut(),
             stack: self.stack.as_mut(),
+            fault: fault.as_mut(),
             bytes_per_ev: self.topo.host.cacheline_bytes as f32,
             keep_epoch_records: self.cfg.keep_epoch_records,
+            epoch: 0,
         };
         self.driver.run(wl, &mut flush, &mut report, self.cfg.max_epochs)?;
+        // make sure a later fault-free run on this coordinator doesn't
+        // inherit the overlay
+        self.model.set_fault_overlay(None);
         report.finish(
             &self.driver.cache.stats,
             self.driver.tracer_run_stats(),
@@ -255,8 +281,25 @@ impl Coordinator {
         if let Some(stack) = &self.stack {
             report.record_policy_stats(stack);
         }
+        if let Some(f) = &fault {
+            report.record_fault_stats(f);
+        }
         Ok(report)
     }
+}
+
+/// Fault plans need the native analyzer: the AOT HLO's input contract
+/// has no per-epoch latency/bandwidth overlay tensors, so requesting
+/// faults on the PJRT backend is a clean config error up front rather
+/// than silently fault-free output.
+pub(crate) fn ensure_fault_backend(cfg: &SimConfig) -> anyhow::Result<()> {
+    if cfg.faults.is_some() && cfg.backend == AnalyzerBackend::Pjrt {
+        anyhow::bail!(
+            "fault injection requires `--backend native` (the AOT HLO artifacts \
+             have no fault-overlay inputs)"
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]

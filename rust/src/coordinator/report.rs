@@ -113,6 +113,17 @@ pub struct SimReport {
     pub mig_injected_read_bytes: f64,
     pub mig_injected_write_bytes: f64,
     pub mig_pending_bytes: f64,
+    /// Fault injection (`--faults` / `--fault`, `crate::fault`): RAS
+    /// events that fired this run, the exact retry-storm latency
+    /// charged (a sub-component of `lat_delay_ns`), epochs that ran
+    /// with at least one transient window active, distinct pools taken
+    /// permanently offline, and bytes evacuated by offline failover
+    /// (a subset of `migrated_bytes` when policies also migrate).
+    pub faults_injected: u64,
+    pub retry_delay_ns: f64,
+    pub throttled_epochs: u64,
+    pub pools_offline: u64,
+    pub failover_migrated_bytes: u64,
     pub epochs: Vec<EpochRecord>,
 }
 
@@ -128,6 +139,7 @@ impl SimReport {
             lat_delay_ns: 0.0,
             cong_delay_ns: 0.0,
             bwd_delay_ns: 0.0,
+            mig_delay_ns: 0.0,
             wall_s: 0.0,
             epochs_run: 0,
             total_accesses: 0,
@@ -151,6 +163,11 @@ impl SimReport {
             mig_injected_read_bytes: 0.0,
             mig_injected_write_bytes: 0.0,
             mig_pending_bytes: 0.0,
+            faults_injected: 0,
+            retry_delay_ns: 0.0,
+            throttled_epochs: 0,
+            pools_offline: 0,
+            failover_migrated_bytes: 0,
             epochs: Vec::new(),
         }
     }
@@ -217,6 +234,18 @@ impl SimReport {
                 moved_bytes,
             })
             .collect();
+    }
+
+    /// Copy the resolved fault schedule's end-of-run counters into the
+    /// report (the drivers call this once after the epoch loop; a
+    /// fault-free run never constructs a `FaultState`, so every field
+    /// stays at its zero default).
+    pub(crate) fn record_fault_stats(&mut self, fault: &crate::fault::FaultState) {
+        self.faults_injected = fault.faults_injected;
+        self.retry_delay_ns = fault.retry_delay_ns;
+        self.throttled_epochs = fault.throttled_epochs;
+        self.pools_offline = fault.pools_offline;
+        self.failover_migrated_bytes = fault.failover_migrated_bytes;
     }
 
     pub(crate) fn finish(
@@ -304,6 +333,17 @@ impl SimReport {
                 self.mig_delay_ns / 1e6
             ));
         }
+        if self.faults_injected > 0 {
+            s.push_str(&format!(
+                "  faults: {} injected, {:.3} ms retry delay, {} throttled epochs, \
+                 {} pools offline, {:.1} KB failover-migrated\n",
+                self.faults_injected,
+                self.retry_delay_ns / 1e6,
+                self.throttled_epochs,
+                self.pools_offline,
+                self.failover_migrated_bytes as f64 / 1024.0
+            ));
+        }
         s.push_str(&format!(
             "  {} epochs, {} accesses, {} LLC misses ({:.3}% miss rate), {} writebacks\n",
             self.epochs_run,
@@ -353,6 +393,11 @@ impl SimReport {
             ("mig_injected_read_bytes", json::num(self.mig_injected_read_bytes)),
             ("mig_injected_write_bytes", json::num(self.mig_injected_write_bytes)),
             ("mig_pending_bytes", json::num(self.mig_pending_bytes)),
+            ("faults_injected", json::num(self.faults_injected as f64)),
+            ("retry_delay_ms", json::num(self.retry_delay_ns / 1e6)),
+            ("throttled_epochs", json::num(self.throttled_epochs as f64)),
+            ("pools_offline", json::num(self.pools_offline as f64)),
+            ("failover_migrated_bytes", json::num(self.failover_migrated_bytes as f64)),
             (
                 "policies",
                 Json::Arr(

@@ -1,0 +1,651 @@
+//! Deterministic CXL.mem RAS fault injection.
+//!
+//! A [`FaultPlan`] schedules three kinds of CXL RAS events against
+//! topology pools, resolved at every epoch barrier in plan order on
+//! all three drivers (sequential, batched, multihost):
+//!
+//! * **retry storm** — transient CRC-retry pressure: per-pool read /
+//!   write latency inflated by a fixed ns for a window of epochs;
+//! * **link retraining** — every switch row on the pool's path to the
+//!   root has its bandwidth scaled by a fraction for a window of
+//!   epochs;
+//! * **pool offline** — permanent device hot-remove: the pool's live
+//!   regions fail over to the fallback pool through the cost-modeled
+//!   migration machinery, and policies see the reduced pool set.
+//!
+//! Plans are written either as a TOML file (`--faults plan.toml`) or
+//! inline (`--fault "storm:pool1@5+10:rd=200,wr=300;offline:pool0@12"`).
+//! Pool references hold *names* (or integer pool ids) until
+//! [`FaultPlan::resolve`] binds them against a concrete [`Topology`],
+//! which keeps `SimConfig` topology-independent. An optional seeded
+//! jitter (`seed` + `jitter_epochs`) perturbs start epochs at resolve
+//! time, in plan order, through the repo's own deterministic
+//! [`crate::util::rng::Rng`] — same plan + same seed is bit-identical
+//! everywhere.
+//!
+//! At run time a [`FaultState`] owns the resolved schedule: the driver
+//! calls [`FaultState::epoch_begin`] at each barrier, which
+//! activates / expires windows and rebuilds the additive / multiplicative
+//! [`FaultOverlay`] that the analyzer applies over its base tensors.
+//! The fault-free path never constructs any of this.
+
+use crate::topology::{PoolId, Topology};
+use crate::util::rng::Rng;
+use crate::util::toml::TomlDoc;
+use std::fmt;
+
+/// Structured fault-subsystem error; every variant renders as a clean
+/// one-line message (no panics on user-reachable paths).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultError {
+    /// Spec references a pool the topology does not have.
+    UnknownPool(String),
+    /// A transient fault (storm / retrain) with a zero-length window.
+    ZeroWindow(String),
+    /// Two offline events target the same pool.
+    OverlappingOffline(String),
+    /// Every pool (including local DRAM) is offline: no reachable pool
+    /// is left to fail over to.
+    NoReachablePool,
+    /// Malformed plan text (TOML or inline spec).
+    Parse(String),
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::UnknownPool(p) => {
+                write!(f, "fault plan: unknown pool `{p}` (use a pool name or pool id)")
+            }
+            FaultError::ZeroWindow(p) => {
+                write!(f, "fault plan: zero-length window for transient fault on `{p}`")
+            }
+            FaultError::OverlappingOffline(p) => {
+                write!(f, "fault plan: pool `{p}` is taken offline more than once")
+            }
+            FaultError::NoReachablePool => {
+                write!(f, "fault degradation: all pools offline, no reachable pool to fail over to")
+            }
+            FaultError::Parse(m) => write!(f, "fault plan: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// What a fault does while its window is active.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// CRC retry storm: additive per-event latency on the pool.
+    RetryStorm { rd_add_ns: f32, wr_add_ns: f32 },
+    /// Link retraining: path bandwidth scaled to `frac` of nominal.
+    LinkRetrain { frac: f32 },
+    /// Permanent device hot-remove.
+    PoolOffline,
+}
+
+/// One scheduled event, pool still by name (or numeric id string).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub pool: String,
+    /// First epoch (0-based) the fault is active in.
+    pub start: u64,
+    /// Window length in epochs; ignored for `PoolOffline` (permanent).
+    pub epochs: u64,
+    pub kind: FaultKind,
+}
+
+/// A parsed, unresolved fault schedule (part of `SimConfig`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Max epochs of seeded start jitter (0 = starts taken verbatim).
+    pub jitter_epochs: u64,
+    pub events: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the TOML plan format:
+    ///
+    /// ```toml
+    /// seed = 42            # optional, default 0
+    /// jitter_epochs = 0    # optional
+    /// [[fault]]
+    /// kind = "storm"       # storm | retrain | offline
+    /// pool = "pool1"       # pool name or numeric pool id
+    /// start = 5
+    /// epochs = 10          # required for storm/retrain
+    /// rd_add_ns = 200      # storm only
+    /// wr_add_ns = 300      # storm only
+    /// frac = 0.5           # retrain only
+    /// ```
+    pub fn parse_toml(src: &str) -> Result<FaultPlan, FaultError> {
+        let doc = TomlDoc::parse(src).map_err(FaultError::Parse)?;
+        let top = doc.table("").cloned().unwrap_or_default();
+        let num = |t: &crate::util::toml::Table, k: &str, d: f64| {
+            t.get(k).and_then(|v| v.as_f64()).unwrap_or(d)
+        };
+        let mut plan = FaultPlan {
+            seed: num(&top, "seed", 0.0) as u64,
+            jitter_epochs: num(&top, "jitter_epochs", 0.0) as u64,
+            events: Vec::new(),
+        };
+        for (i, t) in doc.array("fault").iter().enumerate() {
+            let ctx = format!("[[fault]] #{}", i + 1);
+            let kind_s = t
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| FaultError::Parse(format!("{ctx}: missing `kind`")))?;
+            let pool = t
+                .get("pool")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .or_else(|| t.get("pool").and_then(|v| v.as_f64()).map(|n| format!("{n}")))
+                .ok_or_else(|| FaultError::Parse(format!("{ctx}: missing `pool`")))?;
+            let start = num(t, "start", 0.0) as u64;
+            let epochs = num(t, "epochs", 0.0) as u64;
+            let kind = match kind_s {
+                "storm" => FaultKind::RetryStorm {
+                    rd_add_ns: num(t, "rd_add_ns", 0.0) as f32,
+                    wr_add_ns: num(t, "wr_add_ns", 0.0) as f32,
+                },
+                "retrain" => {
+                    let frac = num(t, "frac", 0.5) as f32;
+                    if !(frac > 0.0 && frac <= 1.0) {
+                        return Err(FaultError::Parse(format!(
+                            "{ctx}: `frac` must be in (0, 1], got {frac}"
+                        )));
+                    }
+                    FaultKind::LinkRetrain { frac }
+                }
+                "offline" => FaultKind::PoolOffline,
+                other => {
+                    return Err(FaultError::Parse(format!(
+                        "{ctx}: unknown kind `{other}` (storm | retrain | offline)"
+                    )))
+                }
+            };
+            plan.events.push(FaultSpec { pool, start, epochs, kind });
+        }
+        if plan.events.is_empty() {
+            return Err(FaultError::Parse("no [[fault]] entries in plan".into()));
+        }
+        Ok(plan)
+    }
+
+    /// Parse the inline one-flag form: `;`-separated events, each
+    /// `kind:pool@start[+epochs][:k=v,...]`, e.g.
+    ///
+    /// ```text
+    /// storm:pool1@5+10:rd=200,wr=300;retrain:pool0@8+4:frac=0.5;offline:direct0@12
+    /// ```
+    pub fn parse_inline(spec: &str) -> Result<FaultPlan, FaultError> {
+        let mut plan = FaultPlan::default();
+        for ev in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let mut parts = ev.splitn(3, ':');
+            let kind_s = parts.next().unwrap_or_default();
+            let target = parts
+                .next()
+                .ok_or_else(|| FaultError::Parse(format!("`{ev}`: missing pool@start")))?;
+            let params = parts.next().unwrap_or("");
+            let (pool, when) = target
+                .split_once('@')
+                .ok_or_else(|| FaultError::Parse(format!("`{ev}`: expected pool@start")))?;
+            let (start_s, epochs_s) = match when.split_once('+') {
+                Some((s, e)) => (s, Some(e)),
+                None => (when, None),
+            };
+            let start: u64 = start_s
+                .parse()
+                .map_err(|_| FaultError::Parse(format!("`{ev}`: bad start epoch `{start_s}`")))?;
+            let epochs: u64 = match epochs_s {
+                Some(e) => e
+                    .parse()
+                    .map_err(|_| FaultError::Parse(format!("`{ev}`: bad window `{e}`")))?,
+                None => 0,
+            };
+            let mut kv = std::collections::BTreeMap::new();
+            for p in params.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (k, v) = p
+                    .split_once('=')
+                    .ok_or_else(|| FaultError::Parse(format!("`{ev}`: bad param `{p}`")))?;
+                let v: f64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| FaultError::Parse(format!("`{ev}`: bad value in `{p}`")))?;
+                kv.insert(k.trim().to_string(), v);
+            }
+            let kind = match kind_s {
+                "storm" => FaultKind::RetryStorm {
+                    rd_add_ns: kv.get("rd").copied().unwrap_or(0.0) as f32,
+                    wr_add_ns: kv.get("wr").copied().unwrap_or(0.0) as f32,
+                },
+                "retrain" => {
+                    let frac = kv.get("frac").copied().unwrap_or(0.5) as f32;
+                    if !(frac > 0.0 && frac <= 1.0) {
+                        return Err(FaultError::Parse(format!(
+                            "`{ev}`: `frac` must be in (0, 1], got {frac}"
+                        )));
+                    }
+                    FaultKind::LinkRetrain { frac }
+                }
+                "offline" => FaultKind::PoolOffline,
+                other => {
+                    return Err(FaultError::Parse(format!(
+                        "`{ev}`: unknown kind `{other}` (storm | retrain | offline)"
+                    )))
+                }
+            };
+            plan.events.push(FaultSpec { pool: pool.trim().to_string(), start, epochs, kind });
+        }
+        if plan.events.is_empty() {
+            return Err(FaultError::Parse("empty fault spec".into()));
+        }
+        Ok(plan)
+    }
+
+    /// Bind pool names to ids against a concrete topology, validate the
+    /// schedule, and apply the seeded start jitter — all in plan order,
+    /// so the result is deterministic for a given (plan, topology).
+    pub fn resolve(&self, topo: &Topology) -> Result<FaultState, FaultError> {
+        let pools = topo.num_pools();
+        let switches = topo.num_switches();
+        let mut rng = Rng::new(self.seed ^ 0x5eed_fa17);
+        let mut offline_seen = vec![false; pools];
+        let mut events = Vec::with_capacity(self.events.len());
+        for spec in &self.events {
+            let pool = lookup_pool(topo, &spec.pool)
+                .ok_or_else(|| FaultError::UnknownPool(spec.pool.clone()))?;
+            let jitter =
+                if self.jitter_epochs > 0 { rng.below(self.jitter_epochs + 1) } else { 0 };
+            let start = spec.start + jitter;
+            let (end, kind) = match &spec.kind {
+                FaultKind::RetryStorm { rd_add_ns, wr_add_ns } => {
+                    if spec.epochs == 0 {
+                        return Err(FaultError::ZeroWindow(spec.pool.clone()));
+                    }
+                    (
+                        start + spec.epochs,
+                        ResolvedKind::RetryStorm { rd: *rd_add_ns, wr: *wr_add_ns },
+                    )
+                }
+                FaultKind::LinkRetrain { frac } => {
+                    if spec.epochs == 0 {
+                        return Err(FaultError::ZeroWindow(spec.pool.clone()));
+                    }
+                    // scale every switch row on the pool's path to root
+                    let path = topo.path_to_root(pool);
+                    let rows: Vec<usize> = (0..switches)
+                        .filter(|&s| path.contains(&topo.switch_nodes()[s]))
+                        .collect();
+                    (start + spec.epochs, ResolvedKind::LinkRetrain { frac: *frac, rows })
+                }
+                FaultKind::PoolOffline => {
+                    if offline_seen[pool] {
+                        return Err(FaultError::OverlappingOffline(spec.pool.clone()));
+                    }
+                    offline_seen[pool] = true;
+                    (u64::MAX, ResolvedKind::PoolOffline)
+                }
+            };
+            events.push(ResolvedFault { pool, start, end, kind, fired: false, active: false });
+        }
+        Ok(FaultState {
+            events,
+            overlay: FaultOverlay {
+                extra_rd_add: vec![0.0; pools],
+                extra_wr_add: vec![0.0; pools],
+                bw_scale: vec![1.0; switches],
+            },
+            overlay_active: false,
+            revision: 0,
+            offline: vec![false; pools],
+            storm_rd: vec![0.0; pools],
+            storm_wr: vec![0.0; pools],
+            faults_injected: 0,
+            throttled_epochs: 0,
+            pools_offline: 0,
+            retry_delay_ns: 0.0,
+            failover_migrated_bytes: 0,
+        })
+    }
+}
+
+/// Accept a pool name (`"pool1"`, `"local"`) or a numeric pool id.
+fn lookup_pool(topo: &Topology, name: &str) -> Option<PoolId> {
+    for p in 0..topo.num_pools() {
+        if topo.pool_name(p) == name {
+            return Some(p);
+        }
+    }
+    let p: PoolId = name.parse().ok()?;
+    (p < topo.num_pools()).then_some(p)
+}
+
+/// Per-epoch additive / multiplicative modifiers the analyzer applies
+/// over its base tensors. Identity when no fault window is active —
+/// and then the analyzer is never even handed one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultOverlay {
+    /// Additive ns per read event, `[P]`.
+    pub extra_rd_add: Vec<f32>,
+    /// Additive ns per write event, `[P]`.
+    pub extra_wr_add: Vec<f32>,
+    /// Multiplicative bandwidth scale per switch row, `[S]`.
+    pub bw_scale: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+enum ResolvedKind {
+    RetryStorm { rd: f32, wr: f32 },
+    LinkRetrain { frac: f32, rows: Vec<usize> },
+    PoolOffline,
+}
+
+#[derive(Debug, Clone)]
+struct ResolvedFault {
+    pool: PoolId,
+    start: u64,
+    /// Exclusive end epoch; `u64::MAX` for permanent events.
+    end: u64,
+    kind: ResolvedKind,
+    /// Counted toward `faults_injected` (once per event).
+    fired: bool,
+    /// Was active last epoch — edge detection for overlay rebuilds.
+    active: bool,
+}
+
+/// Runtime fault schedule: owned by the driver, advanced once per
+/// epoch at the barrier, identical on all three drivers.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    events: Vec<ResolvedFault>,
+    overlay: FaultOverlay,
+    overlay_active: bool,
+    /// Bumped whenever the active overlay changes; the batched driver
+    /// flushes its pending group early on a revision edge so every
+    /// epoch is analyzed under its own overlay.
+    revision: u64,
+    /// Offline mask, `[P]` — pools permanently removed so far.
+    pub offline: Vec<bool>,
+    /// Currently-active storm adds, `[P]` — the exact stage-1 latency
+    /// attribution basis for `retry_delay_ns`.
+    storm_rd: Vec<f32>,
+    storm_wr: Vec<f32>,
+    /// Events whose window has opened at least once.
+    pub faults_injected: u64,
+    /// Epochs with at least one active transient window (storm or
+    /// retrain).
+    pub throttled_epochs: u64,
+    /// Distinct pools taken offline.
+    pub pools_offline: u64,
+    /// Total extra latency injected by retry storms (exact: stage-1 is
+    /// linear, so this is `Σ_p reads(p)·rd_add(p) + writes(p)·wr_add(p)`
+    /// over post-injection bins — a sub-component of `lat_delay_ns`,
+    /// not an addition to it).
+    pub retry_delay_ns: f64,
+    /// Bytes evacuated off offline pools by graceful degradation.
+    pub failover_migrated_bytes: u64,
+}
+
+impl FaultState {
+    /// Advance the schedule to `epoch` (0-based). Activates and
+    /// expires windows in plan order, rebuilds the overlay on any
+    /// membership edge, and returns `true` when the overlay revision
+    /// changed (the batched driver's early-flush signal).
+    pub fn epoch_begin(&mut self, epoch: u64) -> bool {
+        let mut changed = false;
+        let mut any_transient = false;
+        for ev in &mut self.events {
+            let active = epoch >= ev.start && epoch < ev.end;
+            if active && !ev.fired {
+                ev.fired = true;
+                self.faults_injected += 1;
+                if matches!(ev.kind, ResolvedKind::PoolOffline) && !self.offline[ev.pool] {
+                    self.offline[ev.pool] = true;
+                    self.pools_offline += 1;
+                }
+            }
+            if active != ev.active {
+                ev.active = active;
+                changed = true;
+            }
+            if active && !matches!(ev.kind, ResolvedKind::PoolOffline) {
+                any_transient = true;
+            }
+        }
+        if any_transient {
+            self.throttled_epochs += 1;
+        }
+        if changed {
+            self.rebuild_overlay();
+            self.revision += 1;
+        }
+        changed
+    }
+
+    fn rebuild_overlay(&mut self) {
+        self.overlay.extra_rd_add.iter_mut().for_each(|v| *v = 0.0);
+        self.overlay.extra_wr_add.iter_mut().for_each(|v| *v = 0.0);
+        self.overlay.bw_scale.iter_mut().for_each(|v| *v = 1.0);
+        self.storm_rd.iter_mut().for_each(|v| *v = 0.0);
+        self.storm_wr.iter_mut().for_each(|v| *v = 0.0);
+        let mut any = false;
+        for ev in &self.events {
+            if !ev.active {
+                continue;
+            }
+            match &ev.kind {
+                ResolvedKind::RetryStorm { rd, wr } => {
+                    self.overlay.extra_rd_add[ev.pool] += rd;
+                    self.overlay.extra_wr_add[ev.pool] += wr;
+                    self.storm_rd[ev.pool] += rd;
+                    self.storm_wr[ev.pool] += wr;
+                    any = true;
+                }
+                ResolvedKind::LinkRetrain { frac, rows } => {
+                    for &s in rows {
+                        self.overlay.bw_scale[s] *= frac;
+                    }
+                    any = true;
+                }
+                ResolvedKind::PoolOffline => {}
+            }
+        }
+        self.overlay_active = any;
+    }
+
+    /// The overlay the analyzer should run this epoch under, or `None`
+    /// when every modifier is identity (the fault-free fast path).
+    pub fn overlay(&self) -> Option<&FaultOverlay> {
+        if self.overlay_active {
+            Some(&self.overlay)
+        } else {
+            None
+        }
+    }
+
+    /// Current overlay revision (monotonic; bumped on membership edges).
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Exact retry-storm latency this epoch, from post-injection
+    /// `[P, B]` read/write totals: stage 1 of the analyzer is a linear
+    /// dot product, so the storm's share of `lat` is recoverable in
+    /// closed form independent of epoch grouping or thread count.
+    pub fn storm_delay_ns(
+        &self,
+        read_count: impl Fn(PoolId) -> f64,
+        write_count: impl Fn(PoolId) -> f64,
+    ) -> f64 {
+        if !self.overlay_active {
+            return 0.0;
+        }
+        let mut d = 0.0f64;
+        for p in 0..self.storm_rd.len() {
+            let (rd, wr) = (self.storm_rd[p] as f64, self.storm_wr[p] as f64);
+            if rd != 0.0 {
+                d += read_count(p) * rd;
+            }
+            if wr != 0.0 {
+                d += write_count(p) * wr;
+            }
+        }
+        d
+    }
+
+    /// Lowest-numbered online pool other than `from` (CXL pools first,
+    /// then local DRAM), or the structured no-pool error.
+    pub fn fallback_pool(&self, from: PoolId) -> Result<PoolId, FaultError> {
+        for p in (1..self.offline.len()).chain(std::iter::once(0)) {
+            if p != from && !self.offline[p] {
+                return Ok(p);
+            }
+        }
+        Err(FaultError::NoReachablePool)
+    }
+
+    /// Pools that are offline and may still hold live bytes (checked by
+    /// the caller against the tracker's per-pool byte accounting).
+    pub fn any_offline(&self) -> bool {
+        self.pools_offline > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builtin;
+
+    #[test]
+    fn inline_roundtrip_and_kinds() {
+        let p = FaultPlan::parse_inline(
+            "storm:pool1@5+10:rd=200,wr=300;retrain:pool0@8+4:frac=0.5;offline:direct0@12",
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(
+            p.events[0].kind,
+            FaultKind::RetryStorm { rd_add_ns: 200.0, wr_add_ns: 300.0 }
+        );
+        assert_eq!(p.events[1].kind, FaultKind::LinkRetrain { frac: 0.5 });
+        assert_eq!(p.events[2], FaultSpec {
+            pool: "direct0".into(),
+            start: 12,
+            epochs: 0,
+            kind: FaultKind::PoolOffline
+        });
+    }
+
+    #[test]
+    fn toml_plan_parses() {
+        let src = r#"
+seed = 7
+[[fault]]
+kind = "storm"
+pool = "pool1"
+start = 2
+epochs = 3
+rd_add_ns = 150
+[[fault]]
+kind = "offline"
+pool = "pool0"
+start = 4
+"#;
+        let p = FaultPlan::parse_toml(src).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.events.len(), 2);
+        assert!(p.resolve(&builtin::fig2()).is_ok());
+    }
+
+    #[test]
+    fn resolve_rejects_bad_specs() {
+        let topo = builtin::fig2();
+        let unknown = FaultPlan::parse_inline("storm:nosuch@1+2:rd=10").unwrap();
+        assert!(matches!(unknown.resolve(&topo), Err(FaultError::UnknownPool(_))));
+        let zero = FaultPlan::parse_inline("storm:pool1@1+0:rd=10").unwrap();
+        assert!(matches!(zero.resolve(&topo), Err(FaultError::ZeroWindow(_))));
+        let overlap =
+            FaultPlan::parse_inline("offline:pool1@1;offline:pool1@5").unwrap();
+        assert!(matches!(overlap.resolve(&topo), Err(FaultError::OverlappingOffline(_))));
+        let badfrac = FaultPlan::parse_inline("retrain:pool1@1+2:frac=1.5");
+        assert!(matches!(badfrac, Err(FaultError::Parse(_))));
+    }
+
+    #[test]
+    fn windows_activate_and_expire_with_revision_edges() {
+        let topo = builtin::fig2();
+        let plan = FaultPlan::parse_inline("storm:pool1@2+3:rd=100;offline:pool0@4").unwrap();
+        let mut st = plan.resolve(&topo).unwrap();
+        assert!(!st.epoch_begin(0));
+        assert!(st.overlay().is_none());
+        assert!(st.epoch_begin(2)); // storm opens
+        let ov = st.overlay().unwrap();
+        assert_eq!(ov.extra_rd_add[1], 100.0);
+        assert!(!st.epoch_begin(3)); // still open, no edge
+        assert!(st.epoch_begin(4)); // offline fires (edge), storm still open
+        assert!(st.offline[1]); // pool0 is PoolId 1 in fig2
+        assert_eq!(st.pools_offline, 1);
+        assert!(st.epoch_begin(5)); // storm expires
+        assert!(st.overlay().is_none(), "offline alone leaves the overlay identity");
+        assert_eq!(st.faults_injected, 2);
+        assert_eq!(st.throttled_epochs, 3); // epochs 2,3,4
+    }
+
+    #[test]
+    fn retrain_scales_path_rows_only() {
+        let topo = builtin::fig2();
+        // pool0 (PoolId 1) routes through sw0 and rc0 in fig2;
+        // direct0 (PoolId 3) routes through rc0 only.
+        let plan = FaultPlan::parse_inline("retrain:pool0@0+2:frac=0.25").unwrap();
+        let mut st = plan.resolve(&topo).unwrap();
+        st.epoch_begin(0);
+        let ov = st.overlay().unwrap();
+        let scaled: Vec<usize> =
+            (0..ov.bw_scale.len()).filter(|&s| ov.bw_scale[s] != 1.0).collect();
+        for &s in &scaled {
+            assert!(topo.routes_through(1, topo.switch_nodes()[s]));
+            assert_eq!(ov.bw_scale[s], 0.25);
+        }
+        assert!(!scaled.is_empty());
+    }
+
+    #[test]
+    fn fallback_prefers_low_cxl_pool_then_local() {
+        let topo = builtin::fig2();
+        let plan = FaultPlan::parse_inline("offline:pool0@0").unwrap();
+        let mut st = plan.resolve(&topo).unwrap();
+        st.epoch_begin(0);
+        assert_eq!(st.fallback_pool(1).unwrap(), 2); // pool1
+        st.offline[2] = true;
+        st.offline[3] = true;
+        assert_eq!(st.fallback_pool(1).unwrap(), 0); // local DRAM last
+        st.offline[0] = true;
+        assert!(matches!(st.fallback_pool(1), Err(FaultError::NoReachablePool)));
+    }
+
+    #[test]
+    fn seeded_jitter_is_deterministic_and_bounded() {
+        let topo = builtin::fig2();
+        let mut plan = FaultPlan::parse_inline("storm:pool1@10+2:rd=5").unwrap();
+        plan.seed = 99;
+        plan.jitter_epochs = 4;
+        let a = plan.resolve(&topo).unwrap();
+        let b = plan.resolve(&topo).unwrap();
+        assert_eq!(a.events[0].start, b.events[0].start);
+        assert!(a.events[0].start >= 10 && a.events[0].start <= 14);
+    }
+
+    #[test]
+    fn numeric_pool_ids_accepted() {
+        let topo = builtin::fig2();
+        let plan = FaultPlan::parse_inline("storm:2@1+2:rd=5").unwrap();
+        let st = plan.resolve(&topo).unwrap();
+        assert_eq!(st.events[0].pool, 2);
+        assert!(FaultPlan::parse_inline("storm:9@1+2:rd=5")
+            .unwrap()
+            .resolve(&topo)
+            .is_err());
+    }
+}

@@ -120,6 +120,41 @@
 //! (`tests/pipeline_equivalence.rs`), and its per-epoch overhead is
 //! measured at ~0 in `benches/hotpath.rs` (`policy_epoch`).
 //!
+//! ## Fault model & degraded modes
+//!
+//! The `fault` module injects deterministic CXL RAS events
+//! (`--faults plan.toml` / `--fault "storm:pool1@5+10:rd=200"`):
+//! **retry storms** (per-pool read/write latency inflated for a window
+//! of epochs), **link retraining** (every switch row on the pool's
+//! path to the root throttled to a fraction of nominal bandwidth), and
+//! permanent **pool offline** (device hot-remove). A `FaultPlan` holds
+//! pool *names* and binds them to a concrete topology at run start
+//! (`FaultPlan::resolve`); seeded start jitter keeps chaos runs
+//! reproducible. All three drivers advance the schedule identically at
+//! the epoch barrier (`FaultState::epoch_begin`, plan order), then
+//! hand the analyzer a [`fault::FaultOverlay`] — additive per-pool
+//! latency, multiplicative per-switch bandwidth — applied over copies
+//! of its base tensors, so the fault-free path is untouched (pinned at
+//! ~0 overhead by `fault_epoch.faultfree_epochs_per_s` in
+//! `benches/hotpath.rs`). The batched driver flushes its pending group
+//! on every overlay-revision edge, so one `analyze_batch` call never
+//! spans two overlays and `--batch-group 1` vs `256` stay
+//! bit-identical under faults, as do all analyzer / worker thread
+//! counts (CI's determinism matrix gains a fault axis).
+//!
+//! Degradation is graceful, never a panic: when a pool goes offline,
+//! its live regions fail over to the fallback pool through the policy
+//! stack's cost-modeled migration machinery (copy traffic + per-byte
+//! stall charged like any policy move; drivers auto-install an empty
+//! stack when faults are configured), policies see the reduced pool
+//! set (`PolicyCtx::migrate` refuses offline destinations), and a run
+//! with no reachable pool fails with the structured
+//! [`fault::FaultError::NoReachablePool`]. Reports carry the fault
+//! section (`faults_injected`, `retry_delay_ns` — the *exact*
+//! storm-attributed share of latency, recovered in closed form from
+//! the stage-1 linearity — `throttled_epochs`, `pools_offline`,
+//! `failover_migrated_bytes`).
+//!
 //! ## Hot path anatomy
 //!
 //! One `Access` event costs, in order: the cache walk
@@ -174,6 +209,7 @@
 pub mod alloctrack;
 pub mod cache;
 pub mod coordinator;
+pub mod fault;
 pub mod gem5like;
 pub mod metrics;
 pub mod multihost;
@@ -188,6 +224,7 @@ pub mod workload;
 pub mod prelude {
     pub use crate::alloctrack::{AllocTracker, PolicyKind};
     pub use crate::coordinator::{Coordinator, SimConfig, SimReport};
+    pub use crate::fault::{FaultError, FaultOverlay, FaultPlan, FaultState};
     pub use crate::policy::{EpochPolicy, PolicySpec, PolicyStack};
     pub use crate::runtime::{AnalyzerBackend, ScanKernel, TimingInputs, TimingOutputs};
     pub use crate::topology::{builtin, Topology, TopoTensors};

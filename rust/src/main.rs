@@ -75,7 +75,12 @@ fn usage() {
                          blocked = max-plus SIMD blocks, exact = golden reference)\n\
                        --heat-decay F (per-epoch region-heat decay in [0,1];\n\
                          1.0 = lifetime-cumulative)\n\
-                       --threads N (multihost: work-stealing host-phase workers)"
+                       --threads N (multihost: work-stealing host-phase workers)\n\
+                       --faults FILE (deterministic RAS fault plan, TOML)\n\
+                       --fault SPEC (inline plan, e.g.\n\
+                         \"storm:pool1@5+10:rd=200,wr=300;offline:pool0@20\";\n\
+                         kinds: storm (retry latency), retrain (bw fraction),\n\
+                         offline (hot-remove + failover); native backend only)"
     );
 }
 
@@ -122,6 +127,22 @@ fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
     }
     cfg.mig_stall_ns_per_byte =
         args.f64("mig-stall-ns-per-byte", cfg.mig_stall_ns_per_byte);
+    // deterministic RAS fault schedule: --faults file.toml or --fault
+    // inline-spec (mutually exclusive; see `cxlmemsim::fault`)
+    match (args.opt_str("faults"), args.opt_str("fault")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--faults <file> and --fault <spec> are mutually exclusive")
+        }
+        (Some(path), None) => {
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("--faults {path}: {e}"))?;
+            cfg.faults = Some(cxlmemsim::fault::FaultPlan::parse_toml(&src)?);
+        }
+        (None, Some(spec)) => {
+            cfg.faults = Some(cxlmemsim::fault::FaultPlan::parse_inline(&spec)?);
+        }
+        (None, None) => {}
+    }
     Ok(cfg)
 }
 
@@ -310,6 +331,17 @@ fn cmd_multihost(args: &Args) -> anyhow::Result<()> {
             rep.migrations,
             rep.migrated_bytes as f64 / 1024.0,
             rep.mig_stall_ns / 1e6
+        );
+    }
+    if rep.faults_injected > 0 {
+        println!(
+            "  faults: {} injected, {:.3} ms retry delay, {} throttled epochs, \
+             {} pools offline, {:.1} KB failover-migrated",
+            rep.faults_injected,
+            rep.retry_delay_ns / 1e6,
+            rep.throttled_epochs,
+            rep.pools_offline,
+            rep.failover_migrated_bytes as f64 / 1024.0
         );
     }
     if rep.host_workers > 1 {

@@ -71,6 +71,9 @@ pub struct HostReport {
     /// Migrations performed by this host's policy stack.
     pub migrations: u64,
     pub migrated_bytes: u64,
+    /// Bytes this host evacuated off pools taken offline by the fault
+    /// schedule (a subset of `migrated_bytes`; 0 without `--faults`).
+    pub failover_migrated_bytes: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -106,6 +109,16 @@ pub struct MultiHostReport {
     /// advancing hosts (empty on inline runs). Near-equal fractions
     /// mean the queue kept every worker busy.
     pub worker_busy_fracs: Vec<f64>,
+    /// Fault injection (`--faults`, `crate::fault`): events fired,
+    /// exact retry-storm delay charged (part of `total_delay_ns`),
+    /// epochs with a transient window active, distinct pools taken
+    /// offline, bytes evacuated by failover across all hosts. All
+    /// zero on fault-free runs.
+    pub faults_injected: u64,
+    pub retry_delay_ns: f64,
+    pub throttled_epochs: u64,
+    pub pools_offline: u64,
+    pub failover_migrated_bytes: u64,
     pub wall_s: f64,
 }
 
@@ -150,6 +163,9 @@ struct Host {
     buf: Vec<WlEvent>,
     cursor: usize,
     shared_writes: Vec<SharedWrite>,
+    /// Bytes this host's regions were failover-migrated off offline
+    /// pools (fault schedule only).
+    failover_bytes: u64,
     native_ns: f64,
     epoch_vtime: f64,
     epoch_misses: f64,
@@ -300,6 +316,7 @@ pub fn run_shared_threads_with(
     threads: usize,
 ) -> anyhow::Result<MultiHostReport> {
     let wall = std::time::Instant::now();
+    crate::coordinator::ensure_fault_backend(cfg)?;
     let tensors = TopoTensors::build(
         topo,
         runtime::shapes::NUM_POOLS,
@@ -316,6 +333,13 @@ pub fn run_shared_threads_with(
 
     let batch = cfg.event_batch.max(1);
     let nhosts = workloads.len();
+    // resolve the fault plan once against the shared topology; all
+    // fault state lives on the coordinator thread (epoch barrier, host
+    // order), so worker count cannot perturb it
+    let mut fault = match &cfg.faults {
+        Some(plan) => Some(plan.resolve(topo)?),
+        None => None,
+    };
     let stacks: Vec<Option<PolicyStack>> = match stacks {
         Some(v) => {
             anyhow::ensure!(
@@ -326,7 +350,12 @@ pub fn run_shared_threads_with(
             );
             v.into_iter().map(Some).collect()
         }
-        None => (0..nhosts).map(|_| None).collect(),
+        // offline failover routes through each host's policy stack;
+        // under faults every host gets an empty one (bit-identical to
+        // no stack — `tests/pipeline_equivalence.rs`)
+        None => (0..nhosts)
+            .map(|_| fault.as_ref().map(|_| PolicyStack::new(cfg.mig_stall_ns_per_byte)))
+            .collect(),
     };
     let hosts: Vec<Host> = workloads
         .into_iter()
@@ -347,6 +376,7 @@ pub fn run_shared_threads_with(
                 buf: Vec::with_capacity(batch),
                 cursor: 0,
                 shared_writes: Vec::new(),
+                failover_bytes: 0,
                 native_ns: 0.0,
                 epoch_vtime: 0.0,
                 epoch_misses: 0.0,
@@ -409,6 +439,10 @@ pub fn run_shared_threads_with(
     let barrier = Barrier::new(nworkers + 1);
     let stop = AtomicBool::new(false);
     let panicked = AtomicBool::new(false);
+    // first worker panic wins the slot: (host index being advanced,
+    // stringified panic payload), surfaced in the returned error so
+    // callers don't have to scrape stderr
+    let panic_info: Mutex<Option<(usize, String)>> = Mutex::new(None);
     let mut run_err: Option<anyhow::Error> = None;
 
     std::thread::scope(|s| {
@@ -416,6 +450,7 @@ pub fn run_shared_threads_with(
             for w in 0..nworkers {
                 let (hosts, barrier, stop, panicked, next_host, steals) =
                     (&hosts, &barrier, &stop, &panicked, &next_host, &steals);
+                let panic_info = &panic_info;
                 let busy = &busy_ns[w];
                 let home = home_of(w);
                 s.spawn(move || loop {
@@ -426,22 +461,37 @@ pub fn run_shared_threads_with(
                     let t0 = std::time::Instant::now();
                     // a panic here must not strand the coordinator at
                     // the end-of-phase barrier (std Barrier has no
-                    // poisoning): catch it, flag it, make the
-                    // rendezvous anyway; the coordinator turns the flag
-                    // into an error after the phase.
-                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+                    // poisoning): catch it per claimed host — so the
+                    // payload can be paired with the host index being
+                    // advanced — record both, make the rendezvous
+                    // anyway; the coordinator turns the record into the
+                    // returned error after the phase.
+                    loop {
                         let i = next_host.fetch_add(1, Ordering::Relaxed);
                         if i >= nhosts {
                             break; // queue drained: this epoch is done
                         }
-                        let mut h = hosts[i].lock().unwrap();
-                        if !h.done && !home.contains(&i) {
-                            steals.fetch_add(1, Ordering::Relaxed);
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            let mut h = hosts[i].lock().unwrap();
+                            if !h.done && !home.contains(&i) {
+                                steals.fetch_add(1, Ordering::Relaxed);
+                            }
+                            advance_host_epoch(&mut h, topo, cfg, epoch_ns, shared_base, batch);
+                        }));
+                        if let Err(payload) = result {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|m| m.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "<non-string panic payload>".to_string());
+                            let mut slot = panic_info.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some((i, msg));
+                            }
+                            drop(slot);
+                            panicked.store(true, Ordering::Release);
+                            break; // stop claiming; rendezvous below
                         }
-                        advance_host_epoch(&mut h, topo, cfg, epoch_ns, shared_base, batch);
-                    }));
-                    if result.is_err() {
-                        panicked.store(true, Ordering::Release);
                     }
                     busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     barrier.wait(); // every claimed host advanced
@@ -469,9 +519,14 @@ pub fn run_shared_threads_with(
                 // the barrier, which is what a stranded rendezvous
                 // gave)
                 if panicked.load(Ordering::Acquire) {
+                    let (hi, msg) = panic_info
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .unwrap_or((usize::MAX, "<panic payload lost>".to_string()));
                     run_err = Some(anyhow::anyhow!(
-                        "multihost worker panicked during the host phase \
-                         (see stderr for the panic message)"
+                        "multihost worker panicked while advancing host {hi} \
+                         (epoch {epochs}): {msg}"
                     ));
                     break;
                 }
@@ -492,6 +547,51 @@ pub fn run_shared_threads_with(
 
             // ---- epoch barrier (coordinator thread, host order =>
             // deterministic for any worker count)
+            // 0. fault schedule: activate/expire windows in plan order,
+            //    mirror the offline mask into every host's stack on a
+            //    membership edge, then evacuate offline pools per host
+            //    in host order through the cost-modeled migration
+            //    machinery (copy traffic injects in phase 1 below)
+            if let Some(f) = &mut fault {
+                let changed = f.epoch_begin(epochs);
+                if changed {
+                    for h in all.iter_mut() {
+                        if let Some(st) = &mut h.stack {
+                            st.set_offline_pools(&f.offline);
+                        }
+                    }
+                    model.set_fault_overlay(f.overlay());
+                }
+                if f.any_offline() {
+                    let mut fo_err = None;
+                    'hosts: for h in all.iter_mut() {
+                        let Host { stack, tracker, failover_bytes, .. } = &mut **h;
+                        let st = stack.as_mut().expect("fault runs install per-host stacks");
+                        for from in 0..f.offline.len() {
+                            if f.offline[from]
+                                && tracker.stats.pool_bytes.get(from).copied().unwrap_or(0) > 0
+                            {
+                                match f.fallback_pool(from) {
+                                    Ok(to) => {
+                                        let moved =
+                                            st.failover_pool(tracker, from, to, bytes_per_ev);
+                                        *failover_bytes += moved;
+                                        f.failover_migrated_bytes += moved;
+                                    }
+                                    Err(e) => {
+                                        fo_err = Some(e);
+                                        break 'hosts;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    if let Some(e) = fo_err {
+                        run_err = Some(e.into());
+                        break;
+                    }
+                }
+            }
             // 1a. policy phase 1, per host in host order: inject the
             //     previous epoch's migration traffic and run bin
             //     shaping on the host's OWN bins, before they merge
@@ -530,6 +630,14 @@ pub fn run_shared_threads_with(
                 let mut writes = writes;
                 writes.clear();
                 all[hi].shared_writes = writes;
+            }
+
+            // 2b. exact retry-storm attribution over the merged shared
+            //     bins (the storms' per-pool adders are linear in the
+            //     pool's read/write counts — see `crate::fault`)
+            if let Some(f) = &mut fault {
+                let d = f.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
+                f.retry_delay_ns += d;
             }
 
             // 3. one analyzer call for everyone
@@ -632,8 +740,20 @@ pub fn run_shared_threads_with(
             misses: h.misses,
             migrations: migs,
             migrated_bytes: moved,
+            failover_migrated_bytes: h.failover_bytes,
         });
     }
+    let (faults_injected, retry_delay_ns, throttled_epochs, pools_offline, failover_bytes) =
+        match &fault {
+            Some(f) => (
+                f.faults_injected,
+                f.retry_delay_ns,
+                f.throttled_epochs,
+                f.pools_offline,
+                f.failover_migrated_bytes,
+            ),
+            None => (0, 0.0, 0, 0, 0),
+        };
     Ok(MultiHostReport {
         hosts: hosts_out,
         epochs,
@@ -649,6 +769,11 @@ pub fn run_shared_threads_with(
         steals: steals.load(Ordering::Relaxed),
         shard_rebalances,
         worker_busy_fracs,
+        faults_injected,
+        retry_delay_ns,
+        throttled_epochs,
+        pools_offline,
+        failover_migrated_bytes: failover_bytes,
         wall_s: wall.elapsed().as_secs_f64(),
     })
 }

@@ -80,6 +80,11 @@ pub struct PolicyCtx<'a> {
     /// dominance/load signal makes one migration's copy look like
     /// demand heat and cascade into the next (a self-sustaining loop).
     pub injected_events: &'a [f64],
+    /// Per-pool offline mask from the fault subsystem (empty when no
+    /// pool is offline). [`PolicyCtx::migrate`] refuses offline
+    /// destinations, so policies can never repopulate a hot-removed
+    /// device.
+    pub offline: &'a [bool],
     migrations: Vec<Migration>,
 }
 
@@ -92,6 +97,9 @@ impl PolicyCtx<'_> {
     /// actually live on, and pages already resident on `to` copy
     /// nothing.
     pub fn migrate(&mut self, start: u64, to: PoolId) -> bool {
+        if self.offline.get(to).copied().unwrap_or(false) {
+            return false; // destination was hot-removed
+        }
         let Some(r) = self.tracker.region_at(start) else {
             return false;
         };
@@ -180,6 +188,9 @@ pub struct PolicyStack {
     injected_read_bytes: f64,
     injected_write_bytes: f64,
     stall_ns: f64,
+    /// Per-pool offline mask mirrored from the fault subsystem (empty
+    /// = nothing offline); exposed to hooks via [`PolicyCtx::offline`].
+    offline: Vec<bool>,
     /// Per-policy (migrations, moved_bytes) snapshots from
     /// [`PolicyStack::begin_run`]; [`PolicyStack::per_policy_stats`]
     /// reports deltas against them.
@@ -202,6 +213,7 @@ impl PolicyStack {
             injected_read_bytes: 0.0,
             injected_write_bytes: 0.0,
             stall_ns: 0.0,
+            offline: Vec::new(),
             per_policy_base: Vec::new(),
         }
     }
@@ -230,6 +242,7 @@ impl PolicyStack {
         self.injected_read_bytes = 0.0;
         self.injected_write_bytes = 0.0;
         self.stall_ns = 0.0;
+        self.offline.clear();
         self.per_policy_base =
             self.policies.iter().map(|p| (p.migrations(), p.moved_bytes())).collect();
     }
@@ -411,6 +424,7 @@ impl PolicyStack {
             epoch: self.epoch,
             bytes_per_ev,
             injected_events: &self.last_injected,
+            offline: &self.offline,
             migrations: std::mem::take(&mut self.mig_scratch),
         };
         for p in &mut self.policies {
@@ -418,6 +432,63 @@ impl PolicyStack {
         }
         let migs = ctx.migrations;
         self.absorb_migrations(migs, bins.pools);
+    }
+
+    /// Mirror the fault subsystem's per-pool offline mask so every
+    /// subsequent hook invocation sees it via [`PolicyCtx::offline`].
+    /// Drivers call this on overlay-revision edges; an empty mask (the
+    /// fault-free default) costs nothing.
+    pub fn set_offline_pools(&mut self, mask: &[bool]) {
+        self.offline.clear();
+        self.offline.extend_from_slice(mask);
+    }
+
+    /// Graceful degradation for a hot-removed pool: evacuate every
+    /// live region still holding bytes on `from` to `to`, through the
+    /// same cost-modeled migration machinery policies use — copy
+    /// traffic lands on the source/destination bins of the next
+    /// injection and the per-byte stall is accrued, so the
+    /// conservation invariant (injected + pending == migrated) holds
+    /// for failover exactly as for policy moves. Returns the bytes
+    /// evacuated. Interleaved regions are moved whole (every page ends
+    /// up on `to`); pages already on `to` copy nothing.
+    pub fn failover_pool(
+        &mut self,
+        tracker: &mut AllocTracker,
+        from: PoolId,
+        to: PoolId,
+        bytes_per_ev: f32,
+    ) -> u64 {
+        let pools = tracker.stats.pool_bytes.len();
+        self.ensure_pools(pools);
+        // snapshot the region starts first: migrating mutates the map
+        let starts: Vec<u64> = tracker
+            .live_regions()
+            .filter(|r| {
+                let mut hit = false;
+                r.for_each_span(|p, sz| hit |= p == from && sz > 0);
+                hit
+            })
+            .map(|r| r.start)
+            .collect();
+        if starts.is_empty() {
+            return 0;
+        }
+        let mut ctx = PolicyCtx {
+            tracker,
+            epoch: self.epoch,
+            bytes_per_ev,
+            injected_events: &self.last_injected,
+            offline: &self.offline,
+            migrations: std::mem::take(&mut self.mig_scratch),
+        };
+        for s in starts {
+            ctx.migrate(s, to);
+        }
+        let migs = ctx.migrations;
+        let bytes: u64 = migs.iter().map(|m| m.bytes).sum();
+        self.absorb_migrations(migs, pools);
+        bytes
     }
 
     /// Phase 2: run each policy's `after_analysis` hook in stack order,
@@ -437,6 +508,7 @@ impl PolicyStack {
                 epoch: self.epoch,
                 bytes_per_ev,
                 injected_events: &self.last_injected,
+                offline: &self.offline,
                 migrations: std::mem::take(&mut self.mig_scratch),
             };
             for p in &mut self.policies {
@@ -887,6 +959,7 @@ mod tests {
             epoch: 0,
             bytes_per_ev: 64.0,
             injected_events: &[],
+            offline: &[],
             migrations: Vec::new(),
         }
     }
@@ -1316,5 +1389,55 @@ mod tests {
         run_policy(&mut t);
         assert_eq!(t.pool_of(recent), LOCAL_POOL, "decay must retire stale heat");
         assert_eq!(t.pool_of(old_r), 2, "formerly-hot region must stay put");
+    }
+
+    #[test]
+    fn migrate_refuses_offline_destination() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let from = t.pool_of(0x1000);
+        let offline = {
+            let mut m = vec![false; 8];
+            m[LOCAL_POOL] = true;
+            m
+        };
+        let mut c = PolicyCtx {
+            tracker: &mut t,
+            epoch: 0,
+            bytes_per_ev: 64.0,
+            injected_events: &[],
+            offline: &offline,
+            migrations: Vec::new(),
+        };
+        assert!(!c.migrate(0x1000, LOCAL_POOL), "offline destination must be refused");
+        assert!(c.migrations().is_empty());
+        assert_eq!(t.pool_of(0x1000), from, "region must not have moved");
+    }
+
+    #[test]
+    fn failover_evacuates_offline_pool_with_cost_accounting() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let from = t.pool_of(0x1000);
+        assert_ne!(from, LOCAL_POOL);
+        let to = if from == 1 { 2 } else { 1 };
+        let mut stack = PolicyStack::new(0.0625);
+        stack.begin_run();
+        let mut mask = vec![false; 8];
+        mask[from] = true;
+        stack.set_offline_pools(&mask);
+        let moved = stack.failover_pool(&mut t, from, to, 64.0);
+        assert_eq!(moved, 1 << 20, "whole region evacuated");
+        assert_eq!(t.pool_of(0x1000), to);
+        assert_eq!(t.stats.pool_bytes[from], 0);
+        // cost-modeled like any policy migration: counted, pending for
+        // the next injection, and stalled per byte
+        assert_eq!(stack.migrations(), 1);
+        assert_eq!(stack.moved_bytes(), 1 << 20);
+        assert_eq!(stack.pending_bytes(), (1u64 << 20) as f64);
+        // draining the epoch charges the stall
+        let bins = bins_hot_on(to);
+        let stall = stack.after_analysis(&bins, &outputs(), &mut t, 64.0);
+        assert!((stall - (1u64 << 20) as f64 * 0.0625).abs() < 1e-6);
+        // nothing left on the offline pool: a second sweep is a no-op
+        assert_eq!(stack.failover_pool(&mut t, from, to, 64.0), 0);
     }
 }

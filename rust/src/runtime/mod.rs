@@ -82,6 +82,11 @@ pub trait TimingModel {
     /// its outputs (epoch policies need it; skipping it saves an 8 KB
     /// allocation per epoch on the native backend). Default: no-op.
     fn set_export_backlog(&mut self, _on: bool) {}
+    /// Install the fault overlay subsequent `analyze` calls run under
+    /// (`None` restores the fault-free base tensors). Default: no-op —
+    /// backends without overlay support ignore it, and the drivers
+    /// reject fault plans on such backends up front.
+    fn set_fault_overlay(&mut self, _overlay: Option<&crate::fault::FaultOverlay>) {}
 }
 
 /// Which backend to construct.
@@ -182,6 +187,11 @@ pub trait BatchTimingModel {
         ScanKernel::Exact
     }
     fn backend_name(&self) -> &'static str;
+    /// Install the fault overlay the *whole* next `analyze_batch` call
+    /// runs under; the batched driver flushes its pending group on
+    /// every overlay change so one group never spans two overlays.
+    /// Default: no-op (see [`TimingModel::set_fault_overlay`]).
+    fn set_fault_overlay(&mut self, _overlay: Option<&crate::fault::FaultOverlay>) {}
     /// `reads`/`writes` are [E, P, B] flattened with E == `batch()`.
     fn analyze_batch(
         &mut self,

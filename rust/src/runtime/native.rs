@@ -47,6 +47,17 @@ pub struct NativeAnalyzer {
     desc_mask: Vec<f32>,
     stt: Vec<f32>,
     bw: Vec<f32>,
+    // Fault-free base copies of the overlay-mutable tensors. A fault
+    // overlay rewrites the active `extra_rd` / `extra_wr` / `bw` from
+    // these; `analyze_core` itself never branches on faults, so the
+    // fault-free path is untouched (gated in benches/hotpath.rs,
+    // `fault_epoch.faultfree_epochs_per_s`).
+    base_extra_rd: Vec<f32>,
+    base_extra_wr: Vec<f32>,
+    base_bw: Vec<f32>,
+    /// An overlay is currently applied (so a `None` install must
+    /// restore the base tensors).
+    overlaid: bool,
     /// Switch rows with any routed pool (padded rows are provably inert
     /// — zero mask, zero stt/bw — so the scans skip them entirely).
     active_rows: Vec<usize>,
@@ -93,6 +104,10 @@ impl NativeAnalyzer {
             desc_mask: t.desc_mask.clone(),
             stt: t.stt.clone(),
             bw: t.bw.clone(),
+            base_extra_rd: t.extra_read_lat.clone(),
+            base_extra_wr: t.extra_write_lat.clone(),
+            base_bw: t.bw.clone(),
+            overlaid: false,
             ev: vec![0.0; t.switches * nbins],
             cong_backlog: vec![0.0; t.switches * nbins],
             pool_zero: vec![false; t.pools],
@@ -111,6 +126,37 @@ impl NativeAnalyzer {
     /// the per-bin backlog stores entirely.
     pub fn last_backlog(&self) -> &[f32] {
         &self.cong_backlog
+    }
+
+    /// (Un)install a fault overlay by rewriting the active tensors
+    /// from their fault-free base copies: additive per-pool latency,
+    /// multiplicative per-switch-row bandwidth. Overlay vectors may be
+    /// shorter than the padded tensor shapes (they are sized by the
+    /// real topology); padded tail entries keep their base values.
+    pub fn apply_fault_overlay(&mut self, overlay: Option<&crate::fault::FaultOverlay>) {
+        match overlay {
+            None => {
+                if self.overlaid {
+                    self.extra_rd.copy_from_slice(&self.base_extra_rd);
+                    self.extra_wr.copy_from_slice(&self.base_extra_wr);
+                    self.bw.copy_from_slice(&self.base_bw);
+                    self.overlaid = false;
+                }
+            }
+            Some(ov) => {
+                for p in 0..self.pools {
+                    let rd = ov.extra_rd_add.get(p).copied().unwrap_or(0.0);
+                    let wr = ov.extra_wr_add.get(p).copied().unwrap_or(0.0);
+                    self.extra_rd[p] = self.base_extra_rd[p] + rd;
+                    self.extra_wr[p] = self.base_extra_wr[p] + wr;
+                }
+                for s in 0..self.switches {
+                    let sc = ov.bw_scale.get(s).copied().unwrap_or(1.0);
+                    self.bw[s] = self.base_bw[s] * sc;
+                }
+                self.overlaid = true;
+            }
+        }
     }
 
     /// The model's three stages for one epoch, writing into caller
@@ -469,6 +515,10 @@ impl TimingModel for NativeAnalyzer {
         self.export_backlog = on;
     }
 
+    fn set_fault_overlay(&mut self, overlay: Option<&crate::fault::FaultOverlay>) {
+        self.apply_fault_overlay(overlay);
+    }
+
     fn analyze(&mut self, inp: &TimingInputs) -> anyhow::Result<TimingOutputs> {
         let (p, s, b) = (self.pools, self.switches, self.nbins);
         anyhow::ensure!(inp.reads.len() == p * b, "reads shape");
@@ -629,6 +679,16 @@ impl BatchTimingModel for NativeBatchAnalyzer {
     }
     fn backend_name(&self) -> &'static str {
         "native-batch"
+    }
+
+    /// Propagated to the calling-thread analyzer *and* every shard
+    /// worker's scratch clone — each worker must run the whole group
+    /// under the same overlay for sharding to stay bit-identical.
+    fn set_fault_overlay(&mut self, overlay: Option<&crate::fault::FaultOverlay>) {
+        self.inner.apply_fault_overlay(overlay);
+        for w in &mut self.workers {
+            w.apply_fault_overlay(overlay);
+        }
     }
 
     fn analyze_batch(
@@ -808,6 +868,84 @@ mod tests {
             })
             .unwrap();
         assert_eq!(out.total, 0.0, "local traffic must cost nothing");
+    }
+
+    #[test]
+    fn fault_overlay_applies_and_restores_bitexact() {
+        use crate::fault::FaultPlan;
+        let mut a = analyzer(8);
+        let mut reads = vec![0.0f32; 8 * 8];
+        reads[8] = 50.0; // 50 reads to pool 1, bin 0
+        let writes = vec![0.0; 8 * 8];
+        let run = |a: &mut NativeAnalyzer| {
+            a.analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width: 1e9,
+                bytes_per_ev: 64.0,
+            })
+            .unwrap()
+        };
+        let base = run(&mut a);
+        let plan = FaultPlan::parse_inline("storm:pool1@0+1:rd=200").unwrap();
+        let mut st = plan.resolve(&builtin::fig2()).unwrap();
+        st.epoch_begin(0);
+        a.set_fault_overlay(st.overlay());
+        let stormy = run(&mut a);
+        // stage 1 is linear: the storm adds exactly 50 * 200 ns
+        let extra = stormy.lat[1] as f64 - base.lat[1] as f64;
+        assert!((extra - 50.0 * 200.0).abs() < 1e-2, "extra {extra}");
+        // and exactly matches the state's closed-form attribution
+        let attr = st.storm_delay_ns(|p| if p == 1 { 50.0 } else { 0.0 }, |_| 0.0);
+        assert!((extra - attr).abs() < 1e-2, "{extra} vs {attr}");
+        // uninstalling restores the fault-free path bit-for-bit
+        a.set_fault_overlay(None);
+        let restored = run(&mut a);
+        assert_eq!(restored.total, base.total);
+        assert_eq!(restored.lat, base.lat);
+        assert_eq!(restored.cong, base.cong);
+        assert_eq!(restored.bwd, base.bwd);
+    }
+
+    #[test]
+    fn fault_overlay_batched_matches_per_epoch() {
+        use crate::fault::FaultPlan;
+        let topo = builtin::fig2();
+        let t = TopoTensors::build(&topo, 8, 8).unwrap();
+        let plan = FaultPlan::parse_inline("storm:pool1@0+1:rd=75,wr=25;retrain:pool0@0+1:frac=0.5")
+            .unwrap();
+        let mut st = plan.resolve(&topo).unwrap();
+        st.epoch_begin(0);
+        let e = 3usize;
+        let mut reads = vec![0.0f32; e * 8 * 8];
+        let mut writes = vec![0.0f32; e * 8 * 8];
+        for i in 0..e {
+            reads[i * 64 + 8] = 10.0 + i as f32; // pool 1, bin 0
+            writes[i * 64 + 16 + 3] = 4.0; // pool 2, bin 3
+        }
+        // batched, 1 worker vs 3 workers, both overlaid
+        let mut b1 = NativeBatchAnalyzer::with_kernel(&t, 8, e, 1, ScanKernel::Blocked);
+        let mut b3 = NativeBatchAnalyzer::with_kernel(&t, 8, e, 3, ScanKernel::Blocked);
+        BatchTimingModel::set_fault_overlay(&mut b1, st.overlay());
+        BatchTimingModel::set_fault_overlay(&mut b3, st.overlay());
+        let o1 = b1.analyze_batch(&reads, &writes, 120.0, 64.0).unwrap();
+        let o3 = b3.analyze_batch(&reads, &writes, 120.0, 64.0).unwrap();
+        assert_eq!(o1.total, o3.total);
+        assert_eq!(o1.lat, o3.lat);
+        // and both equal the per-epoch analyzer under the same overlay
+        let mut a = NativeAnalyzer::with_kernel(&t, 8, ScanKernel::Blocked);
+        a.set_fault_overlay(st.overlay());
+        for i in 0..e {
+            let out = a
+                .analyze(&TimingInputs {
+                    reads: &reads[i * 64..(i + 1) * 64],
+                    writes: &writes[i * 64..(i + 1) * 64],
+                    bin_width: 120.0,
+                    bytes_per_ev: 64.0,
+                })
+                .unwrap();
+            assert_eq!(out.total, o1.total[i], "epoch {i}");
+        }
     }
 
     #[test]

@@ -144,34 +144,39 @@ pub fn read_binary(b: &[u8]) -> Result<Vec<WlEvent>, String> {
         return Err(format!("event count {n} exceeds trace size {}", b.len()));
     }
     let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
+    for i in 0..n {
+        // every failure below names the record index and the byte
+        // offset the record started at, so a corrupt archive points
+        // straight at the damage instead of a bare "truncated trace"
+        let start = off;
+        let ctx = |err: String| format!("record {i} of {n} at byte {start}: {err}");
         if off >= b.len() {
-            return Err("truncated trace".into());
+            return Err(ctx("truncated trace".into()));
         }
         let tag = b[off];
         off += 1;
         match tag {
             0 | 1 => {
-                let addr = get_u64(b, &mut off)?;
+                let addr = get_u64(b, &mut off).map_err(&ctx)?;
                 out.push(WlEvent::Access(Access { addr, is_write: tag == 1 }));
             }
             2 => {
                 if off >= b.len() {
-                    return Err("truncated trace".into());
+                    return Err(ctx("truncated trace".into()));
                 }
-                let kind = kind_from_u8(b[off])?;
+                let kind = kind_from_u8(b[off]).map_err(&ctx)?;
                 off += 1;
-                let addr = get_u64(b, &mut off)?;
-                let len = get_u64(b, &mut off)?;
+                let addr = get_u64(b, &mut off).map_err(&ctx)?;
+                let len = get_u64(b, &mut off).map_err(&ctx)?;
                 let end = off + 8;
                 if end > b.len() {
-                    return Err("truncated trace".into());
+                    return Err(ctx("truncated trace".into()));
                 }
                 let t_ns = f64::from_le_bytes(b[off..end].try_into().unwrap());
                 off = end;
                 out.push(WlEvent::Alloc(AllocEvent { kind, addr, len, t_ns }));
             }
-            t => return Err(format!("bad tag {t}")),
+            t => return Err(ctx(format!("bad tag {t}"))),
         }
     }
     Ok(out)
@@ -251,6 +256,38 @@ mod tests {
         for cut in [17, buf.len() - 3] {
             assert!(read_binary(&buf[..cut]).is_err(), "cut at {cut}");
         }
+    }
+
+    #[test]
+    fn binary_errors_name_record_and_byte_offset() {
+        let evs = sample_events();
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &evs).unwrap();
+        // layout: 16-byte header, alloc (26 B) at 16, reads (9 B) at
+        // 42 and 51, alloc at 60 — cutting the tail lands inside
+        // record 3, which started at byte 60
+        let err = read_binary(&buf[..buf.len() - 3]).unwrap_err();
+        assert!(err.contains("record 3 of 4"), "{err}");
+        assert!(err.contains("at byte 60"), "{err}");
+        // corrupt record 1's tag in place
+        let mut bad = buf.clone();
+        bad[42] = 9;
+        let err = read_binary(&bad).unwrap_err();
+        assert!(err.contains("record 1 of 4"), "{err}");
+        assert!(err.contains("at byte 42"), "{err}");
+        assert!(err.contains("bad tag 9"), "{err}");
+    }
+
+    #[test]
+    fn binary_bad_alloc_kind_names_record() {
+        let evs = sample_events();
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &evs).unwrap();
+        buf[17] = 250; // record 0 is an alloc; its kind byte is 17
+        let err = read_binary(&buf).unwrap_err();
+        assert!(err.contains("record 0 of 4"), "{err}");
+        assert!(err.contains("at byte 16"), "{err}");
+        assert!(err.contains("bad alloc kind 250"), "{err}");
     }
 
     #[test]

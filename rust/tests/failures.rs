@@ -167,3 +167,103 @@ fn bad_topology_configs_all_error_cleanly() {
         assert!(Topology::from_toml_str(src).is_err(), "case {i} should fail");
     }
 }
+
+// ------------------------------------------------------ fault plans
+
+#[test]
+fn corrupt_trace_errors_name_record_and_offset() {
+    // end-to-end flavor of the io.rs unit tests: a damaged archive
+    // must point at the damaged record, not say "truncated trace"
+    let mut wl = cxlmemsim::workload::by_name("sbrk", 0.001, 1).unwrap();
+    let mut events = Vec::new();
+    while let Some(ev) = wl.next_event() {
+        events.push(ev);
+        if events.len() >= 50 {
+            break;
+        }
+    }
+    let mut buf = Vec::new();
+    trace_io::write_binary(&mut buf, &events).unwrap();
+    let err = trace_io::read_binary(&buf[..buf.len() - 2]).unwrap_err();
+    assert!(err.contains("record"), "{err}");
+    assert!(err.contains("at byte"), "{err}");
+}
+
+#[test]
+fn malformed_fault_specs_all_error_cleanly() {
+    use cxlmemsim::fault::{FaultError, FaultPlan};
+    let topo = builtin::fig2();
+
+    // parse-level failures: clear one-line messages, never a panic
+    for (spec, what) in [
+        ("", "empty"),
+        ("storm", "missing pool@start"),
+        ("storm:pool1", "missing @start"),
+        ("storm:pool1@x+2:rd=10", "bad start"),
+        ("storm:pool1@1+y:rd=10", "bad window"),
+        ("storm:pool1@1+2:rd", "bad param"),
+        ("storm:pool1@1+2:rd=abc", "bad value"),
+        ("meteor:pool1@1+2", "unknown kind"),
+        ("retrain:pool1@1+2:frac=0", "frac out of range"),
+        ("retrain:pool1@1+2:frac=1.5", "frac out of range"),
+    ] {
+        match FaultPlan::parse_inline(spec) {
+            Err(FaultError::Parse(msg)) => {
+                assert!(!msg.is_empty(), "{what}: empty message")
+            }
+            other => panic!("{what}: expected a parse error, got {other:?}"),
+        }
+    }
+
+    // resolve-level failures against a concrete topology
+    let unknown = FaultPlan::parse_inline("storm:nosuch@1+2:rd=10").unwrap();
+    assert!(matches!(unknown.resolve(&topo), Err(FaultError::UnknownPool(_))));
+    let zero = FaultPlan::parse_inline("retrain:pool1@3+0:frac=0.5").unwrap();
+    assert!(matches!(zero.resolve(&topo), Err(FaultError::ZeroWindow(_))));
+    let overlap = FaultPlan::parse_inline("offline:pool0@1;offline:pool0@9").unwrap();
+    assert!(matches!(overlap.resolve(&topo), Err(FaultError::OverlappingOffline(_))));
+
+    // the same failures surface as clean errors through the driver
+    let mut cfg = fast_cfg();
+    cfg.faults = Some(unknown);
+    let err =
+        err_of(Coordinator::new(builtin::fig2(), cfg).and_then(|mut c| c.run_workload("stream")));
+    assert!(err.contains("unknown pool"), "{err}");
+}
+
+#[test]
+fn malformed_fault_toml_errors_cleanly() {
+    use cxlmemsim::fault::{FaultError, FaultPlan};
+    for (src, what) in [
+        ("", "no events"),
+        ("seed = 3\n", "no events"),
+        ("[[fault]]\npool = \"pool1\"\nstart = 1\n", "missing kind"),
+        ("[[fault]]\nkind = \"storm\"\nstart = 1\n", "missing pool"),
+        (
+            "[[fault]]\nkind = \"warp\"\npool = \"pool1\"\nstart = 1\n",
+            "unknown kind",
+        ),
+        (
+            "[[fault]]\nkind = \"retrain\"\npool = \"pool1\"\nstart = 1\nepochs = 2\nfrac = 2.0\n",
+            "frac out of range",
+        ),
+    ] {
+        assert!(
+            matches!(FaultPlan::parse_toml(src), Err(FaultError::Parse(_))),
+            "{what}: should be a parse error"
+        );
+    }
+}
+
+#[test]
+fn faults_on_pjrt_backend_is_a_config_error() {
+    let mut cfg = fast_cfg();
+    cfg.backend = cxlmemsim::runtime::AnalyzerBackend::Pjrt;
+    cfg.faults = Some(cxlmemsim::fault::FaultPlan::parse_inline("offline:pool0@2").unwrap());
+    let err = err_of(Coordinator::new(builtin::fig2(), cfg.clone()));
+    assert!(err.contains("--backend native"), "unhelpful error: {err}");
+    // batched replay takes the same guard
+    let mut wl = cxlmemsim::workload::by_name("stream", cfg.scale, cfg.seed).unwrap();
+    let err = err_of(cxlmemsim::coordinator::run_batched(&builtin::fig2(), &cfg, wl.as_mut()));
+    assert!(err.contains("--backend native"), "{err}");
+}

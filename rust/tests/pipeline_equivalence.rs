@@ -238,12 +238,19 @@ fn assert_multihost_identical(a: &MultiHostReport, b: &MultiHostReport) {
     assert_eq!(a.migrations, b.migrations);
     assert_eq!(a.migrated_bytes, b.migrated_bytes);
     assert_eq!(a.mig_stall_ns, b.mig_stall_ns);
+    // fault counters (all zero on fault-free runs)
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.retry_delay_ns, b.retry_delay_ns);
+    assert_eq!(a.throttled_epochs, b.throttled_epochs);
+    assert_eq!(a.pools_offline, b.pools_offline);
+    assert_eq!(a.failover_migrated_bytes, b.failover_migrated_bytes);
     assert_eq!(a.hosts.len(), b.hosts.len());
     for (x, y) in a.hosts.iter().zip(&b.hosts) {
         assert_eq!(x.misses, y.misses);
         assert_eq!(x.native_ns, y.native_ns);
         assert_eq!(x.delay_ns, y.delay_ns);
         assert_eq!(x.migrations, y.migrations);
+        assert_eq!(x.failover_migrated_bytes, y.failover_migrated_bytes);
     }
 }
 
@@ -731,5 +738,253 @@ fn multihost_staged_bins_match_scalar_record() {
         let scalar = run_shared_threads(&builtin::fig2(), &scalar_cfg, mk_hosts(), 1).unwrap();
         let staged = run_shared_threads(&builtin::fig2(), &staged_cfg, mk_hosts(), 1).unwrap();
         assert_multihost_identical(&scalar, &staged);
+    }
+}
+
+// ---------------------------------------------------- fault injection
+
+use cxlmemsim::fault::FaultPlan;
+
+fn assert_fault_stats_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+    assert_eq!(a.faults_injected, b.faults_injected, "{ctx}: faults_injected");
+    assert_eq!(a.retry_delay_ns, b.retry_delay_ns, "{ctx}: retry_delay_ns");
+    assert_eq!(a.throttled_epochs, b.throttled_epochs, "{ctx}: throttled_epochs");
+    assert_eq!(a.pools_offline, b.pools_offline, "{ctx}: pools_offline");
+    assert_eq!(
+        a.failover_migrated_bytes, b.failover_migrated_bytes,
+        "{ctx}: failover_migrated_bytes"
+    );
+}
+
+/// Epoch count of the fault-free baseline run — faults never change
+/// the event stream, so every faulted run sees the same count, and the
+/// chaos schedule below can be placed mid-run at any workload scale.
+fn baseline_epochs(cfg: &SimConfig) -> u64 {
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let e = run_batched(&builtin::fig2(), cfg, wl.as_mut()).unwrap().epochs_run;
+    assert!(e >= 4, "need >= 4 epochs for a mid-run fault schedule, got {e}");
+    e
+}
+
+/// All three RAS kinds in one plan: retry storms on pool0 and pool1
+/// (pool0 — PoolId 1 — is the first CxlOnly round-robin target, so it
+/// always carries traffic and holds bytes), link retraining on pool0's
+/// switch path, then pool0 is hot-removed mid-run. Four events total.
+fn chaos_plan(epochs: u64) -> FaultPlan {
+    let w = (epochs / 4).max(1);
+    FaultPlan::parse_inline(&format!(
+        "storm:pool0@1+{w}:rd=250,wr=125;storm:pool1@1+{w}:rd=250,wr=125;\
+         retrain:pool0@1+{w}:frac=0.5;offline:pool0@{}",
+        epochs / 2
+    ))
+    .unwrap()
+}
+
+/// Acceptance: a mid-run pool-offline run completes with graceful
+/// failover, and the chaos run is bit-identical between the sequential
+/// coordinator and batched replay.
+#[test]
+fn fault_run_completes_with_failover_and_matches_across_drivers() {
+    let cfg = fast_cfg();
+    let mut base_wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let base = run_batched(&builtin::fig2(), &cfg, base_wl.as_mut()).unwrap();
+    assert!(base.epochs_run >= 4, "need >= 4 epochs, got {}", base.epochs_run);
+
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(chaos_plan(base.epochs_run));
+    let mut seq = Coordinator::new(builtin::fig2(), fcfg.clone()).unwrap();
+    let seq_rep = seq.run_workload("zipfian").unwrap();
+
+    // degradation is graceful and visible
+    assert_eq!(seq_rep.epochs_run, base.epochs_run, "faults must not change the event stream");
+    assert_eq!(seq_rep.total_misses, base.total_misses);
+    assert_eq!(seq_rep.faults_injected, 4, "storms + retrain + offline all fired");
+    assert_eq!(seq_rep.pools_offline, 1);
+    assert!(seq_rep.failover_migrated_bytes > 0, "pool0 held bytes: failover must move them");
+    assert!(seq_rep.throttled_epochs > 0);
+    assert!(seq_rep.retry_delay_ns > 0.0, "pool1 carried traffic during the storm");
+    assert!(
+        seq_rep.retry_delay_ns <= seq_rep.lat_delay_ns,
+        "retry delay is a sub-component of lat, not an addition"
+    );
+    // the auto-installed (empty) stack migrates only for failover
+    assert_eq!(seq_rep.failover_migrated_bytes, seq_rep.migrated_bytes);
+    assert!(seq_rep.mig_delay_ns > 0.0, "failover copy stall must be charged");
+    assert!(seq_rep.delay_ns != base.delay_ns, "faults must perturb the timing");
+
+    // batched replay: same plan, bit-identical
+    let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+    let bat_rep = run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap();
+    assert_reports_identical(&seq_rep, &bat_rep, "faults: sequential vs batched");
+    assert_fault_stats_identical(&seq_rep, &bat_rep, "faults: sequential vs batched");
+}
+
+/// The chaos run must be bit-identical for any analyzer thread count
+/// and any native group size — the overlay-revision early flush keeps
+/// one `analyze_batch` call from ever spanning two overlays.
+#[test]
+fn fault_run_bit_identical_across_threads_and_groups() {
+    let cfg = fast_cfg();
+    let epochs = baseline_epochs(&cfg);
+    let run = |threads: usize, group: usize| {
+        let mut fcfg = cfg.clone();
+        fcfg.faults = Some(chaos_plan(epochs));
+        fcfg.analyzer_threads = threads;
+        fcfg.batch_group = group;
+        let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap()
+    };
+    let base = run(1, 1);
+    assert_eq!(base.pools_offline, 1);
+    assert!(base.failover_migrated_bytes > 0);
+    for threads in knob_threads(&[2, 8]) {
+        for group in [1usize, 16, 256] {
+            let rep = run(threads, group);
+            let ctx = format!("faults: threads={threads} group={group}");
+            assert_reports_identical(&base, &rep, &ctx);
+            assert_fault_stats_identical(&base, &rep, &ctx);
+        }
+    }
+}
+
+/// Failover rides the same cost-modeled migration machinery as policy
+/// moves: every evacuated byte is injected as copy traffic or still
+/// pending — never dropped.
+#[test]
+fn pool_offline_failover_conserves_migration_traffic() {
+    let cfg = fast_cfg();
+    let epochs = baseline_epochs(&cfg);
+    let mut fcfg = cfg.clone();
+    fcfg.faults =
+        Some(FaultPlan::parse_inline(&format!("offline:pool0@{}", epochs / 2)).unwrap());
+    let mut stack = PolicyStack::new(fcfg.mig_stall_ns_per_byte);
+    let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+    let rep = run_batched_with(&builtin::fig2(), &fcfg, wl.as_mut(), Some(&mut stack)).unwrap();
+    assert_eq!(rep.pools_offline, 1);
+    assert!(rep.failover_migrated_bytes > 0);
+    let moved = stack.moved_bytes() as f64;
+    assert_eq!(rep.failover_migrated_bytes as f64, moved, "only failover migrates here");
+    assert_eq!(
+        stack.injected_read_bytes() + stack.pending_bytes(),
+        moved,
+        "read-side: injected + pending must equal evacuated"
+    );
+    assert_eq!(
+        stack.injected_write_bytes() + stack.pending_bytes(),
+        moved,
+        "write-side: injected + pending must equal evacuated"
+    );
+}
+
+/// A plan whose windows never open must be indistinguishable from a
+/// fault-free run — the zero-overhead contract of the fault-free path,
+/// including the auto-installed empty policy stack.
+#[test]
+fn unreached_fault_plan_bit_identical_to_fault_free() {
+    let cfg = fast_cfg();
+    let epochs = baseline_epochs(&cfg);
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(
+        FaultPlan::parse_inline(&format!(
+            "storm:pool1@{0}+2:rd=250;offline:pool0@{0}",
+            epochs * 10
+        ))
+        .unwrap(),
+    );
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let plain = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+    let armed = run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap();
+    assert_reports_identical(&plain, &armed, "unreached plan");
+    assert_eq!(armed.faults_injected, 0);
+    assert_eq!(armed.throttled_epochs, 0);
+    assert_eq!(armed.retry_delay_ns, 0.0);
+}
+
+/// Stage 1 of the analyzer is linear in the per-pool bin counts, so a
+/// storm's latency share is recoverable in closed form: the faulted
+/// run's lat term must exceed the fault-free one by `retry_delay_ns`
+/// (up to f32 accumulation noise in the analyzer).
+#[test]
+fn retry_storm_attribution_matches_lat_inflation() {
+    let cfg = fast_cfg();
+    let epochs = baseline_epochs(&cfg);
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(
+        FaultPlan::parse_inline(&format!(
+            "storm:pool0@0+{epochs}:rd=400,wr=200;storm:pool1@0+{epochs}:rd=400,wr=200;\
+             storm:direct0@0+{epochs}:rd=400,wr=200"
+        ))
+        .unwrap(),
+    );
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let plain = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+    let stormed = run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap();
+    assert!(stormed.retry_delay_ns > 0.0);
+    assert_eq!(stormed.throttled_epochs, stormed.epochs_run, "whole-run windows");
+    // bins are identical (no offline, no policy), so the lat delta IS
+    // the storm contribution — f32 analyzer arithmetic vs the f64
+    // attribution leaves only accumulation noise
+    let delta = stormed.lat_delay_ns - plain.lat_delay_ns;
+    let rel = (delta - stormed.retry_delay_ns).abs() / stormed.retry_delay_ns;
+    assert!(
+        rel < 5e-3,
+        "lat inflation {delta} vs attributed {} (rel {rel})",
+        stormed.retry_delay_ns
+    );
+    // everything the analyzer did not re-time is untouched
+    assert_eq!(plain.total_misses, stormed.total_misses);
+    assert_eq!(plain.epochs_run, stormed.epochs_run);
+}
+
+/// Taking every pool offline leaves no failover target: the run must
+/// end with the structured no-reachable-pool error, never a panic.
+#[test]
+fn all_pools_offline_is_a_clean_error() {
+    let mut fcfg = fast_cfg();
+    fcfg.faults = Some(
+        FaultPlan::parse_inline(
+            "offline:local@1;offline:pool0@1;offline:pool1@1;offline:direct0@1",
+        )
+        .unwrap(),
+    );
+    let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+    let err = run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no reachable pool"),
+        "want the structured degradation error, got: {err:#}"
+    );
+    let mut seq = Coordinator::new(builtin::fig2(), fcfg).unwrap();
+    let err = seq.run_workload("zipfian").unwrap_err();
+    assert!(format!("{err:#}").contains("no reachable pool"), "sequential: {err:#}");
+}
+
+/// Multihost chaos: the fault schedule advances on the coordinator
+/// thread at the epoch barrier, so any worker count is bit-identical —
+/// including per-host failover sweeps in host order.
+#[test]
+fn multihost_fault_run_bit_identical_across_worker_counts() {
+    let cfg = fast_cfg();
+    let mk_hosts = || -> Vec<Box<dyn Workload>> {
+        (0..3)
+            .map(|i| workload::by_name("stream", 0.002, i as u64).unwrap())
+            .collect()
+    };
+    let plain = run_shared_threads(&builtin::fig2(), &cfg, mk_hosts(), 1).unwrap();
+    assert!(plain.epochs >= 4, "need >= 4 epochs, got {}", plain.epochs);
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(chaos_plan(plain.epochs));
+    let one = run_shared_threads(&builtin::fig2(), &fcfg, mk_hosts(), 1).unwrap();
+    assert_eq!(one.epochs, plain.epochs, "faults must not change the event stream");
+    assert_eq!(one.faults_injected, 4);
+    assert_eq!(one.pools_offline, 1);
+    assert!(one.failover_migrated_bytes > 0, "hosts held pool0 bytes");
+    assert!(one.retry_delay_ns > 0.0);
+    let host_sum: u64 = one.hosts.iter().map(|h| h.failover_migrated_bytes).sum();
+    assert_eq!(host_sum, one.failover_migrated_bytes, "per-host failover must sum to total");
+    for threads in knob_threads(&[2, 4]) {
+        let many = run_shared_threads(&builtin::fig2(), &fcfg, mk_hosts(), threads).unwrap();
+        assert_multihost_identical(&one, &many);
     }
 }
