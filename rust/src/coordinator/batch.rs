@@ -30,6 +30,14 @@
 //! stack, larger groups stretch the phase-2 lateness window to
 //! E−1 epochs (asserted as the group-size bound in
 //! [`super::driver::BatchedFlush`]); pick the group size accordingly.
+//!
+//! This is also the driver of choice for *streaming* replay
+//! (`replay` / `run --trace` on a CXLTRC v2 file): the pump pulls
+//! from `trace::stream::TraceStream`, which serves chunk-resident
+//! events and overlaps next-chunk decode with the analyzer via a
+//! rendezvous channel — O(chunk) memory, wall-clock approaching
+//! max(decode, analyze), reports bit-identical to in-memory replay
+//! for every thread/group/kernel knob (`tests/pipeline_equivalence.rs`).
 
 use crate::policy::PolicyStack;
 use crate::runtime::{self, shapes};

@@ -15,6 +15,15 @@
 //! is a monomorphic iteration over a `Vec<WlEvent>` instead of one dyn
 //! dispatch per event — set `event_batch = 1` to recover the old
 //! per-event behaviour as a measurable baseline (`benches/hotpath.rs`).
+//!
+//! Streaming workloads ride the same pump unchanged: the contract
+//! already allows a `next_batch` call to push *fewer* than `budget`
+//! events and return true, so `trace::stream::TraceStream` serves
+//! each call from its resident chunk and blocks (briefly) on the
+//! decode-ahead rendezvous only at chunk boundaries. Blocking inside
+//! `next_batch` is invisible to determinism — the pump consumes
+//! whatever arrives in order, and virtual time never depends on
+//! wall-clock.
 //! Miss accounting is bulk too: sampled misses, write-backs, and
 //! prefetch fills are staged as pre-binned `(pool, rw, bin, weight)`
 //! deltas and scattered into the `[P, B]` tensors once per event batch

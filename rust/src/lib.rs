@@ -155,6 +155,45 @@
 //! the stage-1 linearity — `throttled_epochs`, `pools_offline`,
 //! `failover_migrated_bytes`).
 //!
+//! ## Trace formats & streaming replay
+//!
+//! `cxlmemsim record` captures a workload's event stream; `replay` /
+//! `run --trace` simulate it against any topology. Three formats,
+//! auto-detected by magic (`trace::io::detect_format`):
+//!
+//! * **JSONL** — one event per line, greppable. Strict: a missing or
+//!   mistyped field is a line-numbered error, never a silent zero.
+//! * **CXLTRC v1** (`CXLTRC\0\x01`) — flat count-prefixed records.
+//!   Still read and writable (`record --format v1`), no longer the
+//!   default.
+//! * **CXLTRC v2** (`CXLTRC\0\x02`, the default) — chunked + RLE:
+//!   payloads of ≤ `--chunk-events` events, a fixed-stride chunk
+//!   directory (byte offset + event count per chunk, so seek and
+//!   sharded fan-out need no serial parse), and a trailing footer
+//!   (directory offset + totals) so the writer never seeks. Inside a
+//!   chunk, ≥4 same-rw constant-stride accesses collapse into one
+//!   21-byte run record (start, wrapping stride, count) — workloads
+//!   emit runs natively, so recording is nearly free and decode is
+//!   exact for any u64 address pattern, negative/zero strides
+//!   included.
+//!
+//! Replay of a v2 trace streams ([`trace::stream::TraceStream`]):
+//! only decoded chunks in flight are resident — O(chunk), not
+//! O(trace) — and a decode-ahead thread seeks/reads/decodes chunk
+//! N+1 while the driver consumes chunk N, so replay wall-clock
+//! approaches max(decode, analyze) instead of their sum (measured in
+//! `benches/hotpath.rs` `replay_stream`, with the peak
+//! decoded-events-in-flight counter proving the memory bound).
+//! Determinism is preserved because the handoff is a rendezvous over
+//! a bounded channel, not a race: chunks arrive strictly in directory
+//! order, so the driver sees byte-for-byte the sequence an in-memory
+//! `TraceReplay` would emit, and reports stay bit-identical across
+//! `--analyzer-threads`, `--batch-group`, and `--scan-kernel`
+//! (asserted in `tests/pipeline_equivalence.rs`, re-run by the CI
+//! determinism matrix). A damaged chunk surfaces as a chunk-indexed
+//! error after the run (`workload::TraceWorkload::take_error`), never
+//! as a silently truncated report.
+//!
 //! ## Hot path anatomy
 //!
 //! One `Access` event costs, in order: the cache walk
@@ -228,5 +267,8 @@ pub mod prelude {
     pub use crate::policy::{EpochPolicy, PolicySpec, PolicyStack};
     pub use crate::runtime::{AnalyzerBackend, ScanKernel, TimingInputs, TimingOutputs};
     pub use crate::topology::{builtin, Topology, TopoTensors};
-    pub use crate::workload::{by_name as workload_by_name, Workload, TABLE1_WORKLOADS};
+    pub use crate::trace::stream::TraceStream;
+    pub use crate::workload::{
+        by_name as workload_by_name, TraceWorkload, Workload, TABLE1_WORKLOADS,
+    };
 }

@@ -22,7 +22,7 @@ use cxlmemsim::topology::{builtin, Topology};
 use cxlmemsim::trace::io as trace_io;
 use cxlmemsim::util::benchutil::{markdown_table, time_once};
 use cxlmemsim::util::cli::Args;
-use cxlmemsim::workload::{self, TraceReplay, ALL_WORKLOADS, TABLE1_WORKLOADS};
+use cxlmemsim::workload::{self, TraceWorkload, ALL_WORKLOADS, TABLE1_WORKLOADS};
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -67,6 +67,12 @@ fn usage() {
                        --epoch-policy hotness:3,prefetch:0.5,rebalance (policy stack)\n\
                        --mig-stall-ns-per-byte F (modeled migration cost)\n\
                        --batched (run/replay: grouped-analyzer replay driver)\n\
+                       --trace FILE (run/replay: simulate a recorded trace;\n\
+                         v1/v2/JSONL auto-detected, v2 streams with O(chunk)\n\
+                         memory + decode-ahead)\n\
+                       --format v2|v1|jsonl (record: output format, default v2\n\
+                         chunked+RLE; .jsonl extension implies jsonl)\n\
+                       --chunk-events N (record: events per v2 chunk)\n\
                        --analyzer-threads N (batched: shard the E-epoch analyzer\n\
                          loop; 0 = one per core, results identical for any N)\n\
                        --batch-group N (batched: epochs per analyzer call;\n\
@@ -154,6 +160,11 @@ fn topo_from(args: &Args) -> anyhow::Result<Topology> {
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let topo = topo_from(args)?;
     let cfg = config_from(args)?;
+    // --trace FILE: simulate a recorded trace instead of a synthetic
+    // workload (same drivers, same flags as `replay`)
+    if let Some(path) = args.opt_str("trace") {
+        return replay_trace(args, topo, cfg, &path);
+    }
     let wl = args.str("workload", "mmap_read");
     // --batched: the grouped-analyzer replay driver (policy stacks run
     // with phase-2 applied at group-flush time)
@@ -375,19 +386,65 @@ fn cmd_record(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
     let wl_name = args.str("workload", "mmap_read");
     let out = args.str("out", "trace.bin");
+    let format = args
+        .opt_str("format")
+        .unwrap_or_else(|| if out.ends_with(".jsonl") { "jsonl".into() } else { "v2".into() });
     let mut wl = workload::by_name(&wl_name, cfg.scale, cfg.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown workload `{wl_name}`"))?;
-    let mut events = Vec::new();
-    while let Some(ev) = wl.next_event() {
-        events.push(ev);
+    let f = std::fs::File::create(&out)?;
+    let batch = cfg.event_batch.max(1);
+    let mut buf = Vec::with_capacity(batch);
+    match format.as_str() {
+        // default: chunked RLE v2, pulled through `next_batch` and
+        // pushed straight into the streaming writer — the capture
+        // never materializes in memory
+        "v2" => {
+            let chunk_events = args.usize("chunk-events", trace_io::V2_DEFAULT_CHUNK_EVENTS);
+            let mut w = trace_io::V2Writer::with_chunk_events(f, chunk_events)?;
+            loop {
+                buf.clear();
+                let more = wl.next_batch(&mut buf, batch);
+                w.push_slice(&buf)?;
+                if !more {
+                    break;
+                }
+            }
+            let sum = w.finish()?;
+            println!(
+                "recorded {} events from {wl_name} to {out} (CXLTRC v2, {} chunks)",
+                sum.events, sum.chunks
+            );
+        }
+        // streamed line by line; kept for greppability
+        "jsonl" => {
+            use std::io::Write;
+            let mut bw = std::io::BufWriter::new(f);
+            let mut n = 0u64;
+            loop {
+                buf.clear();
+                let more = wl.next_batch(&mut buf, batch);
+                trace_io::write_jsonl_events(&mut bw, &buf)?;
+                n += buf.len() as u64;
+                if !more {
+                    break;
+                }
+            }
+            bw.flush()?;
+            println!("recorded {n} events from {wl_name} to {out} (JSONL)");
+        }
+        // the legacy flat format carries its event count up front, so
+        // it alone still collects the trace in memory
+        "v1" => {
+            let mut events = Vec::new();
+            while let Some(ev) = wl.next_event() {
+                events.push(ev);
+            }
+            let mut f = f;
+            trace_io::write_binary(&mut f, &events)?;
+            println!("recorded {} events from {wl_name} to {out} (CXLTRC v1)", events.len());
+        }
+        other => anyhow::bail!("bad --format `{other}` (v2|v1|jsonl)"),
     }
-    let mut f = std::fs::File::create(&out)?;
-    if out.ends_with(".jsonl") {
-        trace_io::write_jsonl(&mut f, &events)?;
-    } else {
-        trace_io::write_binary(&mut f, &events)?;
-    }
-    println!("recorded {} events from {wl_name} to {out}", events.len());
     Ok(())
 }
 
@@ -397,13 +454,17 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
     let path = args
         .opt_str("trace")
         .ok_or_else(|| anyhow::anyhow!("--trace <file> required"))?;
-    let events = if path.ends_with(".jsonl") {
-        trace_io::read_jsonl(std::fs::File::open(&path)?).map_err(|e| anyhow::anyhow!(e))?
-    } else {
-        let bytes = std::fs::read(&path)?;
-        trace_io::read_binary(&bytes).map_err(|e| anyhow::anyhow!(e))?
-    };
-    let mut replay = TraceReplay::new(&format!("replay:{path}"), events);
+    replay_trace(args, topo, cfg, &path)
+}
+
+/// Shared by `replay` and `run --trace`: open with format
+/// auto-detection (v2 streams with O(chunk) memory + decode-ahead;
+/// v1/JSONL load fully), drive the requested driver, then surface any
+/// mid-stream decode error — the `Workload` interface reports damage
+/// as early exhaustion, so skipping the check would let a truncated
+/// replay pass for a complete one.
+fn replay_trace(args: &Args, topo: Topology, cfg: SimConfig, path: &str) -> anyhow::Result<()> {
+    let mut replay = TraceWorkload::open(path)?;
     // --batched: offline replay through the grouped analyzer, with the
     // E-epoch loop sharded across --analyzer-threads workers — the
     // work-conserving path for long recorded traces (output is
@@ -415,10 +476,20 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
         let mut sim = Coordinator::new(topo, cfg)?;
         sim.run(&mut replay)?
     };
+    if let Some(e) = replay.take_error() {
+        anyhow::bail!("replay of {path}: {e}");
+    }
     if args.bool("json") {
         println!("{}", rep.to_json().to_string());
     } else {
         print!("{}", rep.summary());
+        if let Some(s) = replay.stream() {
+            println!(
+                "streaming replay: {} chunks, peak decoded events in flight {}",
+                s.chunks(),
+                s.peak_decoded_in_flight()
+            );
+        }
     }
     Ok(())
 }

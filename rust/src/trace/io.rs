@@ -1,21 +1,85 @@
-//! Trace persistence: JSONL (human-greppable) and a compact binary
-//! format for large traces. Lets users record a workload's event stream
-//! once and replay it against many topologies (`cxlmemsim record` /
+//! Trace persistence: JSONL (human-greppable) and two binary formats
+//! for large traces. Lets users record a workload's event stream once
+//! and replay it against many topologies (`cxlmemsim record` /
 //! `--trace` on `run`), mirroring how the real tool would archive PEBS
 //! + eBPF captures.
+//!
+//! - **v1** (`CXLTRC\0\x01`): flat count-prefixed record stream. Kept
+//!   for compatibility; readable but no longer written by default.
+//! - **v2** (`CXLTRC\0\x02`): chunked + run-length encoded, with a
+//!   fixed-size chunk directory and a trailing footer. This is what
+//!   `record` emits and what `trace::stream::TraceStream` replays with
+//!   O(chunk) memory. Layout:
+//!
+//!   ```text
+//!   [8 B magic][chunk payloads, back to back]
+//!   [directory: per chunk u64 offset, u64 bytes, u64 events  (24 B)]
+//!   [footer: u64 dir_offset, u64 chunk_count, u64 total_events,
+//!            u64 total_accesses, 8 B footer magic            (40 B)]
+//!   ```
+//!
+//!   The footer lives at the *end* so the writer never seeks (works on
+//!   pipes); readers locate the directory from the last 40 bytes. The
+//!   directory is fixed-stride, so seek and sharded fan-out need no
+//!   serial parse of payloads.
 
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 
 use super::{Access, AllocEvent, AllocKind, WlEvent};
 use crate::util::json::Json;
 
-/// Magic header for the binary format (version byte at the end).
-const MAGIC: &[u8; 8] = b"CXLTRC\x00\x01";
+/// Magic header for the flat v1 binary format (version byte at the end).
+pub const MAGIC_V1: &[u8; 8] = b"CXLTRC\x00\x01";
+/// Magic header for the chunked RLE v2 binary format.
+pub const MAGIC_V2: &[u8; 8] = b"CXLTRC\x00\x02";
+/// Trailing magic closing a finished v2 file; its absence means the
+/// recording was interrupted before `V2Writer::finish`.
+const FOOTER_MAGIC: &[u8; 8] = b"CXLTRCE\x02";
+const FOOTER_LEN: u64 = 40;
+const DIR_ENTRY_LEN: u64 = 24;
+
+/// Default events per v2 chunk: big enough that run coalescing and the
+/// decode-ahead handoff amortize, small enough that three chunks in
+/// flight stay a few MB of decoded events.
+pub const V2_DEFAULT_CHUNK_EVENTS: usize = 65_536;
+/// Upper bound on events per chunk accepted by writer and reader. The
+/// reader sizes decode buffers from directory event counts, so an
+/// unbounded (corrupt) count would be an OOM instead of an error.
+pub const V2_MAX_CHUNK_EVENTS: usize = 1 << 24;
+/// Accesses needed before a run record (21 B) beats singles (9 B each).
+const MIN_RUN: usize = 4;
+
+/// Which on-disk trace format a file prefix announces. JSONL has no
+/// magic, so anything that is neither v1 nor v2 falls through to it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    Jsonl,
+    V1,
+    V2,
+}
+
+pub fn detect_format(head: &[u8]) -> TraceFormat {
+    if head.len() >= 8 && &head[..8] == MAGIC_V1 {
+        TraceFormat::V1
+    } else if head.len() >= 8 && &head[..8] == MAGIC_V2 {
+        TraceFormat::V2
+    } else {
+        TraceFormat::Jsonl
+    }
+}
 
 // ---------------------------------------------------------------- JSONL
 
 pub fn write_jsonl<W: Write>(w: &mut W, events: &[WlEvent]) -> std::io::Result<()> {
     let mut bw = BufWriter::new(w);
+    write_jsonl_events(&mut bw, events)?;
+    bw.flush()
+}
+
+/// Append events to an already-buffered JSONL writer without flushing —
+/// the incremental half of `write_jsonl`, used by the streaming
+/// recorder so a multi-GB capture never materializes in memory.
+pub fn write_jsonl_events<W: Write>(bw: &mut W, events: &[WlEvent]) -> std::io::Result<()> {
     for ev in events {
         let line = match ev {
             WlEvent::Alloc(a) => format!(
@@ -34,43 +98,54 @@ pub fn write_jsonl<W: Write>(w: &mut W, events: &[WlEvent]) -> std::io::Result<(
         bw.write_all(line.as_bytes())?;
         bw.write_all(b"\n")?;
     }
-    bw.flush()
+    Ok(())
+}
+
+/// A required numeric field: missing or mistyped is a line-numbered
+/// error, never a silent zero (a corrupt line must not become a
+/// plausible-looking access at address 0).
+fn req_f64(v: &Json, key: &str, line: usize) -> Result<f64, String> {
+    v.get(key)
+        .ok_or_else(|| format!("line {line}: missing `{key}`"))?
+        .as_f64()
+        .ok_or_else(|| format!("line {line}: `{key}` is not a number"))
 }
 
 pub fn read_jsonl<R: Read>(r: R) -> Result<Vec<WlEvent>, String> {
     let br = BufReader::new(r);
     let mut out = Vec::new();
     for (i, line) in br.lines().enumerate() {
-        let line = line.map_err(|e| format!("line {}: {e}", i + 1))?;
+        let n = i + 1;
+        let line = line.map_err(|e| format!("line {n}: {e}"))?;
         if line.trim().is_empty() {
             continue;
         }
-        let v = Json::parse(&line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let v = Json::parse(&line).map_err(|e| format!("line {n}: {e}"))?;
         let ev = v
             .get("ev")
             .and_then(|x| x.as_str())
-            .ok_or_else(|| format!("line {}: missing ev", i + 1))?;
+            .ok_or_else(|| format!("line {n}: missing ev"))?;
         match ev {
             "alloc" => {
                 let kind = v
                     .get("kind")
                     .and_then(|x| x.as_str())
                     .and_then(AllocKind::parse)
-                    .ok_or_else(|| format!("line {}: bad kind", i + 1))?;
+                    .ok_or_else(|| format!("line {n}: bad kind"))?;
                 out.push(WlEvent::Alloc(AllocEvent {
                     kind,
-                    addr: v.get("addr").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
-                    len: v.get("len").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
-                    t_ns: v.get("t_ns").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    addr: req_f64(&v, "addr", n)? as u64,
+                    len: req_f64(&v, "len", n)? as u64,
+                    t_ns: req_f64(&v, "t_ns", n)?,
                 }));
             }
             "access" => {
                 out.push(WlEvent::Access(Access {
-                    addr: v.get("addr").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
-                    is_write: v.get("w").and_then(|x| x.as_f64()).unwrap_or(0.0) != 0.0,
+                    addr: req_f64(&v, "addr", n)? as u64,
+                    is_write: req_f64(&v, "w", n)? != 0.0,
                 }));
             }
-            other => return Err(format!("line {}: unknown ev `{other}`", i + 1)),
+            other => return Err(format!("line {n}: unknown ev `{other}`")),
         }
     }
     Ok(out)
@@ -92,30 +167,53 @@ fn get_u64(b: &[u8], off: &mut usize) -> Result<u64, String> {
     Ok(v)
 }
 
-/// Binary layout: MAGIC, u64 count, then per event:
+fn get_u32(b: &[u8], off: &mut usize) -> Result<u32, String> {
+    let end = *off + 4;
+    if end > b.len() {
+        return Err("truncated trace".into());
+    }
+    let v = u32::from_le_bytes(b[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
+fn put_v1_event(buf: &mut Vec<u8>, ev: &WlEvent) {
+    match ev {
+        WlEvent::Access(a) => {
+            buf.push(if a.is_write { 1 } else { 0 });
+            put_u64(buf, a.addr);
+        }
+        WlEvent::Alloc(a) => {
+            buf.push(2);
+            buf.push(a.kind as u8);
+            put_u64(buf, a.addr);
+            put_u64(buf, a.len);
+            buf.extend_from_slice(&a.t_ns.to_le_bytes());
+        }
+    }
+}
+
+/// v1 binary layout: MAGIC_V1, u64 count, then per event:
 ///   tag u8 (0=access-read, 1=access-write, 2=alloc)
 ///   access: u64 addr
 ///   alloc:  u8 kind, u64 addr, u64 len, f64 t_ns
+///
+/// Streams through a `BufWriter` in bounded slabs — never buffers the
+/// whole serialized trace (it used to build one O(trace) `Vec<u8>`).
 pub fn write_binary<W: Write>(w: &mut W, events: &[WlEvent]) -> std::io::Result<()> {
-    let mut buf = Vec::with_capacity(events.len() * 9 + 16);
-    buf.extend_from_slice(MAGIC);
-    put_u64(&mut buf, events.len() as u64);
-    for ev in events {
-        match ev {
-            WlEvent::Access(a) => {
-                buf.push(if a.is_write { 1 } else { 0 });
-                put_u64(&mut buf, a.addr);
-            }
-            WlEvent::Alloc(a) => {
-                buf.push(2);
-                buf.push(a.kind as u8);
-                put_u64(&mut buf, a.addr);
-                put_u64(&mut buf, a.len);
-                buf.extend_from_slice(&a.t_ns.to_le_bytes());
-            }
+    const SLAB_EVENTS: usize = 4096;
+    let mut bw = BufWriter::with_capacity(1 << 16, w);
+    bw.write_all(MAGIC_V1)?;
+    bw.write_all(&(events.len() as u64).to_le_bytes())?;
+    let mut slab = Vec::with_capacity(SLAB_EVENTS * 26);
+    for part in events.chunks(SLAB_EVENTS) {
+        slab.clear();
+        for ev in part {
+            put_v1_event(&mut slab, ev);
         }
+        bw.write_all(&slab)?;
     }
-    w.write_all(&buf)
+    bw.flush()
 }
 
 fn kind_from_u8(k: u8) -> Result<AllocKind, String> {
@@ -132,7 +230,7 @@ fn kind_from_u8(k: u8) -> Result<AllocKind, String> {
 }
 
 pub fn read_binary(b: &[u8]) -> Result<Vec<WlEvent>, String> {
-    if b.len() < 16 || &b[..8] != MAGIC {
+    if b.len() < 16 || &b[..8] != MAGIC_V1 {
         return Err("not a CXLTRC trace (bad magic)".into());
     }
     let mut off = 8;
@@ -180,6 +278,395 @@ pub fn read_binary(b: &[u8]) -> Result<Vec<WlEvent>, String> {
         }
     }
     Ok(out)
+}
+
+// ------------------------------------------------- binary v2 (chunked)
+
+/// One chunk directory entry: where the chunk's encoded payload lives
+/// and how many events it decodes to. Fixed 24-byte wire size, so the
+/// directory is random-access — sharded readers can pick chunk ranges
+/// without parsing any payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkEntry {
+    /// Absolute byte offset of the encoded payload in the file.
+    pub offset: u64,
+    /// Encoded payload length in bytes.
+    pub bytes: u64,
+    /// Number of events the payload decodes to.
+    pub events: u64,
+}
+
+/// Totals reported by `V2Writer::finish`.
+#[derive(Clone, Copy, Debug)]
+pub struct V2Summary {
+    pub events: u64,
+    pub accesses: u64,
+    pub chunks: u64,
+}
+
+/// RLE-encode one chunk of events into `out`. Record vocabulary:
+///   tag 0/1: single read/write access — u64 addr                (9 B)
+///   tag 2:   alloc — u8 kind, u64 addr, u64 len, f64 t_ns      (26 B)
+///   tag 3/4: read/write run — u64 start, u64 stride (wrapping
+///            delta, so negative strides are just large u64s),
+///            u32 count                                         (21 B)
+/// A run needs `MIN_RUN` same-rw constant-stride accesses to pay for
+/// itself; shorter candidates emit one single and retry at the next
+/// event (so a run starting one event later is still found). Decode
+/// recovers addresses via wrapping adds — exact for every u64 pattern,
+/// including zero and "negative" strides and wraps past `u64::MAX`.
+/// Returns the number of access events (runs expanded) for the footer.
+pub fn encode_chunk(events: &[WlEvent], out: &mut Vec<u8>) -> u64 {
+    let mut accesses = 0u64;
+    let mut i = 0usize;
+    while i < events.len() {
+        match events[i] {
+            WlEvent::Alloc(_) => {
+                put_v1_event(out, &events[i]);
+                i += 1;
+            }
+            WlEvent::Access(a) => {
+                // longest prefix of same-rw accesses with one wrapping stride
+                let mut n = 1usize;
+                let mut stride = 0u64;
+                let mut prev = a.addr;
+                while i + n < events.len() && n < u32::MAX as usize {
+                    let WlEvent::Access(b) = events[i + n] else { break };
+                    if b.is_write != a.is_write {
+                        break;
+                    }
+                    let d = b.addr.wrapping_sub(prev);
+                    if n == 1 {
+                        stride = d;
+                    } else if d != stride {
+                        break;
+                    }
+                    prev = b.addr;
+                    n += 1;
+                }
+                if n >= MIN_RUN {
+                    out.push(if a.is_write { 4 } else { 3 });
+                    put_u64(out, a.addr);
+                    put_u64(out, stride);
+                    out.extend_from_slice(&(n as u32).to_le_bytes());
+                    accesses += n as u64;
+                    i += n;
+                } else {
+                    out.push(if a.is_write { 1 } else { 0 });
+                    put_u64(out, a.addr);
+                    accesses += 1;
+                    i += 1;
+                }
+            }
+        }
+    }
+    accesses
+}
+
+/// Decode one chunk payload, appending to `out`. Every failure names
+/// the chunk index and the absolute byte offset of the damaged record.
+/// The directory's event count is enforced both mid-decode (a corrupt
+/// run length cannot balloon the buffer) and at the end.
+pub fn decode_chunk(
+    payload: &[u8],
+    events: u64,
+    chunk: usize,
+    chunk_offset: u64,
+    out: &mut Vec<WlEvent>,
+) -> Result<(), String> {
+    let base = out.len();
+    let mut off = 0usize;
+    while off < payload.len() {
+        let start = off;
+        let ctx =
+            |err: String| format!("chunk {chunk} at byte {}: {err}", chunk_offset + start as u64);
+        let tag = payload[off];
+        off += 1;
+        match tag {
+            0 | 1 => {
+                let addr = get_u64(payload, &mut off).map_err(&ctx)?;
+                out.push(WlEvent::Access(Access { addr, is_write: tag == 1 }));
+            }
+            2 => {
+                if off >= payload.len() {
+                    return Err(ctx("truncated chunk".into()));
+                }
+                let kind = kind_from_u8(payload[off]).map_err(&ctx)?;
+                off += 1;
+                let addr = get_u64(payload, &mut off).map_err(&ctx)?;
+                let len = get_u64(payload, &mut off).map_err(&ctx)?;
+                let end = off + 8;
+                if end > payload.len() {
+                    return Err(ctx("truncated chunk".into()));
+                }
+                let t_ns = f64::from_le_bytes(payload[off..end].try_into().unwrap());
+                off = end;
+                out.push(WlEvent::Alloc(AllocEvent { kind, addr, len, t_ns }));
+            }
+            3 | 4 => {
+                let first = get_u64(payload, &mut off).map_err(&ctx)?;
+                let stride = get_u64(payload, &mut off).map_err(&ctx)?;
+                let count = get_u32(payload, &mut off).map_err(&ctx)?;
+                if count == 0 {
+                    return Err(ctx("zero-length run".into()));
+                }
+                let decoded = (out.len() - base) as u64;
+                if decoded + count as u64 > events {
+                    return Err(ctx(format!(
+                        "run of {count} overflows chunk event count {events}"
+                    )));
+                }
+                let is_write = tag == 4;
+                let mut addr = first;
+                for _ in 0..count {
+                    out.push(WlEvent::Access(Access { addr, is_write }));
+                    addr = addr.wrapping_add(stride);
+                }
+            }
+            t => return Err(ctx(format!("bad tag {t}"))),
+        }
+        if (out.len() - base) as u64 > events {
+            return Err(ctx(format!(
+                "payload decodes past directory event count {events}"
+            )));
+        }
+    }
+    let decoded = (out.len() - base) as u64;
+    if decoded != events {
+        return Err(format!(
+            "chunk {chunk} at byte {chunk_offset}: decoded {decoded} events, directory says {events}"
+        ));
+    }
+    Ok(())
+}
+
+/// Streaming CXLTRC v2 writer: buffers at most `chunk_events` pending
+/// events (O(chunk) memory), RLE-encodes each full chunk straight into
+/// the underlying writer, and appends the directory + footer on
+/// `finish`. Never seeks, so it works on pipes.
+pub struct V2Writer<W: Write> {
+    w: BufWriter<W>,
+    pending: Vec<WlEvent>,
+    chunk_events: usize,
+    dir: Vec<ChunkEntry>,
+    offset: u64,
+    total_events: u64,
+    total_accesses: u64,
+    enc: Vec<u8>,
+}
+
+impl<W: Write> V2Writer<W> {
+    pub fn new(w: W) -> std::io::Result<V2Writer<W>> {
+        V2Writer::with_chunk_events(w, V2_DEFAULT_CHUNK_EVENTS)
+    }
+
+    pub fn with_chunk_events(w: W, chunk_events: usize) -> std::io::Result<V2Writer<W>> {
+        let chunk_events = chunk_events.clamp(1, V2_MAX_CHUNK_EVENTS);
+        let mut bw = BufWriter::with_capacity(1 << 16, w);
+        bw.write_all(MAGIC_V2)?;
+        Ok(V2Writer {
+            w: bw,
+            pending: Vec::new(),
+            chunk_events,
+            dir: Vec::new(),
+            offset: 8,
+            total_events: 0,
+            total_accesses: 0,
+            enc: Vec::new(),
+        })
+    }
+
+    pub fn push(&mut self, ev: WlEvent) -> std::io::Result<()> {
+        self.pending.push(ev);
+        if self.pending.len() >= self.chunk_events {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    pub fn push_slice(&mut self, events: &[WlEvent]) -> std::io::Result<()> {
+        for &ev in events {
+            self.push(ev)?;
+        }
+        Ok(())
+    }
+
+    fn flush_chunk(&mut self) -> std::io::Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        self.enc.clear();
+        let accesses = encode_chunk(&self.pending, &mut self.enc);
+        self.w.write_all(&self.enc)?;
+        self.dir.push(ChunkEntry {
+            offset: self.offset,
+            bytes: self.enc.len() as u64,
+            events: self.pending.len() as u64,
+        });
+        self.offset += self.enc.len() as u64;
+        self.total_events += self.pending.len() as u64;
+        self.total_accesses += accesses;
+        self.pending.clear();
+        Ok(())
+    }
+
+    /// Flush the tail chunk, append directory + footer, return totals.
+    /// Dropping a `V2Writer` without `finish` leaves an unreadable
+    /// file (no footer) by design — an interrupted recording must not
+    /// pass for a complete one.
+    pub fn finish(mut self) -> std::io::Result<V2Summary> {
+        self.flush_chunk()?;
+        let dir_offset = self.offset;
+        for c in &self.dir {
+            self.w.write_all(&c.offset.to_le_bytes())?;
+            self.w.write_all(&c.bytes.to_le_bytes())?;
+            self.w.write_all(&c.events.to_le_bytes())?;
+        }
+        self.w.write_all(&dir_offset.to_le_bytes())?;
+        self.w.write_all(&(self.dir.len() as u64).to_le_bytes())?;
+        self.w.write_all(&self.total_events.to_le_bytes())?;
+        self.w.write_all(&self.total_accesses.to_le_bytes())?;
+        self.w.write_all(FOOTER_MAGIC)?;
+        self.w.flush()?;
+        Ok(V2Summary {
+            events: self.total_events,
+            accesses: self.total_accesses,
+            chunks: self.dir.len() as u64,
+        })
+    }
+}
+
+/// One-shot v2 write of an in-memory event list (tests, small traces).
+pub fn write_binary_v2<W: Write>(w: &mut W, events: &[WlEvent]) -> std::io::Result<V2Summary> {
+    write_binary_v2_chunked(w, events, V2_DEFAULT_CHUNK_EVENTS)
+}
+
+pub fn write_binary_v2_chunked<W: Write>(
+    w: &mut W,
+    events: &[WlEvent],
+    chunk_events: usize,
+) -> std::io::Result<V2Summary> {
+    let mut v2 = V2Writer::with_chunk_events(w, chunk_events)?;
+    v2.push_slice(events)?;
+    v2.finish()
+}
+
+/// The validated chunk directory of a v2 trace.
+#[derive(Clone, Debug)]
+pub struct V2Index {
+    pub chunks: Vec<ChunkEntry>,
+    pub total_events: u64,
+    pub total_accesses: u64,
+}
+
+impl V2Index {
+    pub fn max_chunk_events(&self) -> u64 {
+        self.chunks.iter().map(|c| c.events).max().unwrap_or(0)
+    }
+
+    /// Parse and validate the directory from any seekable source (a
+    /// `File` for streaming, a `Cursor` for in-memory). Validation is
+    /// total — magic, footer magic, the exact file-length equation,
+    /// contiguous in-bounds chunk extents, plausible per-chunk event
+    /// counts, and the event-count sum — so downstream decode can
+    /// slice payloads without rechecking bounds.
+    pub fn read<R: Read + Seek>(r: &mut R) -> Result<V2Index, String> {
+        let io = |e: std::io::Error| format!("reading v2 trace: {e}");
+        let file_len = r.seek(SeekFrom::End(0)).map_err(io)?;
+        if file_len < 8 + FOOTER_LEN {
+            return Err("not a CXLTRC v2 trace (too short)".into());
+        }
+        let mut magic = [0u8; 8];
+        r.seek(SeekFrom::Start(0)).map_err(io)?;
+        r.read_exact(&mut magic).map_err(io)?;
+        if &magic != MAGIC_V2 {
+            return Err("not a CXLTRC v2 trace (bad magic)".into());
+        }
+        let mut foot = [0u8; FOOTER_LEN as usize];
+        r.seek(SeekFrom::Start(file_len - FOOTER_LEN)).map_err(io)?;
+        r.read_exact(&mut foot).map_err(io)?;
+        if &foot[32..40] != FOOTER_MAGIC {
+            return Err("bad v2 footer magic (recording interrupted or file truncated?)".into());
+        }
+        let word = |i: usize| u64::from_le_bytes(foot[i * 8..i * 8 + 8].try_into().unwrap());
+        let (dir_offset, chunk_count, total_events, total_accesses) =
+            (word(0), word(1), word(2), word(3));
+        let dir_bytes =
+            chunk_count.checked_mul(DIR_ENTRY_LEN).ok_or("v2 directory size overflows")?;
+        if dir_offset < 8
+            || dir_offset.checked_add(dir_bytes).and_then(|v| v.checked_add(FOOTER_LEN))
+                != Some(file_len)
+        {
+            return Err(format!(
+                "v2 directory does not fit: {chunk_count} chunks at byte {dir_offset} vs file length {file_len}"
+            ));
+        }
+        let mut raw = vec![0u8; dir_bytes as usize];
+        r.seek(SeekFrom::Start(dir_offset)).map_err(io)?;
+        r.read_exact(&mut raw).map_err(io)?;
+        let mut chunks = Vec::with_capacity(chunk_count as usize);
+        let mut expected = 8u64;
+        let mut events_sum = 0u64;
+        for i in 0..chunk_count as usize {
+            let e = &raw[i * DIR_ENTRY_LEN as usize..(i + 1) * DIR_ENTRY_LEN as usize];
+            let entry = ChunkEntry {
+                offset: u64::from_le_bytes(e[0..8].try_into().unwrap()),
+                bytes: u64::from_le_bytes(e[8..16].try_into().unwrap()),
+                events: u64::from_le_bytes(e[16..24].try_into().unwrap()),
+            };
+            let end = entry.offset.checked_add(entry.bytes);
+            if entry.offset != expected || end.is_none() || end.unwrap() > dir_offset {
+                return Err(format!(
+                    "chunk {i} at byte {}: extent of {} bytes out of place (expected offset {expected}, payloads end at {dir_offset})",
+                    entry.offset, entry.bytes
+                ));
+            }
+            if entry.events as usize > V2_MAX_CHUNK_EVENTS {
+                return Err(format!(
+                    "chunk {i} at byte {}: implausible event count {}",
+                    entry.offset, entry.events
+                ));
+            }
+            expected = end.unwrap();
+            events_sum = events_sum.saturating_add(entry.events);
+            chunks.push(entry);
+        }
+        if expected != dir_offset {
+            return Err(format!(
+                "chunk payloads end at byte {expected} but directory starts at {dir_offset}"
+            ));
+        }
+        if events_sum != total_events {
+            return Err(format!(
+                "directory event counts sum to {events_sum} but footer says {total_events}"
+            ));
+        }
+        Ok(V2Index { chunks, total_events, total_accesses })
+    }
+}
+
+/// In-memory v2 read: validate the directory, then decode every chunk.
+/// `trace::stream::TraceStream` is the O(chunk) alternative.
+pub fn read_binary_v2(b: &[u8]) -> Result<Vec<WlEvent>, String> {
+    let mut cur = std::io::Cursor::new(b);
+    let idx = V2Index::read(&mut cur)?;
+    let mut out = Vec::with_capacity((idx.total_events as usize).min(V2_MAX_CHUNK_EVENTS));
+    for (i, c) in idx.chunks.iter().enumerate() {
+        let payload = &b[c.offset as usize..(c.offset + c.bytes) as usize];
+        decode_chunk(payload, c.events, i, c.offset, &mut out)?;
+    }
+    Ok(out)
+}
+
+/// Dispatch an in-memory binary trace on its magic (v1 or v2). JSONL
+/// has no magic; callers that accept it should sniff for it first
+/// (`detect_format`).
+pub fn read_binary_any(b: &[u8]) -> Result<Vec<WlEvent>, String> {
+    if detect_format(b) == TraceFormat::V2 {
+        read_binary_v2(b)
+    } else {
+        read_binary(b)
+    }
 }
 
 #[cfg(test)]
@@ -304,6 +791,26 @@ mod tests {
     }
 
     #[test]
+    fn jsonl_missing_and_mistyped_fields_are_line_errors() {
+        for (src, needle) in [
+            ("{\"ev\":\"access\",\"w\":1}", "addr"),
+            ("{\"ev\":\"access\",\"addr\":\"x\",\"w\":1}", "addr"),
+            ("{\"ev\":\"access\",\"addr\":64}", "w"),
+            ("{\"ev\":\"alloc\",\"kind\":\"mmap\",\"len\":4,\"t_ns\":0}", "addr"),
+            ("{\"ev\":\"alloc\",\"kind\":\"mmap\",\"addr\":4,\"t_ns\":0}", "len"),
+            ("{\"ev\":\"alloc\",\"kind\":\"mmap\",\"addr\":4,\"len\":4}", "t_ns"),
+        ] {
+            let err = read_jsonl(src.as_bytes()).unwrap_err();
+            assert!(err.contains("line 1"), "{src}: {err}");
+            assert!(err.contains(needle), "{src}: {err}");
+        }
+        // a later line reports its own number
+        let src = "{\"ev\":\"access\",\"addr\":64,\"w\":0}\n{\"ev\":\"access\",\"w\":0}\n";
+        let err = read_jsonl(src.as_bytes()).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
     fn empty_traces_roundtrip() {
         let mut buf = Vec::new();
         write_binary(&mut buf, &[]).unwrap();
@@ -311,5 +818,196 @@ mod tests {
         let mut jbuf = Vec::new();
         write_jsonl(&mut jbuf, &[]).unwrap();
         assert_eq!(read_jsonl(&jbuf[..]).unwrap().len(), 0);
+    }
+
+    // ------------------------------------------------------------- v2
+
+    fn roundtrip_v2(evs: &[WlEvent], chunk: usize) -> Vec<WlEvent> {
+        let mut buf = Vec::new();
+        write_binary_v2_chunked(&mut buf, evs, chunk).unwrap();
+        read_binary_v2(&buf).unwrap()
+    }
+
+    /// Deterministic LCG event stream mixing runs (forward, backward,
+    /// zero-stride), random singles, and allocs.
+    fn mixed_stream(seed: u64, n: usize) -> Vec<WlEvent> {
+        let mut s = seed | 1;
+        let mut step = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            s >> 33
+        };
+        let mut evs = Vec::new();
+        while evs.len() < n {
+            match step() % 5 {
+                0 => {
+                    let start = step();
+                    let stride = [64i64, -64, 0, 4096, -1][(step() % 5) as usize] as u64;
+                    let count = 1 + (step() % 9) as usize;
+                    let w = step() % 2 == 1;
+                    let mut a = start;
+                    for _ in 0..count {
+                        evs.push(WlEvent::Access(Access { addr: a, is_write: w }));
+                        a = a.wrapping_add(stride);
+                    }
+                }
+                1 => evs.push(WlEvent::Alloc(AllocEvent {
+                    kind: kind_from_u8((step() % 7) as u8).unwrap(),
+                    addr: step(),
+                    len: step() % (1 << 30),
+                    t_ns: (step() % 1000) as f64,
+                })),
+                _ => evs.push(WlEvent::Access(Access {
+                    addr: step(),
+                    is_write: step() % 2 == 0,
+                })),
+            }
+        }
+        evs.truncate(n);
+        evs
+    }
+
+    #[test]
+    fn v2_roundtrip_small() {
+        let evs = sample_events();
+        for chunk in [1, 2, 3, 64] {
+            assert_equal(&evs, &roundtrip_v2(&evs, chunk));
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_empty_and_single_event() {
+        assert_eq!(roundtrip_v2(&[], 8).len(), 0);
+        let one = [WlEvent::Access(Access { addr: 640, is_write: true })];
+        assert_equal(&one, &roundtrip_v2(&one, 8));
+    }
+
+    #[test]
+    fn v2_roundtrip_property_runs_cross_chunk_boundaries() {
+        for seed in [3, 7, 11] {
+            let evs = mixed_stream(seed, 3000);
+            for chunk in [1, 7, 64, 1 << 12] {
+                assert_equal(&evs, &roundtrip_v2(&evs, chunk));
+            }
+        }
+    }
+
+    #[test]
+    fn v2_long_run_compresses() {
+        // one 4096-access stride sweep: RLE makes the file tiny
+        let evs: Vec<WlEvent> = (0..4096u64)
+            .map(|i| WlEvent::Access(Access { addr: 0x1000 + i * 64, is_write: false }))
+            .collect();
+        let mut buf = Vec::new();
+        let sum = write_binary_v2(&mut buf, &evs).unwrap();
+        assert_eq!(sum.events, 4096);
+        assert_eq!(sum.accesses, 4096);
+        assert_eq!(sum.chunks, 1);
+        assert!(buf.len() < 128, "RLE failed: {} bytes", buf.len());
+    }
+
+    #[test]
+    fn v2_negative_and_zero_strides_roundtrip() {
+        let mut evs = Vec::new();
+        let mut a = u64::MAX - 100;
+        for _ in 0..16 {
+            evs.push(WlEvent::Access(Access { addr: a, is_write: true }));
+            a = a.wrapping_add(64); // wraps past u64::MAX mid-run
+        }
+        for _ in 0..16 {
+            evs.push(WlEvent::Access(Access { addr: 4096, is_write: false })); // zero stride
+        }
+        let mut b = 1u64 << 40;
+        for _ in 0..16 {
+            evs.push(WlEvent::Access(Access { addr: b, is_write: false }));
+            b = b.wrapping_sub(4096); // negative stride
+        }
+        assert_equal(&evs, &roundtrip_v2(&evs, 5));
+        assert_equal(&evs, &roundtrip_v2(&evs, 4096));
+    }
+
+    #[test]
+    fn v2_rejects_truncation_and_bad_magic() {
+        let evs = mixed_stream(1, 300);
+        let mut buf = Vec::new();
+        write_binary_v2_chunked(&mut buf, &evs, 32).unwrap();
+        assert!(read_binary_v2(&buf).is_ok());
+        for cut in [0, 4, 8, 20, buf.len() - 39, buf.len() - 1] {
+            assert!(read_binary_v2(&buf[..cut]).is_err(), "cut {cut}");
+        }
+        let mut bad = buf.clone();
+        bad[7] = 1; // v1 version byte in the magic
+        assert!(read_binary_v2(&bad).is_err());
+        let n = buf.len();
+        let mut bad = buf.clone();
+        bad[n - 1] ^= 0xff;
+        let err = read_binary_v2(&bad).unwrap_err();
+        assert!(err.contains("footer"), "{err}");
+    }
+
+    #[test]
+    fn v2_corrupt_errors_name_chunk_and_byte() {
+        let evs = mixed_stream(2, 200);
+        let mut buf = Vec::new();
+        write_binary_v2_chunked(&mut buf, &evs, 50).unwrap();
+        let idx = V2Index::read(&mut std::io::Cursor::new(&buf[..])).unwrap();
+        assert!(idx.chunks.len() >= 3, "want several chunks, got {}", idx.chunks.len());
+        // stomp the first record tag of chunk 1
+        let off = idx.chunks[1].offset as usize;
+        let mut bad = buf.clone();
+        bad[off] = 9;
+        let err = read_binary_v2(&bad).unwrap_err();
+        assert!(err.contains("chunk 1"), "{err}");
+        assert!(err.contains(&format!("at byte {off}")), "{err}");
+        assert!(err.contains("bad tag 9"), "{err}");
+    }
+
+    #[test]
+    fn v2_directory_event_mismatch_is_error() {
+        let evs = mixed_stream(4, 100);
+        let mut buf = Vec::new();
+        write_binary_v2_chunked(&mut buf, &evs, 40).unwrap();
+        // inflate chunk 0's directory event count and the footer total
+        // in lockstep: the payload itself must still be caught lying
+        let n = buf.len();
+        let dir_offset = u64::from_le_bytes(buf[n - 40..n - 32].try_into().unwrap()) as usize;
+        let mut bad = buf.clone();
+        let ev_at = dir_offset + 16;
+        let cur = u64::from_le_bytes(bad[ev_at..ev_at + 8].try_into().unwrap());
+        bad[ev_at..ev_at + 8].copy_from_slice(&(cur + 1).to_le_bytes());
+        let tot_at = n - 24;
+        let tot = u64::from_le_bytes(bad[tot_at..tot_at + 8].try_into().unwrap());
+        bad[tot_at..tot_at + 8].copy_from_slice(&(tot + 1).to_le_bytes());
+        let err = read_binary_v2(&bad).unwrap_err();
+        assert!(err.contains("chunk 0"), "{err}");
+        assert!(err.contains("directory says"), "{err}");
+    }
+
+    #[test]
+    fn v2_fuzz_bitflips_never_panic() {
+        let evs = mixed_stream(9, 400);
+        let mut buf = Vec::new();
+        write_binary_v2_chunked(&mut buf, &evs, 64).unwrap();
+        for i in (0..buf.len()).step_by(7) {
+            let mut c = buf.clone();
+            c[i] ^= 0xff;
+            let _ = read_binary_v2(&c); // must not panic
+        }
+        for cut in 0..buf.len().min(80) {
+            let _ = read_binary_v2(&buf[..cut]);
+        }
+    }
+
+    #[test]
+    fn read_binary_any_dispatches_on_magic() {
+        let evs = sample_events();
+        let mut v1 = Vec::new();
+        write_binary(&mut v1, &evs).unwrap();
+        assert_equal(&evs, &read_binary_any(&v1).unwrap());
+        let mut v2 = Vec::new();
+        write_binary_v2(&mut v2, &evs).unwrap();
+        assert_equal(&evs, &read_binary_any(&v2).unwrap());
+        assert_eq!(detect_format(&v1), TraceFormat::V1);
+        assert_eq!(detect_format(&v2), TraceFormat::V2);
+        assert_eq!(detect_format(b"{\"ev\":"), TraceFormat::Jsonl);
     }
 }

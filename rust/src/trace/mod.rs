@@ -8,6 +8,7 @@
 
 pub mod binning;
 pub mod io;
+pub mod stream;
 
 /// Which allocation interface produced an allocation event — used by
 /// size-class placement policies and by the microbenchmarks, which are

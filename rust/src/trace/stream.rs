@@ -1,0 +1,431 @@
+//! Streaming replay of CXLTRC v2 traces with O(chunk) resident memory.
+//!
+//! [`TraceStream`] implements [`Workload`] over an on-disk v2 trace:
+//! only decoded chunks in flight are resident, never the whole trace,
+//! so multi-GB captures replay in a few MB. A decode-ahead thread
+//! double-buffers the *next* chunk (seek + read + RLE-decode) while
+//! the analyzer consumes the current one, so replay wall-clock
+//! approaches max(decode, analyze) instead of their sum.
+//!
+//! Determinism: the handoff is a rendezvous over a bounded
+//! `sync_channel`, not a race — the decoder produces chunks strictly
+//! in directory order and the consumer drains them strictly in arrival
+//! order, so the event sequence seen by the driver is byte-for-byte
+//! the sequence an in-memory `TraceReplay` would emit. Which thread
+//! decoded a chunk can never influence a `SimReport`; the determinism
+//! matrix (threads × batch-group × scan-kernel) holds unchanged.
+//!
+//! Memory bound: at most `DECODE_AHEAD_DEPTH + 2` chunks of decoded
+//! events exist at once (one being consumed, up to one queued in the
+//! channel, one being decoded). The stream counts decoded
+//! events-in-flight and records the high-water mark, which tests and
+//! the `replay_stream` bench assert against this bound.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::io::{decode_chunk, ChunkEntry, V2Index};
+use super::WlEvent;
+use crate::workload::Workload;
+
+/// Chunks the decode-ahead thread may queue beyond the one it is
+/// decoding: the `sync_channel` bound.
+pub const DECODE_AHEAD_DEPTH: usize = 1;
+
+type DecodedChunk = Result<Vec<WlEvent>, String>;
+
+enum Source {
+    /// Decode-ahead mode: a named thread owns the file and pushes
+    /// decoded chunks through a bounded rendezvous channel.
+    Ahead { rx: Option<Receiver<DecodedChunk>>, handle: Option<JoinHandle<()>> },
+    /// Inline mode: decode on the consumer thread (bench baseline for
+    /// the overlap win, and a fallback if thread spawn ever fails).
+    Inline { file: File, chunks: Vec<ChunkEntry>, next: usize, buf: Vec<u8> },
+}
+
+pub struct TraceStream {
+    name: String,
+    total_events: u64,
+    total_accesses: u64,
+    max_chunk_events: u64,
+    nchunks: usize,
+    /// Decoded events of the chunk currently being consumed.
+    cur: Vec<WlEvent>,
+    pos: usize,
+    src: Source,
+    /// Decoded events alive right now across consumer + channel +
+    /// decoder, and the high-water mark — the O(chunk) proof.
+    in_flight: Arc<AtomicU64>,
+    peak_in_flight: Arc<AtomicU64>,
+    error: Option<String>,
+    done: bool,
+}
+
+fn read_and_decode(
+    file: &mut File,
+    entry: &ChunkEntry,
+    idx: usize,
+    buf: &mut Vec<u8>,
+) -> DecodedChunk {
+    buf.clear();
+    buf.resize(entry.bytes as usize, 0);
+    file.seek(SeekFrom::Start(entry.offset))
+        .map_err(|e| format!("chunk {idx} at byte {}: seek: {e}", entry.offset))?;
+    file.read_exact(buf)
+        .map_err(|e| format!("chunk {idx} at byte {}: {e}", entry.offset))?;
+    let mut out = Vec::with_capacity(entry.events as usize);
+    decode_chunk(buf, entry.events, idx, entry.offset, &mut out)?;
+    Ok(out)
+}
+
+fn note_in_flight(events: usize, in_flight: &AtomicU64, peak: &AtomicU64) {
+    let now = in_flight.fetch_add(events as u64, Ordering::SeqCst) + events as u64;
+    peak.fetch_max(now, Ordering::SeqCst);
+}
+
+impl TraceStream {
+    /// Open a v2 trace for streaming replay with decode-ahead.
+    pub fn open(path: &str) -> Result<TraceStream, String> {
+        TraceStream::open_with(path, true)
+    }
+
+    /// `decode_ahead = false` decodes inline on the consumer thread —
+    /// same events, no overlap; the bench uses it as the baseline that
+    /// quantifies the decode-ahead win.
+    pub fn open_with(path: &str, decode_ahead: bool) -> Result<TraceStream, String> {
+        let mut file = File::open(path).map_err(|e| format!("{path}: {e}"))?;
+        let idx = V2Index::read(&mut file).map_err(|e| format!("{path}: {e}"))?;
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let peak_in_flight = Arc::new(AtomicU64::new(0));
+        let max_chunk_events = idx.max_chunk_events();
+        let nchunks = idx.chunks.len();
+        let src = if decode_ahead {
+            let (tx, rx) = sync_channel::<DecodedChunk>(DECODE_AHEAD_DEPTH);
+            let counters = (in_flight.clone(), peak_in_flight.clone());
+            let chunks = idx.chunks;
+            let handle = std::thread::Builder::new()
+                .name("cxlms-decode".into())
+                .spawn(move || {
+                    let mut buf = Vec::new();
+                    for (i, entry) in chunks.iter().enumerate() {
+                        let decoded = read_and_decode(&mut file, entry, i, &mut buf);
+                        let failed = decoded.is_err();
+                        if let Ok(evs) = &decoded {
+                            note_in_flight(evs.len(), &counters.0, &counters.1);
+                        }
+                        // a send error means the consumer is gone —
+                        // stop decoding; a decode error ends the file
+                        if tx.send(decoded).is_err() || failed {
+                            return;
+                        }
+                    }
+                })
+                .map_err(|e| format!("{path}: spawning decode thread: {e}"))?;
+            Source::Ahead { rx: Some(rx), handle: Some(handle) }
+        } else {
+            Source::Inline { file, chunks: idx.chunks, next: 0, buf: Vec::new() }
+        };
+        Ok(TraceStream {
+            name: format!("stream:{path}"),
+            total_events: idx.total_events,
+            total_accesses: idx.total_accesses,
+            max_chunk_events,
+            nchunks,
+            cur: Vec::new(),
+            pos: 0,
+            src,
+            in_flight,
+            peak_in_flight,
+            error: None,
+            done: false,
+        })
+    }
+
+    /// Retire the drained chunk and install the next one. Returns
+    /// false at end-of-trace or on a stored decode error.
+    fn refill(&mut self) -> bool {
+        if !self.cur.is_empty() {
+            self.in_flight.fetch_sub(self.cur.len() as u64, Ordering::SeqCst);
+            self.cur = Vec::new();
+        }
+        self.pos = 0;
+        if self.done {
+            return false;
+        }
+        loop {
+            let next = match &mut self.src {
+                Source::Ahead { rx, .. } => match rx.as_ref().expect("receiver alive").recv() {
+                    Ok(decoded) => decoded,
+                    // decoder exhausted the directory and exited
+                    Err(_) => {
+                        self.done = true;
+                        return false;
+                    }
+                },
+                Source::Inline { file, chunks, next, buf } => {
+                    if *next >= chunks.len() {
+                        self.done = true;
+                        return false;
+                    }
+                    let i = *next;
+                    *next += 1;
+                    let decoded = read_and_decode(file, &chunks[i], i, buf);
+                    if let Ok(evs) = &decoded {
+                        note_in_flight(evs.len(), &self.in_flight, &self.peak_in_flight);
+                    }
+                    decoded
+                }
+            };
+            match next {
+                Ok(evs) if evs.is_empty() => continue,
+                Ok(evs) => {
+                    self.cur = evs;
+                    return true;
+                }
+                Err(e) => {
+                    self.error = Some(e);
+                    self.done = true;
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// A decode error surfaced mid-stream. The `Workload` interface
+    /// has no error channel, so a damaged chunk ends the stream early
+    /// (as exhaustion); callers MUST check this after the run —
+    /// `cmd_replay` does — or a truncated replay would pass for a
+    /// complete one.
+    pub fn take_error(&mut self) -> Option<String> {
+        self.error.take()
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.total_events
+    }
+
+    pub fn chunks(&self) -> usize {
+        self.nchunks
+    }
+
+    pub fn max_chunk_events(&self) -> u64 {
+        self.max_chunk_events
+    }
+
+    /// Decoded events currently resident (all holders).
+    pub fn decoded_in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of `decoded_in_flight` — bounded by
+    /// `(DECODE_AHEAD_DEPTH + 2) × max_chunk_events`.
+    pub fn peak_decoded_in_flight(&self) -> u64 {
+        self.peak_in_flight.load(Ordering::SeqCst)
+    }
+}
+
+impl Workload for TraceStream {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn next_event(&mut self) -> Option<WlEvent> {
+        if self.pos >= self.cur.len() && !self.refill() {
+            return None;
+        }
+        let ev = self.cur[self.pos];
+        self.pos += 1;
+        Some(ev)
+    }
+
+    /// Serves from the resident chunk only — up to
+    /// `min(budget, remaining-in-chunk)` events per call. Short pushes
+    /// are explicitly allowed by the `Workload` contract; crossing a
+    /// chunk boundary waits for the decode-ahead rendezvous on the
+    /// next call instead of splicing mid-push.
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        if budget == 0 {
+            return self.pos < self.cur.len() || !self.done;
+        }
+        if self.pos >= self.cur.len() && !self.refill() {
+            return false;
+        }
+        let take = budget.min(self.cur.len() - self.pos);
+        sink.extend_from_slice(&self.cur[self.pos..self.pos + take]);
+        self.pos += take;
+        true
+    }
+
+    fn total_accesses_hint(&self) -> u64 {
+        self.total_accesses
+    }
+}
+
+impl Drop for TraceStream {
+    fn drop(&mut self) {
+        if let Source::Ahead { rx, handle } = &mut self.src {
+            // drop the receiver FIRST so a decoder blocked in send()
+            // wakes with an error and exits; then the join can't hang
+            drop(rx.take());
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::io::{V2Writer, V2_DEFAULT_CHUNK_EVENTS};
+    use super::super::{Access, AllocEvent, AllocKind, WlEvent};
+    use super::*;
+    use crate::workload::TraceReplay;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cxlms-stream-{tag}-{}.bin", std::process::id()))
+    }
+
+    /// Write a synthetic trace: one alloc, then `n` strided accesses.
+    fn write_trace(path: &std::path::Path, n: u64, chunk_events: usize) -> Vec<WlEvent> {
+        let mut events = vec![WlEvent::Alloc(AllocEvent {
+            kind: AllocKind::Mmap,
+            addr: 0x6000_0000,
+            len: n * 64 + 4096,
+            t_ns: 0.0,
+        })];
+        for i in 0..n {
+            events.push(WlEvent::Access(Access {
+                addr: 0x6000_0000 + i * 64,
+                is_write: i % 3 == 0,
+            }));
+        }
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = V2Writer::with_chunk_events(f, chunk_events).unwrap();
+        w.push_slice(&events).unwrap();
+        w.finish().unwrap();
+        events
+    }
+
+    #[test]
+    fn stream_matches_in_memory_event_for_event() {
+        for decode_ahead in [false, true] {
+            let path = temp_path(&format!("match-{decode_ahead}"));
+            let events = write_trace(&path, 5000, 256);
+            let mut mem = TraceReplay::new("mem", events);
+            let mut s = TraceStream::open_with(path.to_str().unwrap(), decode_ahead).unwrap();
+            crate::workload::assert_same_stream(&mut mem, &mut s, 97);
+            assert!(s.take_error().is_none());
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn stream_in_flight_is_bounded_by_chunks() {
+        let chunk = 128usize;
+        let path = temp_path("bound");
+        write_trace(&path, 10_000, chunk);
+        for decode_ahead in [false, true] {
+            let mut s = TraceStream::open_with(path.to_str().unwrap(), decode_ahead).unwrap();
+            assert_eq!(s.max_chunk_events(), chunk as u64);
+            let mut buf = Vec::new();
+            loop {
+                buf.clear();
+                if !s.next_batch(&mut buf, 100) {
+                    break;
+                }
+            }
+            assert!(s.take_error().is_none());
+            let peak = s.peak_decoded_in_flight();
+            let bound = (DECODE_AHEAD_DEPTH as u64 + 2) * s.max_chunk_events();
+            assert!(peak > 0, "counter never moved");
+            assert!(peak <= bound, "peak {peak} exceeds O(chunk) bound {bound}");
+            assert_eq!(s.decoded_in_flight(), 0, "events leaked after drain");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stream_short_pushes_stay_within_chunks() {
+        let path = temp_path("short");
+        write_trace(&path, 1000, 64);
+        let mut s = TraceStream::open(path.to_str().unwrap()).unwrap();
+        let mut total = 0usize;
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            let more = s.next_batch(&mut buf, 1000);
+            // never more than one chunk per call
+            assert!(buf.len() <= 64, "pushed {} > chunk", buf.len());
+            total += buf.len();
+            if !more {
+                break;
+            }
+        }
+        assert_eq!(total as u64, s.total_events());
+        assert_eq!(s.total_events(), 1001);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stream_surfaces_decode_errors_after_exhaustion() {
+        let path = temp_path("err");
+        write_trace(&path, 500, 100);
+        // corrupt a payload byte inside a later chunk
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx =
+            super::super::io::V2Index::read(&mut std::io::Cursor::new(&bytes[..])).unwrap();
+        let off = idx.chunks[2].offset as usize;
+        bytes[off] = 9; // invalid tag
+        std::fs::write(&path, &bytes).unwrap();
+        for decode_ahead in [false, true] {
+            let mut s = TraceStream::open_with(path.to_str().unwrap(), decode_ahead).unwrap();
+            let mut buf = Vec::new();
+            loop {
+                buf.clear();
+                if !s.next_batch(&mut buf, 4096) {
+                    break;
+                }
+            }
+            let err = s.take_error().expect("damage must surface");
+            assert!(err.contains("chunk 2"), "{err}");
+            assert!(err.contains("bad tag 9"), "{err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stream_open_rejects_non_v2() {
+        let path = temp_path("notv2");
+        std::fs::write(&path, b"CXLTRC\x00\x01_not_a_v2_file____").unwrap();
+        let err = TraceStream::open(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("v2"), "{err}");
+        std::fs::remove_file(&path).ok();
+        assert!(TraceStream::open("/does/not/exist.bin").is_err());
+    }
+
+    #[test]
+    fn stream_drop_mid_trace_joins_cleanly() {
+        // drop while the decoder is likely blocked in send(): Drop
+        // must not hang (receiver is dropped before the join)
+        let path = temp_path("drop");
+        write_trace(&path, 50_000, 64);
+        for _ in 0..8 {
+            let mut s = TraceStream::open(path.to_str().unwrap()).unwrap();
+            let mut buf = Vec::new();
+            s.next_batch(&mut buf, 10);
+            drop(s);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn default_chunk_size_is_sane() {
+        // three chunks in flight at the default is ~200k decoded
+        // events — a few MB resident at ~32 B per `WlEvent`
+        assert!((DECODE_AHEAD_DEPTH + 2) * V2_DEFAULT_CHUNK_EVENTS < (1 << 20));
+    }
+}

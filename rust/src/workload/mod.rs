@@ -192,6 +192,87 @@ impl Workload for TraceReplay {
     }
 }
 
+/// A recorded trace opened as a workload, auto-detected by magic:
+/// CXLTRC v2 streams through [`crate::trace::stream::TraceStream`]
+/// with O(chunk) memory; v1 and JSONL (which have no chunk directory)
+/// load fully into a [`TraceReplay`]. Both replay the identical event
+/// sequence, so reports are bit-identical across the formats.
+pub enum TraceWorkload {
+    Memory(TraceReplay),
+    Stream(crate::trace::stream::TraceStream),
+}
+
+impl TraceWorkload {
+    pub fn open(path: &str) -> anyhow::Result<TraceWorkload> {
+        use crate::trace::io::{self as tio, TraceFormat};
+        let mut head = [0u8; 8];
+        let n = {
+            use std::io::Read;
+            let mut f =
+                std::fs::File::open(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            f.read(&mut head).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        };
+        let events = match tio::detect_format(&head[..n]) {
+            TraceFormat::V2 => {
+                let s = crate::trace::stream::TraceStream::open(path)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                return Ok(TraceWorkload::Stream(s));
+            }
+            TraceFormat::V1 => {
+                let bytes = std::fs::read(path)?;
+                tio::read_binary(&bytes).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+            }
+            TraceFormat::Jsonl => tio::read_jsonl(std::fs::File::open(path)?)
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?,
+        };
+        Ok(TraceWorkload::Memory(TraceReplay::new(&format!("replay:{path}"), events)))
+    }
+
+    /// A decode error surfaced mid-stream (streaming replay ends early
+    /// on a damaged chunk); callers must check this after the run.
+    pub fn take_error(&mut self) -> Option<String> {
+        match self {
+            TraceWorkload::Stream(s) => s.take_error(),
+            TraceWorkload::Memory(_) => None,
+        }
+    }
+
+    /// The underlying stream, when the trace opened in streaming mode.
+    pub fn stream(&self) -> Option<&crate::trace::stream::TraceStream> {
+        match self {
+            TraceWorkload::Stream(s) => Some(s),
+            TraceWorkload::Memory(_) => None,
+        }
+    }
+}
+
+impl Workload for TraceWorkload {
+    fn name(&self) -> &str {
+        match self {
+            TraceWorkload::Memory(r) => r.name(),
+            TraceWorkload::Stream(s) => s.name(),
+        }
+    }
+    fn next_event(&mut self) -> Option<WlEvent> {
+        match self {
+            TraceWorkload::Memory(r) => r.next_event(),
+            TraceWorkload::Stream(s) => s.next_event(),
+        }
+    }
+    fn next_batch(&mut self, sink: &mut Vec<WlEvent>, budget: usize) -> bool {
+        match self {
+            TraceWorkload::Memory(r) => r.next_batch(sink, budget),
+            TraceWorkload::Stream(s) => s.next_batch(sink, budget),
+        }
+    }
+    fn total_accesses_hint(&self) -> u64 {
+        match self {
+            TraceWorkload::Memory(r) => r.total_accesses_hint(),
+            TraceWorkload::Stream(s) => s.total_accesses_hint(),
+        }
+    }
+}
+
 pub const ALL_WORKLOADS: &[&str] = &[
     "mmap_read",
     "mmap_write",
@@ -320,6 +401,41 @@ mod tests {
                 assert_same_stream(a.as_mut(), b.as_mut(), batch);
             }
         }
+    }
+
+    #[test]
+    fn trace_workload_auto_detects_all_three_formats() {
+        use crate::trace::io as tio;
+        let mut src = by_name("sbrk", 0.002, 5).unwrap();
+        let mut events = Vec::new();
+        while let Some(ev) = src.next_event() {
+            events.push(ev);
+            if events.len() >= 400 {
+                break;
+            }
+        }
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let v1 = dir.join(format!("cxlms-auto-{pid}.v1"));
+        let v2 = dir.join(format!("cxlms-auto-{pid}.v2"));
+        let jl = dir.join(format!("cxlms-auto-{pid}.jsonl"));
+        let mut f = std::fs::File::create(&v1).unwrap();
+        tio::write_binary(&mut f, &events).unwrap();
+        let mut f = std::fs::File::create(&v2).unwrap();
+        tio::write_binary_v2_chunked(&mut f, &events, 64).unwrap();
+        let mut f = std::fs::File::create(&jl).unwrap();
+        tio::write_jsonl(&mut f, &events).unwrap();
+        for (path, want_stream) in [(&v1, false), (&v2, true), (&jl, false)] {
+            let mut wl = TraceWorkload::open(path.to_str().unwrap()).unwrap();
+            assert_eq!(wl.stream().is_some(), want_stream, "{path:?}");
+            let n = drain_batched(&mut wl, 77);
+            assert_eq!(n as usize, events.len(), "{path:?}");
+            assert!(wl.take_error().is_none());
+        }
+        for p in [&v1, &v2, &jl] {
+            std::fs::remove_file(p).ok();
+        }
+        assert!(TraceWorkload::open("/does/not/exist.bin").is_err());
     }
 
     #[test]

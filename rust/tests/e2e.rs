@@ -89,6 +89,42 @@ fn record_replay_matches_direct_run() {
 }
 
 #[test]
+fn v2_streamed_replay_matches_direct_run() {
+    // the streaming flavor of record_replay_matches_direct_run: record
+    // to a chunked v2 file on disk, replay it through the auto-detect
+    // front door (TraceWorkload → TraceStream), compare to direct run.
+    let mut cfg = fast_cfg();
+    cfg.seed = 9;
+    let mut wl = workload::by_name("stream", cfg.scale, cfg.seed).unwrap();
+    let path = std::env::temp_dir().join(format!("cxlms-e2e-v2-{}.bin", std::process::id()));
+    let f = std::fs::File::create(&path).unwrap();
+    let mut w = trace_io::V2Writer::with_chunk_events(f, 1024).unwrap();
+    let mut buf = Vec::new();
+    while wl.next_batch(&mut buf, 4096) {
+        w.push_slice(&buf).unwrap();
+        buf.clear();
+    }
+    w.push_slice(&buf).unwrap();
+    let summary = w.finish().unwrap();
+    assert!(summary.chunks > 1, "want a multi-chunk archive");
+
+    let mut direct = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let direct_rep = direct.run_workload("stream").unwrap();
+
+    let mut replay = TraceWorkload::open(path.to_str().unwrap()).unwrap();
+    assert!(replay.stream().is_some(), "v2 file must stream, not load");
+    let mut replayed = Coordinator::new(builtin::fig2(), cfg).unwrap();
+    let replay_rep = replayed.run(&mut replay).unwrap();
+    assert!(replay.take_error().is_none());
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(direct_rep.total_misses, replay_rep.total_misses);
+    assert_eq!(direct_rep.total_accesses, replay_rep.total_accesses);
+    let rel = (direct_rep.delay_ns - replay_rep.delay_ns).abs() / direct_rep.delay_ns.max(1.0);
+    assert!(rel < 1e-6, "streamed replay drifted: {rel}");
+}
+
+#[test]
 fn detailed_and_epoch_models_rank_topologies_identically() {
     // accuracy shape check: both models must agree that deep > fig2 >
     // direct in simulated slowdown for a CXL-heavy streaming workload.

@@ -988,3 +988,121 @@ fn multihost_fault_run_bit_identical_across_worker_counts() {
         assert_multihost_identical(&one, &many);
     }
 }
+
+// ------------------------------------------- streaming trace replay
+
+use cxlmemsim::trace::io as trace_io;
+use cxlmemsim::trace::stream::DECODE_AHEAD_DEPTH;
+use cxlmemsim::trace::WlEvent;
+use cxlmemsim::workload::TraceReplay;
+
+/// Record `wl` into a CXLTRC v2 temp file through the streaming
+/// writer (bounded memory, same path `cmd_record` uses) and return the
+/// path plus the full in-memory event list for the baseline replay.
+fn record_v2_tempfile(
+    wl: &str,
+    scale: f64,
+    seed: u64,
+    chunk_events: usize,
+    tag: &str,
+) -> (std::path::PathBuf, Vec<WlEvent>) {
+    let mut src = workload::by_name(wl, scale, seed).unwrap();
+    let mut events: Vec<WlEvent> = Vec::new();
+    while src.next_batch(&mut events, 4096) {}
+    let path = std::env::temp_dir().join(format!(
+        "cxlms-eq-{}-{}-{}.bin",
+        std::process::id(),
+        tag,
+        chunk_events
+    ));
+    let f = std::fs::File::create(&path).unwrap();
+    let mut w = trace_io::V2Writer::with_chunk_events(f, chunk_events).unwrap();
+    w.push_slice(&events).unwrap();
+    w.finish().unwrap();
+    (path, events)
+}
+
+/// Streaming replay (chunk-resident events, decode-ahead thread) must
+/// produce a `SimReport` bit-identical to replaying the same trace
+/// fully decoded in memory — with and without the decode-ahead thread,
+/// under both scan kernels (via `fast_cfg`'s CI knob).
+#[test]
+fn streaming_replay_bit_identical_to_in_memory() {
+    let cfg = fast_cfg();
+    let (path, events) = record_v2_tempfile("zipfian", cfg.scale, 9, 512, "bitident");
+    let p = path.to_str().unwrap();
+
+    let mut mem = TraceReplay::new("replay:mem", events);
+    let baseline = run_batched(&builtin::fig2(), &cfg, &mut mem).unwrap();
+    assert!(baseline.epochs_run > 0, "trace must span epochs");
+
+    for ahead in [true, false] {
+        let mut st = TraceStream::open_with(p, ahead).unwrap();
+        assert!(st.chunks() > 2, "need several chunks to exercise refills");
+        let rep = run_batched(&builtin::fig2(), &cfg, &mut st).unwrap();
+        assert!(st.take_error().is_none(), "clean trace, ahead={ahead}");
+        assert_reports_identical(&baseline, &rep, &format!("stream ahead={ahead}"));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The full determinism matrix: analyzer threads x batch-group sizes,
+/// each on a fresh `TraceStream`, must all match the sequential
+/// in-memory coordinator bit-for-bit. CI pins the thread leg via
+/// `CXLMEMSIM_TEST_THREADS` (1 / 2 / 8).
+#[test]
+fn streaming_replay_identical_across_batched_knobs() {
+    let cfg = fast_cfg();
+    let (path, events) = record_v2_tempfile("mcf_like", cfg.scale, 7, 768, "knobs");
+    let p = path.to_str().unwrap();
+
+    let mut mem = TraceReplay::new("replay:mem", events);
+    let mut seq = Coordinator::new(builtin::fig2(), cfg.clone()).unwrap();
+    let baseline = seq.run(&mut mem).unwrap();
+
+    for threads in knob_threads(&[1, 2, 8]) {
+        for group in [1usize, 16, 256] {
+            let mut kcfg = cfg.clone();
+            kcfg.analyzer_threads = threads;
+            kcfg.batch_group = group;
+            let mut st = TraceStream::open(p).unwrap();
+            let rep = run_batched(&builtin::fig2(), &kcfg, &mut st).unwrap();
+            assert!(st.take_error().is_none());
+            assert_reports_identical(
+                &baseline,
+                &rep,
+                &format!("stream threads={threads} group={group}"),
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Resident decoded-event memory is O(chunk), not O(trace): the peak
+/// in-flight counter (consumer chunk + channel slot + decoder scratch)
+/// must stay within `(DECODE_AHEAD_DEPTH + 2) x max_chunk_events`, and
+/// everything must be retired once the stream drains.
+#[test]
+fn streaming_replay_memory_bounded_by_chunks_in_flight() {
+    let cfg = fast_cfg();
+    let (path, events) = record_v2_tempfile("zipfian", cfg.scale, 5, 256, "memory");
+    let p = path.to_str().unwrap();
+
+    let mut st = TraceStream::open(p).unwrap();
+    assert!(st.chunks() >= 4, "need enough chunks for the pipeline to fill");
+    let mut sink = Vec::new();
+    let mut total = 0usize;
+    while st.next_batch(&mut sink, 1024) {
+        total += sink.len();
+        sink.clear();
+    }
+    assert_eq!(total as u64, events.len() as u64, "drained the whole trace");
+    assert!(st.take_error().is_none());
+
+    let bound = (DECODE_AHEAD_DEPTH as u64 + 2) * st.max_chunk_events();
+    let peak = st.peak_decoded_in_flight();
+    assert!(peak > 0, "pipeline never filled");
+    assert!(peak <= bound, "peak {peak} exceeds O(chunk) bound {bound}");
+    assert_eq!(st.decoded_in_flight(), 0, "all chunks retired after drain");
+    std::fs::remove_file(&path).ok();
+}

@@ -13,6 +13,7 @@ Gated entries / metrics (the hot paths named in ROADMAP):
   batch_analyze    blocked_epochs_per_s       higher is better
   scan_kernel      blocked_calls_per_s        higher is better
   replay_group     group256_epochs_per_s      higher is better
+  replay_stream    events_per_s               higher is better
   fault_epoch      faultfree_epochs_per_s     higher is better
   multihost_epoch  pooled_epochs_per_s        higher is better
   policy_epoch     empty_stack_ns_per_epoch   lower is better
@@ -45,6 +46,7 @@ GATES = {
     ],
     "scan_kernel": [("blocked_calls_per_s", "higher")],
     "replay_group": [("group256_epochs_per_s", "higher")],
+    "replay_stream": [("events_per_s", "higher")],
     "fault_epoch": [("faultfree_epochs_per_s", "higher")],
     "multihost_epoch": [("pooled_epochs_per_s", "higher")],
     "policy_epoch": [
