@@ -38,6 +38,17 @@
 //! rendezvous channel — O(chunk) memory, wall-clock approaching
 //! max(decode, analyze), reports bit-identical to in-memory replay
 //! for every thread/group/kernel knob (`tests/pipeline_equivalence.rs`).
+//!
+//! With `--pipeline` the group flush itself moves off the pump thread:
+//! [`super::pipeline::PipelinedBatchFlush`] sends the packed group to
+//! a dedicated analysis worker and keeps pumping the next group while
+//! it runs. Without a live policy stack the in-flight group drains one
+//! flush late (depth 1) and reports stay bit-identical; with a stack,
+//! phase-2 already runs up to E−1 epochs late at group-flush time, so
+//! the pipeline drains lock-step at each flush to keep that documented
+//! bound — the lateness contract is unchanged either way. Composes
+//! with streaming replay into decode → pump → analyze, three threads
+//! deep.
 
 use crate::policy::PolicyStack;
 use crate::runtime::{self, shapes};
@@ -45,6 +56,7 @@ use crate::topology::{TopoTensors, Topology};
 use crate::workload::Workload;
 
 use super::driver::{BatchedFlush, EpochDriver};
+use super::pipeline::PipelinedBatchFlush;
 use super::report::SimReport;
 use super::SimConfig;
 
@@ -75,16 +87,8 @@ pub fn run_batched_with(
 ) -> anyhow::Result<SimReport> {
     let wall_start = std::time::Instant::now();
     super::ensure_fault_backend(cfg)?;
+    super::ensure_pipeline_backend(cfg)?;
     let tensors = TopoTensors::build(topo, shapes::NUM_POOLS, shapes::NUM_SWITCHES)?;
-    let mut model = runtime::make_batch_analyzer(
-        cfg.backend,
-        &tensors,
-        cfg.nbins,
-        &cfg.artifacts_dir,
-        cfg.analyzer_threads,
-        cfg.scan_kernel,
-        cfg.batch_group,
-    )?;
     let mut driver = EpochDriver::new(topo, cfg)?;
     let mut fault = match &cfg.faults {
         Some(plan) => Some(plan.resolve(topo)?),
@@ -99,6 +103,61 @@ pub fn run_batched_with(
     };
     let stack = stack.or(fallback_stack.as_mut());
 
+    if cfg.pipeline {
+        // the worker owns the batch model outright (Send-gated:
+        // `ensure_pipeline_backend` rejected PJRT up front); the
+        // analyzer's own thread pool still shards inside each
+        // `analyze_batch` call, so `--analyzer-threads` composes
+        let model = runtime::make_send_batch_analyzer(
+            cfg.backend,
+            &tensors,
+            cfg.nbins,
+            cfg.analyzer_threads,
+            cfg.scan_kernel,
+            cfg.batch_group,
+        )?;
+        let mut report =
+            SimReport::new(wl.name(), &topo.name, model.backend_name(), topo.num_pools());
+        report.analyzer_threads_used = model.threads() as u64;
+        report.scan_kernel = model.scan_kernel().name().to_string();
+        report.batch_group = model.batch() as u64;
+        let mut flush = PipelinedBatchFlush::new(
+            model,
+            topo.host.cacheline_bytes as f32,
+            cfg.keep_epoch_records,
+            driver.bins.bin_width_ns() as f32,
+            cfg.epoch_ns(),
+        )?;
+        flush.stack = stack;
+        flush.fault = fault.as_mut();
+        if let Some(st) = flush.stack.as_deref_mut() {
+            st.begin_run(); // per-run accounting, even for caller-owned stacks
+        }
+        driver.run(wl, &mut flush, &mut report, cfg.max_epochs)?;
+        report.finish(&driver.cache.stats, driver.tracer_run_stats(), wall_start.elapsed());
+        // PipelinedBatchFlush has a Drop impl (joins the worker), so
+        // its borrows live until the drop point — take the stack back
+        // and drop explicitly before reading `fault` again
+        let run_stack = flush.stack.take();
+        drop(flush);
+        if let Some(stack) = run_stack.as_deref() {
+            report.record_policy_stats(stack);
+        }
+        if let Some(f) = &fault {
+            report.record_fault_stats(f);
+        }
+        return Ok(report);
+    }
+
+    let mut model = runtime::make_batch_analyzer(
+        cfg.backend,
+        &tensors,
+        cfg.nbins,
+        &cfg.artifacts_dir,
+        cfg.analyzer_threads,
+        cfg.scan_kernel,
+        cfg.batch_group,
+    )?;
     let mut report = SimReport::new(wl.name(), &topo.name, model.backend_name(), topo.num_pools());
     report.analyzer_threads_used = model.threads() as u64;
     report.scan_kernel = model.scan_kernel().name().to_string();

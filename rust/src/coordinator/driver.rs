@@ -437,21 +437,23 @@ impl EpochFlush for PerEpochAnalyze<'_, '_> {
     }
 }
 
-/// One epoch parked in a [`BatchedFlush`] group, waiting for analysis.
-struct PendingEpoch {
-    reads: Vec<f32>,
-    writes: Vec<f32>,
-    native_ns: f64,
-    events: u64,
+/// One epoch parked in a [`BatchedFlush`] group (or a
+/// `pipeline::PipelinedBatchFlush` in-flight group), waiting for
+/// analysis.
+pub(crate) struct PendingEpoch {
+    pub(crate) reads: Vec<f32>,
+    pub(crate) writes: Vec<f32>,
+    pub(crate) native_ns: f64,
+    pub(crate) events: u64,
     /// Snapshot of the stack's injected-events vector taken when this
     /// epoch's phase-1 ran — restored before its phase-2 at flush time
     /// so the anti-cascade demand subtraction sees the right epoch's
     /// copy traffic (empty when no stack is installed).
-    injected: Vec<f64>,
+    pub(crate) injected: Vec<f64>,
     /// Stall accrued by this epoch's phase-1 hooks (migrations in
     /// `before_analysis`), parked here and re-credited before the
     /// epoch's phase 2 so it lands in the right epoch's record.
-    phase1_stall_ns: f64,
+    pub(crate) phase1_stall_ns: f64,
 }
 
 /// Grouped-analyze strategy: accumulates E epochs of histograms and

@@ -19,10 +19,12 @@
 
 pub mod batch;
 pub mod driver;
+pub mod pipeline;
 pub mod report;
 
 pub use batch::{run_batched, run_batched_with};
 pub use driver::{BatchedFlush, EpochDriver, EpochFlush, PerEpochAnalyze, DEFAULT_EVENT_BATCH};
+pub use pipeline::{PipelinedAnalyze, PipelinedBatchFlush, PIPELINE_DEPTH};
 pub use report::{EpochRecord, PolicyReport, SimReport, TracerRunStats};
 
 use crate::alloctrack::{AllocTracker, PolicyKind};
@@ -117,6 +119,14 @@ pub struct SimConfig {
     /// default) leaves the fault machinery entirely unconstructed.
     /// Requires the native backend (the AOT HLO has no overlay inputs).
     pub faults: Option<crate::fault::FaultPlan>,
+    /// Pipelined epoch execution (`--pipeline`): run the analyzer on a
+    /// dedicated worker behind a depth-1 rendezvous so the pump fills
+    /// epoch N+1 while epoch N analyzes (`coordinator::pipeline`).
+    /// Reports are bit-identical to serial runs; a policy stack with
+    /// members forces lock-step draining (no overlap) to keep phase-2
+    /// in its serial position. Requires the native backend (PJRT
+    /// client handles are thread-local).
+    pub pipeline: bool,
 }
 
 impl Default for SimConfig {
@@ -145,6 +155,7 @@ impl Default for SimConfig {
             batch_group: 0,
             heat_decay: 1.0,
             faults: None,
+            pipeline: false,
         }
     }
 }
@@ -162,11 +173,15 @@ pub struct Coordinator {
     model: Box<dyn TimingModel>,
     driver: EpochDriver,
     stack: Option<PolicyStack>,
+    /// Remembered so a pipelined run can arm its worker's model the
+    /// same way `set_export_backlog` armed `self.model`.
+    export_backlog: bool,
 }
 
 impl Coordinator {
     pub fn new(topo: Topology, cfg: SimConfig) -> anyhow::Result<Coordinator> {
         ensure_fault_backend(&cfg)?;
+        ensure_pipeline_backend(&cfg)?;
         let tensors = TopoTensors::build(
             &topo,
             runtime::shapes::NUM_POOLS,
@@ -187,7 +202,8 @@ impl Coordinator {
             .epoch_policy
             .as_ref()
             .map(|spec| spec.build(cfg.mig_stall_ns_per_byte));
-        let mut coord = Coordinator { topo, cfg, model, driver, stack: None };
+        let mut coord =
+            Coordinator { topo, cfg, model, driver, stack: None, export_backlog: false };
         if let Some(stack) = stack {
             coord.set_policy_stack(stack);
         }
@@ -210,6 +226,7 @@ impl Coordinator {
     /// export (`TimingOutputs::cong_backlog`) — costs an extra store +
     /// copy per epoch, so it is off unless a custom policy reads it.
     pub fn set_export_backlog(&mut self, on: bool) {
+        self.export_backlog = on;
         self.model.set_export_backlog(on);
     }
 
@@ -261,18 +278,48 @@ impl Coordinator {
         if let Some(stack) = &mut self.stack {
             stack.begin_run(); // per-run policy accounting, like the tracker
         }
-        let mut flush = PerEpochAnalyze {
-            model: self.model.as_mut(),
-            stack: self.stack.as_mut(),
-            fault: fault.as_mut(),
-            bytes_per_ev: self.topo.host.cacheline_bytes as f32,
-            keep_epoch_records: self.cfg.keep_epoch_records,
-            epoch: 0,
-        };
-        self.driver.run(wl, &mut flush, &mut report, self.cfg.max_epochs)?;
-        // make sure a later fault-free run on this coordinator doesn't
-        // inherit the overlay
-        self.model.set_fault_overlay(None);
+        if self.cfg.pipeline {
+            // the worker owns its own Send model (cheap to build on
+            // the native backend — `ensure_pipeline_backend` rejected
+            // PJRT up front); `self.model` stays untouched, so a later
+            // non-pipelined run on this coordinator is unaffected
+            let tensors = TopoTensors::build(
+                &self.topo,
+                runtime::shapes::NUM_POOLS,
+                runtime::shapes::NUM_SWITCHES,
+            )?;
+            let mut model = runtime::make_send_analyzer(
+                self.cfg.backend,
+                &tensors,
+                self.cfg.nbins,
+                self.cfg.scan_kernel,
+            )?;
+            model.set_export_backlog(self.export_backlog);
+            let mut flush = PipelinedAnalyze::new(
+                model,
+                self.topo.host.cacheline_bytes as f32,
+                self.cfg.keep_epoch_records,
+                self.driver.bins.bin_width_ns() as f32,
+                self.cfg.nbins,
+                self.cfg.epoch_ns(),
+            )?;
+            flush.stack = self.stack.as_mut();
+            flush.fault = fault.as_mut();
+            self.driver.run(wl, &mut flush, &mut report, self.cfg.max_epochs)?;
+        } else {
+            let mut flush = PerEpochAnalyze {
+                model: self.model.as_mut(),
+                stack: self.stack.as_mut(),
+                fault: fault.as_mut(),
+                bytes_per_ev: self.topo.host.cacheline_bytes as f32,
+                keep_epoch_records: self.cfg.keep_epoch_records,
+                epoch: 0,
+            };
+            self.driver.run(wl, &mut flush, &mut report, self.cfg.max_epochs)?;
+            // make sure a later fault-free run on this coordinator
+            // doesn't inherit the overlay
+            self.model.set_fault_overlay(None);
+        }
         report.finish(
             &self.driver.cache.stats,
             self.driver.tracer_run_stats(),
@@ -297,6 +344,20 @@ pub(crate) fn ensure_fault_backend(cfg: &SimConfig) -> anyhow::Result<()> {
         anyhow::bail!(
             "fault injection requires `--backend native` (the AOT HLO artifacts \
              have no fault-overlay inputs)"
+        );
+    }
+    Ok(())
+}
+
+/// Pipelined execution needs a model that can move to the analysis
+/// worker thread; PJRT client handles are thread-local, so requesting
+/// `--pipeline` there is a clean config error up front (mirrors
+/// [`ensure_fault_backend`]).
+pub(crate) fn ensure_pipeline_backend(cfg: &SimConfig) -> anyhow::Result<()> {
+    if cfg.pipeline && cfg.backend == AnalyzerBackend::Pjrt {
+        anyhow::bail!(
+            "--pipeline requires `--backend native` (PJRT client handles are \
+             thread-local and cannot move to the pipelined analysis worker)"
         );
     }
     Ok(())
@@ -562,5 +623,66 @@ mod tests {
         let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
         let rep = sim.run_workload("stream").unwrap();
         assert_eq!(rep.epochs.len() as u64, rep.epochs_run);
+    }
+
+    #[test]
+    fn pipelined_run_is_bit_identical_to_serial() {
+        let run = |pipeline: bool| {
+            let mut cfg = cfg_fast();
+            cfg.pipeline = pipeline;
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload("zipfian").unwrap()
+        };
+        let serial = run(false);
+        let piped = run(true);
+        assert_eq!(serial.total_accesses, piped.total_accesses);
+        assert_eq!(serial.total_misses, piped.total_misses);
+        assert_eq!(serial.epochs_run, piped.epochs_run);
+        assert_eq!(serial.native_ns, piped.native_ns);
+        assert_eq!(serial.delay_ns, piped.delay_ns);
+        assert_eq!(serial.lat_delay_ns, piped.lat_delay_ns);
+        assert_eq!(serial.cong_delay_ns, piped.cong_delay_ns);
+        assert_eq!(serial.bwd_delay_ns, piped.bwd_delay_ns);
+        assert_eq!(serial.simulated_ns, piped.simulated_ns);
+        // no policy stack -> overlapped mode: depth 1, analysis timed
+        assert_eq!(serial.pipeline_depth, 0);
+        assert_eq!(piped.pipeline_depth, 1);
+        assert!(piped.analyze_busy_ns > 0.0);
+        assert!(piped.pump_busy_ns > 0.0);
+        assert!((0.0..=1.0).contains(&piped.overlap_frac));
+    }
+
+    #[test]
+    fn pipelined_run_with_policy_stack_locks_step() {
+        let run = |pipeline: bool| {
+            let mut cfg = cfg_fast();
+            cfg.scale = 0.004;
+            cfg.epoch_policy =
+                Some(crate::policy::PolicySpec::parse("hotness:1,prefetch:0.5").unwrap());
+            cfg.mig_stall_ns_per_byte = 0.25;
+            cfg.pipeline = pipeline;
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload("zipfian").unwrap()
+        };
+        let serial = run(false);
+        let piped = run(true);
+        assert!(piped.migrations > 0, "stack must stay live under the pipeline");
+        assert_eq!(serial.migrations, piped.migrations);
+        assert_eq!(serial.migrated_bytes, piped.migrated_bytes);
+        assert_eq!(serial.delay_ns, piped.delay_ns);
+        assert_eq!(serial.mig_delay_ns, piped.mig_delay_ns);
+        assert_eq!(serial.simulated_ns, piped.simulated_ns);
+        // phase-2 mutates placement, so the pipeline must have drained
+        // lock-step: no overlap is claimed
+        assert_eq!(piped.pipeline_depth, 0);
+    }
+
+    #[test]
+    fn pipeline_rejects_pjrt_backend() {
+        let mut cfg = cfg_fast();
+        cfg.pipeline = true;
+        cfg.backend = crate::runtime::AnalyzerBackend::Pjrt;
+        let err = Coordinator::new(builtin::fig2(), cfg).unwrap_err();
+        assert!(err.to_string().contains("--pipeline requires"), "got: {err:#}");
     }
 }

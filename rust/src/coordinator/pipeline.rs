@@ -1,0 +1,745 @@
+//! Pipelined epoch execution: overlap the workload pump with analysis.
+//!
+//! Serial drivers alternate two phases on one thread — pump events
+//! until the epoch boundary, then run the timing model over the frozen
+//! bins — so end-to-end wall-clock is pump + analyze. PR 7 already
+//! overlapped the *replay* side (`trace::stream`'s decode-ahead
+//! thread); this module lifts the same bounded-rendezvous pattern into
+//! the generation side. A dedicated analysis worker ("cxlms-analyze")
+//! owns a `Send` native timing model; the pump snapshots each epoch's
+//! `[P, B]` histograms into one of two recycled buffers and hands it
+//! across a `sync_channel` rendezvous (never a race), then immediately
+//! resumes pumping epoch N+1 while the worker analyzes epoch N. The
+//! drained buffer rides the reply back, so steady state allocates
+//! nothing and exactly two histogram buffers circulate — the
+//! "double-buffered bins" in `--pipeline`'s one-line description.
+//!
+//! ## The handoff contract (what runs where)
+//!
+//! The split is pump-side vs. pure-side. Everything that mutates pump
+//! state stays on the pump thread, at the epoch boundary, in exact
+//! serial order: the fault barrier (schedule + failover sweep), policy
+//! phase-1 (bin shaping + migration-traffic injection on the live
+//! bins), storm attribution, phase-2 (`after_analysis`), and the
+//! report push. Only the analyzer call itself moves to the worker —
+//! a pure function of the snapshotted histograms, the shared read-only
+//! topology tensors, and the fault overlay, which rides *in-band* with
+//! the request so the worker never reads pump-side fault state.
+//!
+//! ## Bit-identity, and when the pipeline runs lock-step
+//!
+//! Reports must be bit-identical to serial runs. Two cases:
+//!
+//! * **No policy stack, or an empty one** (including the empty stack
+//!   fault runs auto-install): phase-2 consumes the epoch's parked
+//!   stall but touches neither tracker nor bins, so deferring it by
+//!   one epoch is invisible — analyzer outputs are deterministic
+//!   functions of the request, `push_epoch` runs in FIFO order, and
+//!   the pump-side counters it interleaves with are disjoint fields.
+//!   The pipeline keeps one epoch in flight (`pipeline_depth = 1`).
+//! * **A stack with members**: phase-2 migrates regions, which changes
+//!   `pool_of` for *subsequent pumped events* — running it even one
+//!   epoch late would route different misses and break bit-identity
+//!   (the batched driver tolerates that lateness only because its
+//!   serial baseline has the same lateness). So the pipeline detects
+//!   this (`PolicyStack::is_empty`) and drains the rendezvous in lock
+//!   step: send, then immediately receive, putting phase-2 in its
+//!   exact serial position. Same code path, no overlap
+//!   (`pipeline_depth = 0`, `overlap_frac ≈ 0`) — bit-identity beats
+//!   throughput when the two conflict. Overlap therefore benefits the
+//!   common characterization paths: policy-free runs, fault runs, and
+//!   trace replay.
+//!
+//! Like `BatchedFlush`'s early flush, the pipeline drains on every
+//! fault-overlay revision edge before the first request under the new
+//! overlay is sent, so one in-flight analysis never spans two overlays
+//! (the in-band overlay would keep results correct regardless; the
+//! drain keeps the invariant structural rather than incidental).
+//!
+//! Per-epoch stall/injected bookkeeping is parked with each in-flight
+//! epoch and restored before its phase-2, exactly like `BatchedFlush`
+//! parks them across a group — including the fault barrier's failover
+//! stall, which accrues at boundary N+1 but belongs to epoch N+1, not
+//! to the in-flight epoch N drained at that boundary.
+//!
+//! ## Observability
+//!
+//! The worker times each analyze call; the pump times its blocking
+//! `recv`s. `SimReport` gets `pipeline_depth`, `pump_busy_ns`
+//! (pipeline wall minus rendezvous waits), `analyze_busy_ns`, and
+//! `overlap_frac` = 1 − wait/analyze — the fraction of analysis hidden
+//! behind the pump (→ 1.0 when the pump is the bottleneck, → 0.0 when
+//! the run is lock-step or analysis-bound with an idle pump). These
+//! observe wall-clock and are excluded from bit-identity comparisons,
+//! like `wall_s`. The gated `pipeline_overlap` hotpath bench proves
+//! wall-clock approaches max(pump, analyze) instead of their sum.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::alloctrack::AllocTracker;
+use crate::fault::{FaultOverlay, FaultState};
+use crate::policy::PolicyStack;
+use crate::runtime::{BatchOutputs, BatchTimingModel, TimingInputs, TimingModel, TimingOutputs};
+use crate::trace::binning::EpochBins;
+
+use super::driver::{fault_epoch_barrier, EpochFlush, PendingEpoch};
+use super::report::SimReport;
+
+/// Epochs (sequential) or groups (batched) the pump may run ahead of
+/// the analysis worker. Depth 1 is the double-buffer point: the pump
+/// fills one histogram while the worker drains the other, which
+/// already achieves max(pump, analyze) — deeper queues add latency and
+/// buffers without adding overlap (same argument as
+/// `trace::stream::DECODE_AHEAD_DEPTH`).
+pub const PIPELINE_DEPTH: usize = 1;
+
+/// One epoch's snapshot crossing the rendezvous to the worker. The
+/// buffers come back in the reply and are recycled.
+struct AnalyzeReq {
+    reads: Vec<f32>,
+    writes: Vec<f32>,
+    /// Install `overlay` before analyzing. Sent only on overlay
+    /// revision edges (overlays are piecewise-constant between edges,
+    /// and the pipeline drains on every edge).
+    set_overlay: bool,
+    overlay: Option<FaultOverlay>,
+}
+
+struct AnalyzeRes {
+    out: TimingOutputs,
+    reads: Vec<f32>,
+    writes: Vec<f32>,
+    analyze_ns: u64,
+}
+
+type AnalyzeReply = Result<AnalyzeRes, String>;
+
+/// Pump-side bookkeeping for the epoch whose analysis is in flight.
+struct InFlight {
+    native_ns: f64,
+    events: u64,
+    /// Parked phase-1 state, restored before this epoch's phase-2
+    /// (see `PendingEpoch` — same contract, depth 1 instead of E).
+    injected: Vec<f64>,
+    stall_ns: f64,
+}
+
+fn spawn_analyze_worker(
+    mut model: Box<dyn TimingModel + Send>,
+    bin_width: f32,
+    bytes_per_ev: f32,
+) -> std::io::Result<(SyncSender<AnalyzeReq>, Receiver<AnalyzeReply>, JoinHandle<()>)> {
+    let (req_tx, req_rx) = sync_channel::<AnalyzeReq>(PIPELINE_DEPTH);
+    let (res_tx, res_rx) = sync_channel::<AnalyzeReply>(PIPELINE_DEPTH);
+    let handle = std::thread::Builder::new().name("cxlms-analyze".into()).spawn(move || {
+        while let Ok(req) = req_rx.recv() {
+            let AnalyzeReq { reads, writes, set_overlay, overlay } = req;
+            if set_overlay {
+                model.set_fault_overlay(overlay.as_ref());
+            }
+            let t0 = Instant::now();
+            let out = model.analyze(&TimingInputs {
+                reads: &reads,
+                writes: &writes,
+                bin_width,
+                bytes_per_ev,
+            });
+            let analyze_ns = t0.elapsed().as_nanos() as u64;
+            let reply = match out {
+                Ok(out) => Ok(AnalyzeRes { out, reads, writes, analyze_ns }),
+                Err(e) => Err(format!("{e:#}")),
+            };
+            if res_tx.send(reply).is_err() {
+                return; // pump gone (dropped mid-run); nothing to report to
+            }
+        }
+    })?;
+    Ok((req_tx, res_rx, handle))
+}
+
+/// Pipelined per-epoch analyze strategy: `PerEpochAnalyze` with the
+/// analyzer call on a dedicated worker behind a depth-1 rendezvous.
+/// See the module docs for the handoff contract and the lock-step
+/// rule.
+pub struct PipelinedAnalyze<'p> {
+    req_tx: Option<SyncSender<AnalyzeReq>>,
+    res_rx: Option<Receiver<AnalyzeReply>>,
+    handle: Option<JoinHandle<()>>,
+    pub stack: Option<&'p mut PolicyStack>,
+    /// Fault schedule; drivers guarantee a stack is installed whenever
+    /// this is set (failover needs the migration machinery).
+    pub fault: Option<&'p mut FaultState>,
+    bytes_per_ev: f32,
+    keep_epoch_records: bool,
+    /// Epoch counter for the fault schedule (0-based).
+    epoch: u64,
+    /// Send the current overlay with the next request (armed at start
+    /// and on every revision edge).
+    overlay_dirty: bool,
+    in_flight: Option<InFlight>,
+    /// The second buffer of the double buffer (the first is in flight
+    /// or inside the reply channel).
+    spare_buf: Option<(Vec<f32>, Vec<f32>)>,
+    spare_meta: Option<InFlight>,
+    /// Scratch bins handed to phase-2 when a drain runs deferred
+    /// (allocated once, on demand; `None` until a stack needs it).
+    policy_bins: Option<EpochBins>,
+    pools: usize,
+    nbins: usize,
+    epoch_ns: f64,
+    started: Option<Instant>,
+    wait_ns: u64,
+    analyze_busy_ns: u64,
+}
+
+impl<'p> PipelinedAnalyze<'p> {
+    pub fn new(
+        model: Box<dyn TimingModel + Send>,
+        bytes_per_ev: f32,
+        keep_epoch_records: bool,
+        bin_width: f32,
+        nbins: usize,
+        epoch_ns: f64,
+    ) -> anyhow::Result<PipelinedAnalyze<'p>> {
+        let pools = model.pools();
+        let (req_tx, res_rx, handle) = spawn_analyze_worker(model, bin_width, bytes_per_ev)?;
+        Ok(PipelinedAnalyze {
+            req_tx: Some(req_tx),
+            res_rx: Some(res_rx),
+            handle: Some(handle),
+            stack: None,
+            fault: None,
+            bytes_per_ev,
+            keep_epoch_records,
+            epoch: 0,
+            overlay_dirty: true,
+            in_flight: None,
+            spare_buf: None,
+            spare_meta: None,
+            policy_bins: None,
+            pools,
+            nbins,
+            epoch_ns,
+            started: None,
+            wait_ns: 0,
+            analyze_busy_ns: 0,
+        })
+    }
+
+    /// Whether the rendezvous must drain immediately after every send:
+    /// a stack with members runs phase-2 migrations that feed back
+    /// into event routing, so phase-2 must hold its exact serial
+    /// position (module docs).
+    fn lock_step(&self) -> bool {
+        self.stack.as_ref().is_some_and(|s| !s.is_empty())
+    }
+
+    fn send(&mut self, req: AnalyzeReq) -> anyhow::Result<()> {
+        self.req_tx
+            .as_ref()
+            .expect("pipeline request channel alive until drop")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("pipelined analysis worker exited unexpectedly"))
+    }
+
+    /// Receive the in-flight epoch's outputs and run its pump-side
+    /// tail: restore parked phase-1 state, phase-2, report push.
+    fn drain_one(
+        &mut self,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        let Some(meta) = self.in_flight.take() else {
+            return Ok(());
+        };
+        let t0 = Instant::now();
+        let reply = self
+            .res_rx
+            .as_ref()
+            .expect("pipeline reply channel alive until drop")
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pipelined analysis worker exited unexpectedly"))?;
+        self.wait_ns += t0.elapsed().as_nanos() as u64;
+        let res = reply.map_err(|e| anyhow::anyhow!("pipelined analyze failed: {e}"))?;
+        self.analyze_busy_ns += res.analyze_ns;
+        let mig_ns = if let Some(stack) = &mut self.stack {
+            // rebuild this epoch's bins view for the phase-2 hooks
+            // (the live bins already hold the next epoch)
+            let bins = self
+                .policy_bins
+                .get_or_insert_with(|| EpochBins::new(self.pools, self.nbins, self.epoch_ns));
+            bins.reads.copy_from_slice(&res.reads);
+            bins.writes.copy_from_slice(&res.writes);
+            bins.total_events = meta.events;
+            stack.set_injected_events(&meta.injected);
+            stack.credit_accrued_stall_ns(meta.stall_ns);
+            stack.after_analysis(bins, &res.out, tracker, self.bytes_per_ev)
+        } else {
+            0.0
+        };
+        report.push_epoch(meta.native_ns, &res.out, mig_ns, meta.events, self.keep_epoch_records);
+        self.spare_buf = Some((res.reads, res.writes));
+        self.spare_meta = Some(meta);
+        Ok(())
+    }
+}
+
+impl EpochFlush for PipelinedAnalyze<'_> {
+    fn on_epoch(
+        &mut self,
+        bins: &mut EpochBins,
+        native_ns: f64,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        let mut barrier_stall = 0.0;
+        if self.fault.is_some() {
+            let changed = {
+                let fault = self.fault.as_mut().unwrap();
+                if let Some(stack) = &mut self.stack {
+                    fault_epoch_barrier(fault, stack, tracker, self.epoch, self.bytes_per_ev)?
+                } else {
+                    fault.epoch_begin(self.epoch)
+                }
+            };
+            // the barrier's failover stall belongs to THIS epoch: park
+            // it across the drain below, or the in-flight epoch's
+            // phase-2 would take it (same placement rule as
+            // `BatchedFlush`'s early flush)
+            barrier_stall = match &mut self.stack {
+                Some(stack) => stack.take_accrued_stall_ns(),
+                None => 0.0,
+            };
+            if changed {
+                // overlay edge: land the in-flight epoch under the
+                // overlay it was sent with before anything runs under
+                // the new one
+                self.drain_one(tracker, report)?;
+                self.overlay_dirty = true;
+            }
+        }
+        // phase 1 runs on the live bins, pump-side, in serial order
+        if let Some(stack) = &mut self.stack {
+            stack.credit_accrued_stall_ns(barrier_stall);
+            stack.before_analysis(bins, tracker, self.bytes_per_ev);
+        }
+        if let Some(fault) = &mut self.fault {
+            // storm attribution at boundary time on the live
+            // post-injection bins — identical to the serial driver
+            fault.retry_delay_ns +=
+                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
+        }
+        let (mut reads, mut writes) = self.spare_buf.take().unwrap_or_default();
+        reads.clear();
+        reads.extend_from_slice(&bins.reads);
+        writes.clear();
+        writes.extend_from_slice(&bins.writes);
+        let mut meta = self.spare_meta.take().unwrap_or_else(|| InFlight {
+            native_ns: 0.0,
+            events: 0,
+            injected: Vec::new(),
+            stall_ns: 0.0,
+        });
+        meta.native_ns = native_ns;
+        meta.events = bins.total_events;
+        meta.injected.clear();
+        meta.stall_ns = 0.0;
+        if let Some(stack) = &mut self.stack {
+            meta.injected.extend_from_slice(stack.injected_events());
+            meta.stall_ns = stack.take_accrued_stall_ns();
+        }
+        let (set_overlay, overlay) = if self.fault.is_some() && self.overlay_dirty {
+            self.overlay_dirty = false;
+            (true, self.fault.as_ref().unwrap().overlay().cloned())
+        } else {
+            (false, None)
+        };
+        // depth-1 rendezvous: the previous epoch must land before this
+        // one is handed over
+        self.drain_one(tracker, report)?;
+        self.send(AnalyzeReq { reads, writes, set_overlay, overlay })?;
+        self.in_flight = Some(meta);
+        if self.lock_step() {
+            self.drain_one(tracker, report)?;
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+
+    fn finish(
+        &mut self,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        self.drain_one(tracker, report)?;
+        let wall_ns = self.started.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+        report.pipeline_depth = if self.lock_step() { 0 } else { PIPELINE_DEPTH as u64 };
+        report.analyze_busy_ns = self.analyze_busy_ns as f64;
+        report.pump_busy_ns = wall_ns.saturating_sub(self.wait_ns) as f64;
+        report.overlap_frac = if self.analyze_busy_ns > 0 {
+            (1.0 - self.wait_ns as f64 / self.analyze_busy_ns as f64).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        Ok(())
+    }
+}
+
+impl Drop for PipelinedAnalyze<'_> {
+    fn drop(&mut self) {
+        // closing the request channel ends the worker loop; dropping
+        // the reply receiver unblocks a worker mid-send after an
+        // abandoned run. Then join — same shutdown order as
+        // `trace::stream`.
+        drop(self.req_tx.take());
+        drop(self.res_rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One group's `[E, P, B]` scratch crossing the rendezvous.
+struct BatchReq {
+    reads: Vec<f32>,
+    writes: Vec<f32>,
+    set_overlay: bool,
+    overlay: Option<FaultOverlay>,
+}
+
+struct BatchRes {
+    out: BatchOutputs,
+    reads: Vec<f32>,
+    writes: Vec<f32>,
+    analyze_ns: u64,
+}
+
+type BatchReply = Result<BatchRes, String>;
+
+fn spawn_batch_worker(
+    mut model: Box<dyn BatchTimingModel + Send>,
+    bin_width: f32,
+    bytes_per_ev: f32,
+) -> std::io::Result<(SyncSender<BatchReq>, Receiver<BatchReply>, JoinHandle<()>)> {
+    let (req_tx, req_rx) = sync_channel::<BatchReq>(PIPELINE_DEPTH);
+    let (res_tx, res_rx) = sync_channel::<BatchReply>(PIPELINE_DEPTH);
+    let handle = std::thread::Builder::new().name("cxlms-analyze".into()).spawn(move || {
+        while let Ok(req) = req_rx.recv() {
+            let BatchReq { reads, writes, set_overlay, overlay } = req;
+            if set_overlay {
+                model.set_fault_overlay(overlay.as_ref());
+            }
+            let t0 = Instant::now();
+            let out = model.analyze_batch(&reads, &writes, bin_width, bytes_per_ev);
+            let analyze_ns = t0.elapsed().as_nanos() as u64;
+            let reply = match out {
+                Ok(out) => Ok(BatchRes { out, reads, writes, analyze_ns }),
+                Err(e) => Err(format!("{e:#}")),
+            };
+            if res_tx.send(reply).is_err() {
+                return;
+            }
+        }
+    })?;
+    Ok((req_tx, res_rx, handle))
+}
+
+/// Pipelined grouped-analyze strategy: `BatchedFlush` with the
+/// `analyze_batch` call on the worker behind a depth-1 rendezvous, so
+/// the pump fills group G+1 while the worker analyzes group G (the
+/// worker still shards its E-epoch loop across `--analyzer-threads`).
+/// Phase-2 lateness with a live stack stays the serial batched
+/// driver's documented ≤ group−1 bound, because a stack with members
+/// forces lock-step draining exactly as in [`PipelinedAnalyze`] — the
+/// overlap case is the empty/no-stack one, where phase-2 defers
+/// harmlessly. The revision-edge early flush (one group = one overlay)
+/// carries over unchanged, with the in-flight group drained on the
+/// edge as well.
+pub struct PipelinedBatchFlush<'p> {
+    req_tx: Option<SyncSender<BatchReq>>,
+    res_rx: Option<Receiver<BatchReply>>,
+    handle: Option<JoinHandle<()>>,
+    pub stack: Option<&'p mut PolicyStack>,
+    /// Fault schedule; drivers guarantee a stack is installed whenever
+    /// this is set.
+    pub fault: Option<&'p mut FaultState>,
+    bytes_per_ev: f32,
+    keep_epoch_records: bool,
+    /// Epoch counter for the fault schedule (0-based).
+    epoch: u64,
+    /// Snapshot of the overlay the *pending* group's epochs ran under
+    /// (see `BatchedFlush::group_overlay`).
+    group_overlay: Option<FaultOverlay>,
+    overlay_dirty: bool,
+    pending: Vec<PendingEpoch>,
+    /// Recycled `PendingEpoch`s (see `BatchedFlush::spare`).
+    spare: Vec<PendingEpoch>,
+    /// Metadata of the group whose analysis is in flight (empty =
+    /// nothing in flight).
+    in_flight: Vec<PendingEpoch>,
+    /// The second `[E, P, B]` scratch pair of the double buffer.
+    spare_scratch: Option<(Vec<f32>, Vec<f32>)>,
+    policy_bins: Option<EpochBins>,
+    // model shapes, captured before the model moved to the worker
+    batch: usize,
+    pools: usize,
+    switches: usize,
+    nbins: usize,
+    epoch_ns: f64,
+    started: Option<Instant>,
+    wait_ns: u64,
+    analyze_busy_ns: u64,
+}
+
+impl<'p> PipelinedBatchFlush<'p> {
+    pub fn new(
+        model: Box<dyn BatchTimingModel + Send>,
+        bytes_per_ev: f32,
+        keep_epoch_records: bool,
+        bin_width: f32,
+        epoch_ns: f64,
+    ) -> anyhow::Result<PipelinedBatchFlush<'p>> {
+        let (batch, pools, switches, nbins) =
+            (model.batch(), model.pools(), model.switches(), model.nbins());
+        let (req_tx, res_rx, handle) = spawn_batch_worker(model, bin_width, bytes_per_ev)?;
+        Ok(PipelinedBatchFlush {
+            req_tx: Some(req_tx),
+            res_rx: Some(res_rx),
+            handle: Some(handle),
+            stack: None,
+            fault: None,
+            bytes_per_ev,
+            keep_epoch_records,
+            epoch: 0,
+            group_overlay: None,
+            overlay_dirty: true,
+            pending: Vec::with_capacity(batch),
+            spare: Vec::with_capacity(batch),
+            in_flight: Vec::with_capacity(batch),
+            spare_scratch: None,
+            policy_bins: None,
+            batch,
+            pools,
+            switches,
+            nbins,
+            epoch_ns,
+            started: None,
+            wait_ns: 0,
+            analyze_busy_ns: 0,
+        })
+    }
+
+    fn lock_step(&self) -> bool {
+        self.stack.as_ref().is_some_and(|s| !s.is_empty())
+    }
+
+    fn send(&mut self, req: BatchReq) -> anyhow::Result<()> {
+        self.req_tx
+            .as_ref()
+            .expect("pipeline request channel alive until drop")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("pipelined analysis worker exited unexpectedly"))
+    }
+
+    /// Receive the in-flight group's outputs and run each epoch's
+    /// pump-side tail (phase-2 + report push, in epoch order).
+    fn drain_group(
+        &mut self,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        if self.in_flight.is_empty() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let reply = self
+            .res_rx
+            .as_ref()
+            .expect("pipeline reply channel alive until drop")
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pipelined analysis worker exited unexpectedly"))?;
+        self.wait_ns += t0.elapsed().as_nanos() as u64;
+        let res = reply.map_err(|e| anyhow::anyhow!("pipelined analyze failed: {e}"))?;
+        self.analyze_busy_ns += res.analyze_ns;
+        let (p, s) = (self.pools, self.switches);
+        let filled = self.in_flight.len();
+        for i in 0..filled {
+            let one = res.out.epoch(i, p, s);
+            let ep = &self.in_flight[i];
+            let mig_ns = if let Some(stack) = &mut self.stack {
+                let bins = self
+                    .policy_bins
+                    .get_or_insert_with(|| EpochBins::new(p, self.nbins, self.epoch_ns));
+                bins.reads.copy_from_slice(&ep.reads);
+                bins.writes.copy_from_slice(&ep.writes);
+                bins.total_events = ep.events;
+                stack.set_injected_events(&ep.injected);
+                stack.credit_accrued_stall_ns(ep.phase1_stall_ns);
+                stack.after_analysis(bins, &one, tracker, self.bytes_per_ev)
+            } else {
+                0.0
+            };
+            report.push_epoch(ep.native_ns, &one, mig_ns, ep.events, self.keep_epoch_records);
+        }
+        self.spare.append(&mut self.in_flight);
+        self.spare_scratch = Some((res.reads, res.writes));
+        Ok(())
+    }
+
+    /// Pack the pending group into scratch and hand it to the worker
+    /// (draining the previous group first — the rendezvous is depth
+    /// 1).
+    fn flush_group(
+        &mut self,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        self.drain_group(tracker, report)?;
+        let (e, p, b) = (self.batch, self.pools, self.nbins);
+        let (mut reads, mut writes) = self.spare_scratch.take().unwrap_or_default();
+        reads.clear();
+        reads.resize(e * p * b, 0.0);
+        writes.clear();
+        writes.resize(e * p * b, 0.0);
+        for (i, ep) in self.pending.iter().enumerate() {
+            reads[i * p * b..i * p * b + ep.reads.len()].copy_from_slice(&ep.reads);
+            writes[i * p * b..i * p * b + ep.writes.len()].copy_from_slice(&ep.writes);
+        }
+        let (set_overlay, overlay) = if self.fault.is_some() && self.overlay_dirty {
+            self.overlay_dirty = false;
+            (true, self.group_overlay.clone())
+        } else {
+            (false, None)
+        };
+        self.send(BatchReq { reads, writes, set_overlay, overlay })?;
+        // `in_flight` is empty after the drain above; swap keeps both
+        // Vecs' capacity alive
+        std::mem::swap(&mut self.pending, &mut self.in_flight);
+        if self.lock_step() {
+            self.drain_group(tracker, report)?;
+        }
+        Ok(())
+    }
+}
+
+impl EpochFlush for PipelinedBatchFlush<'_> {
+    fn on_epoch(
+        &mut self,
+        bins: &mut EpochBins,
+        native_ns: f64,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        if self.fault.is_some() {
+            let changed = {
+                let fault = self.fault.as_mut().unwrap();
+                if let Some(stack) = &mut self.stack {
+                    fault_epoch_barrier(fault, stack, tracker, self.epoch, self.bytes_per_ev)?
+                } else {
+                    fault.epoch_begin(self.epoch)
+                }
+            };
+            // park the barrier's failover stall across the early flush
+            // (`BatchedFlush` rule: it belongs to THIS epoch)
+            let barrier_stall = match &mut self.stack {
+                Some(stack) => stack.take_accrued_stall_ns(),
+                None => 0.0,
+            };
+            if changed {
+                // overlay edge: everything parked or in flight ran
+                // under the old overlay — land all of it first
+                if self.pending.is_empty() {
+                    self.drain_group(tracker, report)?;
+                } else {
+                    self.flush_group(tracker, report)?;
+                    self.drain_group(tracker, report)?;
+                }
+                self.group_overlay = self.fault.as_ref().unwrap().overlay().cloned();
+                self.overlay_dirty = true;
+            }
+            if let Some(stack) = &mut self.stack {
+                stack.credit_accrued_stall_ns(barrier_stall);
+            }
+        }
+        // phase 1 on the live bins, before they are parked
+        if let Some(stack) = &mut self.stack {
+            stack.before_analysis(bins, tracker, self.bytes_per_ev);
+        }
+        if let Some(fault) = &mut self.fault {
+            fault.retry_delay_ns +=
+                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
+        }
+        let mut ep = self.spare.pop().unwrap_or_else(|| PendingEpoch {
+            reads: Vec::with_capacity(bins.reads.len()),
+            writes: Vec::with_capacity(bins.writes.len()),
+            native_ns: 0.0,
+            events: 0,
+            injected: Vec::new(),
+            phase1_stall_ns: 0.0,
+        });
+        ep.reads.clear();
+        ep.reads.extend_from_slice(&bins.reads);
+        ep.writes.clear();
+        ep.writes.extend_from_slice(&bins.writes);
+        ep.native_ns = native_ns;
+        ep.events = bins.total_events;
+        ep.injected.clear();
+        ep.phase1_stall_ns = 0.0;
+        if let Some(stack) = &mut self.stack {
+            ep.injected.extend_from_slice(stack.injected_events());
+            ep.phase1_stall_ns = stack.take_accrued_stall_ns();
+        }
+        self.pending.push(ep);
+        debug_assert!(
+            self.pending.len() <= self.batch,
+            "pending group overflow: {} > {}",
+            self.pending.len(),
+            self.batch
+        );
+        if self.pending.len() == self.batch {
+            self.flush_group(tracker, report)?;
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+
+    fn finish(
+        &mut self,
+        tracker: &mut AllocTracker,
+        report: &mut SimReport,
+    ) -> anyhow::Result<()> {
+        self.flush_group(tracker, report)?;
+        self.drain_group(tracker, report)?;
+        let wall_ns = self.started.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+        report.pipeline_depth = if self.lock_step() { 0 } else { PIPELINE_DEPTH as u64 };
+        report.analyze_busy_ns = self.analyze_busy_ns as f64;
+        report.pump_busy_ns = wall_ns.saturating_sub(self.wait_ns) as f64;
+        report.overlap_frac = if self.analyze_busy_ns > 0 {
+            (1.0 - self.wait_ns as f64 / self.analyze_busy_ns as f64).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        Ok(())
+    }
+}
+
+impl Drop for PipelinedBatchFlush<'_> {
+    fn drop(&mut self) {
+        drop(self.req_tx.take());
+        drop(self.res_rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

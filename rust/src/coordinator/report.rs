@@ -102,6 +102,24 @@ pub struct SimReport {
     /// With a policy stack installed, phase-2 hooks ran up to E−1
     /// epochs late.
     pub batch_group: u64,
+    /// Pipelined-epoch observability (`--pipeline`,
+    /// `coordinator::pipeline`). `pipeline_depth` is the number of
+    /// epochs (or batch groups) the pump was allowed to keep in flight
+    /// behind the analysis worker: `1` for an overlapped run, `0` for
+    /// a serial run — and for a pipelined run whose policy stack has
+    /// members, which drains the rendezvous in lock step to keep
+    /// phase-2 in its exact serial position (bit-identity beats
+    /// overlap there; see the module docs). `pump_busy_ns` is pipeline
+    /// wall-clock minus time the pump spent blocked on the rendezvous,
+    /// `analyze_busy_ns` is the worker's summed analyze time, and
+    /// `overlap_frac` = 1 − wait/analyze (clamped to [0,1]): the
+    /// fraction of analyzer time hidden behind the pump. None of these
+    /// enter bit-identity comparisons — like `wall_s`, they observe
+    /// the run, they are not part of the simulation result.
+    pub pipeline_depth: u64,
+    pub pump_busy_ns: f64,
+    pub analyze_busy_ns: f64,
+    pub overlap_frac: f64,
     /// Policy engine (empty without an installed stack): per-policy
     /// outcomes plus the migration cost model's conservation counters
     /// — every migrated byte becomes read traffic on the source pool
@@ -157,6 +175,10 @@ impl SimReport {
             analyzer_threads_used: 0,
             scan_kernel: String::new(),
             batch_group: 0,
+            pipeline_depth: 0,
+            pump_busy_ns: 0.0,
+            analyze_busy_ns: 0.0,
+            overlap_frac: 0.0,
             policies: Vec::new(),
             migrations: 0,
             migrated_bytes: 0,
@@ -371,6 +393,16 @@ impl SimReport {
             self.bins_staged,
             self.bins_bulk_flushes
         ));
+        if self.analyze_busy_ns > 0.0 {
+            s.push_str(&format!(
+                "  pipeline: depth {}, pump busy {:.3} ms, analyze busy {:.3} ms, \
+                 {:.0}% of analysis hidden behind the pump\n",
+                self.pipeline_depth,
+                self.pump_busy_ns / 1e6,
+                self.analyze_busy_ns / 1e6,
+                self.overlap_frac * 100.0
+            ));
+        }
         s.push_str(&format!("  tool wall-clock {:.3} s\n", self.wall_s));
         s
     }
@@ -427,6 +459,10 @@ impl SimReport {
             ("analyzer_threads_used", json::num(self.analyzer_threads_used as f64)),
             ("scan_kernel", json::s(&self.scan_kernel)),
             ("batch_group", json::num(self.batch_group as f64)),
+            ("pipeline_depth", json::num(self.pipeline_depth as f64)),
+            ("pump_busy_ms", json::num(self.pump_busy_ns / 1e6)),
+            ("analyze_busy_ms", json::num(self.analyze_busy_ns / 1e6)),
+            ("overlap_frac", json::num(self.overlap_frac)),
             (
                 "pool_read_misses",
                 json::arr_f64(&self.pool_read_misses.iter().map(|x| *x as f64).collect::<Vec<_>>()),

@@ -73,7 +73,7 @@
 //! and every reduction of that work happens on one thread in a fixed
 //! order — which is why reports are bit-identical for any thread
 //! count (asserted in `tests/pipeline_equivalence.rs` and re-run by
-//! CI's determinism matrix at 1/2/8 workers):
+//! CI's determinism matrix at 1/2/8 workers, serial and pipelined):
 //!
 //! * **Sharded batched analyzer** (`runtime::native::
 //!   NativeBatchAnalyzer`, used by `coordinator::run_batched` and
@@ -95,10 +95,34 @@
 //!   epoch barrier then merges bins, delivers coherence, analyzes,
 //!   and runs policy phases on the coordinator thread in host order,
 //!   which pins the result for any worker count.
+//! * **Pipelined epoch execution** (`SimConfig::pipeline` /
+//!   `--pipeline`, `coordinator::pipeline`): the epoch *boundary* is
+//!   split across two threads. The pump thread fills epoch N+1's
+//!   `EpochBins` while a dedicated analysis worker runs the timing
+//!   model over epoch N's frozen bins; the handoff is a depth-1
+//!   rendezvous over a bounded `sync_channel`, and drained bins are
+//!   recycled back to the pump, so exactly two bin buffers exist
+//!   (double buffering, not a queue). Determinism comes from the
+//!   handoff contract, not from luck: bins freeze before send, the
+//!   worker computes a pure function of them, and results merge into
+//!   the report on the pump thread in epoch order. When a non-empty
+//!   `PolicyStack` is installed the pipeline runs **lock-step** (send
+//!   then immediately drain, reported `pipeline_depth = 0`) because
+//!   phase-2 policy hooks mutate the tracker that the *next* epoch's
+//!   pump reads — overlap there would change which epoch a migration
+//!   lands in. Fault runs drain early at every overlay-revision edge
+//!   so one in-flight analysis never spans two overlays. The worker
+//!   owns the analyzer for its lifetime, which is why `--pipeline`
+//!   requires the (Send) `native` backend — PJRT client handles are
+//!   thread-local. Reports stay bit-identical to serial for every
+//!   `--analyzer-threads` / `--batch-group` / `--scan-kernel` knob,
+//!   and grow `pipeline_depth`, `pump_busy_ns`, `analyze_busy_ns`,
+//!   and `overlap_frac` so the hiding is observable.
 //! * **Everything else is single-threaded by design** — the epoch
 //!   driver's event pump is a sequential accounting loop (virtual
-//!   time is inherently serial), and policy stacks always run on the
-//!   driving thread.
+//!   time is inherently serial: event K+1's cache walk depends on
+//!   event K's), and policy stacks always run on the pump thread,
+//!   between epochs, in stack order.
 //!
 //! ## The two-phase policy engine
 //!
@@ -194,6 +218,18 @@
 //! error after the run (`workload::TraceWorkload::take_error`), never
 //! as a silently truncated report.
 //!
+//! The chunk directory also enables **sharded replay**
+//! (`replay --shard i/N`): shard i opens the file, seeks straight to
+//! its contiguous chunk range `[i·C/N, (i+1)·C/N)` — O(1), no serial
+//! parse of earlier shards — and replays only those events, emitting
+//! its own `SimReport`. Shards partition the directory exactly, so
+//! per-shard `accesses` / `alloc_events` sum to the full-replay
+//! totals (asserted in `tests/pipeline_equivalence.rs` and a CI
+//! smoke); cache and tracker state reset per shard, so miss counts
+//! are legitimately not additive. Sharding needs the v2 directory: a
+//! v1 or JSONL trace gets a structured "re-record as v2" error, and
+//! an out-of-range `i/N` is rejected up front.
+//!
 //! ## Hot path anatomy
 //!
 //! One `Access` event costs, in order: the cache walk
@@ -201,6 +237,18 @@
 //! (MRU hit in the common case) plus a staged bin delta, and the
 //! epoch-boundary check. Everything else — the bulk scatter, the
 //! analyzer call, policy hooks — is amortized per batch or per epoch.
+//!
+//! The per-*epoch* cost splits into pump work (event accounting into
+//! `EpochBins`) and analysis work (the queueing scans over the frozen
+//! `[P, B]` histograms). Serially those alternate on one thread;
+//! `--pipeline` overlaps them, so epoch wall-clock approaches
+//! max(pump, analyze) instead of pump + analyze — the same shape as
+//! the streaming decode-ahead, one layer up, and the two compose: a
+//! pipelined streaming replay runs decode → pump → analyze three
+//! threads deep. `benches/hotpath.rs` `pipeline_overlap` measures
+//! both regimes (pump-heavy: long epochs, analysis is the small
+//! fraction; analyze-heavy: short epochs, analysis dominates) and
+//! reports the hidden fraction via `overlap_frac`.
 //!
 //! Inside the analyzer, the last serial structure was the two queueing
 //! recurrences `q_i = max(q_{i-1} + d_i, 0)` — a loop-carried max per
@@ -227,7 +275,8 @@
 //! baseline (per-event pump vs batched, `pool_of_btree` vs fast path,
 //! `record` vs `record_bulk`, scalar vs fused batch analyze, `exact`
 //! vs `blocked` scan kernels, group-16 vs group-256 batched replay,
-//! 1-thread vs pooled multihost) and writes `BENCH_hotpath.json` so
+//! 1-thread vs pooled multihost, serial vs pipelined epoch
+//! execution) and writes `BENCH_hotpath.json` so
 //! the perf trajectory is tracked across PRs (CI uploads it per run,
 //! in `HOTPATH_SMOKE` mode, and `tools/bench_gate.py` fails >25%
 //! regressions against `rust/BENCH_baseline.json`).

@@ -67,9 +67,14 @@ fn usage() {
                        --epoch-policy hotness:3,prefetch:0.5,rebalance (policy stack)\n\
                        --mig-stall-ns-per-byte F (modeled migration cost)\n\
                        --batched (run/replay: grouped-analyzer replay driver)\n\
+                       --pipeline (run/replay: analyze epoch N on a worker\n\
+                         thread while the pump fills N+1; reports bit-identical\n\
+                         to serial; native backend only)\n\
                        --trace FILE (run/replay: simulate a recorded trace;\n\
                          v1/v2/JSONL auto-detected, v2 streams with O(chunk)\n\
                          memory + decode-ahead)\n\
+                       --shard i/N (replay: only chunks [i*C/N,(i+1)*C/N) of a\n\
+                         v2 trace, 0-based; per-shard report, O(1) seek)\n\
                        --format v2|v1|jsonl (record: output format, default v2\n\
                          chunked+RLE; .jsonl extension implies jsonl)\n\
                        --chunk-events N (record: events per v2 chunk)\n\
@@ -122,6 +127,7 @@ fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
         cfg.scan_kernel = ScanKernel::parse(&k)
             .ok_or_else(|| anyhow::anyhow!("bad --scan-kernel `{k}` (blocked|exact)"))?;
     }
+    cfg.pipeline = args.bool("pipeline");
     cfg.heat_decay = args.f64("heat-decay", cfg.heat_decay);
     anyhow::ensure!(
         (0.0..=1.0).contains(&cfg.heat_decay),
@@ -464,7 +470,27 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
 /// as early exhaustion, so skipping the check would let a truncated
 /// replay pass for a complete one.
 fn replay_trace(args: &Args, topo: Topology, cfg: SimConfig, path: &str) -> anyhow::Result<()> {
-    let mut replay = TraceWorkload::open(path)?;
+    // --shard i/N: replay only this shard's chunk range of a v2 trace
+    // (the chunk directory makes the first chunk an O(1) seek). The
+    // report is per-shard; pool/cache state resets per shard, so miss
+    // counts are not additive across shards — event counts are.
+    let mut replay = match args.opt_str("shard") {
+        Some(spec) => {
+            let (i, n) = parse_shard(&spec)?;
+            let replay = TraceWorkload::open_shard(path, i, n)?;
+            if let Some(s) = replay.stream() {
+                let (clo, chi) = s.chunk_range();
+                let (elo, ehi) = s.event_range();
+                eprintln!(
+                    "shard {i}/{n}: chunks [{clo}, {chi}) of {}, events [{elo}, {ehi}) of {}",
+                    s.file_chunks(),
+                    s.file_events()
+                );
+            }
+            replay
+        }
+        None => TraceWorkload::open(path)?,
+    };
     // --batched: offline replay through the grouped analyzer, with the
     // E-epoch loop sharded across --analyzer-threads workers — the
     // work-conserving path for long recorded traces (output is
@@ -492,6 +518,25 @@ fn replay_trace(args: &Args, topo: Topology, cfg: SimConfig, path: &str) -> anyh
         }
     }
     Ok(())
+}
+
+/// Parse `--shard i/N` (0-based shard index over N shards).
+fn parse_shard(spec: &str) -> anyhow::Result<(usize, usize)> {
+    let (istr, nstr) = spec
+        .split_once('/')
+        .ok_or_else(|| anyhow::anyhow!("bad --shard `{spec}`: expected i/N, e.g. 0/4"))?;
+    let i: usize = istr.trim().parse().map_err(|_| {
+        anyhow::anyhow!("bad --shard `{spec}`: shard index `{istr}` is not a number")
+    })?;
+    let n: usize = nstr.trim().parse().map_err(|_| {
+        anyhow::anyhow!("bad --shard `{spec}`: shard count `{nstr}` is not a number")
+    })?;
+    anyhow::ensure!(n >= 1, "bad --shard `{spec}`: shard count must be >= 1");
+    anyhow::ensure!(
+        i < n,
+        "bad --shard `{spec}`: shard index {i} out of range for {n} shards (valid: 0..{n})"
+    );
+    Ok((i, n))
 }
 
 fn cmd_topo(args: &Args) -> anyhow::Result<()> {

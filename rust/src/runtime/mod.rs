@@ -63,9 +63,12 @@ impl TimingOutputs {
 
 /// A compiled timing analyzer bound to one topology.
 ///
-/// Not `Send`: the PJRT client handles are thread-local; per-thread
-/// analyzers are the supported concurrency model (each thread builds
-/// its own, sharing the on-disk artifact).
+/// Not `Send` in general: the PJRT client handles are thread-local;
+/// per-thread analyzers are the supported concurrency model (each
+/// thread builds its own, sharing the on-disk artifact). The native
+/// backend is plain data and *is* `Send` — [`make_send_analyzer`] /
+/// [`make_send_batch_analyzer`] hand out `Box<dyn … + Send>` models
+/// for the pipelined analysis worker (`--pipeline`), and reject PJRT.
 pub trait TimingModel {
     fn pools(&self) -> usize;
     fn switches(&self) -> usize;
@@ -268,6 +271,56 @@ pub fn make_batch_analyzer(
         AnalyzerBackend::Pjrt => Err(anyhow::anyhow!(
             "backend `pjrt` requires building with `--features pjrt` (and the `xla` crate); \
              use `--backend native` or rebuild with the feature"
+        )),
+    }
+}
+
+/// [`make_analyzer`], restricted to backends whose models can move to
+/// the pipelined analysis worker thread (`SimConfig::pipeline`). Only
+/// the native backend qualifies — its analyzers are plain tensor data.
+/// PJRT client handles are thread-local, so requesting it here is a
+/// structured error rather than a crash on first use.
+pub fn make_send_analyzer(
+    backend: AnalyzerBackend,
+    tensors: &TopoTensors,
+    nbins: usize,
+    kernel: ScanKernel,
+) -> anyhow::Result<Box<dyn TimingModel + Send>> {
+    match backend {
+        AnalyzerBackend::Native => {
+            Ok(Box::new(native::NativeAnalyzer::with_kernel(tensors, nbins, kernel)))
+        }
+        AnalyzerBackend::Pjrt => Err(anyhow::anyhow!(
+            "--pipeline requires `--backend native`: PJRT client handles are thread-local \
+             and cannot move to the pipelined analysis worker"
+        )),
+    }
+}
+
+/// [`make_batch_analyzer`], restricted to backends whose models can
+/// move to the pipelined analysis worker thread (see
+/// [`make_send_analyzer`]). The worker still shards its E-epoch loop
+/// across `threads` scoped workers per call, exactly like the
+/// non-pipelined batched analyzer.
+pub fn make_send_batch_analyzer(
+    backend: AnalyzerBackend,
+    tensors: &TopoTensors,
+    nbins: usize,
+    threads: usize,
+    kernel: ScanKernel,
+    group: usize,
+) -> anyhow::Result<Box<dyn BatchTimingModel + Send>> {
+    match backend {
+        AnalyzerBackend::Native => Ok(Box::new(native::NativeBatchAnalyzer::with_kernel(
+            tensors,
+            nbins,
+            shapes::resolve_batch(group),
+            threads,
+            kernel,
+        ))),
+        AnalyzerBackend::Pjrt => Err(anyhow::anyhow!(
+            "--pipeline requires `--backend native`: PJRT client handles are thread-local \
+             and cannot move to the pipelined analysis worker"
         )),
     }
 }

@@ -20,6 +20,15 @@
 //! channel, one being decoded). The stream counts decoded
 //! events-in-flight and records the high-water mark, which tests and
 //! the `replay_stream` bench assert against this bound.
+//!
+//! Sharded replay: the v2 chunk directory makes any chunk an O(1)
+//! seek target, so [`TraceStream::open_shard`] replays only chunks
+//! `[i·C/N, (i+1)·C/N)` of a C-chunk trace — shard `i` of `N`,
+//! 0-based. Shards partition the directory exactly (integer-floor
+//! split: every chunk lands in exactly one shard; trailing shards of
+//! an N > C split are legitimately empty). Pool/cache state resets
+//! per shard, so per-shard miss counts are NOT additive — event and
+//! access counts are, which the shard-union tests assert.
 
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
@@ -44,7 +53,9 @@ enum Source {
     Ahead { rx: Option<Receiver<DecodedChunk>>, handle: Option<JoinHandle<()>> },
     /// Inline mode: decode on the consumer thread (bench baseline for
     /// the overlap win, and a fallback if thread spawn ever fails).
-    Inline { file: File, chunks: Vec<ChunkEntry>, next: usize, buf: Vec<u8> },
+    /// `base` is the absolute directory index of `chunks[0]`, so
+    /// error messages name the on-disk chunk even under a shard.
+    Inline { file: File, chunks: Vec<ChunkEntry>, next: usize, base: usize, buf: Vec<u8> },
 }
 
 pub struct TraceStream {
@@ -53,6 +64,13 @@ pub struct TraceStream {
     total_accesses: u64,
     max_chunk_events: u64,
     nchunks: usize,
+    /// Absolute chunk range `[chunk_lo, chunk_lo + nchunks)` this
+    /// stream serves, and the whole-file totals behind it — equal to
+    /// the full directory for an unsharded stream.
+    chunk_lo: usize,
+    file_chunks: usize,
+    event_lo: u64,
+    file_events: u64,
     /// Decoded events of the chunk currently being consumed.
     cur: Vec<WlEvent>,
     pos: usize,
@@ -97,22 +115,72 @@ impl TraceStream {
     /// same events, no overlap; the bench uses it as the baseline that
     /// quantifies the decode-ahead win.
     pub fn open_with(path: &str, decode_ahead: bool) -> Result<TraceStream, String> {
+        TraceStream::open_inner(path, decode_ahead, None)
+    }
+
+    /// Open shard `i` of `n` (0-based): chunks `[i·C/N, (i+1)·C/N)` of
+    /// the directory, seeked to in O(1). Errors on `n == 0` or
+    /// `i >= n`; an empty shard (more shards than chunks) opens fine
+    /// and replays zero events.
+    pub fn open_shard(path: &str, i: usize, n: usize) -> Result<TraceStream, String> {
+        TraceStream::open_inner(path, true, Some((i, n)))
+    }
+
+    /// [`open_shard`](TraceStream::open_shard) with an explicit
+    /// decode-ahead switch (tests cover both source modes).
+    pub fn open_shard_with(
+        path: &str,
+        decode_ahead: bool,
+        i: usize,
+        n: usize,
+    ) -> Result<TraceStream, String> {
+        TraceStream::open_inner(path, decode_ahead, Some((i, n)))
+    }
+
+    fn open_inner(
+        path: &str,
+        decode_ahead: bool,
+        shard: Option<(usize, usize)>,
+    ) -> Result<TraceStream, String> {
         let mut file = File::open(path).map_err(|e| format!("{path}: {e}"))?;
         let idx = V2Index::read(&mut file).map_err(|e| format!("{path}: {e}"))?;
+        let file_chunks = idx.chunks.len();
+        let (chunk_lo, chunk_hi, name) = match shard {
+            Some((_, 0)) => {
+                return Err(format!("{path}: shard count must be >= 1, got N=0"));
+            }
+            Some((i, n)) if i >= n => {
+                return Err(format!(
+                    "{path}: shard index {i} out of range for {n} shards (valid: 0..{n})"
+                ));
+            }
+            Some((i, n)) => {
+                (i * file_chunks / n, (i + 1) * file_chunks / n, format!("stream:{path}[{i}/{n}]"))
+            }
+            None => (0, file_chunks, format!("stream:{path}")),
+        };
+        let shard_chunks: Vec<ChunkEntry> = idx.chunks[chunk_lo..chunk_hi].to_vec();
+        let event_lo: u64 = idx.chunks[..chunk_lo].iter().map(|c| c.events).sum();
+        let total_events: u64 = shard_chunks.iter().map(|c| c.events).sum();
+        // exact for the full file; for a shard the directory doesn't
+        // split accesses from allocs, so the hint is the event count
+        // (an upper bound — callers only use it for sizing)
+        let total_accesses = if shard.is_some() { total_events } else { idx.total_accesses };
+        let max_chunk_events = shard_chunks.iter().map(|c| c.events).max().unwrap_or(0);
         let in_flight = Arc::new(AtomicU64::new(0));
         let peak_in_flight = Arc::new(AtomicU64::new(0));
-        let max_chunk_events = idx.max_chunk_events();
-        let nchunks = idx.chunks.len();
+        let nchunks = shard_chunks.len();
         let src = if decode_ahead {
             let (tx, rx) = sync_channel::<DecodedChunk>(DECODE_AHEAD_DEPTH);
             let counters = (in_flight.clone(), peak_in_flight.clone());
-            let chunks = idx.chunks;
             let handle = std::thread::Builder::new()
                 .name("cxlms-decode".into())
                 .spawn(move || {
                     let mut buf = Vec::new();
-                    for (i, entry) in chunks.iter().enumerate() {
-                        let decoded = read_and_decode(&mut file, entry, i, &mut buf);
+                    for (rel, entry) in shard_chunks.iter().enumerate() {
+                        // absolute directory index in errors, even
+                        // when sharded
+                        let decoded = read_and_decode(&mut file, entry, chunk_lo + rel, &mut buf);
                         let failed = decoded.is_err();
                         if let Ok(evs) = &decoded {
                             note_in_flight(evs.len(), &counters.0, &counters.1);
@@ -127,14 +195,18 @@ impl TraceStream {
                 .map_err(|e| format!("{path}: spawning decode thread: {e}"))?;
             Source::Ahead { rx: Some(rx), handle: Some(handle) }
         } else {
-            Source::Inline { file, chunks: idx.chunks, next: 0, buf: Vec::new() }
+            Source::Inline { file, chunks: shard_chunks, next: 0, base: chunk_lo, buf: Vec::new() }
         };
         Ok(TraceStream {
-            name: format!("stream:{path}"),
-            total_events: idx.total_events,
-            total_accesses: idx.total_accesses,
+            name,
+            total_events,
+            total_accesses,
             max_chunk_events,
             nchunks,
+            chunk_lo,
+            file_chunks,
+            event_lo,
+            file_events: idx.total_events,
             cur: Vec::new(),
             pos: 0,
             src,
@@ -166,14 +238,14 @@ impl TraceStream {
                         return false;
                     }
                 },
-                Source::Inline { file, chunks, next, buf } => {
+                Source::Inline { file, chunks, next, base, buf } => {
                     if *next >= chunks.len() {
                         self.done = true;
                         return false;
                     }
                     let i = *next;
                     *next += 1;
-                    let decoded = read_and_decode(file, &chunks[i], i, buf);
+                    let decoded = read_and_decode(file, &chunks[i], *base + i, buf);
                     if let Ok(evs) = &decoded {
                         note_in_flight(evs.len(), &self.in_flight, &self.peak_in_flight);
                     }
@@ -210,6 +282,27 @@ impl TraceStream {
 
     pub fn chunks(&self) -> usize {
         self.nchunks
+    }
+
+    /// Absolute chunk range `[lo, hi)` this stream serves — the whole
+    /// directory unless sharded.
+    pub fn chunk_range(&self) -> (usize, usize) {
+        (self.chunk_lo, self.chunk_lo + self.nchunks)
+    }
+
+    /// Absolute event range `[lo, hi)` this stream serves.
+    pub fn event_range(&self) -> (u64, u64) {
+        (self.event_lo, self.event_lo + self.total_events)
+    }
+
+    /// Chunk count of the whole on-disk directory.
+    pub fn file_chunks(&self) -> usize {
+        self.file_chunks
+    }
+
+    /// Event count of the whole on-disk trace.
+    pub fn file_events(&self) -> u64 {
+        self.file_events
     }
 
     pub fn max_chunk_events(&self) -> u64 {
@@ -418,6 +511,93 @@ mod tests {
             let mut buf = Vec::new();
             s.next_batch(&mut buf, 10);
             drop(s);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shard_union_covers_every_event_exactly_once() {
+        // 1001 events over 64-event chunks -> 16 chunks; 5 shards
+        // split 16 unevenly (3,3,3,3,4) — the union must still be the
+        // whole trace, in order, with no duplicates
+        let path = temp_path("shard-union");
+        let events = write_trace(&path, 1000, 64);
+        for decode_ahead in [false, true] {
+            let mut got = Vec::new();
+            let mut chunk_cover = 0usize;
+            for i in 0..5 {
+                let mut s =
+                    TraceStream::open_shard_with(path.to_str().unwrap(), decode_ahead, i, 5)
+                        .unwrap();
+                let (lo, hi) = s.chunk_range();
+                assert_eq!(lo, i * s.file_chunks() / 5);
+                assert_eq!(hi, (i + 1) * s.file_chunks() / 5);
+                chunk_cover += hi - lo;
+                let (elo, _) = s.event_range();
+                assert_eq!(elo, got.len() as u64, "shards must tile the event index");
+                let mut buf = Vec::new();
+                while s.next_batch(&mut buf, 4096) {}
+                assert!(s.take_error().is_none());
+                assert_eq!(buf.len() as u64, s.total_events());
+                got.extend(buf);
+            }
+            let s = TraceStream::open(path.to_str().unwrap()).unwrap();
+            assert_eq!(chunk_cover, s.file_chunks());
+            assert_eq!(got.len(), events.len());
+            assert_eq!(got, events, "decode_ahead={decode_ahead}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shard_more_shards_than_chunks_gives_empty_shards() {
+        let path = temp_path("shard-empty");
+        write_trace(&path, 100, 64); // 2 chunks
+        let mut seen = 0u64;
+        for i in 0..8 {
+            let mut s = TraceStream::open_shard(path.to_str().unwrap(), i, 8).unwrap();
+            let mut buf = Vec::new();
+            while s.next_batch(&mut buf, 4096) {}
+            assert!(s.take_error().is_none());
+            assert_eq!(buf.len() as u64, s.total_events());
+            seen += s.total_events();
+        }
+        assert_eq!(seen, 101);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shard_bad_specs_error() {
+        let path = temp_path("shard-bad");
+        write_trace(&path, 100, 64);
+        let p = path.to_str().unwrap();
+        let err = TraceStream::open_shard(p, 0, 0).unwrap_err();
+        assert!(err.contains("N=0"), "{err}");
+        let err = TraceStream::open_shard(p, 4, 4).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(err.contains("valid: 0..4"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shard_decode_errors_name_absolute_chunk() {
+        let path = temp_path("shard-abs");
+        write_trace(&path, 500, 100); // 6 chunks (501 events)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx =
+            super::super::io::V2Index::read(&mut std::io::Cursor::new(&bytes[..])).unwrap();
+        let off = idx.chunks[4].offset as usize;
+        bytes[off] = 9; // invalid tag in chunk 4
+        std::fs::write(&path, &bytes).unwrap();
+        for decode_ahead in [false, true] {
+            // shard 2/3 of 6 chunks = chunks [4, 6): the damage is its
+            // first chunk, and the error must say "chunk 4", not 0
+            let mut s =
+                TraceStream::open_shard_with(path.to_str().unwrap(), decode_ahead, 2, 3).unwrap();
+            let mut buf = Vec::new();
+            while s.next_batch(&mut buf, 4096) {}
+            let err = s.take_error().expect("damage must surface");
+            assert!(err.contains("chunk 4"), "{err}");
         }
         std::fs::remove_file(&path).ok();
     }

@@ -228,6 +228,39 @@ impl TraceWorkload {
         Ok(TraceWorkload::Memory(TraceReplay::new(&format!("replay:{path}"), events)))
     }
 
+    /// Open shard `i` of `n` (0-based) for sharded replay. Only the
+    /// CXLTRC v2 format can shard — its chunk directory makes the
+    /// shard's first chunk an O(1) seek; v1 and JSONL traces have no
+    /// directory, so asking for a shard of one is a structured error
+    /// rather than a silent full replay.
+    pub fn open_shard(path: &str, i: usize, n: usize) -> anyhow::Result<TraceWorkload> {
+        use crate::trace::io::{self as tio, TraceFormat};
+        let mut head = [0u8; 8];
+        let len = {
+            use std::io::Read;
+            let mut f =
+                std::fs::File::open(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            f.read(&mut head).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        };
+        match tio::detect_format(&head[..len]) {
+            TraceFormat::V2 => {
+                let s = crate::trace::stream::TraceStream::open_shard(path, i, n)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                Ok(TraceWorkload::Stream(s))
+            }
+            TraceFormat::V1 => anyhow::bail!(
+                "{path}: sharded replay (--shard) requires a CXLTRC v2 trace; this is a \
+                 v1 trace with no chunk directory to seek — re-record it, or convert by \
+                 replaying through `record`"
+            ),
+            TraceFormat::Jsonl => anyhow::bail!(
+                "{path}: sharded replay (--shard) requires a CXLTRC v2 trace; this is a \
+                 JSONL trace with no chunk directory to seek — re-record it with the \
+                 binary format"
+            ),
+        }
+    }
+
     /// A decode error surfaced mid-stream (streaming replay ends early
     /// on a damaged chunk); callers must check this after the run.
     pub fn take_error(&mut self) -> Option<String> {

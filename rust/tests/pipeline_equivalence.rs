@@ -9,7 +9,14 @@
 //! * `run_batched` (grouped analyzer flush) on the native backend must
 //!   match the sequential coordinator, including the prefetcher traffic
 //!   and epoch-policy invocation the pre-`EpochDriver` implementation
-//!   silently dropped.
+//!   silently dropped;
+//! * pipelined epoch execution (`SimConfig::pipeline` — analysis on a
+//!   dedicated worker behind a depth-1 rendezvous) must match the
+//!   serial drivers bit-for-bit for every thread/group/kernel knob,
+//!   with live policy stacks, under fault plans, and composed with
+//!   streaming v2 replay. CI's determinism matrix re-runs this whole
+//!   file with `CXLMEMSIM_TEST_PIPELINE=1`, which flips every
+//!   `fast_cfg()`-based test onto the pipelined drivers.
 
 use cxlmemsim::coordinator::{run_batched, run_batched_with, Coordinator, SimConfig, SimReport};
 use cxlmemsim::multihost::{run_shared_threads, run_shared_threads_with, MultiHostReport};
@@ -34,6 +41,13 @@ fn fast_cfg() -> SimConfig {
         .and_then(|v| cxlmemsim::runtime::ScanKernel::parse(&v))
     {
         cfg.scan_kernel = k;
+    }
+    // CI's determinism matrix also runs a pipelined leg: with
+    // `CXLMEMSIM_TEST_PIPELINE=1`, every test built on this config
+    // drives the pipelined flushes — all the bit-exactness claims in
+    // this file must hold there unchanged
+    if std::env::var("CXLMEMSIM_TEST_PIPELINE").as_deref() == Ok("1") {
+        cfg.pipeline = true;
     }
     cfg
 }
@@ -1105,4 +1119,229 @@ fn streaming_replay_memory_bounded_by_chunks_in_flight() {
     assert!(peak <= bound, "peak {peak} exceeds O(chunk) bound {bound}");
     assert_eq!(st.decoded_in_flight(), 0, "all chunks retired after drain");
     std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------- pipelined epoch execution
+
+use cxlmemsim::workload::TraceWorkload;
+
+/// Pipelined sequential runs (analysis on the dedicated worker, pump
+/// one epoch ahead) must match the serial coordinator bit-for-bit, and
+/// the observability fields must say what actually happened: depth 1
+/// with no stack, analysis time measured.
+#[test]
+fn pipelined_sequential_bit_identical_to_serial() {
+    for wl in ["zipfian", "stream"] {
+        let run = |pipeline: bool| {
+            let mut cfg = fast_cfg();
+            cfg.pipeline = pipeline;
+            let mut sim = Coordinator::new(builtin::fig2(), cfg).unwrap();
+            sim.run_workload(wl).unwrap()
+        };
+        let serial = run(false);
+        let piped = run(true);
+        assert_reports_identical(&serial, &piped, &format!("{wl}: pipelined sequential"));
+        assert_eq!(piped.pipeline_depth, 1, "{wl}: no stack -> overlapped");
+        assert!(piped.analyze_busy_ns > 0.0, "{wl}: worker must have analyzed");
+        assert!(piped.pump_busy_ns > 0.0);
+        assert!((0.0..=1.0).contains(&piped.overlap_frac));
+    }
+}
+
+/// Pipelined batched replay must match serial batched replay for every
+/// knob combination: analyzer threads (CI-pinned 1/2/8) x native group
+/// size x both scan kernels (via `fast_cfg`'s kernel knob).
+#[test]
+fn pipelined_batched_bit_identical_across_knobs() {
+    use cxlmemsim::runtime::ScanKernel;
+    let base_cfg = fast_cfg();
+    for kernel in [ScanKernel::Exact, ScanKernel::Blocked] {
+        for threads in knob_threads(&[1, 2, 8]) {
+            for group in [1usize, 256] {
+                let run = |pipeline: bool| {
+                    let mut cfg = base_cfg.clone();
+                    cfg.scan_kernel = kernel;
+                    cfg.analyzer_threads = threads;
+                    cfg.batch_group = group;
+                    cfg.pipeline = pipeline;
+                    let mut wl = workload::by_name("mcf_like", cfg.scale, cfg.seed).unwrap();
+                    run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap()
+                };
+                let serial = run(false);
+                let piped = run(true);
+                let ctx = format!("batched {kernel:?} threads={threads} group={group}");
+                assert_reports_identical(&serial, &piped, &ctx);
+                assert_eq!(piped.pipeline_depth, 1, "{ctx}: no stack -> overlapped");
+                assert_eq!(piped.batch_group, serial.batch_group, "{ctx}");
+                assert_eq!(
+                    piped.analyzer_threads_used, serial.analyzer_threads_used,
+                    "{ctx}"
+                );
+            }
+        }
+    }
+}
+
+/// `--pipeline` composed with streaming v2 replay: decode -> pump ->
+/// analyze, three threads deep, still bit-identical to the in-memory
+/// serial baseline.
+#[test]
+fn pipelined_streaming_replay_bit_identical() {
+    let cfg = fast_cfg();
+    let (path, events) = record_v2_tempfile("zipfian", cfg.scale, 11, 384, "pipelined");
+    let p = path.to_str().unwrap();
+
+    let mut mem = TraceReplay::new("replay:mem", events);
+    let baseline = run_batched(&builtin::fig2(), &cfg, &mut mem).unwrap();
+    assert!(baseline.epochs_run > 0);
+
+    let mut pcfg = cfg.clone();
+    pcfg.pipeline = true;
+    let mut st = TraceStream::open(p).unwrap();
+    let rep = run_batched(&builtin::fig2(), &pcfg, &mut st).unwrap();
+    assert!(st.take_error().is_none());
+    assert_reports_identical(&baseline, &rep, "pipelined streaming replay");
+    assert_eq!(rep.pipeline_depth, 1);
+    std::fs::remove_file(&path).ok();
+}
+
+/// A live policy stack under the pipeline: phase-2 feeds back into
+/// event routing, so the pipeline drains lock-step — bit-identical by
+/// construction, depth reported as 0, and the stack's migrations run
+/// exactly as they do serially. Both drivers.
+#[test]
+fn pipelined_with_live_policy_stack_locks_step() {
+    let mk_cfg = |pipeline: bool| {
+        let mut cfg = fast_cfg();
+        cfg.scale = 0.004;
+        cfg.epoch_policy = Some(PolicySpec::parse("hotness:1,prefetch:0.5").unwrap());
+        cfg.mig_stall_ns_per_byte = 0.25;
+        cfg.pipeline = pipeline;
+        cfg
+    };
+    // sequential driver
+    let run_seq = |pipeline: bool| {
+        let mut sim = Coordinator::new(builtin::fig2(), mk_cfg(pipeline)).unwrap();
+        sim.run_workload("zipfian").unwrap()
+    };
+    let serial = run_seq(false);
+    let piped = run_seq(true);
+    assert!(piped.migrations > 0, "stack must migrate under the pipeline");
+    assert_reports_identical(&serial, &piped, "policy stack: sequential");
+    assert_eq!(piped.pipeline_depth, 0, "live stack -> lock-step");
+    // batched driver
+    let run_bat = |pipeline: bool| {
+        let cfg = mk_cfg(pipeline);
+        let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap()
+    };
+    let bserial = run_bat(false);
+    let bpiped = run_bat(true);
+    assert!(bpiped.migrations > 0);
+    assert_reports_identical(&bserial, &bpiped, "policy stack: batched");
+    assert_eq!(bpiped.pipeline_depth, 0, "live stack -> lock-step");
+}
+
+/// The PR-6 chaos fault plan under the pipeline: overlay revision
+/// edges drain the in-flight analysis, so no analysis ever spans two
+/// overlays — fault stats and reports stay bit-identical on both
+/// drivers. (The auto-installed failover stack is empty, so the
+/// overlapped mode stays engaged.)
+#[test]
+fn pipelined_fault_run_bit_identical() {
+    let cfg = fast_cfg();
+    let epochs = baseline_epochs(&cfg);
+    let mk = |pipeline: bool| {
+        let mut fcfg = cfg.clone();
+        fcfg.faults = Some(chaos_plan(epochs));
+        fcfg.pipeline = pipeline;
+        fcfg
+    };
+    // sequential driver
+    let run_seq = |pipeline: bool| {
+        let mut sim = Coordinator::new(builtin::fig2(), mk(pipeline)).unwrap();
+        sim.run_workload("zipfian").unwrap()
+    };
+    let serial = run_seq(false);
+    let piped = run_seq(true);
+    assert_eq!(piped.faults_injected, 4, "whole chaos plan must fire");
+    assert!(piped.failover_migrated_bytes > 0);
+    assert_reports_identical(&serial, &piped, "faults: pipelined sequential");
+    assert_fault_stats_identical(&serial, &piped, "faults: pipelined sequential");
+    // batched driver
+    let run_bat = |pipeline: bool| {
+        let fcfg = mk(pipeline);
+        let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap()
+    };
+    let bserial = run_bat(false);
+    let bpiped = run_bat(true);
+    assert_reports_identical(&bserial, &bpiped, "faults: pipelined batched");
+    assert_fault_stats_identical(&bserial, &bpiped, "faults: pipelined batched");
+}
+
+// ---------------------------------------------------- sharded replay
+
+/// Shards partition the trace: replaying every shard `i/N` must cover
+/// each event exactly once — per-shard `total_accesses`/`alloc_events`
+/// sum to the full-replay counts (miss counts are NOT additive: the
+/// cache resets per shard). Also holds when N exceeds the chunk count
+/// (trailing shards are legitimately empty).
+#[test]
+fn shard_union_event_counts_sum_to_full_replay() {
+    let cfg = fast_cfg();
+    let (path, _events) = record_v2_tempfile("zipfian", cfg.scale, 13, 256, "shard");
+    let p = path.to_str().unwrap();
+
+    let mut full = TraceWorkload::open(p).unwrap();
+    let full_rep = run_batched(&builtin::fig2(), &cfg, &mut full).unwrap();
+    assert!(full.take_error().is_none());
+
+    for n in [4usize, 64] {
+        let (mut accesses, mut allocs) = (0u64, 0u64);
+        let mut empty_shards = 0;
+        for i in 0..n {
+            let mut shard = TraceWorkload::open_shard(p, i, n).unwrap();
+            let rep = run_batched(&builtin::fig2(), &cfg, &mut shard).unwrap();
+            assert!(shard.take_error().is_none(), "shard {i}/{n}");
+            if rep.total_accesses == 0 {
+                empty_shards += 1;
+            }
+            accesses += rep.total_accesses;
+            allocs += rep.alloc_events;
+        }
+        assert_eq!(accesses, full_rep.total_accesses, "{n} shards: access union");
+        assert_eq!(allocs, full_rep.alloc_events, "{n} shards: alloc union");
+        let chunks = TraceStream::open(p).unwrap().file_chunks();
+        if n > chunks {
+            assert!(empty_shards > 0, "{n} shards over {chunks} chunks must leave empties");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Sharding a directory-less trace is a structured error, not a silent
+/// full replay.
+#[test]
+fn shard_of_non_v2_trace_is_structured_error() {
+    let dir = std::env::temp_dir();
+    let v1 = dir.join(format!("cxlms-eq-{}-shard-v1.bin", std::process::id()));
+    let mut wl = workload::by_name("zipfian", 0.002, 3).unwrap();
+    let mut events = Vec::new();
+    while wl.next_batch(&mut events, 4096) {}
+    let mut f = std::fs::File::create(&v1).unwrap();
+    trace_io::write_binary(&mut f, &events).unwrap();
+    drop(f);
+    let err = TraceWorkload::open_shard(v1.to_str().unwrap(), 0, 4).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("requires a CXLTRC v2"), "{msg}");
+    assert!(msg.contains("v1"), "{msg}");
+    std::fs::remove_file(&v1).ok();
+
+    let jl = dir.join(format!("cxlms-eq-{}-shard.jsonl", std::process::id()));
+    std::fs::write(&jl, "{\"a\":1}\n").unwrap();
+    let err = TraceWorkload::open_shard(jl.to_str().unwrap(), 0, 4).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("JSONL"), "{msg}");
+    std::fs::remove_file(&jl).ok();
 }

@@ -18,6 +18,7 @@ Gated entries / metrics (the hot paths named in ROADMAP):
   multihost_epoch  pooled_epochs_per_s        higher is better
   policy_epoch     empty_stack_ns_per_epoch   lower is better
   policy_epoch     full_stack_ns_per_epoch    lower is better
+  pipeline_overlap pipelined_epochs_per_s     higher is better
 
 A missing gated entry or metric in either file is a hard failure:
 schema drift must be an explicit decision (refresh the baseline with
@@ -53,6 +54,7 @@ GATES = {
         ("empty_stack_ns_per_epoch", "lower"),
         ("full_stack_ns_per_epoch", "lower"),
     ],
+    "pipeline_overlap": [("pipelined_epochs_per_s", "higher")],
 }
 
 
@@ -85,6 +87,32 @@ def main():
     args = ap.parse_args()
 
     if args.update:
+        # never blind-copy: a fresh file missing a gated entry (bench
+        # renamed, run truncated, wrong file) would silently disarm
+        # that gate for every future run
+        try:
+            fresh = load_entries(args.fresh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"refusing to update baseline: {args.fresh}: {e}", file=sys.stderr)
+            return 1
+        bad = []
+        for name, metrics in GATES.items():
+            for metric, _direction in metrics:
+                if name not in fresh or metric not in fresh[name]:
+                    bad.append(f"{name}.{metric}: missing from fresh results")
+                    continue
+                try:
+                    value = float(fresh[name][metric])
+                except (TypeError, ValueError):
+                    bad.append(f"{name}.{metric}: not a number ({fresh[name][metric]!r})")
+                    continue
+                if value <= 0:
+                    bad.append(f"{name}.{metric}: non-positive value ({value})")
+        if bad:
+            print("refusing to update baseline: fresh file fails gate schema:", file=sys.stderr)
+            for msg in bad:
+                print(f"  - {msg}", file=sys.stderr)
+            return 1
         shutil.copyfile(args.fresh, args.baseline)
         print(f"baseline updated: {args.fresh} -> {args.baseline}")
         return 0
