@@ -24,7 +24,11 @@
 //!     overlap fraction;
 //!   * end-to-end coordinator accesses/s, per-event vs batched pump —
 //!     the headline number for the paper's "orders of magnitude faster
-//!     than cycle-accurate" claim.
+//!     than cycle-accurate" claim;
+//!   * sweep-engine cells/s: a 2×2 comparison grid end-to-end through
+//!     the work-stealing cell pool (expansion, runs, sanitize,
+//!     artifact assembly), with its delay-ordering invariant asserted
+//!     on every iteration.
 //!
 //! Also emits machine-readable `BENCH_hotpath.json` so future PRs can
 //! track the perf trajectory.
@@ -909,6 +913,53 @@ fn main() {
             ("accesses", json::num(batched.total_accesses as f64)),
         ]),
     ));
+
+    // --- sweep engine: grid cells/s through the worker pool -------
+    // end-to-end cost of one comparison cell (spec expansion + cell
+    // run + sanitize + artifact assembly), 2x2 grid on 2 workers
+    {
+        let spec = SweepSpec::parse(concat!(
+            "name = \"bench\"\n",
+            "workers = 2\n",
+            "[grid]\n",
+            "topo = [\"direct\", \"fig2\"]\n",
+            "workload = [\"stream\", \"zipfian\"]\n",
+            "[config]\n",
+            "scale = 0.002\n",
+            "cache_scale = 64\n",
+            "epoch_ms = 0.1\n",
+            "max_epochs = 20\n",
+            "[baseline]\n",
+            "topo = \"direct\"\n",
+            "[[invariant]]\n",
+            "metric = \"delay_ms\"\n",
+            "axis = \"topo\"\n",
+            "order = [\"direct\", \"fig2\"]\n",
+            "rel_tol = 0.02\n",
+        ))
+        .unwrap();
+        let cells = 4.0;
+        let opts = SweepOptions::default();
+        let s = bench("sweep 2x2", 1, it(5), || {
+            let out = cxlmemsim::sweep::run_spec(&spec, &opts);
+            assert_eq!(out.cell_failures, 0, "bench sweep cell failed");
+            assert_eq!(out.invariant_failures, 0, "bench sweep ordering broke");
+        });
+        let cells_per_s = cells / s.median_s;
+        println!(
+            "sweep[2x2 grid  ]: {:>10}/cell, {:.1} cells/s",
+            fmt_secs(s.median_s / cells),
+            cells_per_s
+        );
+        results.push((
+            "sweep",
+            json::obj(vec![
+                ("cells", json::num(cells)),
+                ("workers", json::num(2.0)),
+                ("cells_per_s", json::num(cells_per_s)),
+            ]),
+        ));
+    }
 
     #[cfg(feature = "pjrt")]
     {

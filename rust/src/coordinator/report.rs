@@ -477,6 +477,128 @@ impl SimReport {
     }
 }
 
+/// Report keys summed when merging per-shard replay reports
+/// (`replay --shard i/N`, driven by the sweep engine). Shards
+/// partition a v2 trace's chunk directory exactly, so event counters
+/// and accumulated times are additive; cache and pool state reset per
+/// shard, so the *rates* (`sim_slowdown`) are recomputed by
+/// [`finalize_shard_merge`] instead of averaged.
+pub const SHARD_SUM_KEYS: &[&str] = &[
+    "native_ms",
+    "simulated_ms",
+    "delay_ms",
+    "lat_delay_ms",
+    "cong_delay_ms",
+    "bwd_delay_ms",
+    "mig_delay_ms",
+    "migrations",
+    "migrated_bytes",
+    "mig_injected_read_bytes",
+    "mig_injected_write_bytes",
+    "mig_pending_bytes",
+    "faults_injected",
+    "retry_delay_ms",
+    "throttled_epochs",
+    "failover_migrated_bytes",
+    "epochs",
+    "accesses",
+    "llc_misses",
+    "writebacks",
+    "alloc_events",
+    "prefetches",
+    "pool_mru_hits",
+    "pool_lookup_misses",
+    "pool_index_rebuilds",
+    "bins_staged",
+    "bins_bulk_flushes",
+];
+
+/// Keys where the merged value is the per-shard maximum (offline pools
+/// are the same set in every shard; thread/pipeline observability
+/// reports the largest fan-out any shard used).
+pub const SHARD_MAX_KEYS: &[&str] = &["pools_offline", "analyzer_threads_used", "pipeline_depth"];
+
+/// Merge one shard's `SimReport::to_json` object into an accumulator
+/// (itself a shard report, typically shard 0's). Scalar counters sum
+/// ([`SHARD_SUM_KEYS`]) or max ([`SHARD_MAX_KEYS`]), the per-pool miss
+/// arrays add elementwise, and `policies` rows merge by policy name.
+/// Identity keys (`workload`, `topology`, `backend`, `scan_kernel`,
+/// `batch_group`) keep the accumulator's value. Call
+/// [`finalize_shard_merge`] once after the last shard.
+pub fn merge_shard_json(acc: &mut Json, shard: &Json) {
+    let m = match acc {
+        Json::Obj(m) => m,
+        _ => return,
+    };
+    for key in SHARD_SUM_KEYS {
+        if let Some(add) = shard.get(key).and_then(|v| v.as_f64()) {
+            let slot = m.entry(key.to_string()).or_insert(Json::Num(0.0));
+            if let Json::Num(n) = slot {
+                *n += add;
+            }
+        }
+    }
+    for key in SHARD_MAX_KEYS {
+        if let Some(other) = shard.get(key).and_then(|v| v.as_f64()) {
+            let slot = m.entry(key.to_string()).or_insert(Json::Num(0.0));
+            if let Json::Num(n) = slot {
+                *n = n.max(other);
+            }
+        }
+    }
+    for key in ["pool_read_misses", "pool_write_misses"] {
+        if let Some(add) = shard.get(key).and_then(|v| v.as_arr()).map(|a| a.to_vec()) {
+            if let Some(Json::Arr(dst)) = m.get_mut(key) {
+                for (i, v) in add.iter().enumerate() {
+                    let inc = v.as_f64().unwrap_or(0.0);
+                    if i < dst.len() {
+                        if let Json::Num(n) = &mut dst[i] {
+                            *n += inc;
+                        }
+                    } else {
+                        dst.push(Json::Num(inc));
+                    }
+                }
+            }
+        }
+    }
+    if let Some(rows) = shard.get("policies").and_then(|v| v.as_arr()).map(|a| a.to_vec()) {
+        if let Some(Json::Arr(dst)) = m.get_mut("policies") {
+            for row in rows {
+                let name = row.get("name").and_then(|v| v.as_str()).unwrap_or("");
+                let existing = dst
+                    .iter_mut()
+                    .find(|r| r.get("name").and_then(|v| v.as_str()) == Some(name));
+                match existing {
+                    Some(Json::Obj(r)) => {
+                        for k in ["migrations", "moved_bytes"] {
+                            let inc = row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                            if let Some(Json::Num(n)) = r.get_mut(k) {
+                                *n += inc;
+                            }
+                        }
+                    }
+                    _ => dst.push(row),
+                }
+            }
+        }
+    }
+}
+
+/// Recompute the derived fields of a merged shard report and stamp the
+/// shard count: `sim_slowdown` = merged simulated / merged native (per
+/// shard it was a per-shard ratio, which does not average), plus a
+/// `shards` key so artifacts show how the cell was produced.
+pub fn finalize_shard_merge(acc: &mut Json, shards: usize) {
+    let native = acc.get("native_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let sim = acc.get("simulated_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let slowdown = if native == 0.0 { 1.0 } else { sim / native };
+    if let Json::Obj(m) = acc {
+        m.insert("sim_slowdown".to_string(), Json::Num(slowdown));
+        m.insert("shards".to_string(), Json::Num(shards as f64));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -555,5 +677,63 @@ mod tests {
         r.wall_s = 4.0;
         assert!((r.overhead_vs(1.0) - 4.0).abs() < 1e-12);
         assert!(r.overhead_vs(0.0).is_infinite());
+    }
+
+    fn shard_report(native: f64, delay: f64, misses: u64) -> Json {
+        let mut r = SimReport::new("trace", "fig2", "native", 2);
+        r.push_epoch(native, &outputs(delay), 0.0, 10, false);
+        for _ in 0..misses {
+            r.record_miss(1, false);
+        }
+        r.total_accesses = misses * 4;
+        r.to_json()
+    }
+
+    #[test]
+    fn shard_merge_sums_counters_and_recomputes_slowdown() {
+        let mut acc = shard_report(1000.0, 500.0, 3);
+        let other = shard_report(1000.0, 100.0, 5);
+        merge_shard_json(&mut acc, &other);
+        finalize_shard_merge(&mut acc, 2);
+        assert_eq!(acc.get("llc_misses").unwrap().as_f64(), Some(8.0));
+        assert_eq!(acc.get("accesses").unwrap().as_f64(), Some(32.0));
+        assert_eq!(acc.get("epochs").unwrap().as_f64(), Some(2.0));
+        assert_eq!(acc.get("shards").unwrap().as_f64(), Some(2.0));
+        // merged slowdown is total/total, not a mean of ratios:
+        // (2000 + 600) / 2000 = 1.3
+        let sd = acc.get("sim_slowdown").unwrap().as_f64().unwrap();
+        assert!((sd - 1.3).abs() < 1e-9, "slowdown {sd}");
+        // per-pool arrays add elementwise
+        let reads = acc.get("pool_read_misses").unwrap().as_arr().unwrap();
+        assert_eq!(reads[1].as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn shard_merge_combines_policy_rows_by_name() {
+        let mk = |name: &str, migs: f64| {
+            let mut r = SimReport::new("t", "t", "native", 1);
+            r.policies.push(PolicyReport {
+                name: name.to_string(),
+                migrations: migs as u64,
+                moved_bytes: 100,
+            });
+            r.to_json()
+        };
+        let mut acc = mk("hotness", 2.0);
+        merge_shard_json(&mut acc, &mk("hotness", 3.0));
+        merge_shard_json(&mut acc, &mk("rebalance", 1.0));
+        let rows = acc.get("policies").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("migrations").unwrap().as_f64(), Some(5.0));
+        assert_eq!(rows[0].get("moved_bytes").unwrap().as_f64(), Some(200.0));
+        assert_eq!(rows[1].get("name").unwrap().as_str(), Some("rebalance"));
+    }
+
+    #[test]
+    fn shard_finalize_zero_native_is_unit_slowdown() {
+        let mut acc = SimReport::new("t", "t", "native", 1).to_json();
+        finalize_shard_merge(&mut acc, 4);
+        assert_eq!(acc.get("sim_slowdown").unwrap().as_f64(), Some(1.0));
+        assert_eq!(acc.get("shards").unwrap().as_f64(), Some(4.0));
     }
 }

@@ -281,6 +281,25 @@
 //! in `HOTPATH_SMOKE` mode, and `tools/bench_gate.py` fails >25%
 //! regressions against `rust/BENCH_baseline.json`).
 //!
+//! ## Scenario sweeps & paper-figure reproduction
+//!
+//! `cxlmemsim sweep examples/specs/table1.toml` expands a TOML
+//! (topology × policy × workload × knob) grid into cells (`sweep`
+//! module), executes them across a work-stealing cell pool — the
+//! multihost queue pattern, one level up — and writes ONE JSON
+//! comparison artifact: per-cell reports (stripped of wall-clock /
+//! scheduling keys, so artifacts are byte-identical for any worker
+//! count), deltas vs a named `[baseline]` cell, and `[[invariant]]`
+//! verdicts. The invariants are the coarse accuracy harness: they pin
+//! relative delay *orderings* across topologies (direct ≤ fig2 ≤
+//! deep, …) rather than absolute nanoseconds, and a violated ordering
+//! fails the sweep — a regression suite for the simulation model.
+//! The same engine drives the multi-process `replay --shard i/N`
+//! fan-out (`shards = N` cells launch N child processes and merge
+//! their reports through `coordinator::report::merge_shard_json`) and
+//! multihost cells. Committed specs under `examples/specs/` map the
+//! paper's figures to one command each (`docs/REPRODUCING.md`).
+//!
 //! Quickstart (see `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -303,6 +322,7 @@ pub mod metrics;
 pub mod multihost;
 pub mod policy;
 pub mod runtime;
+pub mod sweep;
 pub mod topology;
 pub mod trace;
 pub mod util;
@@ -315,6 +335,7 @@ pub mod prelude {
     pub use crate::fault::{FaultError, FaultOverlay, FaultPlan, FaultState};
     pub use crate::policy::{EpochPolicy, PolicySpec, PolicyStack};
     pub use crate::runtime::{AnalyzerBackend, ScanKernel, TimingInputs, TimingOutputs};
+    pub use crate::sweep::{SweepError, SweepOptions, SweepSpec};
     pub use crate::topology::{builtin, Topology, TopoTensors};
     pub use crate::trace::stream::TraceStream;
     pub use crate::workload::{

@@ -3,7 +3,11 @@
 //! Subcommands:
 //!   run        simulate one workload on a topology
 //!   table1     reproduce the paper's Table 1 (native / detailed / CXLMemSim)
-//!   sweep      run workloads across topologies (procurement study)
+//!   sweep      scenario sweep engine: `sweep spec.toml` expands a TOML
+//!              grid into cells, runs them on a worker pool, and writes
+//!              one JSON comparison artifact with baseline deltas and
+//!              accuracy-harness ordering checks (docs/REPRODUCING.md);
+//!              without a spec, the legacy inline topo × workload table
 //!   multihost  N hosts sharing pools (congestion/coherency study)
 //!   record     capture a workload's event trace to a file
 //!   replay     simulate a recorded trace
@@ -61,6 +65,9 @@ fn usage() {
     eprintln!(
         "cxlmemsim — a pure-software simulated CXL.mem\n\
          usage: cxlmemsim <run|table1|sweep|multihost|record|replay|topo|list> [--flags]\n\
+         sweep: cxlmemsim sweep <spec.toml> [--out FILE] [--sweep-workers N]\n\
+                (grid spec -> one JSON comparison artifact; see\n\
+                 examples/specs/ and docs/REPRODUCING.md)\n\
          common flags: --workload W --topo T --policy P --backend pjrt|native\n\
                        --epoch-ms F --scale F --seed N --sample-period N\n\
                        --cache-scale N --max-epochs N --event-batch N --json\n\
@@ -259,7 +266,16 @@ fn cmd_table1(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `sweep <spec.toml>`: the scenario sweep engine (`cxlmemsim::sweep`)
+/// — expand the spec's grid, run every cell across a work-stealing
+/// worker pool, write ONE JSON comparison artifact, and exit non-zero
+/// if any cell failed or any accuracy-harness invariant was violated.
+/// Without a positional spec the legacy inline topo × workload
+/// markdown table is kept (`--workloads` / `--topos`).
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    if let Some(spec_path) = args.positional.first() {
+        return cmd_sweep_spec(args, spec_path);
+    }
     let cfg = config_from(args)?;
     let wls: Vec<String> = args
         .str("workloads", "mmap_read,mcf_like,wrf_like")
@@ -304,6 +320,53 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             ],
             &rows
         )
+    );
+    Ok(())
+}
+
+fn cmd_sweep_spec(args: &Args, spec_path: &str) -> anyhow::Result<()> {
+    use cxlmemsim::sweep::{self, SweepOptions, SweepSpec};
+    let spec = SweepSpec::from_file(spec_path)?;
+    let opts = SweepOptions {
+        // --sweep-workers N overrides the spec's `workers` (0 = one
+        // per core); the artifact is byte-identical for any value
+        workers: args.usize("sweep-workers", 0),
+        // shard fan-out re-launches this binary as `replay --shard`
+        shard_exe: std::env::current_exe().ok(),
+    };
+    let outcome = sweep::run_spec(&spec, &opts);
+    let out = args.str("out", &format!("SWEEP_{}.json", spec.name));
+    std::fs::write(&out, outcome.artifact.to_string() + "\n")
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    println!(
+        "sweep `{}`: {} cells ({} failed), {} invariants ({} violated)",
+        spec.name,
+        outcome.cells,
+        outcome.cell_failures,
+        spec.invariants.len(),
+        outcome.invariant_failures
+    );
+    if let Some(invs) = outcome.artifact.get("invariants").and_then(|v| v.as_arr()) {
+        for inv in invs {
+            let metric = inv.get("metric").and_then(|v| v.as_str()).unwrap_or("?");
+            let axis = inv.get("axis").and_then(|v| v.as_str()).unwrap_or("?");
+            let holds = inv.get("holds") == Some(&cxlmemsim::util::json::Json::Bool(true));
+            let checked = inv.get("checked").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            println!(
+                "  invariant {metric} along {axis}: {} ({checked:.0} orderings checked)",
+                if holds { "holds" } else { "VIOLATED" }
+            );
+        }
+    }
+    println!("artifact: {out}");
+    // the accuracy harness is a regression suite: violations (and
+    // failed cells) fail the run *after* the artifact is on disk
+    anyhow::ensure!(
+        outcome.cell_failures == 0 && outcome.invariant_failures == 0,
+        "sweep `{}`: {} cell failures, {} invariant violations (see {out})",
+        spec.name,
+        outcome.cell_failures,
+        outcome.invariant_failures
     );
     Ok(())
 }
@@ -559,6 +622,10 @@ fn cmd_list() -> anyhow::Result<()> {
          reference, bit-identical)"
     );
     println!("prefetch:   nextline, stride (hardware prefetcher models, --prefetch)");
+    println!(
+        "sweep axes: {} (grid/config keys in a sweep spec; see docs/REPRODUCING.md)",
+        cxlmemsim::sweep::KNOWN_SETTINGS.join(", ")
+    );
     println!("epoch-policy stack (--epoch-policy name[:arg],... — two-phase engine):");
     for p in POLICY_REGISTRY {
         println!(

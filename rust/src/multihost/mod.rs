@@ -123,6 +123,66 @@ pub struct MultiHostReport {
 }
 
 impl MultiHostReport {
+    /// Machine-readable export (ms units, mirroring
+    /// `SimReport::to_json`). Shares the `delay_ms` / `cong_delay_ms` /
+    /// `bwd_delay_ms` key names with the single-host report so sweep
+    /// invariants and baseline deltas work across drivers; the
+    /// scheduling observability keys (`host_workers`, `steals`,
+    /// `shard_rebalances`, `worker_busy_fracs`, `wall_s`) are the ones
+    /// the sweep artifact strips as non-deterministic.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{self, Json};
+        json::obj(vec![
+            (
+                "hosts",
+                Json::Arr(
+                    self.hosts
+                        .iter()
+                        .map(|h| {
+                            json::obj(vec![
+                                ("workload", json::s(&h.workload)),
+                                ("native_ms", json::num(h.native_ns / 1e6)),
+                                ("simulated_ms", json::num(h.simulated_ns / 1e6)),
+                                ("delay_ms", json::num(h.delay_ns / 1e6)),
+                                ("misses", json::num(h.misses as f64)),
+                                ("migrations", json::num(h.migrations as f64)),
+                                ("migrated_bytes", json::num(h.migrated_bytes as f64)),
+                                (
+                                    "failover_migrated_bytes",
+                                    json::num(h.failover_migrated_bytes as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("epochs", json::num(self.epochs as f64)),
+            ("total_delay_ms", json::num(self.total_delay_ns / 1e6)),
+            ("delay_ms", json::num(self.total_delay_ns / 1e6)),
+            ("cong_delay_ms", json::num(self.cong_delay_ns / 1e6)),
+            ("bwd_delay_ms", json::num(self.bwd_delay_ns / 1e6)),
+            ("invalidations", json::num(self.invalidations as f64)),
+            ("coherence_msgs", json::num(self.coherence_msgs as f64)),
+            ("migrations", json::num(self.migrations as f64)),
+            ("migrated_bytes", json::num(self.migrated_bytes as f64)),
+            ("mig_stall_ms", json::num(self.mig_stall_ns / 1e6)),
+            ("mean_slowdown", json::num(self.mean_slowdown())),
+            ("faults_injected", json::num(self.faults_injected as f64)),
+            ("retry_delay_ms", json::num(self.retry_delay_ns / 1e6)),
+            ("throttled_epochs", json::num(self.throttled_epochs as f64)),
+            ("pools_offline", json::num(self.pools_offline as f64)),
+            (
+                "failover_migrated_bytes",
+                json::num(self.failover_migrated_bytes as f64),
+            ),
+            ("host_workers", json::num(self.host_workers as f64)),
+            ("steals", json::num(self.steals as f64)),
+            ("shard_rebalances", json::num(self.shard_rebalances as f64)),
+            ("worker_busy_fracs", json::arr_f64(&self.worker_busy_fracs)),
+            ("wall_s", json::num(self.wall_s)),
+        ])
+    }
+
     /// Mean per-host simulated slowdown.
     pub fn mean_slowdown(&self) -> f64 {
         if self.hosts.is_empty() {
@@ -973,6 +1033,22 @@ mod tests {
         }
         assert!(rep.shard_rebalances <= rep.epochs);
         assert!(rep.steals <= rep.epochs * rep.hosts.len() as u64);
+    }
+
+    #[test]
+    fn to_json_mirrors_single_host_report_keys() {
+        let rep = run_shared_threads(&builtin::fig2(), &cfg(), mk_hosts(2), 1).unwrap();
+        let j = rep.to_json();
+        assert_eq!(j.get("hosts").unwrap().as_arr().unwrap().len(), 2);
+        // `delay_ms` aliases `total_delay_ms` so cross-driver sweep
+        // invariants can use one metric name
+        assert_eq!(
+            j.get("delay_ms").unwrap().as_f64(),
+            j.get("total_delay_ms").unwrap().as_f64()
+        );
+        assert!(j.get("mean_slowdown").unwrap().as_f64().unwrap() > 1.0);
+        let h0 = j.get("hosts").unwrap().idx(0).unwrap();
+        assert!(h0.get("misses").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! Sweep comparison artifact: sanitized per-cell reports, deltas vs
+//! the baseline cell, and accuracy-harness invariant verdicts, as one
+//! JSON document.
+//!
+//! Byte-identity across sweep worker counts is a hard requirement
+//! (tested in `tests/sweep.rs`, re-run by CI): the artifact is
+//! assembled single-threaded in canonical cell order, `Json::Obj`
+//! serializes with sorted keys, and [`sanitize`] strips every report
+//! key that observes the run rather than the simulation (wall-clock,
+//! pipeline busy times, worker scheduling counters).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+use super::spec::{coords_id, Invariant, SweepSpec};
+
+/// Report keys that depend on wall-clock or scheduling, not on the
+/// simulation result. Stripped from every cell report so artifacts
+/// are bit-identical across worker counts and machines.
+pub const NONDET_KEYS: &[&str] = &[
+    "wall_s",
+    "pump_busy_ms",
+    "analyze_busy_ms",
+    "overlap_frac",
+    "host_workers",
+    "steals",
+    "shard_rebalances",
+    "worker_busy_fracs",
+];
+
+/// Remove non-deterministic observability keys, recursively (the
+/// multihost report nests per-host objects).
+pub fn sanitize(j: &mut Json) {
+    match j {
+        Json::Obj(m) => {
+            for k in NONDET_KEYS {
+                m.remove(*k);
+            }
+            for v in m.values_mut() {
+                sanitize(v);
+            }
+        }
+        Json::Arr(v) => {
+            for x in v.iter_mut() {
+                sanitize(x);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Metrics compared against the baseline cell. Whichever of these both
+/// reports carry produce a `<key>` entry in the cell's `delta` object
+/// (cell − baseline), so the same machinery serves `run`/`batched`
+/// cells (SimReport keys) and `multihost` cells (MultiHostReport keys).
+pub const DELTA_KEYS: &[&str] = &[
+    "native_ms",
+    "simulated_ms",
+    "delay_ms",
+    "lat_delay_ms",
+    "cong_delay_ms",
+    "bwd_delay_ms",
+    "mig_delay_ms",
+    "sim_slowdown",
+    "total_delay_ms",
+    "mean_slowdown",
+];
+
+/// Build the delta object for one cell vs its baseline report.
+pub fn deltas(cell: &Json, base: &Json, base_id: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("vs".to_string(), json::s(base_id));
+    for key in DELTA_KEYS {
+        if let (Some(a), Some(b)) = (
+            cell.get(key).and_then(|v| v.as_f64()),
+            base.get(key).and_then(|v| v.as_f64()),
+        ) {
+            m.insert(key.to_string(), json::num(a - b));
+        }
+    }
+    Json::Obj(m)
+}
+
+/// Numeric metric lookup in a cell report.
+pub fn metric_of(report: &Json, metric: &str) -> Option<f64> {
+    report.get(metric).and_then(|v| v.as_f64())
+}
+
+/// Evaluate one invariant over the successful cell reports.
+///
+/// For every combination of the non-swept, non-pinned axes, walk the
+/// `order` sequence pairwise and require the metric to be
+/// non-decreasing (strictly increasing with `strict`; `rel_tol`
+/// loosens the non-strict bound to `next >= prev * (1 - rel_tol)`).
+/// Combinations whose cells errored (or lack the metric) are counted
+/// as `missing`, not as violations — cell failures already fail the
+/// sweep on their own.
+pub fn eval_invariant(
+    spec: &SweepSpec,
+    inv: &Invariant,
+    reports: &BTreeMap<String, &Json>,
+) -> (Json, bool) {
+    // the context axes: everything except the swept axis, with pinned
+    // axes fixed to their single pin value
+    let free: Vec<(&str, &[String])> = spec
+        .axes
+        .iter()
+        .filter(|a| a.name != inv.axis && !inv.pins.contains_key(&a.name))
+        .map(|a| (a.name.as_str(), a.values.as_slice()))
+        .collect();
+    let mut checked = 0usize;
+    let mut missing = 0usize;
+    let mut violations = Vec::new();
+
+    let mut odometer = vec![0usize; free.len()];
+    let combos: usize = free.iter().map(|(_, vs)| vs.len()).product();
+    for _ in 0..combos {
+        let mut ctx: BTreeMap<String, String> = inv.pins.clone();
+        for ((axis, values), &i) in free.iter().zip(&odometer) {
+            ctx.insert(axis.to_string(), values[i].clone());
+        }
+        for pair in inv.order.windows(2) {
+            let mut a = ctx.clone();
+            a.insert(inv.axis.clone(), pair[0].clone());
+            let mut b = ctx.clone();
+            b.insert(inv.axis.clone(), pair[1].clone());
+            let ma = reports.get(&coords_id(&a)).and_then(|r| metric_of(r, &inv.metric));
+            let mb = reports.get(&coords_id(&b)).and_then(|r| metric_of(r, &inv.metric));
+            let (ma, mb) = match (ma, mb) {
+                (Some(x), Some(y)) => (x, y),
+                _ => {
+                    missing += 1;
+                    continue;
+                }
+            };
+            checked += 1;
+            let holds = if inv.strict {
+                mb > ma
+            } else {
+                mb >= ma * (1.0 - inv.rel_tol) - 1e-9
+            };
+            if !holds {
+                violations.push(json::obj(vec![
+                    ("at", json::s(&coords_id(&ctx))),
+                    ("from", json::s(&pair[0])),
+                    ("from_value", json::num(ma)),
+                    ("to", json::s(&pair[1])),
+                    ("to_value", json::num(mb)),
+                ]));
+            }
+        }
+        for pos in (0..odometer.len()).rev() {
+            odometer[pos] += 1;
+            if odometer[pos] < free[pos].1.len() {
+                break;
+            }
+            odometer[pos] = 0;
+        }
+    }
+
+    let holds = violations.is_empty();
+    let pins = Json::Obj(inv.pins.iter().map(|(k, v)| (k.clone(), json::s(v))).collect());
+    let out = json::obj(vec![
+        ("metric", json::s(&inv.metric)),
+        ("axis", json::s(&inv.axis)),
+        ("order", Json::Arr(inv.order.iter().map(|v| json::s(v)).collect())),
+        ("strict", Json::Bool(inv.strict)),
+        ("rel_tol", json::num(inv.rel_tol)),
+        ("pins", pins),
+        ("checked", json::num(checked as f64)),
+        ("missing", json::num(missing as f64)),
+        ("violations", Json::Arr(violations)),
+        ("holds", Json::Bool(holds)),
+    ]);
+    (out, holds)
+}
+
+/// The spec's own description inside the artifact (grid, base config,
+/// baseline pins) so an artifact is self-describing.
+pub fn spec_json(spec: &SweepSpec) -> (Json, Json, Json) {
+    let grid = Json::Obj(
+        spec.axes
+            .iter()
+            .map(|a| (a.name.clone(), Json::Arr(a.values.iter().map(|v| json::s(v)).collect())))
+            .collect(),
+    );
+    let config = Json::Obj(spec.base.iter().map(|(k, v)| (k.clone(), json::s(v))).collect());
+    let baseline = if spec.baseline.is_empty() {
+        Json::Null
+    } else {
+        Json::Obj(spec.baseline.iter().map(|(k, v)| (k.clone(), json::s(v))).collect())
+    };
+    (grid, config, baseline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::SweepSpec;
+
+    #[test]
+    fn sanitize_strips_nondeterministic_keys_recursively() {
+        let mut j = Json::parse(
+            r#"{"wall_s": 1.5, "delay_ms": 3, "hosts": [{"wall_s": 2, "misses": 7}],
+                "steals": 4, "worker_busy_fracs": [0.5]}"#,
+        )
+        .unwrap();
+        sanitize(&mut j);
+        assert_eq!(j.to_string(), r#"{"delay_ms":3,"hosts":[{"misses":7}]}"#);
+    }
+
+    #[test]
+    fn deltas_cover_shared_keys_only() {
+        let cell = Json::parse(r#"{"delay_ms": 5, "sim_slowdown": 1.5, "accesses": 10}"#).unwrap();
+        let base = Json::parse(r#"{"delay_ms": 2, "sim_slowdown": 1.2, "accesses": 10}"#).unwrap();
+        let d = deltas(&cell, &base, "topo=direct");
+        assert_eq!(d.get("vs").unwrap().as_str(), Some("topo=direct"));
+        assert_eq!(d.get("delay_ms").unwrap().as_f64(), Some(3.0));
+        assert!(d.get("accesses").is_none(), "accesses is not a delta key");
+        assert!(d.get("total_delay_ms").is_none(), "absent in both reports");
+    }
+
+    fn two_axis_spec() -> SweepSpec {
+        SweepSpec::parse(
+            "name = \"x\"\n[grid]\ntopo = [\"direct\", \"fig2\"]\n\
+             workload = [\"stream\", \"zipfian\"]\n\
+             [[invariant]]\nmetric = \"delay_ms\"\naxis = \"topo\"\n\
+             order = [\"direct\", \"fig2\"]\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn invariant_checks_every_free_combination() {
+        let spec = two_axis_spec();
+        let r1 = Json::parse(r#"{"delay_ms": 1}"#).unwrap();
+        let r2 = Json::parse(r#"{"delay_ms": 2}"#).unwrap();
+        let mut reports: BTreeMap<String, &Json> = BTreeMap::new();
+        reports.insert("topo=direct,workload=stream".into(), &r1);
+        reports.insert("topo=fig2,workload=stream".into(), &r2);
+        reports.insert("topo=direct,workload=zipfian".into(), &r1);
+        reports.insert("topo=fig2,workload=zipfian".into(), &r2);
+        let (out, holds) = eval_invariant(&spec, &spec.invariants[0], &reports);
+        assert!(holds);
+        assert_eq!(out.get("checked").unwrap().as_f64(), Some(2.0));
+        assert_eq!(out.get("missing").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn invariant_violation_names_the_pair() {
+        let spec = two_axis_spec();
+        let lo = Json::parse(r#"{"delay_ms": 1}"#).unwrap();
+        let hi = Json::parse(r#"{"delay_ms": 2}"#).unwrap();
+        let mut reports: BTreeMap<String, &Json> = BTreeMap::new();
+        // zipfian ordering inverted => exactly one violation
+        reports.insert("topo=direct,workload=stream".into(), &lo);
+        reports.insert("topo=fig2,workload=stream".into(), &hi);
+        reports.insert("topo=direct,workload=zipfian".into(), &hi);
+        reports.insert("topo=fig2,workload=zipfian".into(), &lo);
+        let (out, holds) = eval_invariant(&spec, &spec.invariants[0], &reports);
+        assert!(!holds);
+        let v = out.get("violations").unwrap().idx(0).unwrap();
+        assert_eq!(v.get("at").unwrap().as_str(), Some("workload=zipfian"));
+        assert_eq!(v.get("from").unwrap().as_str(), Some("direct"));
+        assert_eq!(v.get("to_value").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn missing_cells_count_as_missing_not_violations() {
+        let spec = two_axis_spec();
+        let r = Json::parse(r#"{"delay_ms": 1}"#).unwrap();
+        let mut reports: BTreeMap<String, &Json> = BTreeMap::new();
+        reports.insert("topo=direct,workload=stream".into(), &r);
+        let (out, holds) = eval_invariant(&spec, &spec.invariants[0], &reports);
+        assert!(holds, "missing data is not a violation");
+        assert_eq!(out.get("missing").unwrap().as_f64(), Some(2.0));
+        assert_eq!(out.get("checked").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn rel_tol_permits_near_equal_metrics() {
+        let spec = SweepSpec::parse(
+            "name = \"x\"\n[grid]\nepoch_ms = [0.5, 1.0]\n\
+             [[invariant]]\nmetric = \"simulated_ms\"\naxis = \"epoch_ms\"\n\
+             order = [1.0, 0.5]\nrel_tol = 0.1\n",
+        )
+        .unwrap();
+        let a = Json::parse(r#"{"simulated_ms": 100}"#).unwrap();
+        let b = Json::parse(r#"{"simulated_ms": 95}"#).unwrap();
+        let mut reports: BTreeMap<String, &Json> = BTreeMap::new();
+        reports.insert("epoch_ms=1".into(), &a);
+        reports.insert("epoch_ms=0.5".into(), &b);
+        let (_, holds) = eval_invariant(&spec, &spec.invariants[0], &reports);
+        assert!(holds, "95 >= 100 * 0.9 must pass at rel_tol 0.1");
+    }
+}

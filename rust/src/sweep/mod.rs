@@ -1,0 +1,337 @@
+//! `cxlmemsim sweep`: the scenario sweep engine.
+//!
+//! A TOML [`SweepSpec`] expands a (topology × policy × workload ×
+//! knob) grid into cells ([`SweepSpec::expand`]); the engine executes
+//! them across a process-wide work-stealing worker pool (the multihost
+//! queue pattern — workers claim cell indices from a shared atomic
+//! counter until it drains) and assembles ONE machine-readable JSON
+//! comparison artifact: per-cell sanitized reports, deltas vs a named
+//! baseline cell, and accuracy-harness invariant verdicts
+//! (`artifact`).
+//!
+//! Three execution paths per cell, selected by the spec:
+//!
+//! * `driver = "run"` / `"batched"` — the sequential coordinator or
+//!   the grouped-analyzer replay driver, over a synthetic workload or
+//!   a recorded trace (`workload = "trace:FILE"`).
+//! * `shards = N` (trace cells only) — multi-process fan-out: the
+//!   engine launches N `cxlmemsim replay --shard i/N --json` child
+//!   processes (PR 8's leftover driver) and merges the per-shard
+//!   reports through [`crate::coordinator::report::merge_shard_json`];
+//!   without a child executable ([`SweepOptions::shard_exe`] = None,
+//!   e.g. under `cargo test`) the shards run in-process instead,
+//!   producing the same merged report.
+//! * `driver = "multihost"` — `hosts` copies of the workload sharing
+//!   the topology's pools ([`crate::multihost::run_shared_threads`],
+//!   pinned to one host-phase thread per cell so the sweep pool owns
+//!   the parallelism).
+//!
+//! Determinism: cell order is a pure function of the spec, results
+//! land in a per-cell slot, the artifact is assembled single-threaded
+//! in cell order, and every report is stripped of scheduling /
+//! wall-clock observability ([`artifact::sanitize`]) — so the artifact
+//! is byte-identical for any worker count (`tests/sweep.rs`, CI).
+
+pub mod artifact;
+pub mod spec;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::report::{finalize_shard_merge, merge_shard_json};
+use crate::coordinator::{run_batched, Coordinator};
+use crate::multihost;
+use crate::topology::Topology;
+use crate::util::json::{self, Json};
+use crate::workload::{self, TraceWorkload};
+
+pub use spec::{Axis, Cell, CellPlan, Driver, Invariant, SweepError, SweepSpec, KNOWN_SETTINGS};
+
+/// Engine options (everything NOT allowed to affect the artifact).
+#[derive(Debug, Clone, Default)]
+pub struct SweepOptions {
+    /// Worker-pool override: 0 = use the spec's `workers` (which
+    /// itself defaults to one per core).
+    pub workers: usize,
+    /// Executable to launch for `shards = N` fan-out (the CLI passes
+    /// `std::env::current_exe()`). None = run shards in-process.
+    pub shard_exe: Option<std::path::PathBuf>,
+}
+
+/// One sweep's result: the comparison artifact plus the failure
+/// counts the CLI turns into an exit code.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub artifact: Json,
+    pub cells: usize,
+    pub cell_failures: usize,
+    pub invariant_failures: usize,
+}
+
+/// Execute a spec and assemble the comparison artifact.
+pub fn run_spec(spec: &SweepSpec, opts: &SweepOptions) -> SweepOutcome {
+    let cells = spec.expand();
+    let plans: Vec<Result<CellPlan, SweepError>> = cells.iter().map(|c| spec.plan(c)).collect();
+    let results: Vec<Mutex<Option<Result<Json, String>>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let requested = if opts.workers > 0 {
+        opts.workers
+    } else if spec.workers > 0 {
+        spec.workers
+    } else {
+        auto
+    };
+    let workers = requested.clamp(1, cells.len().max(1));
+
+    // ---- work-stealing cell pool (the multihost queue pattern, one
+    // level up): workers claim cell indices by fetch_add until the
+    // queue drains, so a slow cell pins one worker while the rest
+    // absorb the remainder. Each result lands in its cell's slot;
+    // which worker ran a cell cannot change what the cell computes.
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let res = match &plans[i] {
+                    Ok(plan) => run_cell(plan, opts).map_err(|e| format!("{e:#}")),
+                    Err(e) => Err(e.to_string()),
+                };
+                *results[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+
+    // ---- artifact assembly: single-threaded, canonical cell order
+    let mut outcomes: Vec<(String, BTreeMap<String, String>, Result<Json, String>)> =
+        Vec::with_capacity(cells.len());
+    for (cell, slot) in cells.iter().zip(results) {
+        let res = slot
+            .into_inner()
+            .unwrap()
+            .unwrap_or_else(|| Err("cell was never executed".to_string()));
+        outcomes.push((cell.id(), cell.coords.clone(), res));
+    }
+    let reports: BTreeMap<String, &Json> = outcomes
+        .iter()
+        .filter_map(|(id, _, res)| res.as_ref().ok().map(|r| (id.clone(), r)))
+        .collect();
+
+    let mut cell_failures = 0usize;
+    let mut cell_json = Vec::with_capacity(cells.len());
+    for (cell, (id, coords, res)) in cells.iter().zip(&outcomes) {
+        let coords_obj = Json::Obj(coords.iter().map(|(k, v)| (k.clone(), json::s(v))).collect());
+        let mut fields = vec![("id", json::s(id)), ("coords", coords_obj)];
+        match res {
+            Ok(report) => {
+                fields.push(("report", report.clone()));
+                if let Some(base_id) = spec.baseline_id(cell) {
+                    if let Some(base) = reports.get(&base_id) {
+                        fields.push(("delta", artifact::deltas(report, base, &base_id)));
+                    }
+                }
+            }
+            Err(msg) => {
+                cell_failures += 1;
+                fields.push(("error", json::s(msg)));
+            }
+        }
+        cell_json.push(json::obj(fields));
+    }
+
+    let mut invariant_failures = 0usize;
+    let mut inv_json = Vec::with_capacity(spec.invariants.len());
+    for inv in &spec.invariants {
+        let (out, holds) = artifact::eval_invariant(spec, inv, &reports);
+        if !holds {
+            invariant_failures += 1;
+        }
+        inv_json.push(out);
+    }
+
+    let (grid, config, baseline) = artifact::spec_json(spec);
+    let artifact = json::obj(vec![
+        ("spec_name", json::s(&spec.name)),
+        ("grid", grid),
+        ("config", config),
+        ("baseline", baseline),
+        ("cells", Json::Arr(cell_json)),
+        ("invariants", Json::Arr(inv_json)),
+        (
+            "summary",
+            json::obj(vec![
+                ("cells", json::num(cells.len() as f64)),
+                ("cell_failures", json::num(cell_failures as f64)),
+                ("invariants", json::num(spec.invariants.len() as f64)),
+                ("invariant_failures", json::num(invariant_failures as f64)),
+            ]),
+        ),
+    ]);
+    SweepOutcome { artifact, cells: cells.len(), cell_failures, invariant_failures }
+}
+
+/// Execute one cell and return its sanitized report JSON.
+fn run_cell(plan: &CellPlan, opts: &SweepOptions) -> anyhow::Result<Json> {
+    let topo = Topology::resolve(&plan.topo)?;
+    let mut report = match plan.driver {
+        Driver::Multihost => {
+            let workloads: Result<Vec<_>, _> = (0..plan.hosts)
+                .map(|i| {
+                    workload::by_name(&plan.workload, plan.cfg.scale, plan.cfg.seed + i as u64)
+                        .ok_or_else(|| anyhow::anyhow!("unknown workload `{}`", plan.workload))
+                })
+                .collect();
+            // one host-phase thread per cell: the sweep pool owns the
+            // parallelism, and the result is thread-count-invariant
+            multihost::run_shared_threads(&topo, &plan.cfg, workloads?, 1)?.to_json()
+        }
+        Driver::Run | Driver::Batched => match plan.workload.strip_prefix("trace:") {
+            Some(path) if plan.shards > 1 => run_sharded(plan, path, opts)?,
+            Some(path) => {
+                let mut replay = TraceWorkload::open(path)?;
+                let rep = drive(plan, &topo, &mut replay)?;
+                if let Some(e) = replay.take_error() {
+                    anyhow::bail!("replay of {path}: {e}");
+                }
+                rep
+            }
+            None => {
+                let mut wl = workload::by_name(&plan.workload, plan.cfg.scale, plan.cfg.seed)
+                    .ok_or_else(|| anyhow::anyhow!("unknown workload `{}`", plan.workload))?;
+                drive(plan, &topo, wl.as_mut())?
+            }
+        },
+    };
+    artifact::sanitize(&mut report);
+    Ok(report)
+}
+
+/// Drive one in-process simulation with the cell's driver.
+fn drive(
+    plan: &CellPlan,
+    topo: &Topology,
+    wl: &mut dyn workload::Workload,
+) -> anyhow::Result<Json> {
+    let rep = match plan.driver {
+        Driver::Batched => run_batched(topo, &plan.cfg, wl)?,
+        _ => {
+            let mut sim = Coordinator::new(topo.clone(), plan.cfg.clone())?;
+            sim.run(wl)?
+        }
+    };
+    Ok(rep.to_json())
+}
+
+/// Multi-process shard fan-out: run the cell's trace as `plan.shards`
+/// shard replays and merge their reports. With a `shard_exe` the
+/// shards are real `replay --shard i/N --json` child processes
+/// (launched concurrently, collected in shard order); without one
+/// they run in-process through [`TraceWorkload::open_shard`]. Both
+/// paths sanitize each shard report before the deterministic merge,
+/// so the merged cell is identical either way.
+fn run_sharded(plan: &CellPlan, path: &str, opts: &SweepOptions) -> anyhow::Result<Json> {
+    let n = plan.shards;
+    let mut shard_reports = Vec::with_capacity(n);
+    match &opts.shard_exe {
+        Some(exe) => {
+            let mut children = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut cmd = std::process::Command::new(exe);
+                cmd.arg("replay")
+                    .args(["--trace", path])
+                    .args(["--shard", &format!("{i}/{n}")])
+                    .arg("--json")
+                    .args(shard_flags(plan))
+                    .stdout(std::process::Stdio::piped())
+                    .stderr(std::process::Stdio::piped());
+                children.push(cmd.spawn().map_err(|e| {
+                    anyhow::anyhow!("spawning shard {i}/{n} ({}): {e}", exe.display())
+                })?);
+            }
+            for (i, child) in children.into_iter().enumerate() {
+                let out = child.wait_with_output()?;
+                if !out.status.success() {
+                    anyhow::bail!(
+                        "shard {i}/{n} exited with {}: {}",
+                        out.status,
+                        String::from_utf8_lossy(&out.stderr).trim()
+                    );
+                }
+                let stdout = String::from_utf8_lossy(&out.stdout);
+                let rep = Json::parse(stdout.trim()).map_err(|e| {
+                    anyhow::anyhow!("shard {i}/{n} emitted unparseable JSON: {e}")
+                })?;
+                shard_reports.push(rep);
+            }
+        }
+        None => {
+            for i in 0..n {
+                let mut replay = TraceWorkload::open_shard(path, i, n)?;
+                let topo = Topology::resolve(&plan.topo)?;
+                let rep = drive(plan, &topo, &mut replay)?;
+                if let Some(e) = replay.take_error() {
+                    anyhow::bail!("shard {i}/{n} replay of {path}: {e}");
+                }
+                shard_reports.push(rep);
+            }
+        }
+    }
+    let mut it = shard_reports.into_iter();
+    let mut acc = it.next().ok_or_else(|| anyhow::anyhow!("no shard reports"))?;
+    artifact::sanitize(&mut acc);
+    for mut shard in it {
+        artifact::sanitize(&mut shard);
+        merge_shard_json(&mut acc, &shard);
+    }
+    finalize_shard_merge(&mut acc, n);
+    Ok(acc)
+}
+
+/// CLI flags reproducing this cell's `SimConfig` for a shard child
+/// process. `workload` / `hosts` / `shards` are handled by the caller;
+/// `driver = "batched"` becomes `--batched`.
+fn shard_flags(plan: &CellPlan) -> Vec<String> {
+    let cfg = &plan.cfg;
+    let mut flags = vec!["--topo".to_string(), plan.topo.clone()];
+    let mut push = |k: &str, v: String| {
+        flags.push(format!("--{k}"));
+        flags.push(v);
+    };
+    push("epoch-ms", format!("{}", cfg.epoch_ms));
+    push("scale", format!("{}", cfg.scale));
+    push("seed", format!("{}", cfg.seed));
+    push("sample-period", format!("{}", cfg.sample_period));
+    push("cache-scale", format!("{}", cfg.cache_scale));
+    push("event-batch", format!("{}", cfg.event_batch));
+    push("analyzer-threads", format!("{}", cfg.analyzer_threads));
+    push("batch-group", format!("{}", cfg.batch_group));
+    push("heat-decay", format!("{}", cfg.heat_decay));
+    push("mig-stall-ns-per-byte", format!("{}", cfg.mig_stall_ns_per_byte));
+    push("mlp", format!("{}", cfg.mlp));
+    push("cpi-ns", format!("{}", cfg.cpi_ns));
+    let kernel = match cfg.scan_kernel {
+        crate::runtime::ScanKernel::Exact => "exact",
+        crate::runtime::ScanKernel::Blocked => "blocked",
+    };
+    push("scan-kernel", kernel.to_string());
+    push("pipeline", if cfg.pipeline { "true" } else { "false" }.to_string());
+    if let Some(max) = cfg.max_epochs {
+        push("max-epochs", format!("{max}"));
+    }
+    if let Some(p) = &cfg.prefetcher {
+        push("prefetch", p.clone());
+    }
+    if let Some(src) = &plan.epoch_policy_src {
+        push("epoch-policy", src.clone());
+    }
+    if plan.driver == Driver::Batched {
+        push("batched", "true".to_string());
+    }
+    flags
+}

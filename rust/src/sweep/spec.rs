@@ -1,0 +1,801 @@
+//! Sweep specification: a TOML grid of simulation settings.
+//!
+//! A spec names a (topology × policy × workload × knob) grid, a base
+//! `[config]`, an optional `[baseline]` cell selector for per-cell
+//! deltas, and `[[invariant]]` entries — the coarse accuracy harness
+//! that pins relative metric *orderings* across an axis (not absolute
+//! nanoseconds). Parsing reuses [`crate::util::toml::TomlDoc`] and
+//! fails with structured, field-naming [`SweepError`]s.
+//!
+//! ```toml
+//! name = "topology_sweep"
+//! workers = 0                      # 0 = one per core
+//!
+//! [grid]
+//! topo = ["direct", "fig2", "deep"]
+//! workload = ["stream", "mcf_like"]
+//!
+//! [config]
+//! scale = 0.002
+//! cache_scale = 64
+//!
+//! [baseline]
+//! topo = "direct"                  # every cell's delta is vs the
+//!                                  # same-coords cell with topo=direct
+//!
+//! [[invariant]]
+//! metric = "delay_ms"
+//! axis = "topo"
+//! order = ["direct", "fig2", "deep"]
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::alloctrack::PolicyKind;
+use crate::coordinator::SimConfig;
+use crate::policy::PolicySpec;
+use crate::runtime::ScanKernel;
+use crate::topology::builtin;
+use crate::util::toml::{TomlDoc, TomlValue};
+use crate::workload::ALL_WORKLOADS;
+
+/// Structured sweep-spec errors. Every variant names the table / key /
+/// axis at fault so a misspelled spec fails with an actionable message
+/// (asserted in `tests/failures.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepError {
+    /// The file is not parseable TOML (line-numbered message).
+    Toml(String),
+    /// A required key is absent.
+    MissingKey { table: String, key: String },
+    /// A key is present but its value is malformed.
+    BadValue { table: String, key: String, msg: String },
+    /// `[grid]` names a setting the engine does not sweep.
+    UnknownAxis { axis: String },
+    /// A grid axis value fails that setting's validation.
+    BadAxisValue { axis: String, value: String, msg: String },
+    /// A grid axis with no values (or a non-array value).
+    EmptyAxis { axis: String },
+    /// The spec has no `[grid]` axes at all.
+    EmptyGrid,
+    /// `[baseline]` pins an axis that is not in the grid, or to a
+    /// value the axis does not contain.
+    BadBaseline { axis: String, msg: String },
+    /// An `[[invariant]]` entry is malformed (0-based index).
+    BadInvariant { index: usize, msg: String },
+    /// A cell combination is contradictory (e.g. sharded multihost).
+    BadCell { cell: String, msg: String },
+    /// Spec file could not be read.
+    Io { path: String, msg: String },
+}
+
+impl std::fmt::Display for SweepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SweepError::Toml(m) => write!(f, "sweep spec is not valid TOML: {m}"),
+            SweepError::MissingKey { table, key } => {
+                write!(f, "sweep spec {}: missing required key `{key}`", table_name(table))
+            }
+            SweepError::BadValue { table, key, msg } => {
+                write!(f, "sweep spec {}: bad value for `{key}`: {msg}", table_name(table))
+            }
+            SweepError::UnknownAxis { axis } => {
+                write!(f, "sweep spec [grid]: unknown axis `{axis}` (see `cxlmemsim list`)")
+            }
+            SweepError::BadAxisValue { axis, value, msg } => {
+                write!(f, "sweep spec [grid] axis `{axis}`: bad value `{value}`: {msg}")
+            }
+            SweepError::EmptyAxis { axis } => {
+                write!(f, "sweep spec [grid] axis `{axis}`: expected a non-empty array of values")
+            }
+            SweepError::EmptyGrid => write!(f, "sweep spec: [grid] must define at least one axis"),
+            SweepError::BadBaseline { axis, msg } => {
+                write!(f, "sweep spec [baseline] `{axis}`: {msg}")
+            }
+            SweepError::BadInvariant { index, msg } => {
+                write!(f, "sweep spec [[invariant]] #{index}: {msg}")
+            }
+            SweepError::BadCell { cell, msg } => write!(f, "sweep spec cell `{cell}`: {msg}"),
+            SweepError::Io { path, msg } => write!(f, "sweep spec {path}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+fn table_name(table: &str) -> String {
+    if table.is_empty() {
+        "top level".to_string()
+    } else {
+        format!("[{table}]")
+    }
+}
+
+/// Which driver executes a cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Driver {
+    /// Sequential coordinator (`cxlmemsim run`).
+    Run,
+    /// Grouped-analyzer replay driver (`run --batched`).
+    Batched,
+    /// Shared-pool multi-host runner (`cxlmemsim multihost`).
+    Multihost,
+}
+
+/// One grid axis: a setting name plus its values in spec order.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<String>,
+}
+
+/// One accuracy-harness invariant: along `axis`, `metric` must be
+/// non-decreasing over `order` (strictly increasing with `strict`),
+/// for every combination of the remaining axes (or only the `pins`ned
+/// one). `rel_tol` loosens the non-strict comparison to
+/// `next >= prev * (1 - rel_tol)` so near-equal cells don't flap.
+#[derive(Debug, Clone)]
+pub struct Invariant {
+    pub metric: String,
+    pub axis: String,
+    pub order: Vec<String>,
+    pub strict: bool,
+    pub rel_tol: f64,
+    pub pins: BTreeMap<String, String>,
+}
+
+/// One expanded grid cell: its index in canonical order and its
+/// axis → value coordinates.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub index: usize,
+    pub coords: BTreeMap<String, String>,
+}
+
+impl Cell {
+    /// Canonical cell id: `axis=value` pairs joined with `,`, axes in
+    /// sorted order. This is the artifact's cell key and the baseline
+    /// lookup key.
+    pub fn id(&self) -> String {
+        coords_id(&self.coords)
+    }
+}
+
+/// Canonical id for any axis → value map (see [`Cell::id`]).
+pub fn coords_id(coords: &BTreeMap<String, String>) -> String {
+    coords
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Everything needed to execute one cell.
+#[derive(Debug, Clone)]
+pub struct CellPlan {
+    pub cfg: SimConfig,
+    pub driver: Driver,
+    pub topo: String,
+    pub workload: String,
+    /// Host count for [`Driver::Multihost`] cells.
+    pub hosts: usize,
+    /// Shard fan-out for `trace:` cells (1 = unsharded).
+    pub shards: usize,
+    /// The spec's `epoch_policy` string, kept verbatim so shard child
+    /// processes receive the exact `--epoch-policy` the cell parsed.
+    pub epoch_policy_src: Option<String>,
+}
+
+/// Settings the engine understands, as grid axes or `[config]` keys.
+/// `topo` / `workload` / `driver` / `hosts` / `shards` select what
+/// runs; the rest map 1:1 onto [`SimConfig`] fields (CLI flag names
+/// with `-` spelled `_`).
+pub const KNOWN_SETTINGS: &[&str] = &[
+    "topo",
+    "workload",
+    "driver",
+    "hosts",
+    "shards",
+    "policy",
+    "epoch_policy",
+    "prefetch",
+    "scan_kernel",
+    "pipeline",
+    "epoch_ms",
+    "scale",
+    "seed",
+    "sample_period",
+    "cache_scale",
+    "event_batch",
+    "analyzer_threads",
+    "batch_group",
+    "heat_decay",
+    "mig_stall_ns_per_byte",
+    "max_epochs",
+    "mlp",
+    "cpi_ns",
+];
+
+/// A parsed, validated sweep specification.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Worker threads for the cell pool (0 = one per core).
+    pub workers: usize,
+    /// Grid axes, sorted by name (canonical expansion order).
+    pub axes: Vec<Axis>,
+    /// Base `[config]` settings applied to every cell.
+    pub base: BTreeMap<String, String>,
+    /// `[baseline]` axis pins (empty = no deltas).
+    pub baseline: BTreeMap<String, String>,
+    pub invariants: Vec<Invariant>,
+}
+
+impl SweepSpec {
+    pub fn from_file(path: &str) -> Result<SweepSpec, SweepError> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| SweepError::Io { path: path.to_string(), msg: e.to_string() })?;
+        SweepSpec::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<SweepSpec, SweepError> {
+        let doc = TomlDoc::parse(src).map_err(SweepError::Toml)?;
+        let top = doc.table("").cloned().unwrap_or_default();
+        let name = top
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| SweepError::MissingKey { table: String::new(), key: "name".into() })?;
+        let workers = match top.get("workers") {
+            None => 0,
+            Some(v) => v.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).ok_or_else(|| {
+                SweepError::BadValue {
+                    table: String::new(),
+                    key: "workers".into(),
+                    msg: "expected a non-negative integer".into(),
+                }
+            })? as usize,
+        };
+
+        // ---- [grid]: every key is an axis, every axis a non-empty
+        // array of validated setting values
+        let grid = doc.table("grid").cloned().unwrap_or_default();
+        let mut axes = Vec::new();
+        for (raw_key, val) in &grid {
+            let axis = normalize_key(raw_key);
+            if !KNOWN_SETTINGS.contains(&axis.as_str()) {
+                return Err(SweepError::UnknownAxis { axis });
+            }
+            let vals = match val {
+                TomlValue::Arr(items) if !items.is_empty() => items,
+                _ => return Err(SweepError::EmptyAxis { axis }),
+            };
+            let mut values = Vec::with_capacity(vals.len());
+            for item in vals {
+                let v = value_str(item).ok_or_else(|| SweepError::BadAxisValue {
+                    axis: axis.clone(),
+                    value: format!("{item:?}"),
+                    msg: "expected a scalar (string, number, or bool)".into(),
+                })?;
+                validate_setting(&axis, &v).map_err(|msg| SweepError::BadAxisValue {
+                    axis: axis.clone(),
+                    value: v.clone(),
+                    msg,
+                })?;
+                if values.contains(&v) {
+                    return Err(SweepError::BadAxisValue {
+                        axis: axis.clone(),
+                        value: v,
+                        msg: "duplicate axis value".into(),
+                    });
+                }
+                values.push(v);
+            }
+            axes.push(Axis { name: axis, values });
+        }
+        if axes.is_empty() {
+            return Err(SweepError::EmptyGrid);
+        }
+        axes.sort_by(|a, b| a.name.cmp(&b.name));
+
+        // ---- [config]: base settings, overridden per cell by coords
+        let mut base = BTreeMap::new();
+        for (raw_key, val) in doc.table("config").cloned().unwrap_or_default() {
+            let key = normalize_key(&raw_key);
+            if !KNOWN_SETTINGS.contains(&key.as_str()) {
+                return Err(SweepError::BadValue {
+                    table: "config".into(),
+                    key,
+                    msg: "unknown setting (see docs/CLI.md)".into(),
+                });
+            }
+            let v = value_str(&val).ok_or_else(|| SweepError::BadValue {
+                table: "config".into(),
+                key: key.clone(),
+                msg: "expected a scalar value".into(),
+            })?;
+            validate_setting(&key, &v).map_err(|msg| SweepError::BadValue {
+                table: "config".into(),
+                key: key.clone(),
+                msg,
+            })?;
+            base.insert(key, v);
+        }
+
+        // ---- [baseline]: a subset of grid axes pinned to grid values
+        let mut baseline = BTreeMap::new();
+        for (raw_key, val) in doc.table("baseline").cloned().unwrap_or_default() {
+            let key = normalize_key(&raw_key);
+            let v = value_str(&val).ok_or_else(|| SweepError::BadBaseline {
+                axis: key.clone(),
+                msg: "expected a scalar value".into(),
+            })?;
+            let axis = axes.iter().find(|a| a.name == key).ok_or_else(|| {
+                SweepError::BadBaseline { axis: key.clone(), msg: "not a [grid] axis".into() }
+            })?;
+            if !axis.values.contains(&v) {
+                return Err(SweepError::BadBaseline {
+                    axis: key,
+                    msg: format!("value `{v}` is not in the axis (values: {:?})", axis.values),
+                });
+            }
+            baseline.insert(key, v);
+        }
+
+        // ---- [[invariant]]: the accuracy harness
+        let mut invariants = Vec::new();
+        for (index, tbl) in doc.array("invariant").iter().enumerate() {
+            invariants.push(parse_invariant(index, tbl, &axes)?);
+        }
+
+        let spec = SweepSpec { name, workers, axes, base, baseline, invariants };
+        // contradictory combinations fail at parse, not mid-sweep
+        for cell in spec.expand() {
+            spec.plan(&cell)?;
+        }
+        Ok(spec)
+    }
+
+    /// Expand the grid into cells, in canonical order: axes sorted by
+    /// name, the last axis varying fastest, values in spec order. The
+    /// order (and therefore every cell `index`) is a pure function of
+    /// the spec — worker scheduling cannot perturb it.
+    pub fn expand(&self) -> Vec<Cell> {
+        let total: usize = self.axes.iter().map(|a| a.values.len()).product();
+        let mut cells = Vec::with_capacity(total);
+        let mut odometer = vec![0usize; self.axes.len()];
+        for index in 0..total {
+            let coords: BTreeMap<String, String> = self
+                .axes
+                .iter()
+                .zip(&odometer)
+                .map(|(a, &i)| (a.name.clone(), a.values[i].clone()))
+                .collect();
+            cells.push(Cell { index, coords });
+            for pos in (0..odometer.len()).rev() {
+                odometer[pos] += 1;
+                if odometer[pos] < self.axes[pos].values.len() {
+                    break;
+                }
+                odometer[pos] = 0;
+            }
+        }
+        cells
+    }
+
+    /// The baseline cell id for `cell`: its coords with the
+    /// `[baseline]` pins substituted. `None` without a `[baseline]`
+    /// table. A cell can be its own baseline (delta zero).
+    pub fn baseline_id(&self, cell: &Cell) -> Option<String> {
+        if self.baseline.is_empty() {
+            return None;
+        }
+        let mut coords = cell.coords.clone();
+        for (axis, v) in &self.baseline {
+            coords.insert(axis.clone(), v.clone());
+        }
+        Some(coords_id(&coords))
+    }
+
+    /// Effective settings for a cell: `[config]` overlaid with the
+    /// cell's coordinates.
+    pub fn merged(&self, cell: &Cell) -> BTreeMap<String, String> {
+        let mut m = self.base.clone();
+        for (k, v) in &cell.coords {
+            m.insert(k.clone(), v.clone());
+        }
+        m
+    }
+
+    /// Resolve a cell into an executable plan. Values were validated
+    /// at parse time; this builds the `SimConfig` and checks
+    /// cross-setting consistency.
+    pub fn plan(&self, cell: &Cell) -> Result<CellPlan, SweepError> {
+        let m = self.merged(cell);
+        let bad = |key: &str, msg: String| SweepError::BadValue {
+            table: "config".into(),
+            key: key.into(),
+            msg,
+        };
+        let mut cfg = SimConfig::default();
+        for (key, v) in &m {
+            match key.as_str() {
+                "topo" | "workload" | "driver" | "hosts" | "shards" => {}
+                "policy" => {
+                    cfg.policy = PolicyKind::parse(v)
+                        .ok_or_else(|| bad(key, format!("unknown policy `{v}`")))?;
+                }
+                "epoch_policy" => {
+                    if v != "none" {
+                        cfg.epoch_policy =
+                            Some(PolicySpec::parse(v).map_err(|e| bad(key, e.to_string()))?);
+                    }
+                }
+                "prefetch" => {
+                    if v != "none" {
+                        cfg.prefetcher = Some(v.clone());
+                    }
+                }
+                "scan_kernel" => {
+                    cfg.scan_kernel = ScanKernel::parse(v)
+                        .ok_or_else(|| bad(key, format!("unknown scan kernel `{v}`")))?;
+                }
+                "pipeline" => cfg.pipeline = v == "true",
+                "epoch_ms" => cfg.epoch_ms = parse_f64(key, v)?,
+                "scale" => cfg.scale = parse_f64(key, v)?,
+                "seed" => cfg.seed = parse_u64(key, v)?,
+                "sample_period" => cfg.sample_period = parse_u64(key, v)? as u32,
+                "cache_scale" => cfg.cache_scale = parse_u64(key, v)?,
+                "event_batch" => cfg.event_batch = parse_u64(key, v)?.max(1) as usize,
+                "analyzer_threads" => cfg.analyzer_threads = parse_u64(key, v)? as usize,
+                "batch_group" => cfg.batch_group = parse_u64(key, v)? as usize,
+                "heat_decay" => cfg.heat_decay = parse_f64(key, v)?,
+                "mig_stall_ns_per_byte" => cfg.mig_stall_ns_per_byte = parse_f64(key, v)?,
+                "max_epochs" => {
+                    cfg.max_epochs = if v == "none" { None } else { Some(parse_u64(key, v)?) };
+                }
+                "mlp" => cfg.mlp = parse_f64(key, v)?,
+                "cpi_ns" => cfg.cpi_ns = parse_f64(key, v)?,
+                other => return Err(bad(other, "unknown setting".into())),
+            }
+        }
+        let driver = match m.get("driver").map(|s| s.as_str()).unwrap_or("run") {
+            "run" => Driver::Run,
+            "batched" => Driver::Batched,
+            "multihost" => Driver::Multihost,
+            other => return Err(bad("driver", format!("unknown driver `{other}`"))),
+        };
+        let topo = m.get("topo").cloned().unwrap_or_else(|| "fig2".into());
+        let workload = m.get("workload").cloned().unwrap_or_else(|| "mmap_read".into());
+        let hosts =
+            m.get("hosts").map(|v| parse_u64("hosts", v)).transpose()?.unwrap_or(2) as usize;
+        let shards =
+            m.get("shards").map(|v| parse_u64("shards", v)).transpose()?.unwrap_or(1) as usize;
+        let cell_err = |msg: &str| SweepError::BadCell { cell: cell.id(), msg: msg.into() };
+        if driver == Driver::Multihost && workload.starts_with("trace:") {
+            return Err(cell_err("the multihost driver replays synthetic workloads, not traces"));
+        }
+        if shards > 1 {
+            if !workload.starts_with("trace:") {
+                return Err(cell_err("shards > 1 requires a `trace:FILE` workload (v2 format)"));
+            }
+            if driver == Driver::Multihost {
+                return Err(cell_err("shards > 1 cannot combine with the multihost driver"));
+            }
+        }
+        let epoch_policy_src = m.get("epoch_policy").filter(|v| v.as_str() != "none").cloned();
+        Ok(CellPlan { cfg, driver, topo, workload, hosts, shards, epoch_policy_src })
+    }
+}
+
+fn parse_invariant(
+    index: usize,
+    tbl: &BTreeMap<String, TomlValue>,
+    axes: &[Axis],
+) -> Result<Invariant, SweepError> {
+    let err = |msg: String| SweepError::BadInvariant { index, msg };
+    let metric = tbl
+        .get("metric")
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| err("missing string key `metric` (a report key, e.g. `delay_ms`)".into()))?;
+    let axis_name = tbl
+        .get("axis")
+        .and_then(|v| v.as_str())
+        .map(normalize_key)
+        .ok_or_else(|| err("missing string key `axis` (a [grid] axis)".into()))?;
+    let axis = axes
+        .iter()
+        .find(|a| a.name == axis_name)
+        .ok_or_else(|| err(format!("axis `{axis_name}` is not a [grid] axis")))?;
+    let order_val = tbl.get("order").ok_or_else(|| {
+        err("missing key `order` (the expected non-decreasing axis-value sequence)".into())
+    })?;
+    let order: Vec<String> = match order_val {
+        TomlValue::Arr(items) => items
+            .iter()
+            .map(|v| value_str(v).ok_or_else(|| err("order values must be scalars".into())))
+            .collect::<Result<_, _>>()?,
+        _ => return Err(err("`order` must be an array of axis values".into())),
+    };
+    if order.len() < 2 {
+        return Err(err("`order` needs at least two axis values".into()));
+    }
+    for v in &order {
+        if !axis.values.contains(v) {
+            return Err(err(format!(
+                "order value `{v}` is not in axis `{axis_name}` (values: {:?})",
+                axis.values
+            )));
+        }
+    }
+    let strict = match tbl.get("strict") {
+        None => false,
+        Some(v) => v.as_bool().ok_or_else(|| err("`strict` must be a bool".into()))?,
+    };
+    let rel_tol = match tbl.get("rel_tol") {
+        None => 0.0,
+        Some(v) => v
+            .as_f64()
+            .filter(|t| *t >= 0.0)
+            .ok_or_else(|| err("`rel_tol` must be a non-negative number".into()))?,
+    };
+    let mut pins = BTreeMap::new();
+    for (raw_key, val) in tbl {
+        let key = normalize_key(raw_key);
+        if matches!(key.as_str(), "metric" | "axis" | "order" | "strict" | "rel_tol") {
+            continue;
+        }
+        let pin_axis = axes
+            .iter()
+            .find(|a| a.name == key)
+            .ok_or_else(|| err(format!("pin `{key}` is not a [grid] axis")))?;
+        if pin_axis.name == axis_name {
+            return Err(err(format!("cannot pin the swept axis `{key}` itself")));
+        }
+        let v = value_str(val).ok_or_else(|| err(format!("pin `{key}` must be a scalar")))?;
+        if !pin_axis.values.contains(&v) {
+            return Err(err(format!(
+                "pin `{key}` value `{v}` is not in that axis (values: {:?})",
+                pin_axis.values
+            )));
+        }
+        pins.insert(key, v);
+    }
+    Ok(Invariant { metric, axis: axis_name, order, strict, rel_tol, pins })
+}
+
+/// Spec keys accept `-` or `_`; settings are stored with `_`.
+fn normalize_key(k: &str) -> String {
+    k.trim().replace('-', "_")
+}
+
+/// Canonical string form of a scalar TOML value. Numbers format like
+/// the JSON writer (integral values without a fraction), so axis
+/// values, `order` entries, and cell ids all agree on e.g. `2` vs
+/// `2.0`.
+fn value_str(v: &TomlValue) -> Option<String> {
+    match v {
+        TomlValue::Str(s) => Some(s.clone()),
+        TomlValue::Bool(b) => Some(if *b { "true" } else { "false" }.to_string()),
+        TomlValue::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                Some(format!("{}", *n as i64))
+            } else {
+                Some(format!("{n}"))
+            }
+        }
+        TomlValue::Arr(_) => None,
+    }
+}
+
+fn parse_f64(key: &str, v: &str) -> Result<f64, SweepError> {
+    v.parse::<f64>().map_err(|_| SweepError::BadValue {
+        table: "config".into(),
+        key: key.into(),
+        msg: format!("`{v}` is not a number"),
+    })
+}
+
+fn parse_u64(key: &str, v: &str) -> Result<u64, SweepError> {
+    v.parse::<u64>().map_err(|_| SweepError::BadValue {
+        table: "config".into(),
+        key: key.into(),
+        msg: format!("`{v}` is not a non-negative integer"),
+    })
+}
+
+/// Validate one setting value (shared by `[grid]` axes and `[config]`
+/// keys). Returns a message naming what was expected.
+fn validate_setting(key: &str, v: &str) -> Result<(), String> {
+    match key {
+        "topo" => {
+            if builtin::by_name(v).is_some() || std::path::Path::new(v).exists() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "not a builtin topology ({}) and no such file",
+                    builtin::BUILTIN_NAMES.join("|")
+                ))
+            }
+        }
+        "workload" => {
+            if ALL_WORKLOADS.contains(&v) || v.starts_with("trace:") {
+                Ok(())
+            } else {
+                Err(format!(
+                    "unknown workload (builtin: {}; or `trace:FILE`)",
+                    ALL_WORKLOADS.join(", ")
+                ))
+            }
+        }
+        "driver" => match v {
+            "run" | "batched" | "multihost" => Ok(()),
+            _ => Err("expected run|batched|multihost".into()),
+        },
+        "policy" => PolicyKind::parse(v)
+            .map(|_| ())
+            .ok_or_else(|| "unknown allocation policy (see `cxlmemsim list`)".into()),
+        "epoch_policy" => {
+            if v == "none" {
+                Ok(())
+            } else {
+                PolicySpec::parse(v).map(|_| ()).map_err(|e| e.to_string())
+            }
+        }
+        "prefetch" => match v {
+            "none" | "nextline" | "stride" => Ok(()),
+            _ => Err("expected none|nextline|stride".into()),
+        },
+        "scan_kernel" => {
+            ScanKernel::parse(v).map(|_| ()).ok_or_else(|| "expected blocked|exact".into())
+        }
+        "pipeline" => match v {
+            "true" | "false" => Ok(()),
+            _ => Err("expected true|false".into()),
+        },
+        "heat_decay" => {
+            let n: f64 = v.parse().map_err(|_| format!("`{v}` is not a number"))?;
+            if (0.0..=1.0).contains(&n) {
+                Ok(())
+            } else {
+                Err(format!("must be in [0, 1], got {n}"))
+            }
+        }
+        "hosts" | "shards" => {
+            let n: u64 = v.parse().map_err(|_| format!("`{v}` is not an integer"))?;
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("must be >= 1".into())
+            }
+        }
+        "seed" | "sample_period" | "cache_scale" | "event_batch" | "analyzer_threads"
+        | "batch_group" => {
+            v.parse::<u64>().map(|_| ()).map_err(|_| format!("`{v}` is not an integer"))
+        }
+        "max_epochs" => {
+            if v == "none" {
+                Ok(())
+            } else {
+                v.parse::<u64>().map(|_| ()).map_err(|_| format!("`{v}` is not an integer"))
+            }
+        }
+        _ => {
+            // remaining numeric knobs: epoch_ms, scale, mlp, cpi_ns, ...
+            v.parse::<f64>().map(|_| ()).map_err(|_| format!("`{v}` is not a number"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+name = "t"
+workers = 2
+
+[grid]
+topo = ["direct", "fig2"]
+workload = ["stream", "zipfian"]
+
+[config]
+scale = 0.002
+cache_scale = 64
+max_epochs = 20
+
+[baseline]
+topo = "direct"
+
+[[invariant]]
+metric = "delay_ms"
+axis = "topo"
+order = ["direct", "fig2"]
+"#;
+
+    #[test]
+    fn parses_and_expands() {
+        let spec = SweepSpec::parse(SPEC).unwrap();
+        assert_eq!(spec.name, "t");
+        assert_eq!(spec.workers, 2);
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 4);
+        // canonical order: axes sorted (topo, workload), last fastest
+        assert_eq!(cells[0].id(), "topo=direct,workload=stream");
+        assert_eq!(cells[1].id(), "topo=direct,workload=zipfian");
+        assert_eq!(cells[2].id(), "topo=fig2,workload=stream");
+        assert_eq!(cells[3].id(), "topo=fig2,workload=zipfian");
+    }
+
+    #[test]
+    fn baseline_substitutes_pinned_axes() {
+        let spec = SweepSpec::parse(SPEC).unwrap();
+        let cells = spec.expand();
+        assert_eq!(spec.baseline_id(&cells[3]).unwrap(), "topo=direct,workload=zipfian");
+        // the baseline cell is its own baseline
+        assert_eq!(spec.baseline_id(&cells[0]).unwrap(), cells[0].id());
+    }
+
+    #[test]
+    fn plan_merges_config_and_coords() {
+        let spec = SweepSpec::parse(SPEC).unwrap();
+        let cells = spec.expand();
+        let plan = spec.plan(&cells[2]).unwrap();
+        assert_eq!(plan.topo, "fig2");
+        assert_eq!(plan.workload, "stream");
+        assert_eq!(plan.driver, Driver::Run);
+        assert!((plan.cfg.scale - 0.002).abs() < 1e-12);
+        assert_eq!(plan.cfg.cache_scale, 64);
+        assert_eq!(plan.cfg.max_epochs, Some(20));
+    }
+
+    #[test]
+    fn missing_name_is_structured() {
+        let e = SweepSpec::parse("[grid]\ntopo = [\"fig2\", \"deep\"]").unwrap_err();
+        assert_eq!(e, SweepError::MissingKey { table: String::new(), key: "name".into() });
+    }
+
+    #[test]
+    fn unknown_axis_is_named() {
+        let e = SweepSpec::parse("name = \"x\"\n[grid]\ntopology = [\"fig2\", \"deep\"]")
+            .unwrap_err();
+        assert!(matches!(e, SweepError::UnknownAxis { ref axis } if axis == "topology"), "{e}");
+    }
+
+    #[test]
+    fn bad_axis_value_names_axis_and_value() {
+        let e = SweepSpec::parse("name = \"x\"\n[grid]\ntopo = [\"nope\"]").unwrap_err();
+        match e {
+            SweepError::BadAxisValue { axis, value, .. } => {
+                assert_eq!(axis, "topo");
+                assert_eq!(value, "nope");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn numeric_axis_values_canonicalize() {
+        let spec = SweepSpec::parse("name = \"x\"\n[grid]\nepoch_ms = [0.5, 1.0, 2.0]").unwrap();
+        assert_eq!(spec.axes[0].values, vec!["0.5", "1", "2"]);
+    }
+
+    #[test]
+    fn sharded_multihost_cell_rejected() {
+        let e =
+            SweepSpec::parse("name = \"x\"\n[grid]\ndriver = [\"multihost\"]\n[config]\nshards = 2")
+                .unwrap_err();
+        assert!(matches!(e, SweepError::BadCell { .. }), "{e}");
+    }
+
+    #[test]
+    fn dashes_normalize_to_underscores() {
+        let spec = SweepSpec::parse(
+            "name = \"x\"\n[grid]\nscan-kernel = [\"blocked\", \"exact\"]\n[config]\ncache-scale = 64",
+        )
+        .unwrap();
+        assert_eq!(spec.axes[0].name, "scan_kernel");
+        assert_eq!(spec.base.get("cache_scale").unwrap(), "64");
+    }
+}

@@ -362,3 +362,80 @@ fn faults_on_pjrt_backend_is_a_config_error() {
     let err = err_of(cxlmemsim::coordinator::run_batched(&builtin::fig2(), &cfg, wl.as_mut()));
     assert!(err.contains("--backend native"), "{err}");
 }
+
+// ---- sweep specs: every malformed spec must fail at parse time with
+// a structured error that NAMES the offending table/axis/field, so a
+// 200-cell grid never dies halfway through with a bare panic.
+
+fn sweep_err(src: &str) -> String {
+    match cxlmemsim::sweep::SweepSpec::parse(src) {
+        Ok(_) => panic!("malformed spec parsed"),
+        Err(e) => e.to_string(),
+    }
+}
+
+#[test]
+fn sweep_spec_missing_name_names_the_key() {
+    let err = sweep_err("[grid]\ntopo = [\"direct\"]\n");
+    assert!(err.contains("`name`"), "{err}");
+}
+
+#[test]
+fn sweep_spec_unknown_axis_is_named() {
+    let err = sweep_err("name = \"t\"\n[grid]\nlatencyz = [1, 2]\n");
+    assert!(err.contains("`latencyz`"), "{err}");
+    assert!(err.contains("[grid]"), "{err}");
+}
+
+#[test]
+fn sweep_spec_bad_axis_value_names_axis_and_value() {
+    let err = sweep_err("name = \"t\"\n[grid]\nworkload = [\"streem\"]\n");
+    assert!(err.contains("`workload`"), "{err}");
+    assert!(err.contains("`streem`"), "{err}");
+}
+
+#[test]
+fn sweep_spec_baseline_must_pin_a_grid_axis_value() {
+    // pinning an axis not in the grid
+    let err = sweep_err(
+        "name = \"t\"\n[grid]\ntopo = [\"direct\"]\n[baseline]\nworkload = \"stream\"\n",
+    );
+    assert!(err.contains("[baseline]"), "{err}");
+    assert!(err.contains("`workload`"), "{err}");
+    // pinning a value the axis does not contain
+    let err = sweep_err(
+        "name = \"t\"\n[grid]\ntopo = [\"direct\"]\n[baseline]\ntopo = \"fig2\"\n",
+    );
+    assert!(err.contains("`topo`"), "{err}");
+    assert!(err.contains("fig2"), "{err}");
+}
+
+#[test]
+fn sweep_spec_invariant_order_values_must_be_axis_values() {
+    let err = sweep_err(concat!(
+        "name = \"t\"\n[grid]\ntopo = [\"direct\", \"fig2\"]\n",
+        "[[invariant]]\nmetric = \"delay_ms\"\naxis = \"topo\"\n",
+        "order = [\"direct\", \"deep\"]\n",
+    ));
+    assert!(err.contains("[[invariant]]"), "{err}");
+    assert!(err.contains("deep"), "{err}");
+}
+
+#[test]
+fn sweep_spec_sharded_multihost_cell_is_rejected_at_parse_time() {
+    let err = sweep_err(concat!(
+        "name = \"t\"\n[grid]\nhosts = [1, 2]\n",
+        "[config]\ndriver = \"multihost\"\nshards = 2\nworkload = \"stream\"\n",
+    ));
+    assert!(err.contains("cell"), "{err}");
+    assert!(err.contains("shard"), "{err}");
+}
+
+#[test]
+fn sweep_cli_reports_missing_spec_file_path() {
+    let err = match cxlmemsim::sweep::SweepSpec::from_file("/does/not/exist.toml") {
+        Ok(_) => panic!("parsed a nonexistent file"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("/does/not/exist.toml"), "{err}");
+}

@@ -1,0 +1,216 @@
+//! Sweep-engine integration tests: the artifact must be a pure
+//! function of the spec (byte-identical across runs AND worker
+//! counts), grids must expand completely, baseline deltas and
+//! invariant verdicts must land in the artifact, and the sharded /
+//! multihost execution paths must agree with their sequential
+//! counterparts.
+
+use cxlmemsim::sweep::{self, SweepOptions, SweepSpec};
+use cxlmemsim::trace::io as trace_io;
+use cxlmemsim::util::json::Json;
+use cxlmemsim::workload;
+
+const SMOKE: &str = r#"
+name = "t"
+[grid]
+topo = ["direct", "fig2"]
+workload = ["stream", "zipfian"]
+[config]
+scale = 0.002
+cache_scale = 64
+epoch_ms = 0.1
+max_epochs = 20
+[baseline]
+topo = "direct"
+[[invariant]]
+metric = "delay_ms"
+axis = "topo"
+order = ["direct", "fig2"]
+rel_tol = 0.02
+"#;
+
+fn run(src: &str, workers: usize) -> sweep::SweepOutcome {
+    let spec = SweepSpec::parse(src).unwrap();
+    sweep::run_spec(&spec, &SweepOptions { workers, ..SweepOptions::default() })
+}
+
+fn cells_of(artifact: &Json) -> &[Json] {
+    artifact.get("cells").and_then(|c| c.as_arr()).unwrap()
+}
+
+#[test]
+fn artifact_is_byte_identical_across_runs_and_worker_counts() {
+    let one = run(SMOKE, 1).artifact.to_string();
+    let again = run(SMOKE, 1).artifact.to_string();
+    let four = run(SMOKE, 4).artifact.to_string();
+    assert_eq!(one, again, "same spec twice must produce identical bytes");
+    assert_eq!(one, four, "worker count leaked into the artifact");
+}
+
+#[test]
+fn grid_expands_fully_and_cells_carry_reports() {
+    let out = run(SMOKE, 2);
+    assert_eq!(out.cells, 4, "2 topos x 2 workloads");
+    assert_eq!(out.cell_failures, 0);
+    assert_eq!(out.invariant_failures, 0);
+    let cells = cells_of(&out.artifact);
+    assert_eq!(cells.len(), 4);
+    for cell in cells {
+        let rep = cell.get("report").expect("every cell succeeded");
+        assert!(rep.get("delay_ms").and_then(Json::as_f64).is_some());
+        // nondeterministic observability must be stripped
+        assert!(rep.get("wall_s").is_none(), "wall_s survived sanitize");
+    }
+    let summary = out.artifact.get("summary").unwrap();
+    assert_eq!(summary.get("cells").and_then(Json::as_f64), Some(4.0));
+}
+
+#[test]
+fn baseline_delta_is_zero_against_itself() {
+    let out = run(SMOKE, 2);
+    for cell in cells_of(&out.artifact) {
+        let id = cell.get("id").and_then(Json::as_str).unwrap();
+        let delta = cell.get("delta").expect("baseline pins topo: every cell has a delta");
+        let vs = delta.get("vs").and_then(Json::as_str).unwrap();
+        assert!(vs.contains("topo=direct"), "delta target must be the direct cell: {vs}");
+        if id == vs {
+            // the baseline cell compares against itself: all-zero delta
+            let Json::Obj(map) = delta else { panic!("delta must be an object") };
+            for (k, v) in map {
+                if k != "vs" {
+                    assert_eq!(v.as_f64(), Some(0.0), "nonzero self-delta for {k}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn violated_invariant_is_reported_and_counted() {
+    // same grid, deliberately reversed ordering: fig2 adds a switch
+    // tier, so claiming fig2 <= direct must fail.
+    let bad = SMOKE.replace(
+        r#"order = ["direct", "fig2"]"#,
+        r#"order = ["fig2", "direct"]"#,
+    );
+    let out = run(&bad, 2);
+    assert_eq!(out.cell_failures, 0);
+    assert_eq!(out.invariant_failures, 1);
+    let invs = out.artifact.get("invariants").and_then(|i| i.as_arr()).unwrap();
+    assert_eq!(invs.len(), 1);
+    assert!(matches!(invs[0].get("holds"), Some(Json::Bool(false))));
+    let viols = invs[0].get("violations").and_then(|v| v.as_arr()).unwrap();
+    assert!(!viols.is_empty(), "violations must name the offending cell pairs");
+    assert!(viols[0].get("from").and_then(Json::as_str).is_some());
+    assert!(viols[0].get("to_value").and_then(Json::as_f64).is_some());
+}
+
+#[test]
+fn scan_kernel_axis_cells_agree_on_miss_counts() {
+    let src = r#"
+name = "t"
+[grid]
+scan_kernel = ["exact", "blocked"]
+[config]
+topo = "direct"
+workload = "mcf_like"
+scale = 0.002
+cache_scale = 64
+epoch_ms = 0.1
+max_epochs = 20
+"#;
+    let out = run(src, 2);
+    assert_eq!(out.cells, 2);
+    assert_eq!(out.cell_failures, 0);
+    let cells = cells_of(&out.artifact);
+    let acc: Vec<f64> = cells
+        .iter()
+        .map(|c| c.get("report").unwrap().get("accesses").and_then(Json::as_f64).unwrap())
+        .collect();
+    assert_eq!(acc[0], acc[1], "scan kernel must not change what is simulated");
+}
+
+#[test]
+fn in_process_shard_fanout_matches_unsharded_replay() {
+    // record a real trace, then sweep it with a `shards` axis: the
+    // merged 2-shard report must cover the same events as the
+    // unsharded replay of the same file.
+    let path = std::env::temp_dir().join(format!("cxlms-sweep-shard-{}.bin", std::process::id()));
+    let f = std::fs::File::create(&path).unwrap();
+    let mut w = trace_io::V2Writer::with_chunk_events(f, 512).unwrap();
+    let mut wl = workload::by_name("stream", 0.002, 9).unwrap();
+    let mut buf = Vec::new();
+    while wl.next_batch(&mut buf, 2048) {
+        w.push_slice(&buf).unwrap();
+        buf.clear();
+    }
+    w.push_slice(&buf).unwrap();
+    w.finish().unwrap();
+
+    let src = format!(
+        r#"
+name = "t"
+[grid]
+shards = [1, 2]
+[config]
+topo = "fig2"
+workload = "trace:{}"
+scale = 0.002
+cache_scale = 64
+epoch_ms = 0.1
+"#,
+        path.display()
+    );
+    // shard_exe = None -> shards run in-process through open_shard()
+    let out = run(&src, 2);
+    assert_eq!(out.cell_failures, 0, "{}", out.artifact.to_string());
+    let cells = cells_of(&out.artifact);
+    let get = |c: &Json, k: &str| c.get("report").unwrap().get(k).and_then(Json::as_f64).unwrap();
+    let (a, b) = (&cells[0], &cells[1]);
+    assert_eq!(get(a, "accesses"), get(b, "accesses"), "shards dropped or duplicated events");
+    assert_eq!(get(a, "alloc_events"), get(b, "alloc_events"));
+    let sharded = if cells[0].get("id").and_then(Json::as_str).unwrap().contains("shards=2") {
+        &cells[0]
+    } else {
+        &cells[1]
+    };
+    assert_eq!(
+        sharded.get("report").unwrap().get("shards").and_then(Json::as_f64),
+        Some(2.0)
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn multihost_cells_report_congestion_ordering() {
+    let src = r#"
+name = "t"
+[grid]
+hosts = [1, 2]
+[config]
+driver = "multihost"
+topo = "fig2"
+workload = "stream"
+scale = 0.002
+cache_scale = 64
+epoch_ms = 0.1
+max_epochs = 30
+[[invariant]]
+metric = "total_delay_ms"
+axis = "hosts"
+order = [1, 2]
+rel_tol = 0.02
+"#;
+    let out = run(src, 2);
+    assert_eq!(out.cells, 2);
+    assert_eq!(out.cell_failures, 0, "{}", out.artifact.to_string());
+    assert_eq!(out.invariant_failures, 0, "{}", out.artifact.to_string());
+    for cell in cells_of(&out.artifact) {
+        let rep = cell.get("report").unwrap();
+        assert!(rep.get("total_delay_ms").and_then(Json::as_f64).is_some());
+        assert!(rep.get("delay_ms").and_then(Json::as_f64).is_some(), "cross-driver alias");
+        // scheduling observability is nondeterministic -> stripped
+        assert!(rep.get("steals").is_none());
+        assert!(rep.get("worker_busy_fracs").is_none());
+    }
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Accuracy gate over sweep artifacts: relative orderings must hold.
+
+The simulator cannot pin absolute nanoseconds, so the accuracy
+regression suite pins relative orderings (deeper topology != faster,
+more hosts != less congestion, ...). ``cxlmemsim sweep`` evaluates the
+spec's ``[[invariant]]`` blocks into the artifact; this gate re-checks
+the artifact so CI fails loudly even if the artifact was produced with
+a driver that ignored exit codes.
+
+For each artifact given:
+
+  * every cell must carry a report (no ``error`` cells),
+  * every invariant verdict must be ``holds: true`` — violations are
+    printed with the offending cell pair and values,
+  * ``--cells N`` (optional) pins the expected grid size,
+  * an artifact with zero invariants fails unless ``--allow-empty``:
+    an accuracy gate that checks nothing must be an explicit decision.
+
+Usage:  python3 tools/accuracy_gate.py SWEEP_table1.json [more...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(path: str, expected_cells: int | None, allow_empty: bool) -> bool:
+    with open(path) as f:
+        art = json.load(f)
+    ok = True
+    name = art.get("spec_name", path)
+
+    cells = art.get("cells", [])
+    if expected_cells is not None and len(cells) != expected_cells:
+        print(f"{name}: expected {expected_cells} cells, artifact has {len(cells)}")
+        ok = False
+    failed = [c for c in cells if "error" in c]
+    for c in failed:
+        print(f"{name}: cell `{c.get('id')}` failed: {c.get('error')}")
+        ok = False
+    if not cells:
+        print(f"{name}: artifact has no cells")
+        ok = False
+
+    invariants = art.get("invariants", [])
+    if not invariants and not allow_empty:
+        print(f"{name}: no invariants in artifact (use --allow-empty to accept)")
+        ok = False
+    for inv in invariants:
+        what = (
+            f"{inv.get('metric')} along {inv.get('axis')} "
+            f"in order {inv.get('order')}"
+        )
+        if inv.get("holds"):
+            print(
+                f"{name}: OK  {what} "
+                f"({inv.get('checked', 0)} pairs, {inv.get('missing', 0)} missing)"
+            )
+            continue
+        ok = False
+        print(f"{name}: FAIL {what}")
+        for v in inv.get("violations", []):
+            print(
+                f"  at {v.get('at') or '(unpinned)'}: "
+                f"{v.get('from')} = {v.get('from_value')} -> "
+                f"{v.get('to')} = {v.get('to_value')}"
+            )
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifacts", nargs="+", help="sweep artifact JSON files")
+    ap.add_argument("--cells", type=int, default=None, help="expected cell count")
+    ap.add_argument(
+        "--allow-empty",
+        action="store_true",
+        help="accept artifacts whose spec declared no invariants",
+    )
+    args = ap.parse_args()
+
+    ok = True
+    for path in args.artifacts:
+        ok = check(path, args.cells, args.allow_empty) and ok
+    if ok:
+        print(f"accuracy_gate: OK — {len(args.artifacts)} artifact(s)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

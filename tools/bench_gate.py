@@ -19,6 +19,7 @@ Gated entries / metrics (the hot paths named in ROADMAP):
   policy_epoch     empty_stack_ns_per_epoch   lower is better
   policy_epoch     full_stack_ns_per_epoch    lower is better
   pipeline_overlap pipelined_epochs_per_s     higher is better
+  sweep            cells_per_s                higher is better
 
 A missing gated entry or metric in either file is a hard failure:
 schema drift must be an explicit decision (refresh the baseline with
@@ -55,6 +56,7 @@ GATES = {
         ("full_stack_ns_per_epoch", "lower"),
     ],
     "pipeline_overlap": [("pipelined_epochs_per_s", "higher")],
+    "sweep": [("cells_per_s", "higher")],
 }
 
 

@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""CLI-doc drift gate: docs/CLI.md must match rust/src/main.rs.
+
+Extracts every flag the binary reads (``args.str("x", ..)``,
+``.opt_str("x")``, ``.f64/.u64/.usize/.bool``) from main.rs and every
+documented flag (a ``| `--x ...`` table row) from docs/CLI.md, then
+fails (exit 1) listing the drift in BOTH directions:
+
+  * a flag the binary reads but CLI.md does not document, or
+  * a flag CLI.md documents but the binary no longer reads.
+
+Run from the repo root (CI does):  python3 tools/check_cli_docs.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# accessor calls may be split across lines by rustfmt, so match the
+# method name through whitespace: `.str(\n  "workloads", ...`
+ACCESSOR = re.compile(
+    r'\.\s*(?:str|opt_str|f64|u64|usize|bool)\(\s*"([a-z0-9-]+)"', re.S
+)
+DOC_ROW = re.compile(r"^\|\s*`--([a-z0-9-]+)[ =`]", re.M)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--main", default="rust/src/main.rs")
+    ap.add_argument("--doc", default="docs/CLI.md")
+    args = ap.parse_args()
+
+    src = Path(args.main).read_text()
+    doc = Path(args.doc).read_text()
+
+    in_binary = set(ACCESSOR.findall(src))
+    in_doc = set(DOC_ROW.findall(doc))
+
+    undocumented = sorted(in_binary - in_doc)
+    stale = sorted(in_doc - in_binary)
+
+    ok = True
+    if undocumented:
+        ok = False
+        print(f"{args.doc}: missing rows for flags read by {args.main}:")
+        for f in undocumented:
+            print(f"  --{f}")
+    if stale:
+        ok = False
+        print(f"{args.doc}: documents flags {args.main} does not read:")
+        for f in stale:
+            print(f"  --{f}")
+    if ok:
+        print(
+            f"check_cli_docs: OK — {len(in_binary)} flags in {args.main}, "
+            f"all documented in {args.doc}"
+        )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
