@@ -650,6 +650,42 @@ fn main() {
                 ("failover_migrated_bytes", json::num(chaos_rep.failover_migrated_bytes as f64)),
             ]),
         ));
+
+        // --- armed-but-idle MTBF soak: generated plans ride the same
+        // ~free barrier. A seeded soak draws its whole schedule up
+        // front, so a plan whose first event lies past the horizon
+        // must cost what any armed-idle plan costs — gated as
+        // fault_soak.armed_epochs_per_s. The seed is fixed but `e` is
+        // machine-measured, so grow the MTBF until every drawn start
+        // provably clears the horizon instead of assuming one draw.
+        let mut mult = 1_000u64;
+        let soak = loop {
+            let spec = format!(
+                "mtbf={},epochs={},kinds=storm|retrain|offline+online,window=4,warmup=2,\
+                 rd=120,wr=60",
+                e.max(1) * mult,
+                e.max(1) * mult * 4
+            );
+            let p = FaultPlan::generate(7, &spec).unwrap();
+            if !p.events.is_empty() && p.events.iter().all(|ev| ev.start > e) {
+                break p;
+            }
+            mult *= 10;
+        };
+        let (soak_rate, soak_rep) = measure(Some(soak));
+        assert_eq!(soak_rep.faults_injected, 0, "soak plan must stay idle past the horizon");
+        println!(
+            "fault soak:           armed-idle {soak_rate:>8.0} ep/s ({:.2}x vs fault-free)",
+            free_rate / soak_rate
+        );
+        results.push((
+            "fault_soak",
+            json::obj(vec![
+                ("epochs", json::num(e as f64)),
+                ("armed_epochs_per_s", json::num(soak_rate)),
+                ("armed_overhead", json::num(free_rate / soak_rate)),
+            ]),
+        ));
     }
 
     // --- pipelined epoch execution: pump/analysis overlap ----------

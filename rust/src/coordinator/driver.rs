@@ -337,8 +337,9 @@ impl EpochDriver {
 /// driver *before* the stack's phase-1 hooks:
 ///
 /// 1. advance the schedule ([`FaultState::epoch_begin`], plan order);
-/// 2. on an overlay-revision edge, mirror the offline mask into the
-///    stack so hooks (and failover itself) refuse dead destinations;
+/// 2. on an overlay-revision edge, mirror the offline and degraded
+///    masks into the stack so hooks (and failover itself) refuse dead
+///    destinations and fault-aware policies see degradation;
 /// 3. sweep offline pools that still hold live bytes — each fails over
 ///    to the fallback pool through the stack's cost-modeled migration
 ///    machinery (copy traffic + stall charged like any policy move),
@@ -356,6 +357,7 @@ pub(crate) fn fault_epoch_barrier(
     let changed = fault.epoch_begin(epoch);
     if changed {
         stack.set_offline_pools(&fault.offline);
+        stack.set_degraded_pools(fault.degraded());
     }
     if fault.any_offline() {
         // cheap byte check per pool; regions allocated onto an offline
@@ -414,12 +416,11 @@ impl EpochFlush for PerEpochAnalyze<'_, '_> {
         }
         if let Some(fault) = &mut self.fault {
             self.model.set_fault_overlay(fault.overlay());
-            // exact storm attribution: stage 1 is a linear dot product
-            // over post-injection bins, so the storm's share of `lat`
-            // is recoverable in closed form (a sub-component of
-            // lat_delay_ns, not an addition to the total)
-            fault.retry_delay_ns +=
-                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
+            // exact storm / warm-up attribution: stage 1 is a linear
+            // dot product over post-injection bins, so each adder's
+            // share of `lat` is recoverable in closed form (a
+            // sub-component of lat_delay_ns, not an addition to it)
+            fault.attribute_epoch_delays(|p| bins.read_count(p), |p| bins.write_count(p));
         }
         let out = self.model.analyze(&TimingInputs {
             reads: &bins.reads,
@@ -599,33 +600,43 @@ impl EpochFlush for BatchedFlush<'_, '_> {
         report: &mut SimReport,
     ) -> anyhow::Result<()> {
         if self.fault.is_some() {
-            let changed = {
-                let fault = self.fault.as_mut().unwrap();
-                if let Some(stack) = &mut self.stack {
-                    fault_epoch_barrier(fault, stack, tracker, self.epoch, self.bytes_per_ev)?
-                } else {
-                    fault.epoch_begin(self.epoch)
-                }
-            };
-            // the barrier's failover stall belongs to THIS epoch: park
-            // it across the early flush below, or the first *parked*
-            // epoch's phase-2 would take it — a different stall
-            // placement than the sequential driver, which would break
-            // group-1 vs group-256 bit-identity
-            let barrier_stall = match &mut self.stack {
-                Some(stack) => stack.take_accrued_stall_ns(),
-                None => 0.0,
-            };
+            // the barrier steps run inline (not via fault_epoch_barrier)
+            // because their order interleaves with the early flush: the
+            // parked epochs' phase-2 hooks must run under the offline /
+            // degraded masks their epochs ran under, so the schedule
+            // advances and the group flushes BEFORE the new masks are
+            // mirrored into the stack — and the failover sweep runs
+            // after, so its stall is parked with THIS epoch below,
+            // matching the sequential driver's stall placement
+            let changed = self.fault.as_mut().unwrap().epoch_begin(self.epoch);
             if changed {
-                // flush the parked epochs under the overlay they ran
-                // under, then re-snapshot for the new window
+                // flush the parked epochs under the overlay and masks
+                // they ran under, then re-snapshot for the new window
                 if !self.pending.is_empty() {
                     self.flush_group(tracker, report)?;
                 }
-                self.group_overlay = self.fault.as_ref().unwrap().overlay().cloned();
+                let fault = self.fault.as_mut().unwrap();
+                self.group_overlay = fault.overlay().cloned();
+                if let Some(stack) = &mut self.stack {
+                    stack.set_offline_pools(&fault.offline);
+                    stack.set_degraded_pools(fault.degraded());
+                }
             }
-            if let Some(stack) = &mut self.stack {
-                stack.credit_accrued_stall_ns(barrier_stall);
+            let fault = self.fault.as_mut().unwrap();
+            if fault.any_offline() {
+                if let Some(stack) = &mut self.stack {
+                    // same sweep as fault_epoch_barrier: evacuate
+                    // offline pools that still hold live bytes
+                    for from in 0..fault.offline.len() {
+                        if fault.offline[from]
+                            && tracker.stats.pool_bytes.get(from).copied().unwrap_or(0) > 0
+                        {
+                            let to = fault.fallback_pool(from)?;
+                            fault.failover_migrated_bytes +=
+                                stack.failover_pool(tracker, from, to, self.bytes_per_ev);
+                        }
+                    }
+                }
             }
         }
         // phase 1 runs on the live bins, before they are parked — bin
@@ -635,11 +646,10 @@ impl EpochFlush for BatchedFlush<'_, '_> {
             stack.before_analysis(bins, tracker, self.bytes_per_ev);
         }
         if let Some(fault) = &mut self.fault {
-            // storm attribution happens at boundary time, on the live
-            // post-injection bins — identical to the sequential driver
-            // regardless of when the group flushes
-            fault.retry_delay_ns +=
-                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
+            // storm / warm-up attribution happens at boundary time, on
+            // the live post-injection bins — identical to the
+            // sequential driver regardless of when the group flushes
+            fault.attribute_epoch_delays(|p| bins.read_count(p), |p| bins.write_count(p));
         }
         let mut ep = self.spare.pop().unwrap_or_else(|| PendingEpoch {
             reads: Vec::with_capacity(bins.reads.len()),

@@ -329,10 +329,9 @@ impl EpochFlush for PipelinedAnalyze<'_> {
             stack.before_analysis(bins, tracker, self.bytes_per_ev);
         }
         if let Some(fault) = &mut self.fault {
-            // storm attribution at boundary time on the live
+            // storm / warm-up attribution at boundary time on the live
             // post-injection bins — identical to the serial driver
-            fault.retry_delay_ns +=
-                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
+            fault.attribute_epoch_delays(|p| bins.read_count(p), |p| bins.write_count(p));
         }
         let (mut reads, mut writes) = self.spare_buf.take().unwrap_or_default();
         reads.clear();
@@ -642,20 +641,14 @@ impl EpochFlush for PipelinedBatchFlush<'_> {
             self.started = Some(Instant::now());
         }
         if self.fault.is_some() {
-            let changed = {
-                let fault = self.fault.as_mut().unwrap();
-                if let Some(stack) = &mut self.stack {
-                    fault_epoch_barrier(fault, stack, tracker, self.epoch, self.bytes_per_ev)?
-                } else {
-                    fault.epoch_begin(self.epoch)
-                }
-            };
-            // park the barrier's failover stall across the early flush
-            // (`BatchedFlush` rule: it belongs to THIS epoch)
-            let barrier_stall = match &mut self.stack {
-                Some(stack) => stack.take_accrued_stall_ns(),
-                None => 0.0,
-            };
+            // Inline barrier, ordered like `BatchedFlush`: advance the
+            // schedule, land everything parked or in flight under the
+            // OLD masks/overlay, and only then mirror the new masks to
+            // the stack and run the failover sweep — so a parked
+            // group's phase-2 sees the pool state its epochs actually
+            // ran under, and the failover stall accrues after the
+            // flush and parks with THIS epoch's phase-1 stall.
+            let changed = self.fault.as_mut().unwrap().epoch_begin(self.epoch);
             if changed {
                 // overlay edge: everything parked or in flight ran
                 // under the old overlay — land all of it first
@@ -667,9 +660,25 @@ impl EpochFlush for PipelinedBatchFlush<'_> {
                 }
                 self.group_overlay = self.fault.as_ref().unwrap().overlay().cloned();
                 self.overlay_dirty = true;
+                let fault = self.fault.as_mut().unwrap();
+                if let Some(stack) = &mut self.stack {
+                    stack.set_offline_pools(&fault.offline);
+                    stack.set_degraded_pools(fault.degraded());
+                }
             }
-            if let Some(stack) = &mut self.stack {
-                stack.credit_accrued_stall_ns(barrier_stall);
+            let fault = self.fault.as_mut().unwrap();
+            if fault.any_offline() {
+                if let Some(stack) = &mut self.stack {
+                    for from in 0..fault.offline.len() {
+                        if fault.offline[from]
+                            && tracker.stats.pool_bytes.get(from).copied().unwrap_or(0) > 0
+                        {
+                            let to = fault.fallback_pool(from)?;
+                            fault.failover_migrated_bytes +=
+                                stack.failover_pool(tracker, from, to, self.bytes_per_ev);
+                        }
+                    }
+                }
             }
         }
         // phase 1 on the live bins, before they are parked
@@ -677,8 +686,7 @@ impl EpochFlush for PipelinedBatchFlush<'_> {
             stack.before_analysis(bins, tracker, self.bytes_per_ev);
         }
         if let Some(fault) = &mut self.fault {
-            fault.retry_delay_ns +=
-                fault.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
+            fault.attribute_epoch_delays(|p| bins.read_count(p), |p| bins.write_count(p));
         }
         let mut ep = self.spare.pop().unwrap_or_else(|| PendingEpoch {
             reads: Vec::with_capacity(bins.reads.len()),

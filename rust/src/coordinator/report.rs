@@ -142,6 +142,16 @@ pub struct SimReport {
     pub throttled_epochs: u64,
     pub pools_offline: u64,
     pub failover_migrated_bytes: u64,
+    /// Availability lifecycle (`online` fault kind + `drain` policy):
+    /// offline pools brought back by an `online` event, the transient
+    /// warm-up latency charged while re-onlined pools re-populate (a
+    /// sub-component of `lat_delay_ns`, disjoint from
+    /// `retry_delay_ns`), and bytes the `FaultDrain` policy moved in
+    /// either direction — proactive evacuation off degraded pools plus
+    /// post-recovery re-admission (a subset of `migrated_bytes`).
+    pub pools_reonlined: u64,
+    pub warmup_delay_ns: f64,
+    pub drain_migrated_bytes: u64,
     pub epochs: Vec<EpochRecord>,
 }
 
@@ -190,6 +200,9 @@ impl SimReport {
             throttled_epochs: 0,
             pools_offline: 0,
             failover_migrated_bytes: 0,
+            pools_reonlined: 0,
+            warmup_delay_ns: 0.0,
+            drain_migrated_bytes: 0,
             epochs: Vec::new(),
         }
     }
@@ -256,6 +269,7 @@ impl SimReport {
                 moved_bytes,
             })
             .collect();
+        self.drain_migrated_bytes = stack.drained_bytes();
     }
 
     /// Copy the resolved fault schedule's end-of-run counters into the
@@ -268,6 +282,8 @@ impl SimReport {
         self.throttled_epochs = fault.throttled_epochs;
         self.pools_offline = fault.pools_offline;
         self.failover_migrated_bytes = fault.failover_migrated_bytes;
+        self.pools_reonlined = fault.pools_reonlined;
+        self.warmup_delay_ns = fault.warmup_delay_ns;
     }
 
     pub(crate) fn finish(
@@ -365,6 +381,15 @@ impl SimReport {
                 self.pools_offline,
                 self.failover_migrated_bytes as f64 / 1024.0
             ));
+            if self.pools_reonlined > 0 || self.drain_migrated_bytes > 0 {
+                s.push_str(&format!(
+                    "  recovery: {} pools re-onlined, {:.3} ms warm-up delay, \
+                     {:.1} KB drain-migrated\n",
+                    self.pools_reonlined,
+                    self.warmup_delay_ns / 1e6,
+                    self.drain_migrated_bytes as f64 / 1024.0
+                ));
+            }
         }
         s.push_str(&format!(
             "  {} epochs, {} accesses, {} LLC misses ({:.3}% miss rate), {} writebacks\n",
@@ -430,6 +455,9 @@ impl SimReport {
             ("throttled_epochs", json::num(self.throttled_epochs as f64)),
             ("pools_offline", json::num(self.pools_offline as f64)),
             ("failover_migrated_bytes", json::num(self.failover_migrated_bytes as f64)),
+            ("pools_reonlined", json::num(self.pools_reonlined as f64)),
+            ("warmup_delay_ms", json::num(self.warmup_delay_ns / 1e6)),
+            ("drain_migrated_bytes", json::num(self.drain_migrated_bytes as f64)),
             (
                 "policies",
                 Json::Arr(
@@ -500,6 +528,8 @@ pub const SHARD_SUM_KEYS: &[&str] = &[
     "retry_delay_ms",
     "throttled_epochs",
     "failover_migrated_bytes",
+    "warmup_delay_ms",
+    "drain_migrated_bytes",
     "epochs",
     "accesses",
     "llc_misses",
@@ -516,7 +546,8 @@ pub const SHARD_SUM_KEYS: &[&str] = &[
 /// Keys where the merged value is the per-shard maximum (offline pools
 /// are the same set in every shard; thread/pipeline observability
 /// reports the largest fan-out any shard used).
-pub const SHARD_MAX_KEYS: &[&str] = &["pools_offline", "analyzer_threads_used", "pipeline_depth"];
+pub const SHARD_MAX_KEYS: &[&str] =
+    &["pools_offline", "pools_reonlined", "analyzer_threads_used", "pipeline_depth"];
 
 /// Merge one shard's `SimReport::to_json` object into an accumulator
 /// (itself a shard report, typically shard 0's). Scalar counters sum

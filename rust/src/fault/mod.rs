@@ -1,6 +1,6 @@
-//! Deterministic CXL.mem RAS fault injection.
+//! Deterministic CXL.mem RAS fault injection and availability lifecycle.
 //!
-//! A [`FaultPlan`] schedules three kinds of CXL RAS events against
+//! A [`FaultPlan`] schedules four kinds of CXL RAS events against
 //! topology pools, resolved at every epoch barrier in plan order on
 //! all three drivers (sequential, batched, multihost):
 //!
@@ -9,25 +9,43 @@
 //! * **link retraining** — every switch row on the pool's path to the
 //!   root has its bandwidth scaled by a fraction for a window of
 //!   epochs;
-//! * **pool offline** — permanent device hot-remove: the pool's live
-//!   regions fail over to the fallback pool through the cost-modeled
-//!   migration machinery, and policies see the reduced pool set.
+//! * **pool offline** — device hot-remove: the pool's live regions
+//!   fail over to the fallback pool through the cost-modeled
+//!   migration machinery, and policies see the reduced pool set;
+//! * **pool online** — ends a prior `offline` window on the same
+//!   pool: the pool rejoins the topology with a warm-up window of
+//!   `warmup_epochs` during which a transient latency adder decays
+//!   linearly from its full value to zero (cold device caches /
+//!   retrained link), so availability scenarios round-trip
+//!   offline → failover → recovery → re-balance.
 //!
-//! Plans are written either as a TOML file (`--faults plan.toml`) or
-//! inline (`--fault "storm:pool1@5+10:rd=200,wr=300;offline:pool0@12"`).
-//! Pool references hold *names* (or integer pool ids) until
-//! [`FaultPlan::resolve`] binds them against a concrete [`Topology`],
-//! which keeps `SimConfig` topology-independent. An optional seeded
-//! jitter (`seed` + `jitter_epochs`) perturbs start epochs at resolve
-//! time, in plan order, through the repo's own deterministic
-//! [`crate::util::rng::Rng`] — same plan + same seed is bit-identical
-//! everywhere.
+//! Plans are written as a TOML file (`--faults plan.toml`), inline
+//! (`--fault "storm:pool1@5+10:rd=200,wr=300;offline:pool0@12"`), or
+//! generated from a seeded MTBF soak spec
+//! ([`FaultPlan::generate`], `--fault-soak "mtbf=200,seed=7"`) that
+//! draws exponential inter-arrival times from the repo's own
+//! deterministic [`crate::util::rng::Rng`] — same spec + same seed is
+//! bit-identical everywhere. Pool references hold *names* (or integer
+//! pool ids) until [`FaultPlan::resolve`] binds them against a
+//! concrete [`Topology`], which keeps `SimConfig`
+//! topology-independent. An optional seeded jitter (`seed` +
+//! `jitter_epochs`) perturbs start epochs at resolve time, in plan
+//! order.
+//!
+//! In multihost runs an event may carry a `host = "h1"` scope:
+//! [`FaultPlan::split_hosts`] routes it into that host's private
+//! sub-plan (only retry storms may be host-scoped — retraining and
+//! hot-remove are fabric-wide), and the coordinator advances the
+//! per-host schedules at the barrier in host order.
 //!
 //! At run time a [`FaultState`] owns the resolved schedule: the driver
 //! calls [`FaultState::epoch_begin`] at each barrier, which
 //! activates / expires windows and rebuilds the additive / multiplicative
 //! [`FaultOverlay`] that the analyzer applies over its base tensors.
-//! The fault-free path never constructs any of this.
+//! Every warm-up decay step is a revision edge, so the batched and
+//! pipelined drivers flush their pending groups and each epoch is
+//! analyzed under its own overlay. The fault-free path never
+//! constructs any of this.
 
 use crate::topology::{PoolId, Topology};
 use crate::util::rng::Rng;
@@ -42,12 +60,18 @@ pub enum FaultError {
     UnknownPool(String),
     /// A transient fault (storm / retrain) with a zero-length window.
     ZeroWindow(String),
-    /// Two offline events target the same pool.
+    /// An offline event targets a pool whose previous offline window
+    /// was never closed by an `online` event.
     OverlappingOffline(String),
+    /// An online event targets a pool that has no open offline window.
+    OnlineWithoutOffline(String),
+    /// A host-scoped event is invalid (bad host name, non-storm kind,
+    /// or a host-scoped plan handed to a single-host driver).
+    HostScope(String),
     /// Every pool (including local DRAM) is offline: no reachable pool
     /// is left to fail over to.
     NoReachablePool,
-    /// Malformed plan text (TOML or inline spec).
+    /// Malformed plan text (TOML, inline spec, or soak spec).
     Parse(String),
 }
 
@@ -63,6 +87,10 @@ impl fmt::Display for FaultError {
             FaultError::OverlappingOffline(p) => {
                 write!(f, "fault plan: pool `{p}` is taken offline more than once")
             }
+            FaultError::OnlineWithoutOffline(p) => {
+                write!(f, "fault plan: `online` on pool `{p}` without a prior open `offline`")
+            }
+            FaultError::HostScope(m) => write!(f, "fault plan: {m}"),
             FaultError::NoReachablePool => {
                 write!(f, "fault degradation: all pools offline, no reachable pool to fail over to")
             }
@@ -80,8 +108,13 @@ pub enum FaultKind {
     RetryStorm { rd_add_ns: f32, wr_add_ns: f32 },
     /// Link retraining: path bandwidth scaled to `frac` of nominal.
     LinkRetrain { frac: f32 },
-    /// Permanent device hot-remove.
+    /// Device hot-remove; permanent unless a later `PoolOnline` event
+    /// closes the window.
     PoolOffline,
+    /// Device hot-add ending a prior offline window: the pool rejoins
+    /// the topology and serves traffic under a transient latency adder
+    /// that decays linearly to zero over `warmup_epochs`.
+    PoolOnline { warmup_epochs: u64, rd_add_ns: f32, wr_add_ns: f32 },
 }
 
 /// One scheduled event, pool still by name (or numeric id string).
@@ -90,9 +123,15 @@ pub struct FaultSpec {
     pub pool: String,
     /// First epoch (0-based) the fault is active in.
     pub start: u64,
-    /// Window length in epochs; ignored for `PoolOffline` (permanent).
+    /// Window length in epochs; ignored for `PoolOffline` (open until
+    /// a matching `PoolOnline`) and `PoolOnline` (whose window is its
+    /// `warmup_epochs`).
     pub epochs: u64,
     pub kind: FaultKind,
+    /// Multihost scope: `None` = fabric-wide (every host), `Some("h1")`
+    /// = only host 1's traffic sees it. Only retry storms may be
+    /// host-scoped; single-host drivers reject host-scoped plans.
+    pub host: Option<String>,
 }
 
 /// A parsed, unresolved fault schedule (part of `SimConfig`).
@@ -111,13 +150,15 @@ impl FaultPlan {
     /// seed = 42            # optional, default 0
     /// jitter_epochs = 0    # optional
     /// [[fault]]
-    /// kind = "storm"       # storm | retrain | offline
+    /// kind = "storm"       # storm | retrain | offline | online
     /// pool = "pool1"       # pool name or numeric pool id
     /// start = 5
     /// epochs = 10          # required for storm/retrain
-    /// rd_add_ns = 200      # storm only
-    /// wr_add_ns = 300      # storm only
+    /// rd_add_ns = 200      # storm / online warm-up adder
+    /// wr_add_ns = 300      # storm / online warm-up adder
     /// frac = 0.5           # retrain only
+    /// warmup_epochs = 4    # online only (default 0 = instant)
+    /// host = "h1"          # optional multihost scope (storms only)
     /// ```
     pub fn parse_toml(src: &str) -> Result<FaultPlan, FaultError> {
         let doc = TomlDoc::parse(src).map_err(FaultError::Parse)?;
@@ -144,6 +185,7 @@ impl FaultPlan {
                 .ok_or_else(|| FaultError::Parse(format!("{ctx}: missing `pool`")))?;
             let start = num(t, "start", 0.0) as u64;
             let epochs = num(t, "epochs", 0.0) as u64;
+            let host = t.get("host").and_then(|v| v.as_str()).map(|s| s.to_string());
             let kind = match kind_s {
                 "storm" => FaultKind::RetryStorm {
                     rd_add_ns: num(t, "rd_add_ns", 0.0) as f32,
@@ -159,13 +201,18 @@ impl FaultPlan {
                     FaultKind::LinkRetrain { frac }
                 }
                 "offline" => FaultKind::PoolOffline,
+                "online" => FaultKind::PoolOnline {
+                    warmup_epochs: num(t, "warmup_epochs", 0.0) as u64,
+                    rd_add_ns: num(t, "rd_add_ns", 0.0) as f32,
+                    wr_add_ns: num(t, "wr_add_ns", 0.0) as f32,
+                },
                 other => {
                     return Err(FaultError::Parse(format!(
-                        "{ctx}: unknown kind `{other}` (storm | retrain | offline)"
+                        "{ctx}: unknown kind `{other}` (storm | retrain | offline | online)"
                     )))
                 }
             };
-            plan.events.push(FaultSpec { pool, start, epochs, kind });
+            plan.events.push(FaultSpec { pool, start, epochs, kind, host });
         }
         if plan.events.is_empty() {
             return Err(FaultError::Parse("no [[fault]] entries in plan".into()));
@@ -177,8 +224,12 @@ impl FaultPlan {
     /// `kind:pool@start[+epochs][:k=v,...]`, e.g.
     ///
     /// ```text
-    /// storm:pool1@5+10:rd=200,wr=300;retrain:pool0@8+4:frac=0.5;offline:direct0@12
+    /// storm:pool1@5+10:rd=200,wr=300;offline:pool0@12;online:pool0@20:warmup=4,rd=100
     /// ```
+    ///
+    /// Params: `rd` / `wr` (storm or online warm-up adder, ns),
+    /// `frac` (retrain), `warmup` (online window, epochs), `host`
+    /// (multihost scope, storms only).
     pub fn parse_inline(spec: &str) -> Result<FaultPlan, FaultError> {
         let mut plan = FaultPlan::default();
         for ev in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
@@ -204,11 +255,16 @@ impl FaultPlan {
                     .map_err(|_| FaultError::Parse(format!("`{ev}`: bad window `{e}`")))?,
                 None => 0,
             };
+            let mut host = None;
             let mut kv = std::collections::BTreeMap::new();
             for p in params.split(',').map(str::trim).filter(|s| !s.is_empty()) {
                 let (k, v) = p
                     .split_once('=')
                     .ok_or_else(|| FaultError::Parse(format!("`{ev}`: bad param `{p}`")))?;
+                if k.trim() == "host" {
+                    host = Some(v.trim().to_string());
+                    continue;
+                }
                 let v: f64 = v
                     .trim()
                     .parse()
@@ -230,13 +286,24 @@ impl FaultPlan {
                     FaultKind::LinkRetrain { frac }
                 }
                 "offline" => FaultKind::PoolOffline,
+                "online" => FaultKind::PoolOnline {
+                    warmup_epochs: kv.get("warmup").copied().unwrap_or(0.0) as u64,
+                    rd_add_ns: kv.get("rd").copied().unwrap_or(0.0) as f32,
+                    wr_add_ns: kv.get("wr").copied().unwrap_or(0.0) as f32,
+                },
                 other => {
                     return Err(FaultError::Parse(format!(
-                        "`{ev}`: unknown kind `{other}` (storm | retrain | offline)"
+                        "`{ev}`: unknown kind `{other}` (storm | retrain | offline | online)"
                     )))
                 }
             };
-            plan.events.push(FaultSpec { pool: pool.trim().to_string(), start, epochs, kind });
+            plan.events.push(FaultSpec {
+                pool: pool.trim().to_string(),
+                start,
+                epochs,
+                kind,
+                host,
+            });
         }
         if plan.events.is_empty() {
             return Err(FaultError::Parse("empty fault spec".into()));
@@ -244,27 +311,265 @@ impl FaultPlan {
         Ok(plan)
     }
 
+    /// Generate a seeded MTBF soak plan from a comma-separated spec,
+    /// e.g. `"mtbf=200,kinds=storm|retrain|offline+online,seed=7"`.
+    ///
+    /// Keys: `mtbf` (mean epochs between events, required), `kinds`
+    /// (pipe-separated from `storm`, `retrain`, `offline`,
+    /// `offline+online`; default `storm|retrain|offline+online`),
+    /// `epochs` (horizon, default 1000), `window` (mean window /
+    /// outage length, default `max(mtbf/4, 1)`), `pools`
+    /// (pipe-separated names or ids, default `1`), `rd` / `wr` (storm
+    /// and warm-up adders, default 250 / 125 ns), `frac` (retrain,
+    /// default 0.5), `warmup` (re-online warm-up epochs, default 2),
+    /// `seed` (overrides the function argument).
+    ///
+    /// Inter-arrival times and window lengths are exponential draws
+    /// from the repo's deterministic RNG, so the same spec + seed is
+    /// bit-identical everywhere. An `offline` draw on a pool that is
+    /// already down (or permanently removed) is emitted as a storm
+    /// instead, keeping the draw sequence — and thus the whole plan —
+    /// deterministic while never violating the offline/online
+    /// lifecycle.
+    pub fn generate(seed: u64, spec: &str) -> Result<FaultPlan, FaultError> {
+        let mut mtbf: Option<f64> = None;
+        let mut kinds_s = "storm|retrain|offline+online".to_string();
+        let mut horizon: u64 = 1000;
+        let mut window: Option<f64> = None;
+        let mut pools_s = "1".to_string();
+        let mut rd = 250.0f64;
+        let mut wr = 125.0f64;
+        let mut frac = 0.5f64;
+        let mut warmup: u64 = 2;
+        let mut eff_seed = seed;
+        let fnum = |k: &str, v: &str| -> Result<f64, FaultError> {
+            v.parse::<f64>()
+                .map_err(|_| FaultError::Parse(format!("soak spec: bad value `{v}` for `{k}`")))
+        };
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                FaultError::Parse(format!("soak spec: bad `{part}` (expected key=value)"))
+            })?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "mtbf" => {
+                    let m = fnum(k, v)?;
+                    if !(m > 0.0) {
+                        return Err(FaultError::Parse(format!(
+                            "soak spec: `mtbf` must be > 0, got {v}"
+                        )));
+                    }
+                    mtbf = Some(m);
+                }
+                "kinds" => kinds_s = v.to_string(),
+                "epochs" => {
+                    horizon = fnum(k, v)? as u64;
+                    if horizon == 0 {
+                        return Err(FaultError::Parse(format!(
+                            "soak spec: `epochs` must be > 0, got {v}"
+                        )));
+                    }
+                }
+                "window" => {
+                    let w = fnum(k, v)?;
+                    if !(w > 0.0) {
+                        return Err(FaultError::Parse(format!(
+                            "soak spec: `window` must be > 0, got {v}"
+                        )));
+                    }
+                    window = Some(w);
+                }
+                "pools" => pools_s = v.to_string(),
+                "rd" => rd = fnum(k, v)?,
+                "wr" => wr = fnum(k, v)?,
+                "frac" => {
+                    frac = fnum(k, v)?;
+                    if !(frac > 0.0 && frac <= 1.0) {
+                        return Err(FaultError::Parse(format!(
+                            "soak spec: `frac` must be in (0, 1], got {v}"
+                        )));
+                    }
+                }
+                "warmup" => warmup = fnum(k, v)? as u64,
+                "seed" => eff_seed = fnum(k, v)? as u64,
+                other => {
+                    return Err(FaultError::Parse(format!(
+                        "soak spec: unknown key `{other}` (mtbf | kinds | epochs | window | \
+                         pools | rd | wr | frac | warmup | seed)"
+                    )))
+                }
+            }
+        }
+        let mtbf = mtbf
+            .ok_or_else(|| FaultError::Parse("soak spec: `mtbf` is required".into()))?;
+        let window = window.unwrap_or((mtbf / 4.0).max(1.0));
+        let kinds: Vec<&str> = kinds_s.split('|').map(str::trim).filter(|s| !s.is_empty()).collect();
+        if kinds.is_empty() {
+            return Err(FaultError::Parse("soak spec: empty `kinds`".into()));
+        }
+        for k in &kinds {
+            if !matches!(*k, "storm" | "retrain" | "offline" | "offline+online") {
+                return Err(FaultError::Parse(format!(
+                    "soak spec: unknown kind `{k}` (storm | retrain | offline | offline+online)"
+                )));
+            }
+        }
+        let pools: Vec<String> =
+            pools_s.split('|').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+        if pools.is_empty() {
+            return Err(FaultError::Parse("soak spec: empty `pools`".into()));
+        }
+        let mut rng = Rng::new(eff_seed ^ 0xfa17_50a6);
+        let mut t = 0.0f64;
+        // `gone`: permanently removed; `next_free`: first epoch a new
+        // offline window may open on the pool (past any prior outage +
+        // warm-up), so generated plans always satisfy the lifecycle.
+        let mut gone = vec![false; pools.len()];
+        let mut next_free = vec![0u64; pools.len()];
+        let mut events = Vec::new();
+        loop {
+            t += rng.exponential(mtbf);
+            let start = t.ceil() as u64;
+            if start >= horizon {
+                break;
+            }
+            let kind = kinds[rng.below(kinds.len() as u64) as usize];
+            let pi = rng.below(pools.len() as u64) as usize;
+            let wlen = rng.exponential(window).ceil().max(1.0) as u64;
+            let pool = pools[pi].clone();
+            let storm = |start: u64, wlen: u64| FaultSpec {
+                pool: pool.clone(),
+                start,
+                epochs: wlen,
+                kind: FaultKind::RetryStorm { rd_add_ns: rd as f32, wr_add_ns: wr as f32 },
+                host: None,
+            };
+            match kind {
+                "storm" => events.push(storm(start, wlen)),
+                "retrain" => events.push(FaultSpec {
+                    pool,
+                    start,
+                    epochs: wlen,
+                    kind: FaultKind::LinkRetrain { frac: frac as f32 },
+                    host: None,
+                }),
+                "offline" | "offline+online" => {
+                    if gone[pi] {
+                        // pool already removed for good — degrade the
+                        // draw to a storm so the schedule stays valid
+                        events.push(storm(start, wlen));
+                        continue;
+                    }
+                    let start = start.max(next_free[pi]);
+                    events.push(FaultSpec {
+                        pool: pool.clone(),
+                        start,
+                        epochs: 0,
+                        kind: FaultKind::PoolOffline,
+                        host: None,
+                    });
+                    if kind == "offline+online" {
+                        let up = start + wlen;
+                        events.push(FaultSpec {
+                            pool,
+                            start: up,
+                            epochs: 0,
+                            kind: FaultKind::PoolOnline {
+                                warmup_epochs: warmup,
+                                rd_add_ns: rd as f32,
+                                wr_add_ns: wr as f32,
+                            },
+                            host: None,
+                        });
+                        next_free[pi] = up + warmup + 1;
+                    } else {
+                        gone[pi] = true;
+                    }
+                }
+                _ => unreachable!("kinds validated above"),
+            }
+        }
+        Ok(FaultPlan { seed: eff_seed, jitter_epochs: 0, events })
+    }
+
+    /// Split a plan into the fabric-wide sub-plan and one sub-plan per
+    /// host for the multihost coordinator. Host-scoped events must be
+    /// retry storms (retraining and hot-remove affect the shared
+    /// fabric, not one host's link) and must name a valid host
+    /// (`"h1"` or `"1"`). Sub-plans inherit `seed` / `jitter_epochs`;
+    /// jitter is drawn per sub-plan in plan order at resolve time.
+    pub fn split_hosts(&self, nhosts: usize) -> Result<(FaultPlan, Vec<FaultPlan>), FaultError> {
+        let sub = |events| FaultPlan { seed: self.seed, jitter_epochs: self.jitter_epochs, events };
+        let mut global = Vec::new();
+        let mut per_host: Vec<Vec<FaultSpec>> = (0..nhosts).map(|_| Vec::new()).collect();
+        for spec in &self.events {
+            match &spec.host {
+                None => global.push(spec.clone()),
+                Some(h) => {
+                    let idx = h
+                        .strip_prefix('h')
+                        .unwrap_or(h)
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&i| i < nhosts)
+                        .ok_or_else(|| {
+                            FaultError::HostScope(format!(
+                                "unknown host `{h}` (hosts are h0..h{})",
+                                nhosts.saturating_sub(1)
+                            ))
+                        })?;
+                    if !matches!(spec.kind, FaultKind::RetryStorm { .. }) {
+                        return Err(FaultError::HostScope(format!(
+                            "host-scoped fault on `{}` must be a retry storm (retraining and \
+                             hot-remove are fabric-wide)",
+                            spec.pool
+                        )));
+                    }
+                    let mut s = spec.clone();
+                    s.host = None;
+                    per_host[idx].push(s);
+                }
+            }
+        }
+        Ok((sub(global), per_host.into_iter().map(sub).collect()))
+    }
+
     /// Bind pool names to ids against a concrete topology, validate the
     /// schedule, and apply the seeded start jitter — all in plan order,
     /// so the result is deterministic for a given (plan, topology).
+    ///
+    /// The offline/online lifecycle is validated here: an `offline`
+    /// while the pool's previous offline window is still open is
+    /// [`FaultError::OverlappingOffline`]; an `online` with no open
+    /// window is [`FaultError::OnlineWithoutOffline`]. An `online`
+    /// start is clamped to at least one epoch after its `offline` (so
+    /// seeded jitter can never invert the pair) and closes the offline
+    /// window at its own start.
     pub fn resolve(&self, topo: &Topology) -> Result<FaultState, FaultError> {
         let pools = topo.num_pools();
         let switches = topo.num_switches();
         let mut rng = Rng::new(self.seed ^ 0x5eed_fa17);
-        let mut offline_seen = vec![false; pools];
-        let mut events = Vec::with_capacity(self.events.len());
+        // index into `events` of the pool's still-open offline window
+        let mut open_offline: Vec<Option<usize>> = vec![None; pools];
+        let mut events: Vec<ResolvedFault> = Vec::with_capacity(self.events.len());
         for spec in &self.events {
+            if let Some(h) = &spec.host {
+                return Err(FaultError::HostScope(format!(
+                    "host-scoped fault (`host = \"{h}\"`) requires the multihost driver"
+                )));
+            }
             let pool = lookup_pool(topo, &spec.pool)
                 .ok_or_else(|| FaultError::UnknownPool(spec.pool.clone()))?;
             let jitter =
                 if self.jitter_epochs > 0 { rng.below(self.jitter_epochs + 1) } else { 0 };
             let start = spec.start + jitter;
-            let (end, kind) = match &spec.kind {
+            let (start, end, kind) = match &spec.kind {
                 FaultKind::RetryStorm { rd_add_ns, wr_add_ns } => {
                     if spec.epochs == 0 {
                         return Err(FaultError::ZeroWindow(spec.pool.clone()));
                     }
                     (
+                        start,
                         start + spec.epochs,
                         ResolvedKind::RetryStorm { rd: *rd_add_ns, wr: *wr_add_ns },
                     )
@@ -278,14 +583,26 @@ impl FaultPlan {
                     let rows: Vec<usize> = (0..switches)
                         .filter(|&s| path.contains(&topo.switch_nodes()[s]))
                         .collect();
-                    (start + spec.epochs, ResolvedKind::LinkRetrain { frac: *frac, rows })
+                    (start, start + spec.epochs, ResolvedKind::LinkRetrain { frac: *frac, rows })
                 }
                 FaultKind::PoolOffline => {
-                    if offline_seen[pool] {
+                    if open_offline[pool].is_some() {
                         return Err(FaultError::OverlappingOffline(spec.pool.clone()));
                     }
-                    offline_seen[pool] = true;
-                    (u64::MAX, ResolvedKind::PoolOffline)
+                    open_offline[pool] = Some(events.len());
+                    (start, u64::MAX, ResolvedKind::PoolOffline)
+                }
+                FaultKind::PoolOnline { warmup_epochs, rd_add_ns, wr_add_ns } => {
+                    let off = open_offline[pool]
+                        .take()
+                        .ok_or_else(|| FaultError::OnlineWithoutOffline(spec.pool.clone()))?;
+                    let start = start.max(events[off].start + 1);
+                    events[off].end = start;
+                    (
+                        start,
+                        start + warmup_epochs,
+                        ResolvedKind::PoolOnline { rd: *rd_add_ns, wr: *wr_add_ns },
+                    )
                 }
             };
             events.push(ResolvedFault { pool, start, end, kind, fired: false, active: false });
@@ -300,12 +617,17 @@ impl FaultPlan {
             overlay_active: false,
             revision: 0,
             offline: vec![false; pools],
+            degraded: vec![false; pools],
             storm_rd: vec![0.0; pools],
             storm_wr: vec![0.0; pools],
+            warm_rd: vec![0.0; pools],
+            warm_wr: vec![0.0; pools],
             faults_injected: 0,
             throttled_epochs: 0,
             pools_offline: 0,
+            pools_reonlined: 0,
             retry_delay_ns: 0.0,
+            warmup_delay_ns: 0.0,
             failover_migrated_bytes: 0,
         })
     }
@@ -340,13 +662,16 @@ enum ResolvedKind {
     RetryStorm { rd: f32, wr: f32 },
     LinkRetrain { frac: f32, rows: Vec<usize> },
     PoolOffline,
+    /// Warm-up adders at full strength; the per-epoch overlay scales
+    /// them by the remaining fraction of the window.
+    PoolOnline { rd: f32, wr: f32 },
 }
 
 #[derive(Debug, Clone)]
 struct ResolvedFault {
     pool: PoolId,
     start: u64,
-    /// Exclusive end epoch; `u64::MAX` for permanent events.
+    /// Exclusive end epoch; `u64::MAX` for never-recovered offlines.
     end: u64,
     kind: ResolvedKind,
     /// Counted toward `faults_injected` (once per event).
@@ -362,28 +687,45 @@ pub struct FaultState {
     events: Vec<ResolvedFault>,
     overlay: FaultOverlay,
     overlay_active: bool,
-    /// Bumped whenever the active overlay changes; the batched driver
-    /// flushes its pending group early on a revision edge so every
-    /// epoch is analyzed under its own overlay.
+    /// Bumped whenever the active overlay changes — membership edges
+    /// *and* every warm-up decay step; the batched driver flushes its
+    /// pending group early on a revision edge so every epoch is
+    /// analyzed under its own overlay.
     revision: u64,
-    /// Offline mask, `[P]` — pools permanently removed so far.
+    /// Offline mask, `[P]` — pools currently removed (an `online`
+    /// event clears the bit again).
     pub offline: Vec<bool>,
+    /// Degraded mask, `[P]` — pools targeted by an active storm,
+    /// retrain, or re-online warm-up window; the `drain` policy reads
+    /// this through `PolicyCtx` to proactively evacuate hot regions
+    /// and gate re-admission.
+    degraded: Vec<bool>,
     /// Currently-active storm adds, `[P]` — the exact stage-1 latency
     /// attribution basis for `retry_delay_ns`.
     storm_rd: Vec<f32>,
     storm_wr: Vec<f32>,
-    /// Events whose window has opened at least once.
+    /// Currently-active warm-up adds, `[P]` (already decay-scaled) —
+    /// the attribution basis for `warmup_delay_ns`.
+    warm_rd: Vec<f32>,
+    warm_wr: Vec<f32>,
+    /// Scheduled events fired so far (recoveries included).
     pub faults_injected: u64,
-    /// Epochs with at least one active transient window (storm or
-    /// retrain).
+    /// Epochs with at least one active transient window (storm,
+    /// retrain, or warm-up).
     pub throttled_epochs: u64,
-    /// Distinct pools taken offline.
+    /// Pool-offline transitions fired (a re-onlined pool going down
+    /// again counts again).
     pub pools_offline: u64,
+    /// Pool-online transitions fired (offline windows closed).
+    pub pools_reonlined: u64,
     /// Total extra latency injected by retry storms (exact: stage-1 is
     /// linear, so this is `Σ_p reads(p)·rd_add(p) + writes(p)·wr_add(p)`
     /// over post-injection bins — a sub-component of `lat_delay_ns`,
     /// not an addition to it).
     pub retry_delay_ns: f64,
+    /// Total extra latency injected by re-online warm-up adders, with
+    /// the same exact stage-1 attribution as `retry_delay_ns`.
+    pub warmup_delay_ns: f64,
     /// Bytes evacuated off offline pools by graceful degradation.
     pub failover_migrated_bytes: u64,
 }
@@ -391,45 +733,75 @@ pub struct FaultState {
 impl FaultState {
     /// Advance the schedule to `epoch` (0-based). Activates and
     /// expires windows in plan order, rebuilds the overlay on any
-    /// membership edge, and returns `true` when the overlay revision
-    /// changed (the batched driver's early-flush signal).
+    /// membership edge *and* on every active warm-up epoch (the decay
+    /// step changes the overlay), and returns `true` when the overlay
+    /// revision changed (the batched driver's early-flush signal).
     pub fn epoch_begin(&mut self, epoch: u64) -> bool {
         let mut changed = false;
         let mut any_transient = false;
+        let mut warming = false;
         for ev in &mut self.events {
             let active = epoch >= ev.start && epoch < ev.end;
-            if active && !ev.fired {
+            if epoch >= ev.start && !ev.fired {
                 ev.fired = true;
                 self.faults_injected += 1;
-                if matches!(ev.kind, ResolvedKind::PoolOffline) && !self.offline[ev.pool] {
-                    self.offline[ev.pool] = true;
-                    self.pools_offline += 1;
+                match &ev.kind {
+                    ResolvedKind::PoolOffline => {
+                        if !self.offline[ev.pool] {
+                            self.offline[ev.pool] = true;
+                            self.pools_offline += 1;
+                        }
+                    }
+                    ResolvedKind::PoolOnline { .. } => {
+                        if self.offline[ev.pool] {
+                            self.offline[ev.pool] = false;
+                            self.pools_reonlined += 1;
+                        }
+                        // a zero-warmup online never activates a
+                        // window, but the mask edge must still bump
+                        // the revision
+                        changed = true;
+                    }
+                    _ => {}
                 }
             }
             if active != ev.active {
                 ev.active = active;
                 changed = true;
             }
-            if active && !matches!(ev.kind, ResolvedKind::PoolOffline) {
-                any_transient = true;
+            if active {
+                match &ev.kind {
+                    ResolvedKind::PoolOffline => {}
+                    ResolvedKind::PoolOnline { rd, wr } => {
+                        any_transient = true;
+                        if *rd != 0.0 || *wr != 0.0 {
+                            warming = true;
+                        }
+                    }
+                    _ => any_transient = true,
+                }
             }
         }
         if any_transient {
             self.throttled_epochs += 1;
         }
-        if changed {
-            self.rebuild_overlay();
+        if changed || warming {
+            self.rebuild_overlay(epoch);
             self.revision += 1;
+            changed = true;
         }
         changed
     }
 
-    fn rebuild_overlay(&mut self) {
+    fn rebuild_overlay(&mut self, epoch: u64) {
         self.overlay.extra_rd_add.iter_mut().for_each(|v| *v = 0.0);
         self.overlay.extra_wr_add.iter_mut().for_each(|v| *v = 0.0);
         self.overlay.bw_scale.iter_mut().for_each(|v| *v = 1.0);
         self.storm_rd.iter_mut().for_each(|v| *v = 0.0);
         self.storm_wr.iter_mut().for_each(|v| *v = 0.0);
+        self.warm_rd.iter_mut().for_each(|v| *v = 0.0);
+        self.warm_wr.iter_mut().for_each(|v| *v = 0.0);
+        self.degraded.iter_mut().for_each(|v| *v = false);
         let mut any = false;
         for ev in &self.events {
             if !ev.active {
@@ -441,15 +813,32 @@ impl FaultState {
                     self.overlay.extra_wr_add[ev.pool] += wr;
                     self.storm_rd[ev.pool] += rd;
                     self.storm_wr[ev.pool] += wr;
+                    self.degraded[ev.pool] = true;
                     any = true;
                 }
                 ResolvedKind::LinkRetrain { frac, rows } => {
                     for &s in rows {
                         self.overlay.bw_scale[s] *= frac;
                     }
+                    self.degraded[ev.pool] = true;
                     any = true;
                 }
                 ResolvedKind::PoolOffline => {}
+                ResolvedKind::PoolOnline { rd, wr } => {
+                    // linear decay: full adder on the first warm-up
+                    // epoch, 1/warmup of it on the last
+                    self.degraded[ev.pool] = true;
+                    let warmup = (ev.end - ev.start).max(1);
+                    let f = ev.end.saturating_sub(epoch) as f32 / warmup as f32;
+                    let (r, w) = (rd * f, wr * f);
+                    if r != 0.0 || w != 0.0 {
+                        self.overlay.extra_rd_add[ev.pool] += r;
+                        self.overlay.extra_wr_add[ev.pool] += w;
+                        self.warm_rd[ev.pool] += r;
+                        self.warm_wr[ev.pool] += w;
+                        any = true;
+                    }
+                }
             }
         }
         self.overlay_active = any;
@@ -465,34 +854,50 @@ impl FaultState {
         }
     }
 
-    /// Current overlay revision (monotonic; bumped on membership edges).
+    /// Current overlay revision (monotonic; bumped on membership edges
+    /// and warm-up decay steps).
     pub fn revision(&self) -> u64 {
         self.revision
     }
 
-    /// Exact retry-storm latency this epoch, from post-injection
+    /// Pools currently in a degraded-but-serving window (storm,
+    /// retrain, or re-online warm-up) — the `drain` policy's input.
+    pub fn degraded(&self) -> &[bool] {
+        &self.degraded
+    }
+
+    /// Attribute this epoch's injected latency from post-injection
     /// `[P, B]` read/write totals: stage 1 of the analyzer is a linear
-    /// dot product, so the storm's share of `lat` is recoverable in
-    /// closed form independent of epoch grouping or thread count.
-    pub fn storm_delay_ns(
-        &self,
+    /// dot product, so the storm and warm-up shares of `lat` are
+    /// recoverable in closed form independent of epoch grouping or
+    /// thread count. Accumulates into `retry_delay_ns` (storms) and
+    /// `warmup_delay_ns` (re-online warm-up).
+    pub fn attribute_epoch_delays(
+        &mut self,
         read_count: impl Fn(PoolId) -> f64,
         write_count: impl Fn(PoolId) -> f64,
-    ) -> f64 {
+    ) {
         if !self.overlay_active {
-            return 0.0;
+            return;
         }
-        let mut d = 0.0f64;
+        let mut storm = 0.0f64;
+        let mut warm = 0.0f64;
         for p in 0..self.storm_rd.len() {
-            let (rd, wr) = (self.storm_rd[p] as f64, self.storm_wr[p] as f64);
-            if rd != 0.0 {
-                d += read_count(p) * rd;
+            let (sr, hr) = (self.storm_rd[p] as f64, self.warm_rd[p] as f64);
+            if sr != 0.0 || hr != 0.0 {
+                let rc = read_count(p);
+                storm += rc * sr;
+                warm += rc * hr;
             }
-            if wr != 0.0 {
-                d += write_count(p) * wr;
+            let (sw, hw) = (self.storm_wr[p] as f64, self.warm_wr[p] as f64);
+            if sw != 0.0 || hw != 0.0 {
+                let wc = write_count(p);
+                storm += wc * sw;
+                warm += wc * hw;
             }
         }
-        d
+        self.retry_delay_ns += storm;
+        self.warmup_delay_ns += warm;
     }
 
     /// Lowest-numbered online pool other than `from` (CXL pools first,
@@ -506,10 +911,10 @@ impl FaultState {
         Err(FaultError::NoReachablePool)
     }
 
-    /// Pools that are offline and may still hold live bytes (checked by
-    /// the caller against the tracker's per-pool byte accounting).
+    /// Any pool currently offline (checked by the caller against the
+    /// tracker's per-pool byte accounting before sweeping).
     pub fn any_offline(&self) -> bool {
-        self.pools_offline > 0
+        self.offline.iter().any(|&b| b)
     }
 }
 
@@ -534,7 +939,8 @@ mod tests {
             pool: "direct0".into(),
             start: 12,
             epochs: 0,
-            kind: FaultKind::PoolOffline
+            kind: FaultKind::PoolOffline,
+            host: None
         });
     }
 
@@ -552,10 +958,20 @@ rd_add_ns = 150
 kind = "offline"
 pool = "pool0"
 start = 4
+[[fault]]
+kind = "online"
+pool = "pool0"
+start = 9
+warmup_epochs = 2
+rd_add_ns = 80
 "#;
         let p = FaultPlan::parse_toml(src).unwrap();
         assert_eq!(p.seed, 7);
-        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(
+            p.events[2].kind,
+            FaultKind::PoolOnline { warmup_epochs: 2, rd_add_ns: 80.0, wr_add_ns: 0.0 }
+        );
         assert!(p.resolve(&builtin::fig2()).is_ok());
     }
 
@@ -571,6 +987,8 @@ start = 4
         assert!(matches!(overlap.resolve(&topo), Err(FaultError::OverlappingOffline(_))));
         let badfrac = FaultPlan::parse_inline("retrain:pool1@1+2:frac=1.5");
         assert!(matches!(badfrac, Err(FaultError::Parse(_))));
+        let orphan = FaultPlan::parse_inline("online:pool1@5:warmup=2").unwrap();
+        assert!(matches!(orphan.resolve(&topo), Err(FaultError::OnlineWithoutOffline(_))));
     }
 
     #[test]
@@ -591,6 +1009,56 @@ start = 4
         assert!(st.overlay().is_none(), "offline alone leaves the overlay identity");
         assert_eq!(st.faults_injected, 2);
         assert_eq!(st.throttled_epochs, 3); // epochs 2,3,4
+    }
+
+    #[test]
+    fn online_reopens_pool_with_decaying_warmup() {
+        let topo = builtin::fig2();
+        let plan =
+            FaultPlan::parse_inline("offline:pool0@4;online:pool0@8:warmup=2,rd=100,wr=50")
+                .unwrap();
+        let mut st = plan.resolve(&topo).unwrap();
+        assert!(st.epoch_begin(4));
+        assert!(st.offline[1]);
+        assert!(!st.epoch_begin(5)); // outage in steady state: no edge
+        assert!(st.epoch_begin(8)); // recovery: mask clears, warm-up opens
+        assert!(!st.offline[1]);
+        assert_eq!(st.pools_offline, 1);
+        assert_eq!(st.pools_reonlined, 1);
+        assert!(st.degraded()[1], "warming pool is degraded");
+        let ov = st.overlay().unwrap();
+        assert_eq!(ov.extra_rd_add[1], 100.0); // full adder, first epoch
+        assert_eq!(ov.extra_wr_add[1], 50.0);
+        let rev = st.revision();
+        assert!(st.epoch_begin(9), "every decay step is a revision edge");
+        assert_eq!(st.revision(), rev + 1);
+        let ov = st.overlay().unwrap();
+        assert_eq!(ov.extra_rd_add[1], 50.0); // half-way through the window
+        assert_eq!(ov.extra_wr_add[1], 25.0);
+        assert!(st.epoch_begin(10)); // warm-up expires
+        assert!(st.overlay().is_none());
+        assert!(!st.degraded()[1]);
+        assert_eq!(st.throttled_epochs, 2); // epochs 8, 9
+        st.attribute_epoch_delays(|_| 0.0, |_| 0.0);
+        assert_eq!(st.warmup_delay_ns, 0.0);
+    }
+
+    #[test]
+    fn offline_online_offline_round_trips() {
+        let topo = builtin::fig2();
+        let plan =
+            FaultPlan::parse_inline("offline:pool0@2;online:pool0@5;offline:pool0@9").unwrap();
+        let mut st = plan.resolve(&topo).unwrap();
+        st.epoch_begin(2);
+        assert!(st.offline[1]);
+        assert!(st.epoch_begin(5), "zero-warmup online is still a revision edge");
+        assert!(!st.offline[1]);
+        assert!(st.overlay().is_none(), "zero-warmup online has no overlay");
+        st.epoch_begin(9);
+        assert!(st.offline[1]);
+        assert_eq!(st.pools_offline, 2);
+        assert_eq!(st.pools_reonlined, 1);
+        assert_eq!(st.faults_injected, 3);
     }
 
     #[test]
@@ -638,6 +1106,18 @@ start = 4
     }
 
     #[test]
+    fn jitter_never_inverts_an_offline_online_pair() {
+        let topo = builtin::fig2();
+        let mut plan =
+            FaultPlan::parse_inline("offline:pool0@10;online:pool0@11:warmup=2").unwrap();
+        plan.seed = 3;
+        plan.jitter_epochs = 6;
+        let st = plan.resolve(&topo).unwrap();
+        assert!(st.events[1].start > st.events[0].start);
+        assert_eq!(st.events[0].end, st.events[1].start);
+    }
+
+    #[test]
     fn numeric_pool_ids_accepted() {
         let topo = builtin::fig2();
         let plan = FaultPlan::parse_inline("storm:2@1+2:rd=5").unwrap();
@@ -647,5 +1127,75 @@ start = 4
             .unwrap()
             .resolve(&topo)
             .is_err());
+    }
+
+    #[test]
+    fn generated_soak_plans_are_deterministic_and_resolvable() {
+        let topo = builtin::fig2();
+        let a = FaultPlan::generate(7, "mtbf=20,epochs=1000").unwrap();
+        let b = FaultPlan::generate(7, "mtbf=20,epochs=1000").unwrap();
+        assert_eq!(a, b);
+        assert!(!a.events.is_empty());
+        assert!(a.resolve(&topo).is_ok(), "generated lifecycle must always validate");
+        let c = FaultPlan::generate(8, "mtbf=20,epochs=1000").unwrap();
+        assert_ne!(a, c);
+        // an explicit seed key overrides the CLI seed argument
+        let d = FaultPlan::generate(8, "mtbf=20,epochs=1000,seed=7").unwrap();
+        assert_eq!(a, d);
+        assert_eq!(a.jitter_epochs, 0);
+    }
+
+    #[test]
+    fn soak_spec_rejects_bad_input() {
+        assert!(matches!(
+            FaultPlan::generate(0, "kinds=storm"),
+            Err(FaultError::Parse(m)) if m.contains("mtbf")
+        ));
+        assert!(matches!(
+            FaultPlan::generate(0, "mtbf=0"),
+            Err(FaultError::Parse(_))
+        ));
+        assert!(matches!(
+            FaultPlan::generate(0, "mtbf=50,kinds=storm|warp"),
+            Err(FaultError::Parse(m)) if m.contains("warp")
+        ));
+        assert!(matches!(
+            FaultPlan::generate(0, "mtbf=50,bogus=1"),
+            Err(FaultError::Parse(m)) if m.contains("bogus")
+        ));
+        assert!(matches!(
+            FaultPlan::generate(0, "mtbf=50,frac=2"),
+            Err(FaultError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn split_hosts_routes_scoped_storms_and_validates() {
+        let plan = FaultPlan::parse_inline(
+            "storm:pool0@1+2:rd=10;storm:pool1@3+2:rd=20,host=h1;offline:pool0@9",
+        )
+        .unwrap();
+        let (global, hosts) = plan.split_hosts(2).unwrap();
+        assert_eq!(global.events.len(), 2);
+        assert_eq!(hosts.len(), 2);
+        assert!(hosts[0].events.is_empty());
+        assert_eq!(hosts[1].events.len(), 1);
+        assert_eq!(hosts[1].events[0].host, None, "scope is stripped after routing");
+        assert_eq!(hosts[1].events[0].pool, "pool1");
+        // bare numeric host names work too
+        let plan2 = FaultPlan::parse_inline("storm:pool1@3+2:rd=20,host=0").unwrap();
+        assert_eq!(plan2.split_hosts(1).unwrap().1[0].events.len(), 1);
+        // unknown host
+        assert!(matches!(
+            plan.split_hosts(1),
+            Err(FaultError::HostScope(m)) if m.contains("h1")
+        ));
+        // only storms may be host-scoped
+        let off = FaultPlan::parse_inline("offline:pool0@9:host=h0").unwrap();
+        assert!(matches!(off.split_hosts(2), Err(FaultError::HostScope(_))));
+        // single-host drivers reject host-scoped plans at resolve time
+        let topo = builtin::fig2();
+        let scoped = FaultPlan::parse_inline("storm:pool1@3+2:rd=20,host=h1").unwrap();
+        assert!(matches!(scoped.resolve(&topo), Err(FaultError::HostScope(_))));
     }
 }

@@ -150,34 +150,64 @@
 //! (`--faults plan.toml` / `--fault "storm:pool1@5+10:rd=200"`):
 //! **retry storms** (per-pool read/write latency inflated for a window
 //! of epochs), **link retraining** (every switch row on the pool's
-//! path to the root throttled to a fraction of nominal bandwidth), and
-//! permanent **pool offline** (device hot-remove). A `FaultPlan` holds
-//! pool *names* and binds them to a concrete topology at run start
-//! (`FaultPlan::resolve`); seeded start jitter keeps chaos runs
-//! reproducible. All three drivers advance the schedule identically at
-//! the epoch barrier (`FaultState::epoch_begin`, plan order), then
-//! hand the analyzer a [`fault::FaultOverlay`] — additive per-pool
-//! latency, multiplicative per-switch bandwidth — applied over copies
-//! of its base tensors, so the fault-free path is untouched (pinned at
-//! ~0 overhead by `fault_epoch.faultfree_epochs_per_s` in
-//! `benches/hotpath.rs`). The batched driver flushes its pending group
-//! on every overlay-revision edge, so one `analyze_batch` call never
-//! spans two overlays and `--batch-group 1` vs `256` stay
-//! bit-identical under faults, as do all analyzer / worker thread
-//! counts (CI's determinism matrix gains a fault axis).
+//! path to the root throttled to a fraction of nominal bandwidth),
+//! **pool offline** (device hot-remove), and **pool online** (hot-add
+//! ending a prior offline window — lifecycle-checked at parse time:
+//! an `online` without a matching `offline`, or overlapping offline
+//! windows on one pool, are structured [`fault::FaultError`]s, never
+//! silent no-ops). A `FaultPlan` holds pool *names* and binds them to
+//! a concrete topology at run start (`FaultPlan::resolve`); seeded
+//! start jitter keeps chaos runs reproducible. Plans can also be
+//! *generated*: `FaultPlan::generate(seed, "mtbf=200,kinds=storm|
+//! retrain|offline+online")` (CLI `--fault-soak`) draws exponential
+//! inter-arrival times from the repo's own deterministic
+//! `util::rng::Rng`, so an MTBF soak is an ordinary plan — same spec +
+//! same seed is bit-identical on every machine, and a plan whose first
+//! event lies past the horizon leaves the report byte-identical to a
+//! fault-free run. All drivers advance the schedule identically at the
+//! epoch barrier (`FaultState::epoch_begin`, plan order; the multihost
+//! coordinator resolves `host = "hN"`-scoped events per host, in host
+//! order, so faulting one host leaves the others' `HostReport`s
+//! untouched), then hand the analyzer a [`fault::FaultOverlay`] —
+//! additive per-pool latency, multiplicative per-switch bandwidth —
+//! applied over copies of its base tensors, so the fault-free path is
+//! untouched (pinned at ~0 overhead by
+//! `fault_epoch.faultfree_epochs_per_s` and the armed-but-idle
+//! `fault_soak.armed_epochs_per_s` in `benches/hotpath.rs`). The
+//! batched driver flushes its pending group on every overlay-revision
+//! edge, so one `analyze_batch` call never spans two overlays and
+//! `--batch-group 1` vs `256` stay bit-identical under faults, as do
+//! all analyzer / worker thread counts (CI's determinism matrix gains
+//! fault and soak axes).
 //!
-//! Degradation is graceful, never a panic: when a pool goes offline,
-//! its live regions fail over to the fallback pool through the policy
-//! stack's cost-modeled migration machinery (copy traffic + per-byte
-//! stall charged like any policy move; drivers auto-install an empty
-//! stack when faults are configured), policies see the reduced pool
-//! set (`PolicyCtx::migrate` refuses offline destinations), and a run
-//! with no reachable pool fails with the structured
-//! [`fault::FaultError::NoReachablePool`]. Reports carry the fault
-//! section (`faults_injected`, `retry_delay_ns` — the *exact*
-//! storm-attributed share of latency, recovered in closed form from
-//! the stage-1 linearity — `throttled_epochs`, `pools_offline`,
-//! `failover_migrated_bytes`).
+//! Degradation — and recovery — is graceful, never a panic: when a
+//! pool goes offline, its live regions fail over to the fallback pool
+//! through the policy stack's cost-modeled migration machinery (copy
+//! traffic + per-byte stall charged like any policy move; drivers
+//! auto-install an empty stack when faults are configured), policies
+//! see the reduced pool set (`PolicyCtx::migrate` refuses offline
+//! destinations), and a run with no reachable pool fails with the
+//! structured [`fault::FaultError::NoReachablePool`]. An `online`
+//! event reverses the sweep: the pool rejoins placement, pays a
+//! per-byte re-population stall for whatever returns, and serves its
+//! first `warmup_epochs` under a transient latency adder that decays
+//! linearly to zero — warm-up epochs are overlay-revision edges, so
+//! batched/pipelined grouping stays exact, and the warm-up share of
+//! latency is recovered in closed form (`warmup_delay_ns`) exactly
+//! like the storm share. The optional `drain` policy
+//! ([`policy::FaultDrain`]) makes the stack fault-*aware*: it reads
+//! fault state through `PolicyCtx` and proactively evacuates the
+//! hottest region off a degraded (storming / retraining, not yet
+//! offline) pool — demand-gated above 0.5 so an idle pool is never
+//! churned, byte-budgeted per epoch, at most one move per epoch to
+//! avoid migration cascades — and symmetrically re-admits the oldest
+//! drained region once its origin pool is healthy again. Reports carry
+//! the full lifecycle (`faults_injected`, `retry_delay_ns`,
+//! `throttled_epochs`, `pools_offline`, `pools_reonlined`,
+//! `warmup_delay_ns`, `failover_migrated_bytes`,
+//! `drain_migrated_bytes`), and migration conservation is exact across
+//! a round trip: `migrated_bytes == failover_migrated_bytes +
+//! drain_migrated_bytes` (`tests/pipeline_equivalence.rs`).
 //!
 //! ## Trace formats & streaming replay
 //!

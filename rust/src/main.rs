@@ -98,7 +98,11 @@ fn usage() {
                        --fault SPEC (inline plan, e.g.\n\
                          \"storm:pool1@5+10:rd=200,wr=300;offline:pool0@20\";\n\
                          kinds: storm (retry latency), retrain (bw fraction),\n\
-                         offline (hot-remove + failover); native backend only)"
+                         offline (hot-remove + failover), online (re-join with\n\
+                         decaying warm-up); native backend only)\n\
+                       --fault-soak SPEC (seeded MTBF chaos plan, e.g.\n\
+                         \"mtbf=200,kinds=storm|retrain|offline+online,seed=7\";\n\
+                         exponential inter-arrivals, reproducible bit-for-bit)"
     );
 }
 
@@ -146,21 +150,33 @@ fn config_from(args: &Args) -> anyhow::Result<SimConfig> {
     }
     cfg.mig_stall_ns_per_byte =
         args.f64("mig-stall-ns-per-byte", cfg.mig_stall_ns_per_byte);
-    // deterministic RAS fault schedule: --faults file.toml or --fault
-    // inline-spec (mutually exclusive; see `cxlmemsim::fault`)
-    match (args.opt_str("faults"), args.opt_str("fault")) {
-        (Some(_), Some(_)) => {
-            anyhow::bail!("--faults <file> and --fault <spec> are mutually exclusive")
+    // deterministic RAS fault schedule: --faults file.toml, --fault
+    // inline-spec, or --fault-soak mtbf-spec (mutually exclusive; see
+    // `cxlmemsim::fault`). The soak plan is generated from `--seed`
+    // unless the spec carries its own `seed=` key.
+    let fault_sources = (
+        args.opt_str("faults"),
+        args.opt_str("fault"),
+        args.opt_str("fault-soak"),
+    );
+    match fault_sources {
+        (Some(_), Some(_), _) | (Some(_), _, Some(_)) | (_, Some(_), Some(_)) => {
+            anyhow::bail!(
+                "--faults <file>, --fault <spec>, and --fault-soak <spec> are mutually exclusive"
+            )
         }
-        (Some(path), None) => {
+        (Some(path), None, None) => {
             let src = std::fs::read_to_string(&path)
                 .map_err(|e| anyhow::anyhow!("--faults {path}: {e}"))?;
             cfg.faults = Some(cxlmemsim::fault::FaultPlan::parse_toml(&src)?);
         }
-        (None, Some(spec)) => {
+        (None, Some(spec), None) => {
             cfg.faults = Some(cxlmemsim::fault::FaultPlan::parse_inline(&spec)?);
         }
-        (None, None) => {}
+        (None, None, Some(spec)) => {
+            cfg.faults = Some(cxlmemsim::fault::FaultPlan::generate(cfg.seed, &spec)?);
+        }
+        (None, None, None) => {}
     }
     Ok(cfg)
 }
@@ -423,6 +439,15 @@ fn cmd_multihost(args: &Args) -> anyhow::Result<()> {
             rep.pools_offline,
             rep.failover_migrated_bytes as f64 / 1024.0
         );
+        if rep.pools_reonlined > 0 || rep.drain_migrated_bytes > 0 {
+            println!(
+                "  recovery: {} pools re-onlined, {:.3} ms warm-up delay, \
+                 {:.1} KB drain-migrated",
+                rep.pools_reonlined,
+                rep.warmup_delay_ns / 1e6,
+                rep.drain_migrated_bytes as f64 / 1024.0
+            );
+        }
     }
     if rep.host_workers > 1 {
         let busy: Vec<String> = rep

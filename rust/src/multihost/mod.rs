@@ -74,6 +74,10 @@ pub struct HostReport {
     /// Bytes this host evacuated off pools taken offline by the fault
     /// schedule (a subset of `migrated_bytes`; 0 without `--faults`).
     pub failover_migrated_bytes: u64,
+    /// Bytes this host's `drain` policy moved proactively off degraded
+    /// pools plus post-recovery re-admissions (a subset of
+    /// `migrated_bytes`; 0 without a `drain` stack member).
+    pub drain_migrated_bytes: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -119,6 +123,13 @@ pub struct MultiHostReport {
     pub throttled_epochs: u64,
     pub pools_offline: u64,
     pub failover_migrated_bytes: u64,
+    /// Availability lifecycle (mirrors `SimReport`): pools brought
+    /// back by `online` events, transient warm-up delay charged while
+    /// re-onlined pools re-populated, and bytes moved by the hosts'
+    /// `drain` policies (evacuation + re-admission).
+    pub pools_reonlined: u64,
+    pub warmup_delay_ns: f64,
+    pub drain_migrated_bytes: u64,
     pub wall_s: f64,
 }
 
@@ -151,6 +162,10 @@ impl MultiHostReport {
                                     "failover_migrated_bytes",
                                     json::num(h.failover_migrated_bytes as f64),
                                 ),
+                                (
+                                    "drain_migrated_bytes",
+                                    json::num(h.drain_migrated_bytes as f64),
+                                ),
                             ])
                         })
                         .collect(),
@@ -175,6 +190,9 @@ impl MultiHostReport {
                 "failover_migrated_bytes",
                 json::num(self.failover_migrated_bytes as f64),
             ),
+            ("pools_reonlined", json::num(self.pools_reonlined as f64)),
+            ("warmup_delay_ms", json::num(self.warmup_delay_ns / 1e6)),
+            ("drain_migrated_bytes", json::num(self.drain_migrated_bytes as f64)),
             ("host_workers", json::num(self.host_workers as f64)),
             ("steals", json::num(self.steals as f64)),
             ("shard_rebalances", json::num(self.shard_rebalances as f64)),
@@ -395,11 +413,26 @@ pub fn run_shared_threads_with(
     let nhosts = workloads.len();
     // resolve the fault plan once against the shared topology; all
     // fault state lives on the coordinator thread (epoch barrier, host
-    // order), so worker count cannot perturb it
-    let mut fault = match &cfg.faults {
-        Some(plan) => Some(plan.resolve(topo)?),
-        None => None,
-    };
+    // order), so worker count cannot perturb it. Host-scoped events
+    // (`host = "hN"` — retry storms only) split off into per-host
+    // schedules whose adders never touch the shared analyzer overlay:
+    // they are attributed closed-form from the owning host's own bins
+    // (step 2c), so an unfaulted peer's report stays byte-identical to
+    // its fault-free run.
+    let (mut fault, mut host_faults): (Option<crate::fault::FaultState>, Vec<_>) =
+        match &cfg.faults {
+            Some(plan) => {
+                let (global, per_host) = plan.split_hosts(nhosts)?;
+                let hf = per_host
+                    .iter()
+                    .map(|p| {
+                        if p.events.is_empty() { Ok(None) } else { p.resolve(topo).map(Some) }
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                (Some(global.resolve(topo)?), hf)
+            }
+            None => (None, (0..nhosts).map(|_| None).collect()),
+        };
     let stacks: Vec<Option<PolicyStack>> = match stacks {
         Some(v) => {
             anyhow::ensure!(
@@ -615,12 +648,29 @@ pub fn run_shared_threads_with(
             if let Some(f) = &mut fault {
                 let changed = f.epoch_begin(epochs);
                 if changed {
-                    for h in all.iter_mut() {
+                    model.set_fault_overlay(f.overlay());
+                }
+                // advance the per-host schedules in host order; a host
+                // whose own schedule moved refreshes its masks even
+                // when the fabric-wide state is quiet
+                for (hi, h) in all.iter_mut().enumerate() {
+                    let host_changed = match &mut host_faults[hi] {
+                        Some(hf) => hf.epoch_begin(epochs),
+                        None => false,
+                    };
+                    if changed || host_changed {
                         if let Some(st) = &mut h.stack {
                             st.set_offline_pools(&f.offline);
+                            // degraded = fabric-wide ∪ this host's own
+                            let mut deg = f.degraded().to_vec();
+                            if let Some(hf) = &host_faults[hi] {
+                                for (d, &hd) in deg.iter_mut().zip(hf.degraded()) {
+                                    *d |= hd;
+                                }
+                            }
+                            st.set_degraded_pools(&deg);
                         }
                     }
-                    model.set_fault_overlay(f.overlay());
                 }
                 if f.any_offline() {
                     let mut fo_err = None;
@@ -692,12 +742,30 @@ pub fn run_shared_threads_with(
                 all[hi].shared_writes = writes;
             }
 
-            // 2b. exact retry-storm attribution over the merged shared
-            //     bins (the storms' per-pool adders are linear in the
-            //     pool's read/write counts — see `crate::fault`)
+            // 2b. exact retry-storm / warm-up attribution over the
+            //     merged shared bins (the per-pool adders are linear in
+            //     the pool's read/write counts — see `crate::fault`)
             if let Some(f) = &mut fault {
-                let d = f.storm_delay_ns(|p| bins.read_count(p), |p| bins.write_count(p));
-                f.retry_delay_ns += d;
+                f.attribute_epoch_delays(|p| bins.read_count(p), |p| bins.write_count(p));
+            }
+            // 2c. host-scoped storms: their adders are NOT in the
+            //     shared analyzer overlay (that would charge every
+            //     host), so the extra latency is computed closed-form
+            //     from the owning host's own post-phase-1 bins and
+            //     charged to that host and the run total — stage-1
+            //     linearity makes this exact, and peers without a
+            //     scoped schedule stay byte-identical to fault-free
+            for (hi, h) in all.iter_mut().enumerate() {
+                if let Some(hf) = &mut host_faults[hi] {
+                    let before = hf.retry_delay_ns;
+                    hf.attribute_epoch_delays(
+                        |p| h.bins.read_count(p),
+                        |p| h.bins.write_count(p),
+                    );
+                    let d = hf.retry_delay_ns - before;
+                    h.delay_ns += d;
+                    total_delay += d;
+                }
             }
 
             // 3. one analyzer call for everyone
@@ -783,15 +851,17 @@ pub fn run_shared_threads_with(
     let mut hosts_out = Vec::with_capacity(nhosts);
     let mut migrations_total = 0u64;
     let mut migrated_bytes_total = 0u64;
+    let mut drain_bytes_total = 0u64;
     for m in hosts {
         let h = m.into_inner().unwrap();
-        let (migs, moved) = h
+        let (migs, moved, drained) = h
             .stack
             .as_ref()
-            .map(|s| (s.migrations(), s.moved_bytes()))
-            .unwrap_or((0, 0));
+            .map(|s| (s.migrations(), s.moved_bytes(), s.drained_bytes()))
+            .unwrap_or((0, 0, 0));
         migrations_total += migs;
         migrated_bytes_total += moved;
+        drain_bytes_total += drained;
         hosts_out.push(HostReport {
             workload: h.wl.name().to_string(),
             native_ns: h.native_ns,
@@ -801,19 +871,37 @@ pub fn run_shared_threads_with(
             migrations: migs,
             migrated_bytes: moved,
             failover_migrated_bytes: h.failover_bytes,
+            drain_migrated_bytes: drained,
         });
     }
-    let (faults_injected, retry_delay_ns, throttled_epochs, pools_offline, failover_bytes) =
-        match &fault {
-            Some(f) => (
-                f.faults_injected,
-                f.retry_delay_ns,
-                f.throttled_epochs,
-                f.pools_offline,
-                f.failover_migrated_bytes,
-            ),
-            None => (0, 0.0, 0, 0, 0),
-        };
+    let (
+        mut faults_injected,
+        mut retry_delay_ns,
+        throttled_epochs,
+        pools_offline,
+        failover_bytes,
+        pools_reonlined,
+        warmup_delay_ns,
+    ) = match &fault {
+        Some(f) => (
+            f.faults_injected,
+            f.retry_delay_ns,
+            f.throttled_epochs,
+            f.pools_offline,
+            f.failover_migrated_bytes,
+            f.pools_reonlined,
+            f.warmup_delay_ns,
+        ),
+        None => (0, 0.0, 0, 0, 0, 0, 0.0),
+    };
+    // fold host-scoped schedules into the run totals (their delay is
+    // already inside `total_delay` via step 2c); `throttled_epochs`
+    // stays the fabric-wide count — summing per-host windows would
+    // double-count epochs where several schedules overlap
+    for hf in host_faults.iter_mut().flatten() {
+        faults_injected += hf.faults_injected;
+        retry_delay_ns += hf.retry_delay_ns;
+    }
     Ok(MultiHostReport {
         hosts: hosts_out,
         epochs,
@@ -834,6 +922,9 @@ pub fn run_shared_threads_with(
         throttled_epochs,
         pools_offline,
         failover_migrated_bytes: failover_bytes,
+        pools_reonlined,
+        warmup_delay_ns,
+        drain_migrated_bytes: drain_bytes_total,
         wall_s: wall.elapsed().as_secs_f64(),
     })
 }

@@ -85,6 +85,12 @@ pub struct PolicyCtx<'a> {
     /// destinations, so policies can never repopulate a hot-removed
     /// device.
     pub offline: &'a [bool],
+    /// Per-pool degraded mask from the fault subsystem (empty in
+    /// fault-free runs): pools currently serving under an active storm,
+    /// retrain, or re-online warm-up window. Fault-aware policies
+    /// ([`FaultDrain`]) use it to evacuate proactively and to gate
+    /// re-admission on recovery.
+    pub degraded: &'a [bool],
     migrations: Vec<Migration>,
 }
 
@@ -153,6 +159,12 @@ pub trait EpochPolicy: Send {
     fn moved_bytes(&self) -> u64 {
         0
     }
+    /// Bytes moved for availability (drain off degraded pools plus
+    /// re-admission after recovery) — a subset of `moved_bytes`; only
+    /// fault-aware policies report it.
+    fn drained_bytes(&self) -> u64 {
+        0
+    }
 }
 
 /// An ordered stack of [`EpochPolicy`]s plus the migration cost model.
@@ -191,10 +203,13 @@ pub struct PolicyStack {
     /// Per-pool offline mask mirrored from the fault subsystem (empty
     /// = nothing offline); exposed to hooks via [`PolicyCtx::offline`].
     offline: Vec<bool>,
-    /// Per-policy (migrations, moved_bytes) snapshots from
-    /// [`PolicyStack::begin_run`]; [`PolicyStack::per_policy_stats`]
-    /// reports deltas against them.
-    per_policy_base: Vec<(u64, u64)>,
+    /// Per-pool degraded mask mirrored from the fault subsystem (empty
+    /// = nothing degraded); exposed via [`PolicyCtx::degraded`].
+    degraded: Vec<bool>,
+    /// Per-policy (migrations, moved_bytes, drained_bytes) snapshots
+    /// from [`PolicyStack::begin_run`];
+    /// [`PolicyStack::per_policy_stats`] reports deltas against them.
+    per_policy_base: Vec<(u64, u64, u64)>,
 }
 
 impl PolicyStack {
@@ -214,6 +229,7 @@ impl PolicyStack {
             injected_write_bytes: 0.0,
             stall_ns: 0.0,
             offline: Vec::new(),
+            degraded: Vec::new(),
             per_policy_base: Vec::new(),
         }
     }
@@ -243,8 +259,12 @@ impl PolicyStack {
         self.injected_write_bytes = 0.0;
         self.stall_ns = 0.0;
         self.offline.clear();
-        self.per_policy_base =
-            self.policies.iter().map(|p| (p.migrations(), p.moved_bytes())).collect();
+        self.degraded.clear();
+        self.per_policy_base = self
+            .policies
+            .iter()
+            .map(|p| (p.migrations(), p.moved_bytes(), p.drained_bytes()))
+            .collect();
     }
 
     /// The per-pool event counts injected into the current epoch's
@@ -291,10 +311,24 @@ impl PolicyStack {
             .iter()
             .enumerate()
             .map(|(i, p)| {
-                let (mb, bb) = self.per_policy_base.get(i).copied().unwrap_or((0, 0));
+                let (mb, bb, _) = self.per_policy_base.get(i).copied().unwrap_or((0, 0, 0));
                 (p.name(), p.migrations() - mb, p.moved_bytes() - bb)
             })
             .collect()
+    }
+
+    /// Availability-motivated bytes moved this run (drain off degraded
+    /// pools + re-admission), summed over fault-aware policies — deltas
+    /// since [`PolicyStack::begin_run`].
+    pub fn drained_bytes(&self) -> u64 {
+        self.policies
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let base = self.per_policy_base.get(i).map(|b| b.2).unwrap_or(0);
+                p.drained_bytes() - base
+            })
+            .sum()
     }
 
     /// Builder-style push.
@@ -425,6 +459,7 @@ impl PolicyStack {
             bytes_per_ev,
             injected_events: &self.last_injected,
             offline: &self.offline,
+            degraded: &self.degraded,
             migrations: std::mem::take(&mut self.mig_scratch),
         };
         for p in &mut self.policies {
@@ -441,6 +476,17 @@ impl PolicyStack {
     pub fn set_offline_pools(&mut self, mask: &[bool]) {
         self.offline.clear();
         self.offline.extend_from_slice(mask);
+    }
+
+    /// Mirror the fault subsystem's per-pool degraded mask (pools
+    /// serving under an active storm / retrain / warm-up window) so
+    /// hooks see it via [`PolicyCtx::degraded`]. Drivers call this on
+    /// overlay-revision edges next to
+    /// [`PolicyStack::set_offline_pools`]; an empty mask (the
+    /// fault-free default) costs nothing.
+    pub fn set_degraded_pools(&mut self, mask: &[bool]) {
+        self.degraded.clear();
+        self.degraded.extend_from_slice(mask);
     }
 
     /// Graceful degradation for a hot-removed pool: evacuate every
@@ -480,6 +526,7 @@ impl PolicyStack {
             bytes_per_ev,
             injected_events: &self.last_injected,
             offline: &self.offline,
+            degraded: &self.degraded,
             migrations: std::mem::take(&mut self.mig_scratch),
         };
         for s in starts {
@@ -509,6 +556,7 @@ impl PolicyStack {
                 bytes_per_ev,
                 injected_events: &self.last_injected,
                 offline: &self.offline,
+                degraded: &self.degraded,
                 migrations: std::mem::take(&mut self.mig_scratch),
             };
             for p in &mut self.policies {
@@ -534,6 +582,7 @@ pub enum PolicySpecEntry {
     Hotness { patience: u32, budget_bytes: u64 },
     Prefetch { coverage: f32 },
     Rebalance { threshold: f64 },
+    FaultDrain { budget_bytes: u64 },
 }
 
 /// Parse a byte-size spec argument: a plain integer, optionally
@@ -599,6 +648,16 @@ pub const POLICY_REGISTRY: &[PolicyInfo] = &[
         help: "when the switch backlog integral crosses <threshold>, move the \
                hottest region off the most-loaded pool to the least-loaded one",
     },
+    PolicyInfo {
+        name: "drain",
+        arg: "budget",
+        default_arg: 67108864.0,
+        help: "fault-aware availability drain: migrate the hottest region off a \
+               degraded (storming / retraining / warming-up) pool before the \
+               offline sweep, and re-admit drained regions to their origin \
+               under demand once it recovers; <budget> caps bytes moved per \
+               epoch (K/M/G suffixes, e.g. drain:64M; default 64M)",
+    },
 ];
 
 impl PolicySpec {
@@ -649,6 +708,18 @@ impl PolicySpec {
                     };
                     PolicySpecEntry::Hotness { patience, budget_bytes }
                 }
+                "drain" => {
+                    anyhow::ensure!(
+                        args.len() <= 1,
+                        "`drain` takes a single {} argument, got `{part}`",
+                        info.arg
+                    );
+                    let budget_bytes = match args.first() {
+                        Some(b) => parse_byte_size(b)?,
+                        None => info.default_arg as u64,
+                    };
+                    PolicySpecEntry::FaultDrain { budget_bytes }
+                }
                 "prefetch" | "rebalance" => {
                     anyhow::ensure!(
                         args.len() <= 1,
@@ -684,6 +755,9 @@ impl PolicySpec {
                 }
                 PolicySpecEntry::Rebalance { threshold } => {
                     Box::new(CongestionRebalance::new(*threshold))
+                }
+                PolicySpecEntry::FaultDrain { budget_bytes } => {
+                    Box::new(FaultDrain::new(*budget_bytes))
                 }
             });
         }
@@ -916,6 +990,120 @@ impl EpochPolicy for SoftwarePrefetch {
     }
 }
 
+/// Fault-aware availability drain (CLI `drain[:budget]`): while a pool
+/// is *degraded* — serving under an active retry storm, link retrain,
+/// or re-online warm-up window ([`PolicyCtx::degraded`]) — migrate its
+/// hottest region to a healthy pool *before* any offline sweep, so a
+/// storm that escalates to hot-remove finds the hot data already gone.
+/// Every drained region is remembered with its origin pool; once the
+/// origin is healthy again (not degraded, not offline) the region is
+/// re-admitted under demand — the symmetric recovery path that lets the
+/// re-onlined pool re-balance without a dedicated rebalancer.
+///
+/// Moves go through [`PolicyCtx::migrate`] like any policy move, so
+/// drain and re-admit traffic is cost-modeled (copy traffic + per-byte
+/// stall) and counted in the conservation invariant. Both directions
+/// are demand-gated like [`HotnessMigration`] (the >0.5-event threshold
+/// on *demand* traffic, injected copy events excluded) so the policy
+/// cannot cascade off its own copies, and both share one per-epoch byte
+/// budget, at most one drain plus one re-admit per epoch.
+pub struct FaultDrain {
+    /// Byte budget per epoch, shared by drain and re-admit moves.
+    pub budget_bytes: u64,
+    /// FIFO of (region start, origin pool) drained and not yet
+    /// re-admitted. Records for regions that were freed, or that some
+    /// other policy already moved home, are dropped when encountered.
+    drained: Vec<(u64, PoolId)>,
+    migrations: u64,
+    moved_bytes: u64,
+}
+
+impl FaultDrain {
+    pub fn new(budget_bytes: u64) -> FaultDrain {
+        FaultDrain { budget_bytes, drained: Vec::new(), migrations: 0, moved_bytes: 0 }
+    }
+}
+
+impl EpochPolicy for FaultDrain {
+    fn name(&self) -> &'static str {
+        "fault-drain"
+    }
+
+    fn after_analysis(&mut self, bins: &EpochBins, _out: &TimingOutputs, ctx: &mut PolicyCtx) {
+        if ctx.degraded.is_empty() && self.drained.is_empty() {
+            return; // fault-free fast path
+        }
+        let (deg, off) = (ctx.degraded, ctx.offline);
+        let is_deg = |p: PoolId| deg.get(p).copied().unwrap_or(false);
+        let is_off = |p: PoolId| off.get(p).copied().unwrap_or(false);
+        let mut budget = self.budget_bytes;
+        // drain: the degraded pool with the most demand, if any
+        let src = (0..bins.pools)
+            .filter(|&p| is_deg(p) && !is_off(p))
+            .map(|p| (p, demand_count(bins, ctx.injected_events, p)))
+            .filter(|(_, c)| *c > 0.5)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        if let Some((src, _)) = src {
+            // lowest-numbered healthy destination (local DRAM first)
+            let dest = (0..bins.pools).find(|&p| p != src && !is_deg(p) && !is_off(p));
+            if let Some(dest) = dest {
+                ctx.tracker.sync_heat();
+                if let Some((start, len)) = hottest_region_on(ctx.tracker, src) {
+                    if len <= budget && ctx.migrate(start, dest) {
+                        let copied =
+                            ctx.migrations().last().map(|m| m.bytes).unwrap_or(len);
+                        self.drained.push((start, src));
+                        self.migrations += 1;
+                        self.moved_bytes += copied;
+                        budget = budget.saturating_sub(copied);
+                    }
+                }
+            }
+        }
+        // re-admit: oldest parked record whose origin recovered, under
+        // demand on the region's current pool; at most one per epoch
+        let mut idx = 0;
+        while idx < self.drained.len() {
+            let (start, origin) = self.drained[idx];
+            let info = ctx.tracker.region_at(start).map(|r| (r.pool_of(r.start), r.len));
+            let Some((cur, len)) = info else {
+                self.drained.remove(idx); // freed while parked
+                continue;
+            };
+            if cur == origin {
+                self.drained.remove(idx); // already home again
+                continue;
+            }
+            if is_deg(origin) || is_off(origin) {
+                idx += 1; // origin not healthy yet — stay parked
+                continue;
+            }
+            if demand_count(bins, ctx.injected_events, cur) > 0.5
+                && len <= budget
+                && ctx.migrate(start, origin)
+            {
+                let copied = ctx.migrations().last().map(|m| m.bytes).unwrap_or(len);
+                self.migrations += 1;
+                self.moved_bytes += copied;
+                self.drained.remove(idx);
+            }
+            break;
+        }
+    }
+
+    fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    fn moved_bytes(&self) -> u64 {
+        self.moved_bytes
+    }
+
+    fn drained_bytes(&self) -> u64 {
+        self.moved_bytes
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -960,6 +1148,23 @@ mod tests {
             bytes_per_ev: 64.0,
             injected_events: &[],
             offline: &[],
+            degraded: &[],
+            migrations: Vec::new(),
+        }
+    }
+
+    fn ctx_masks<'a>(
+        t: &'a mut AllocTracker,
+        offline: &'a [bool],
+        degraded: &'a [bool],
+    ) -> PolicyCtx<'a> {
+        PolicyCtx {
+            tracker: t,
+            epoch: 0,
+            bytes_per_ev: 64.0,
+            injected_events: &[],
+            offline,
+            degraded,
             migrations: Vec::new(),
         }
     }
@@ -1406,6 +1611,7 @@ mod tests {
             bytes_per_ev: 64.0,
             injected_events: &[],
             offline: &offline,
+            degraded: &[],
             migrations: Vec::new(),
         };
         assert!(!c.migrate(0x1000, LOCAL_POOL), "offline destination must be refused");
@@ -1439,5 +1645,108 @@ mod tests {
         assert!((stall - (1u64 << 20) as f64 * 0.0625).abs() < 1e-6);
         // nothing left on the offline pool: a second sweep is a no-op
         assert_eq!(stack.failover_pool(&mut t, from, to, 64.0), 0);
+    }
+
+    #[test]
+    fn drain_evacuates_degraded_pool_then_readmits_on_recovery() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let src = t.pool_of(0x1000);
+        assert_ne!(src, LOCAL_POOL);
+        let mut deg = vec![false; 8];
+        deg[src] = true;
+        let mut pol = FaultDrain::new(u64::MAX);
+        // epoch 1: pool degraded + demand on it → drain to local DRAM
+        {
+            let mut c = ctx_masks(&mut t, &[], &deg);
+            pol.after_analysis(&bins_hot_on(src), &outputs(), &mut c);
+            assert_eq!(c.migrations().len(), 1, "drain must be cost-recorded");
+        }
+        assert_eq!(pol.migrations(), 1);
+        assert_eq!(pol.drained_bytes(), 1 << 20);
+        assert_eq!(t.pool_of(0x1000), LOCAL_POOL);
+        // epoch 2: origin still degraded → record stays parked even
+        // though the region's current pool sees demand
+        {
+            let mut c = ctx_masks(&mut t, &[], &deg);
+            pol.after_analysis(&bins_hot_on(LOCAL_POOL), &outputs(), &mut c);
+        }
+        assert_eq!(pol.migrations(), 1, "no re-admit while the origin is degraded");
+        assert_eq!(t.pool_of(0x1000), LOCAL_POOL);
+        // epoch 3: origin recovered but zero demand → still parked
+        {
+            let mut c = ctx_masks(&mut t, &[], &[]);
+            pol.after_analysis(&EpochBins::new(8, 16, 1600.0), &outputs(), &mut c);
+        }
+        assert_eq!(pol.migrations(), 1, "re-admit must be demand-gated");
+        // epoch 4: origin recovered + demand → re-admitted home
+        {
+            let mut c = ctx_masks(&mut t, &[], &[]);
+            pol.after_analysis(&bins_hot_on(LOCAL_POOL), &outputs(), &mut c);
+        }
+        assert_eq!(pol.migrations(), 2);
+        assert_eq!(t.pool_of(0x1000), src, "region must return to its origin pool");
+        assert_eq!(pol.drained_bytes(), 2 << 20, "both directions count as drain traffic");
+        // epoch 5: nothing parked, nothing degraded → pure no-op
+        {
+            let mut c = ctx_masks(&mut t, &[], &[]);
+            pol.after_analysis(&bins_hot_on(src), &outputs(), &mut c);
+            assert!(c.migrations().is_empty());
+        }
+        assert_eq!(pol.migrations(), 2);
+    }
+
+    #[test]
+    fn drain_respects_budget_and_demand_gate() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let src = t.pool_of(0x1000);
+        let mut deg = vec![false; 8];
+        deg[src] = true;
+        // budget below the region size: nothing may move
+        let mut pol = FaultDrain::new(4096);
+        {
+            let mut c = ctx_masks(&mut t, &[], &deg);
+            pol.after_analysis(&bins_hot_on(src), &outputs(), &mut c);
+        }
+        assert_eq!(pol.migrations(), 0, "per-epoch budget must block the move");
+        // ample budget but zero demand on the degraded pool: no move
+        let mut pol = FaultDrain::new(u64::MAX);
+        {
+            let mut c = ctx_masks(&mut t, &[], &deg);
+            pol.after_analysis(&EpochBins::new(8, 16, 1600.0), &outputs(), &mut c);
+        }
+        assert_eq!(pol.migrations(), 0, "drain must be demand-gated");
+        assert_eq!(t.pool_of(0x1000), src);
+    }
+
+    #[test]
+    fn drain_avoids_degraded_and_offline_destinations() {
+        let mut t = tracker_with_region(PolicyKind::CxlOnly);
+        let src = t.pool_of(0x1000);
+        // local DRAM offline, every other pool except 3 degraded:
+        // the drain must land on pool 3
+        let mut deg = vec![true; 8];
+        deg[3] = false;
+        let mut off = vec![false; 8];
+        off[LOCAL_POOL] = true;
+        deg[LOCAL_POOL] = false;
+        let mut pol = FaultDrain::new(u64::MAX);
+        {
+            let mut c = ctx_masks(&mut t, &off, &deg);
+            pol.after_analysis(&bins_hot_on(src), &outputs(), &mut c);
+        }
+        assert_eq!(pol.migrations(), 1);
+        assert_eq!(t.pool_of(0x1000), 3, "only healthy pool must receive the drain");
+    }
+
+    #[test]
+    fn spec_parses_drain_with_budget() {
+        let spec = PolicySpec::parse("drain").unwrap();
+        assert_eq!(spec.entries, vec![PolicySpecEntry::FaultDrain { budget_bytes: 64 << 20 }]);
+        let spec = PolicySpec::parse("drain:1M").unwrap();
+        assert_eq!(spec.entries, vec![PolicySpecEntry::FaultDrain { budget_bytes: 1 << 20 }]);
+        let stack = spec.build(0.0);
+        assert_eq!(stack.policies().map(|p| p.name()).collect::<Vec<_>>(), ["fault-drain"]);
+        assert!(PolicySpec::parse("drain:1M:2").is_err());
+        assert!(PolicySpec::parse("drain:huge").is_err());
     }
 }

@@ -896,7 +896,9 @@ mod tests {
         let extra = stormy.lat[1] as f64 - base.lat[1] as f64;
         assert!((extra - 50.0 * 200.0).abs() < 1e-2, "extra {extra}");
         // and exactly matches the state's closed-form attribution
-        let attr = st.storm_delay_ns(|p| if p == 1 { 50.0 } else { 0.0 }, |_| 0.0);
+        let before = st.retry_delay_ns;
+        st.attribute_epoch_delays(|p| if p == 1 { 50.0 } else { 0.0 }, |_| 0.0);
+        let attr = st.retry_delay_ns - before;
         assert!((extra - attr).abs() < 1e-2, "{extra} vs {attr}");
         // uninstalling restores the fault-free path bit-for-bit
         a.set_fault_overlay(None);

@@ -257,11 +257,23 @@ fn run_sharded(plan: &CellPlan, path: &str, opts: &SweepOptions) -> anyhow::Resu
             for (i, child) in children.into_iter().enumerate() {
                 let out = child.wait_with_output()?;
                 if !out.status.success() {
-                    anyhow::bail!(
-                        "shard {i}/{n} exited with {}: {}",
-                        out.status,
-                        String::from_utf8_lossy(&out.stderr).trim()
-                    );
+                    // structured failure carrying the child's stderr
+                    // (tail), so a CI sweep artifact names the actual
+                    // error instead of just an exit status
+                    let stderr = String::from_utf8_lossy(&out.stderr);
+                    let stderr = stderr.trim();
+                    let tail = if stderr.len() > 2000 {
+                        format!("...{}", &stderr[stderr.len() - 2000..])
+                    } else {
+                        stderr.to_string()
+                    };
+                    return Err(SweepError::ShardChild {
+                        cell: plan.workload.clone(),
+                        shard: format!("{i}/{n}"),
+                        status: out.status.to_string(),
+                        stderr: tail,
+                    }
+                    .into());
                 }
                 let stdout = String::from_utf8_lossy(&out.stdout);
                 let rep = Json::parse(stdout.trim()).map_err(|e| {
@@ -329,6 +341,15 @@ fn shard_flags(plan: &CellPlan) -> Vec<String> {
     }
     if let Some(src) = &plan.epoch_policy_src {
         push("epoch-policy", src.clone());
+    }
+    // fault axes pass through verbatim: the child re-parses the plan
+    // file / re-generates the soak plan from the same seed, so its
+    // schedule is identical to an in-process run of the cell
+    if let Some(src) = &plan.faults_src {
+        push("faults", src.clone());
+    }
+    if let Some(src) = &plan.fault_soak_src {
+        push("fault-soak", src.clone());
     }
     if plan.driver == Driver::Batched {
         push("batched", "true".to_string());

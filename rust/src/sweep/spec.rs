@@ -65,6 +65,10 @@ pub enum SweepError {
     BadInvariant { index: usize, msg: String },
     /// A cell combination is contradictory (e.g. sharded multihost).
     BadCell { cell: String, msg: String },
+    /// A sharded cell's child process failed. Carries the child's
+    /// captured stderr (last lines) so CI failures are diagnosable
+    /// from the artifact, not just the exit status.
+    ShardChild { cell: String, shard: String, status: String, stderr: String },
     /// Spec file could not be read.
     Io { path: String, msg: String },
 }
@@ -96,6 +100,14 @@ impl std::fmt::Display for SweepError {
                 write!(f, "sweep spec [[invariant]] #{index}: {msg}")
             }
             SweepError::BadCell { cell, msg } => write!(f, "sweep spec cell `{cell}`: {msg}"),
+            SweepError::ShardChild { cell, shard, status, stderr } => {
+                write!(f, "cell `{cell}` shard {shard}: child exited with {status}")?;
+                if stderr.is_empty() {
+                    write!(f, " (no stderr)")
+                } else {
+                    write!(f, "; stderr: {stderr}")
+                }
+            }
             SweepError::Io { path, msg } => write!(f, "sweep spec {path}: {msg}"),
         }
     }
@@ -184,6 +196,12 @@ pub struct CellPlan {
     /// The spec's `epoch_policy` string, kept verbatim so shard child
     /// processes receive the exact `--epoch-policy` the cell parsed.
     pub epoch_policy_src: Option<String>,
+    /// The spec's `faults` plan-file path, kept verbatim for shard
+    /// child processes (`--faults`). `None` without a fault axis.
+    pub faults_src: Option<String>,
+    /// The spec's `fault_soak` MTBF spec, kept verbatim for shard
+    /// child processes (`--fault-soak`).
+    pub fault_soak_src: Option<String>,
 }
 
 /// Settings the engine understands, as grid axes or `[config]` keys.
@@ -214,6 +232,8 @@ pub const KNOWN_SETTINGS: &[&str] = &[
     "max_epochs",
     "mlp",
     "cpi_ns",
+    "faults",
+    "fault_soak",
 ];
 
 /// A parsed, validated sweep specification.
@@ -420,7 +440,10 @@ impl SweepSpec {
         let mut cfg = SimConfig::default();
         for (key, v) in &m {
             match key.as_str() {
-                "topo" | "workload" | "driver" | "hosts" | "shards" => {}
+                // fault sources resolve after the loop: `seed` sorts
+                // after `fault_soak` in the BTreeMap walk, and the soak
+                // generator must see the cell's final seed
+                "topo" | "workload" | "driver" | "hosts" | "shards" | "faults" | "fault_soak" => {}
                 "policy" => {
                     cfg.policy = PolicyKind::parse(v)
                         .ok_or_else(|| bad(key, format!("unknown policy `{v}`")))?;
@@ -484,7 +507,39 @@ impl SweepSpec {
             }
         }
         let epoch_policy_src = m.get("epoch_policy").filter(|v| v.as_str() != "none").cloned();
-        Ok(CellPlan { cfg, driver, topo, workload, hosts, shards, epoch_policy_src })
+        // fault-plan axes (`none` = fault-free cell): `faults` is a
+        // plan-file path read per cell, `fault_soak` an MTBF spec
+        // generated against the cell's (now final) seed
+        let faults_src = m.get("faults").filter(|v| v.as_str() != "none").cloned();
+        let fault_soak_src = m.get("fault_soak").filter(|v| v.as_str() != "none").cloned();
+        if faults_src.is_some() && fault_soak_src.is_some() {
+            return Err(cell_err("`faults` and `fault_soak` are mutually exclusive"));
+        }
+        if let Some(path) = &faults_src {
+            let src = std::fs::read_to_string(path).map_err(|e| {
+                bad("faults", format!("reading fault plan `{path}`: {e}"))
+            })?;
+            cfg.faults = Some(
+                crate::fault::FaultPlan::parse_toml(&src)
+                    .map_err(|e| bad("faults", e.to_string()))?,
+            );
+        } else if let Some(soak) = &fault_soak_src {
+            cfg.faults = Some(
+                crate::fault::FaultPlan::generate(cfg.seed, soak)
+                    .map_err(|e| bad("fault_soak", e.to_string()))?,
+            );
+        }
+        Ok(CellPlan {
+            cfg,
+            driver,
+            topo,
+            workload,
+            hosts,
+            shards,
+            epoch_policy_src,
+            faults_src,
+            fault_soak_src,
+        })
     }
 }
 
@@ -673,6 +728,21 @@ fn validate_setting(key: &str, v: &str) -> Result<(), String> {
         "seed" | "sample_period" | "cache_scale" | "event_batch" | "analyzer_threads"
         | "batch_group" => {
             v.parse::<u64>().map(|_| ()).map_err(|_| format!("`{v}` is not an integer"))
+        }
+        "faults" => {
+            if v == "none" || std::path::Path::new(v).exists() {
+                Ok(())
+            } else {
+                Err(format!("no such fault plan file `{v}` (or `none` for a fault-free cell)"))
+            }
+        }
+        "fault_soak" => {
+            if v == "none" {
+                Ok(())
+            } else {
+                // syntax check only; the cell's seed applies at plan time
+                crate::fault::FaultPlan::generate(0, v).map(|_| ()).map_err(|e| e.to_string())
+            }
         }
         "max_epochs" => {
             if v == "none" {

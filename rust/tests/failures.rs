@@ -351,6 +351,80 @@ fn malformed_fault_toml_errors_cleanly() {
 }
 
 #[test]
+fn fault_lifecycle_violations_all_error_cleanly() {
+    use cxlmemsim::fault::{FaultError, FaultPlan};
+    let topo = builtin::fig2();
+
+    // an `online` with no open offline window on its pool
+    let orphan = FaultPlan::parse_inline("online:pool0@5:warmup=2").unwrap();
+    assert!(matches!(orphan.resolve(&topo), Err(FaultError::OnlineWithoutOffline(_))));
+    // closing the wrong pool's window is the same error
+    let wrong = FaultPlan::parse_inline("offline:pool0@2;online:pool1@5").unwrap();
+    assert!(matches!(wrong.resolve(&topo), Err(FaultError::OnlineWithoutOffline(_))));
+    // offline → online → online: the second online finds no open window
+    let double =
+        FaultPlan::parse_inline("offline:pool0@2;online:pool0@4;online:pool0@6").unwrap();
+    assert!(matches!(double.resolve(&topo), Err(FaultError::OnlineWithoutOffline(_))));
+    // offline → online → offline → offline: the re-opened window overlaps
+    let reopen = FaultPlan::parse_inline(
+        "offline:pool0@2;online:pool0@4;offline:pool0@6;offline:pool0@8",
+    )
+    .unwrap();
+    assert!(matches!(reopen.resolve(&topo), Err(FaultError::OverlappingOffline(_))));
+
+    // the lifecycle errors surface as clean errors through the driver
+    let mut cfg = fast_cfg();
+    cfg.faults = Some(FaultPlan::parse_inline("online:pool0@5").unwrap());
+    let err =
+        err_of(Coordinator::new(builtin::fig2(), cfg).and_then(|mut c| c.run_workload("stream")));
+    assert!(err.contains("online"), "{err}");
+    assert!(err.contains("offline"), "{err}");
+}
+
+#[test]
+fn malformed_soak_specs_all_error_cleanly() {
+    use cxlmemsim::fault::{FaultError, FaultPlan};
+    for (spec, what) in [
+        ("", "empty spec"),
+        ("kinds=storm", "missing mtbf"),
+        ("mtbf=0", "zero mtbf"),
+        ("mtbf=abc", "bad mtbf"),
+        ("mtbf=100,kinds=meteor", "unknown kind"),
+        ("mtbf=100,kinds=online", "online without offline pairing"),
+        ("mtbf=100,cadence=5", "unknown key"),
+        ("mtbf=100,frac=1.5", "frac out of range"),
+        ("mtbf=100,epochs=0", "zero horizon"),
+    ] {
+        match FaultPlan::generate(7, spec) {
+            Err(FaultError::Parse(msg)) => {
+                assert!(!msg.is_empty(), "{what}: empty message")
+            }
+            other => panic!("{what}: expected a parse error, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn host_scoped_faults_rejected_outside_multihost() {
+    use cxlmemsim::fault::{FaultError, FaultPlan};
+    // single-host drivers reject host-scoped plans outright
+    let scoped = FaultPlan::parse_inline("storm:pool1@3+2:rd=20,host=h1").unwrap();
+    assert!(matches!(scoped.resolve(&builtin::fig2()), Err(FaultError::HostScope(_))));
+    // multihost rejects host-scoped events that are not retry storms
+    let off = FaultPlan::parse_inline("offline:pool0@9:host=h0").unwrap();
+    assert!(matches!(off.split_hosts(4), Err(FaultError::HostScope(_))));
+    // and host names beyond the host count
+    let beyond = FaultPlan::parse_inline("storm:pool1@3+2:rd=20,host=h7").unwrap();
+    match beyond.split_hosts(2) {
+        Err(FaultError::HostScope(msg)) => {
+            assert!(msg.contains("h7"), "{msg}");
+            assert!(msg.contains("h1"), "must name the valid range: {msg}");
+        }
+        other => panic!("expected a host-scope error, got {other:?}"),
+    }
+}
+
+#[test]
 fn faults_on_pjrt_backend_is_a_config_error() {
     let mut cfg = fast_cfg();
     cfg.backend = cxlmemsim::runtime::AnalyzerBackend::Pjrt;

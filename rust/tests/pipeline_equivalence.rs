@@ -258,6 +258,9 @@ fn assert_multihost_identical(a: &MultiHostReport, b: &MultiHostReport) {
     assert_eq!(a.throttled_epochs, b.throttled_epochs);
     assert_eq!(a.pools_offline, b.pools_offline);
     assert_eq!(a.failover_migrated_bytes, b.failover_migrated_bytes);
+    assert_eq!(a.pools_reonlined, b.pools_reonlined);
+    assert_eq!(a.warmup_delay_ns, b.warmup_delay_ns);
+    assert_eq!(a.drain_migrated_bytes, b.drain_migrated_bytes);
     assert_eq!(a.hosts.len(), b.hosts.len());
     for (x, y) in a.hosts.iter().zip(&b.hosts) {
         assert_eq!(x.misses, y.misses);
@@ -265,6 +268,7 @@ fn assert_multihost_identical(a: &MultiHostReport, b: &MultiHostReport) {
         assert_eq!(x.delay_ns, y.delay_ns);
         assert_eq!(x.migrations, y.migrations);
         assert_eq!(x.failover_migrated_bytes, y.failover_migrated_bytes);
+        assert_eq!(x.drain_migrated_bytes, y.drain_migrated_bytes);
     }
 }
 
@@ -768,6 +772,12 @@ fn assert_fault_stats_identical(a: &SimReport, b: &SimReport, ctx: &str) {
         a.failover_migrated_bytes, b.failover_migrated_bytes,
         "{ctx}: failover_migrated_bytes"
     );
+    assert_eq!(a.pools_reonlined, b.pools_reonlined, "{ctx}: pools_reonlined");
+    assert_eq!(a.warmup_delay_ns, b.warmup_delay_ns, "{ctx}: warmup_delay_ns");
+    assert_eq!(
+        a.drain_migrated_bytes, b.drain_migrated_bytes,
+        "{ctx}: drain_migrated_bytes"
+    );
 }
 
 /// Epoch count of the fault-free baseline run — faults never change
@@ -1000,6 +1010,271 @@ fn multihost_fault_run_bit_identical_across_worker_counts() {
     for threads in knob_threads(&[2, 4]) {
         let many = run_shared_threads(&builtin::fig2(), &fcfg, mk_hosts(), threads).unwrap();
         assert_multihost_identical(&one, &many);
+    }
+}
+
+// ------------------------------------------- availability lifecycle
+
+use cxlmemsim::policy::FaultDrain;
+
+/// offline → online (with a short warm-up) → offline again on the same
+/// pool: the full availability round trip, placed mid-run.
+fn availability_plan(epochs: u64) -> FaultPlan {
+    let w = (epochs / 4).max(1);
+    FaultPlan::parse_inline(&format!(
+        "offline:pool0@{w};online:pool0@{}:warmup=1,rd=150,wr=75;offline:pool0@{}",
+        2 * w,
+        3 * w
+    ))
+    .unwrap()
+}
+
+/// The availability round trip must be bit-identical across every
+/// driver: sequential, batched replay at both group-size extremes, and
+/// the pipelined variants — the re-online edge is an overlay revision
+/// edge exactly like the offline edge.
+#[test]
+fn reonline_chaos_bit_identical_across_drivers() {
+    let cfg = fast_cfg();
+    let epochs = baseline_epochs(&cfg);
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(availability_plan(epochs));
+
+    let mut seq = Coordinator::new(builtin::fig2(), fcfg.clone()).unwrap();
+    let base = seq.run_workload("zipfian").unwrap();
+    assert_eq!(base.faults_injected, 3, "offline + online + offline all fired");
+    assert_eq!(base.pools_offline, 2, "offline transitions, not distinct pools");
+    assert_eq!(base.pools_reonlined, 1);
+    assert!(base.failover_migrated_bytes > 0, "first offline sweeps pool0's bytes");
+
+    for group in [1usize, 256] {
+        let mut gcfg = fcfg.clone();
+        gcfg.batch_group = group;
+        let mut wl = workload::by_name("zipfian", gcfg.scale, gcfg.seed).unwrap();
+        let rep = run_batched(&builtin::fig2(), &gcfg, wl.as_mut()).unwrap();
+        let ctx = format!("reonline: batched group={group}");
+        assert_reports_identical(&base, &rep, &ctx);
+        assert_fault_stats_identical(&base, &rep, &ctx);
+    }
+    let mut pcfg = fcfg.clone();
+    pcfg.pipeline = true;
+    let mut piped = Coordinator::new(builtin::fig2(), pcfg.clone()).unwrap();
+    let rep = piped.run_workload("zipfian").unwrap();
+    assert_reports_identical(&base, &rep, "reonline: pipelined sequential");
+    assert_fault_stats_identical(&base, &rep, "reonline: pipelined sequential");
+    let mut wl = workload::by_name("zipfian", pcfg.scale, pcfg.seed).unwrap();
+    let rep = run_batched(&builtin::fig2(), &pcfg, wl.as_mut()).unwrap();
+    assert_reports_identical(&base, &rep, "reonline: pipelined batched");
+    assert_fault_stats_identical(&base, &rep, "reonline: pipelined batched");
+}
+
+/// The same round trip under multihost: the coordinator advances the
+/// schedule at the barrier, so every worker count matches bit-for-bit.
+#[test]
+fn reonline_multihost_bit_identical_across_worker_counts() {
+    let cfg = fast_cfg();
+    let mk_hosts = || -> Vec<Box<dyn Workload>> {
+        (0..4)
+            .map(|i| workload::by_name("stream", 0.002, i as u64).unwrap())
+            .collect()
+    };
+    let plain = run_shared_threads(&builtin::fig2(), &cfg, mk_hosts(), 1).unwrap();
+    assert!(plain.epochs >= 4, "need >= 4 epochs, got {}", plain.epochs);
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(availability_plan(plain.epochs));
+    let one = run_shared_threads(&builtin::fig2(), &fcfg, mk_hosts(), 1).unwrap();
+    assert_eq!(one.epochs, plain.epochs, "faults must not change the event stream");
+    assert_eq!(one.faults_injected, 3);
+    assert_eq!(one.pools_reonlined, 1);
+    assert!(one.failover_migrated_bytes > 0, "hosts held pool0 bytes");
+    for threads in knob_threads(&[2, 4]) {
+        let many = run_shared_threads(&builtin::fig2(), &fcfg, mk_hosts(), threads).unwrap();
+        assert_multihost_identical(&one, &many);
+    }
+}
+
+/// The availability byte balance: a `drain` stack member evacuates the
+/// hot region off the storming pool before the offline sweep, and
+/// re-admits it once the pool is back — and every migrated byte in the
+/// whole chain is either drain/re-admit traffic or failover traffic,
+/// with the copy-traffic conservation invariant exact end to end.
+#[test]
+fn reonline_round_trip_conserves_drain_failover_and_readmit() {
+    let mut cfg = fast_cfg();
+    cfg.scale = 0.004;
+    let epochs = baseline_epochs(&cfg);
+    let w = (epochs / 4).max(1);
+    // degrade pool0 (the drain window), hot-remove it, then bring it
+    // back instantly, leaving the run's tail for the re-admit
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(
+        FaultPlan::parse_inline(&format!(
+            "storm:pool0@{w}+{w}:rd=300,wr=150;offline:pool0@{};online:pool0@{}",
+            2 * w,
+            3 * w
+        ))
+        .unwrap(),
+    );
+    let mut stack = PolicyStack::new(fcfg.mig_stall_ns_per_byte)
+        .with(Box::new(FaultDrain::new(u64::MAX)));
+    let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+    let rep = run_batched_with(&builtin::fig2(), &fcfg, wl.as_mut(), Some(&mut stack)).unwrap();
+    assert_eq!(rep.pools_offline, 1);
+    assert_eq!(rep.pools_reonlined, 1);
+    // zipfian's single (hot) region lives on pool0: the storm window
+    // drains it before the offline sweep, the tail re-admits it home
+    let (_, drain_migs, _) = stack
+        .per_policy_stats()
+        .into_iter()
+        .find(|(n, _, _)| *n == "fault-drain")
+        .unwrap();
+    assert_eq!(drain_migs, 2, "proactive drain + post-recovery re-admit");
+    assert!(rep.drain_migrated_bytes > 0);
+    assert_eq!(rep.drain_migrated_bytes, stack.drained_bytes());
+    assert_eq!(
+        rep.migrated_bytes,
+        rep.failover_migrated_bytes + rep.drain_migrated_bytes,
+        "drain + re-admit + failover must account for every migrated byte"
+    );
+    let moved = stack.moved_bytes() as f64;
+    assert_eq!(
+        stack.injected_read_bytes() + stack.pending_bytes(),
+        moved,
+        "read-side conservation across the whole availability chain"
+    );
+    assert_eq!(
+        stack.injected_write_bytes() + stack.pending_bytes(),
+        moved,
+        "write-side conservation across the whole availability chain"
+    );
+}
+
+/// A re-onlined pool charges its decaying warm-up adder on the traffic
+/// it receives while re-populating. `malloc` keeps allocating 64 KB
+/// chunks round-robin for the whole run, so pool0 starts receiving
+/// fresh chunks (and their sweep traffic) right after it comes back.
+#[test]
+fn reonline_warmup_charges_decaying_adder() {
+    let mut cfg = fast_cfg();
+    cfg.scale = 0.02;
+    let mut wl = workload::by_name("malloc", cfg.scale, cfg.seed).unwrap();
+    let plain = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+    assert!(plain.epochs_run >= 4, "need a mid-run re-online, got {}", plain.epochs_run);
+    let e = plain.epochs_run;
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(
+        FaultPlan::parse_inline(&format!(
+            "offline:pool0@1;online:pool0@2:warmup={e},rd=400,wr=200"
+        ))
+        .unwrap(),
+    );
+    let mut wl = workload::by_name("malloc", fcfg.scale, fcfg.seed).unwrap();
+    let rep = run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap();
+    assert_eq!(rep.pools_reonlined, 1);
+    assert!(rep.warmup_delay_ns > 0.0, "fresh chunks land on the warming pool");
+    assert!(
+        rep.warmup_delay_ns <= rep.lat_delay_ns,
+        "warm-up is a sub-component of lat, not an addition"
+    );
+    assert_eq!(rep.retry_delay_ns, 0.0, "no storms: warm-up is attributed separately");
+    assert_eq!(plain.total_misses, rep.total_misses, "faults never change the event stream");
+}
+
+/// A soak plan whose seeded schedule lands entirely beyond the run
+/// horizon must be indistinguishable from a fault-free run — the
+/// armed-but-idle zero-overhead contract.
+#[test]
+fn unreached_soak_plan_bit_identical_to_fault_free() {
+    let cfg = fast_cfg();
+    let mut wl = workload::by_name("zipfian", cfg.scale, cfg.seed).unwrap();
+    let plain = run_batched(&builtin::fig2(), &cfg, wl.as_mut()).unwrap();
+
+    // MTBF of 10M epochs over a huge horizon: the schedule is real (the
+    // plan has events) but its first arrival is ~10M epochs out
+    let plan =
+        FaultPlan::generate(cfg.seed, "mtbf=10000000,epochs=100000000").unwrap();
+    assert!(!plan.events.is_empty(), "soak horizon must schedule events");
+    assert!(
+        plan.events.iter().all(|e| e.start > plain.epochs_run),
+        "seeded schedule must land beyond the run horizon"
+    );
+    let mut scfg = cfg.clone();
+    scfg.faults = Some(plan);
+    let mut wl = workload::by_name("zipfian", scfg.scale, scfg.seed).unwrap();
+    let armed = run_batched(&builtin::fig2(), &scfg, wl.as_mut()).unwrap();
+    assert_reports_identical(&plain, &armed, "unreached soak plan");
+    assert_fault_stats_identical(&plain, &armed, "unreached soak plan");
+    assert_eq!(armed.faults_injected, 0);
+}
+
+/// Seeded MTBF soak reproducibility: the same seed twice yields a
+/// byte-identical `SimReport` JSON; a different seed redraws the
+/// schedule.
+#[test]
+fn soak_plan_same_seed_reproduces_report_json() {
+    let cfg = fast_cfg();
+    let epochs = baseline_epochs(&cfg);
+    let spec = format!("mtbf=1,epochs={epochs},kinds=storm|retrain|offline+online,warmup=1");
+    let run = || {
+        let mut fcfg = cfg.clone();
+        fcfg.faults = Some(FaultPlan::generate(fcfg.seed, &spec).unwrap());
+        let mut wl = workload::by_name("zipfian", fcfg.scale, fcfg.seed).unwrap();
+        run_batched(&builtin::fig2(), &fcfg, wl.as_mut()).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.faults_injected > 0, "mtbf=1 over the whole horizon must fire");
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "same seed, same soak schedule, same bits"
+    );
+    let starts = |seed: u64| {
+        FaultPlan::generate(seed, &spec)
+            .unwrap()
+            .events
+            .iter()
+            .map(|e| e.start)
+            .collect::<Vec<_>>()
+    };
+    assert_ne!(starts(1), starts(2), "different seeds must redraw the schedule");
+}
+
+/// Per-host fault plans stay confined: a retry storm scoped to h0 must
+/// leave h1's `HostReport` byte-identical to its fault-free self, on
+/// every worker count.
+#[test]
+fn per_host_fault_plan_isolates_unfaulted_hosts() {
+    let cfg = fast_cfg();
+    let mk_hosts = || -> Vec<Box<dyn Workload>> {
+        (0..2)
+            .map(|i| workload::by_name("stream", 0.002, i as u64).unwrap())
+            .collect()
+    };
+    let plain = run_shared_threads(&builtin::fig2(), &cfg, mk_hosts(), 1).unwrap();
+    assert!(plain.epochs >= 4, "need >= 4 epochs, got {}", plain.epochs);
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(
+        FaultPlan::parse_inline(&format!(
+            "storm:pool0@1+{}:rd=400,wr=200,host=h0",
+            plain.epochs
+        ))
+        .unwrap(),
+    );
+    let faulted = run_shared_threads(&builtin::fig2(), &fcfg, mk_hosts(), 1).unwrap();
+    assert_eq!(faulted.epochs, plain.epochs);
+    assert!(faulted.retry_delay_ns > 0.0, "h0 streams over pool0: the storm must bite");
+    let (f0, p0) = (&faulted.hosts[0], &plain.hosts[0]);
+    assert!(f0.delay_ns > p0.delay_ns, "h0 pays its own storm");
+    let (f1, p1) = (&faulted.hosts[1], &plain.hosts[1]);
+    assert_eq!(f1.misses, p1.misses);
+    assert_eq!(f1.native_ns, p1.native_ns);
+    assert_eq!(f1.delay_ns, p1.delay_ns, "host-scoped storm must not leak to h1");
+    assert_eq!(f1.simulated_ns, p1.simulated_ns);
+    assert_eq!(f1.migrations, p1.migrations);
+    for threads in knob_threads(&[2]) {
+        let many = run_shared_threads(&builtin::fig2(), &fcfg, mk_hosts(), threads).unwrap();
+        assert_multihost_identical(&faulted, &many);
     }
 }
 

@@ -214,3 +214,125 @@ rel_tol = 0.02
         assert!(rep.get("worker_busy_fracs").is_none());
     }
 }
+
+const SOAK_SPEC: &str = "mtbf=4,epochs=30,kinds=storm,rd=200,wr=100";
+
+#[test]
+fn fault_soak_axis_is_deterministic_and_ordered_after_fault_free() {
+    let src = format!(
+        r#"
+name = "t"
+[grid]
+fault_soak = ["none", "{SOAK_SPEC}"]
+[config]
+topo = "fig2"
+workload = "stream"
+scale = 0.002
+cache_scale = 64
+epoch_ms = 0.1
+max_epochs = 30
+seed = 1
+[baseline]
+fault_soak = "none"
+[[invariant]]
+metric = "delay_ms"
+axis = "fault_soak"
+order = ["none", "{SOAK_SPEC}"]
+rel_tol = 0.02
+"#
+    );
+    let one = run(&src, 1);
+    assert_eq!(one.cells, 2);
+    assert_eq!(one.cell_failures, 0, "{}", one.artifact.to_string());
+    assert_eq!(one.invariant_failures, 0, "{}", one.artifact.to_string());
+    // the soak plan is generated from the cell's seed, not from engine
+    // scheduling: worker counts must not perturb the artifact
+    let four = run(&src, 4);
+    assert_eq!(one.artifact.to_string(), four.artifact.to_string());
+    for cell in cells_of(&one.artifact) {
+        let id = cell.get("id").and_then(Json::as_str).unwrap();
+        let injected =
+            cell.get("report").unwrap().get("faults_injected").and_then(Json::as_f64).unwrap();
+        if id.contains("mtbf=4") {
+            assert!(injected > 0.0, "soak cell drew no events inside the horizon: {id}");
+        } else {
+            assert_eq!(injected, 0.0, "fault-free cell injected faults: {id}");
+        }
+    }
+}
+
+#[test]
+fn faults_axis_reads_plan_file_per_cell() {
+    let path = std::env::temp_dir().join(format!("cxlms-sweep-plan-{}.toml", std::process::id()));
+    std::fs::write(
+        &path,
+        "[[fault]]\nkind = \"storm\"\npool = \"pool0\"\nstart = 4\nepochs = 8\n\
+         rd_add_ns = 120\nwr_add_ns = 60\n",
+    )
+    .unwrap();
+    let src = format!(
+        r#"
+name = "t"
+[grid]
+faults = ["none", "{p}"]
+[config]
+topo = "fig2"
+workload = "zipfian"
+scale = 0.002
+cache_scale = 64
+epoch_ms = 0.1
+max_epochs = 20
+[baseline]
+faults = "none"
+[[invariant]]
+metric = "delay_ms"
+axis = "faults"
+order = ["none", "{p}"]
+rel_tol = 0.02
+"#,
+        p = path.display()
+    );
+    let out = run(&src, 2);
+    assert_eq!(out.cells, 2);
+    assert_eq!(out.cell_failures, 0, "{}", out.artifact.to_string());
+    assert_eq!(out.invariant_failures, 0, "{}", out.artifact.to_string());
+    for cell in cells_of(&out.artifact) {
+        let id = cell.get("id").and_then(Json::as_str).unwrap();
+        let injected =
+            cell.get("report").unwrap().get("faults_injected").and_then(Json::as_f64).unwrap();
+        if id.contains("faults=none") {
+            assert_eq!(injected, 0.0, "fault-free cell injected faults: {id}");
+        } else {
+            assert_eq!(injected, 1.0, "plan file schedules exactly one storm: {id}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn faults_and_fault_soak_are_mutually_exclusive_per_cell() {
+    let path = std::env::temp_dir().join(format!("cxlms-sweep-clash-{}.toml", std::process::id()));
+    std::fs::write(&path, "[[fault]]\nkind = \"offline\"\npool = \"pool0\"\nstart = 4\n").unwrap();
+    let src = format!(
+        r#"
+name = "t"
+[grid]
+workload = ["stream"]
+[config]
+topo = "fig2"
+scale = 0.002
+cache_scale = 64
+epoch_ms = 0.1
+max_epochs = 10
+faults = "{p}"
+fault_soak = "{SOAK_SPEC}"
+"#,
+        p = path.display()
+    );
+    let out = run(&src, 1);
+    assert_eq!(out.cell_failures, 1, "clashing fault sources must fail the cell");
+    let cell = &cells_of(&out.artifact)[0];
+    let err = cell.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("mutually exclusive"), "unhelpful error: {err}");
+    std::fs::remove_file(&path).ok();
+}

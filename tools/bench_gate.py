@@ -15,6 +15,7 @@ Gated entries / metrics (the hot paths named in ROADMAP):
   replay_group     group256_epochs_per_s      higher is better
   replay_stream    events_per_s               higher is better
   fault_epoch      faultfree_epochs_per_s     higher is better
+  fault_soak       armed_epochs_per_s         higher is better
   multihost_epoch  pooled_epochs_per_s        higher is better
   policy_epoch     empty_stack_ns_per_epoch   lower is better
   policy_epoch     full_stack_ns_per_epoch    lower is better
@@ -50,6 +51,7 @@ GATES = {
     "replay_group": [("group256_epochs_per_s", "higher")],
     "replay_stream": [("events_per_s", "higher")],
     "fault_epoch": [("faultfree_epochs_per_s", "higher")],
+    "fault_soak": [("armed_epochs_per_s", "higher")],
     "multihost_epoch": [("pooled_epochs_per_s", "higher")],
     "policy_epoch": [
         ("empty_stack_ns_per_epoch", "lower"),
